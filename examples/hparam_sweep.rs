@@ -1,0 +1,79 @@
+//! Figure-5 hyper-parameter sensitivity: sweep the hash-table size B
+//! and the number of hash tables R for FedMLH and report accuracy vs
+//! memory — the trade-off the paper's Section 6.2 tunes.
+//!
+//! ```text
+//! cargo run --release --example hparam_sweep                 # eurlex, quick
+//! cargo run --release --example hparam_sweep -- wiki31 full  # preset, full rounds
+//! cargo run --release --example hparam_sweep -- eurlex full rust
+//! ```
+
+use anyhow::Result;
+
+use fedmlh::config::ExperimentConfig;
+use fedmlh::harness::{figures, report, BackendKind, HarnessOpts};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(String::as_str).unwrap_or("eurlex");
+    let full = args.iter().any(|a| a == "full");
+    let backend = if args.iter().any(|a| a == "rust") {
+        BackendKind::Rust
+    } else {
+        BackendKind::Xla
+    };
+
+    let cfg = ExperimentConfig::preset(preset)?;
+    let opts = HarnessOpts {
+        backend,
+        rounds: if full { None } else { Some(10) },
+        verbose: true,
+        ..HarnessOpts::default()
+    };
+
+    // -- Figure 5a/5c: sensitivity to B (R fixed at the preset value)
+    let mut b_values = cfg.preset.sweep_b.to_vec();
+    b_values.push(cfg.preset.b);
+    b_values.sort_unstable();
+    anyhow::ensure!(
+        !b_values.is_empty(),
+        "preset '{preset}' has no B sweep values (only eurlex/wiki31 ship sweep artifacts)"
+    );
+    println!("== B sweep on '{preset}' (R = {}) ==", cfg.r());
+    let b_points = figures::fig5_sweep_b(&cfg, &b_values, &opts)?;
+    for pt in &b_points {
+        println!(
+            "B = {:>5}: @1 {:>6} @3 {:>6} @5 {:>6}  best round {:>3}  model {}",
+            pt.value,
+            report::pct(pt.top1),
+            report::pct(pt.top3),
+            report::pct(pt.top5),
+            pt.best_round,
+            report::mb(pt.model_bytes as u64)
+        );
+    }
+
+    // -- Figure 5b/5d: sensitivity to R (B fixed at the preset value)
+    let mut r_values = cfg.preset.sweep_r.to_vec();
+    r_values.push(cfg.preset.r);
+    r_values.sort_unstable();
+    println!("\n== R sweep on '{preset}' (B = {}) ==", cfg.b());
+    let r_points = figures::fig5_sweep_r(&cfg, &r_values, &opts)?;
+    for pt in &r_points {
+        println!(
+            "R = {:>5}: @1 {:>6} @3 {:>6} @5 {:>6}  best round {:>3}  model {}",
+            pt.value,
+            report::pct(pt.top1),
+            report::pct(pt.top3),
+            report::pct(pt.top5),
+            pt.best_round,
+            report::mb(pt.model_bytes as u64)
+        );
+    }
+
+    let out = std::path::Path::new("results");
+    report::write_result(out, &format!("fig5_{preset}_b.csv"), &figures::fig5_csv("B", &b_points))?;
+    report::write_result(out, &format!("fig5_{preset}_r.csv"), &figures::fig5_csv("R", &r_points))?;
+    eprintln!("wrote results/fig5_{preset}_{{b,r}}.csv");
+    Ok(())
+}

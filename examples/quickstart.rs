@@ -1,0 +1,63 @@
+//! Quickstart: train FedMLH on the `tiny` preset in a few seconds and
+//! compare it against the FedAvg baseline — the smallest end-to-end use
+//! of the public API.
+//!
+//! ```text
+//! cargo run --release --example quickstart            # xla backend
+//! cargo run --release --example quickstart -- rust    # no artifacts needed
+//! ```
+
+use anyhow::Result;
+
+use fedmlh::config::ExperimentConfig;
+use fedmlh::harness::{self, report, BackendKind, HarnessOpts};
+
+fn main() -> Result<()> {
+    // 1. Pick a dataset preset and the paper's FL setup (K = 10 clients,
+    //    S = 4 sampled per round, E = 5 local epochs).
+    let mut cfg = ExperimentConfig::preset("tiny")?;
+    cfg.rounds = 15;
+
+    // 2. Choose the backend: compiled HLO artifacts (default) or the
+    //    pure-rust reference MLP.
+    let backend = match std::env::args().nth(1).as_deref() {
+        Some("rust") => BackendKind::Rust,
+        _ => BackendKind::Xla,
+    };
+    let opts = HarnessOpts {
+        backend,
+        verbose: true,
+        ..HarnessOpts::default()
+    };
+
+    // 3. Train FedAvg and FedMLH on the same synthetic world with the
+    //    same non-iid partition.
+    let pair = harness::run_pair(&cfg, &opts)?;
+
+    // 4. Compare them the way the paper's tables do.
+    for (name, out) in [("FedAvg", &pair.fedavg), ("FedMLH", &pair.fedmlh)] {
+        println!(
+            "{name:>7}: best @1 {} @3 {} @5 {}  (round {}, comm {}, model {})",
+            report::pct(out.best.top1),
+            report::pct(out.best.top3),
+            report::pct(out.best.top5),
+            out.best_round,
+            report::mb(out.comm_to_best),
+            report::mb(out.model_bytes as u64),
+        );
+    }
+    println!(
+        "communication ratio {:.2}x, rounds ratio {:.2}x",
+        pair.cc_ratio(),
+        pair.rounds_ratio()
+    );
+
+    // 5. The per-round history is available for plotting.
+    let last = pair.fedmlh.history.records.last().unwrap();
+    println!(
+        "fedmlh round {}: mean train loss {:.4}",
+        last.round + 1,
+        last.mean_loss
+    );
+    Ok(())
+}

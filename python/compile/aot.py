@@ -1,0 +1,196 @@
+"""AOT pipeline: lower every artifact variant to HLO text + manifest.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+pinned xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Usage (from python/):
+
+    python -m compile.aot --out-dir ../artifacts [--only tiny,eurlex]
+
+Python runs only here, at build time. The emitted ``manifest.json``
+(parsed by ``rust/src/runtime/manifest.rs``) records every artifact's
+entry signature so the rust coordinator can validate buffers before the
+first execute.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .variants import PRESETS, Variant, all_variants
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _train_signature(v: Variant):
+    """(name, spec) list for a train-step artifact, in entry order."""
+    d, h, out, n = v.d, v.hidden, v.out, v.batch
+    return [
+        ("w1", _spec((d, h))),
+        ("b1", _spec((h,))),
+        ("w2", _spec((h, h))),
+        ("b2", _spec((h,))),
+        ("w3", _spec((h, out))),
+        ("b3", _spec((out,))),
+        ("x", _spec((n, d))),
+        ("y", _spec((n, out))),
+        ("lr", _spec((), jnp.float32)),
+    ]
+
+
+def _train_scan_signature(v: Variant):
+    """train_scan: params + stacked [S, n, ...] batches + lr."""
+    d, h, out, n, s = v.d, v.hidden, v.out, v.batch, v.scan
+    sig = _train_signature(v)[:6]
+    sig += [
+        ("xs", _spec((s, n, d))),
+        ("ys", _spec((s, n, out))),
+        ("lr", _spec((), jnp.float32)),
+    ]
+    return sig
+
+
+def _predict_signature(v: Variant):
+    return _train_signature(v)[:7]
+
+
+def _decode_signature(v: Variant):
+    return [
+        ("logits", _spec((v.r, v.batch, v.out))),
+        ("idx", _spec((v.r, v.p), jnp.int32)),
+    ]
+
+
+SIGNATURES = {
+    "train": _train_signature,
+    "train_scan": _train_scan_signature,
+    "predict": _predict_signature,
+    "decode": _decode_signature,
+}
+
+FUNCTIONS = {
+    ("train", "pallas"): model.train_step,
+    ("train_scan", "pallas"): model.train_scan,
+    ("predict", "pallas"): model.predict,
+    ("decode", "pallas"): model.decode,
+    ("train", "jnp"): model.train_step_ref,
+    ("train_scan", "jnp"): model.train_scan_ref,
+    ("predict", "jnp"): model.predict_ref,
+    ("decode", "jnp"): model.decode_ref,
+}
+
+TRAIN_OUTPUTS = [
+    ("w1", "f32"), ("b1", "f32"), ("w2", "f32"), ("b2", "f32"),
+    ("w3", "f32"), ("b3", "f32"), ("loss", "f32"),
+]
+
+
+def _output_desc(v: Variant):
+    if v.kind in ("train", "train_scan"):
+        d, h, out = v.d, v.hidden, v.out
+        shapes = [(d, h), (h,), (h, h), (h,), (h, out), (out,), ()]
+        return [
+            {"name": n, "dtype": t, "shape": list(s)}
+            for (n, t), s in zip(TRAIN_OUTPUTS, shapes)
+        ]
+    if v.kind == "predict":
+        return [{"name": "logits", "dtype": "f32", "shape": [v.batch, v.out]}]
+    return [{"name": "scores", "dtype": "f32", "shape": [v.batch, v.p]}]
+
+
+def _dtype_tag(dt) -> str:
+    return "i32" if jnp.dtype(dt) == jnp.int32 else "f32"
+
+
+def lower_variant(v: Variant) -> str:
+    sig = SIGNATURES[v.kind](v)
+    specs = [s for _, s in sig]
+    lowered = jax.jit(FUNCTIONS[(v.kind, v.impl)]).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, only=None, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "presets": {}, "artifacts": {}}
+    for p in PRESETS:
+        manifest["presets"][p.name] = {
+            "d": p.d, "p": p.p, "n_train": p.n_train, "n_test": p.n_test,
+            "hidden": p.hidden, "r": p.r, "b": p.b, "batch": p.batch,
+            "lr": p.lr, "paper_analog": p.paper_analog,
+            "sweep_b": list(p.sweep_b), "sweep_r": list(p.sweep_r),
+        }
+
+    todo = [v for v in all_variants() if only is None or v.preset in only]
+    t0 = time.time()
+    for i, v in enumerate(todo):
+        fname = f"{v.key}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        t1 = time.time()
+        text = lower_variant(v)
+        with open(path, "w") as f:
+            f.write(text)
+        sig = SIGNATURES[v.kind](v)
+        manifest["artifacts"][v.key] = {
+            "file": fname,
+            "kind": v.kind,
+            "preset": v.preset,
+            "impl": v.impl,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {
+                    "name": name,
+                    "dtype": _dtype_tag(spec.dtype),
+                    "shape": list(spec.shape),
+                }
+                for name, spec in sig
+            ],
+            "outputs": _output_desc(v),
+        }
+        if verbose:
+            print(
+                f"[{i + 1}/{len(todo)}] {v.key}: {len(text)} chars "
+                f"({time.time() - t1:.1f}s)",
+                flush=True,
+            )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"wrote {len(todo)} artifacts in {time.time() - t0:.1f}s")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(Makefile stamp compat) ignored path")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated preset names to build")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    build(args.out_dir, only=only)
+
+
+if __name__ == "__main__":
+    main()

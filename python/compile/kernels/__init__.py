@@ -1,0 +1,23 @@
+"""L1 Pallas kernels for FedMLH.
+
+Three kernels implement the paper's compute hot spots:
+
+- :mod:`hashed_linear` -- the last fully-connected layer (the layer whose
+  size FedMLH's label hashing shrinks) as a tiled MXU-shaped matmul.
+- :mod:`bce` -- fused numerically-stable sigmoid binary-cross-entropy
+  loss + gradient over the (batch, buckets) logit tile.
+- :mod:`sketch_decode` -- count-sketch mean decode that merges the R
+  sub-model bucket logits back into per-class scores (paper Fig. 1b).
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); block shapes are still chosen for the TPU memory system --
+see DESIGN.md "Hardware-Adaptation".
+
+Each kernel has a pure-jnp oracle in :mod:`ref`; python/tests sweeps
+shapes and dtypes with hypothesis and asserts allclose.
+"""
+
+from . import ref  # noqa: F401
+from .hashed_linear import linear, pallas_matmul  # noqa: F401
+from .bce import bce_logits_loss  # noqa: F401
+from .sketch_decode import sketch_decode  # noqa: F401

@@ -1,0 +1,152 @@
+"""Tiled Pallas matmul + the FedMLH "hashed linear" output layer.
+
+The last fully-connected layer is the compute (and, in FedAvg, the
+communication) hot spot of an extreme classifier: its weight is
+``[hidden, out]`` where ``out`` is either the full class count ``p``
+(FedAvg baseline) or the hashed bucket count ``B`` (FedMLH sub-model).
+FedMLH's whole contribution is shrinking ``out``; this kernel is the
+layer it shrinks.
+
+TPU mapping (see DESIGN.md "Hardware-Adaptation"): the GPU version of
+this layer would tile for shared memory and warps. Here we tile for VMEM
+with ``BlockSpec`` blocks that are multiples of the 128x128 MXU systolic
+array, accumulating over the contraction dimension in the innermost grid
+axis. The HBM->VMEM schedule a CUDA kernel would express with
+threadblocks is expressed by the ``index_map`` of each ``BlockSpec``.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO (a ``while`` loop over
+the grid) and runs on any backend. Correctness vs :mod:`ref` is asserted
+in python/tests.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tile. f32 VMEM cost per grid step:
+#   a-block  bm*bk*4  +  b-block  bk*bn*4  +  out-block  bm*bn*4
+# With the defaults below that is 128*512*4 * 3 = 786 KiB, far inside a
+# TPU core's ~16 MiB VMEM, leaving room for double buffering.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 512
+DEFAULT_BLOCK_K = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile; accumulate over the k grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulation on the MXU. `preferred_element_type` keeps the
+    # accumulator in f32 even if inputs are later switched to bf16.
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest block <= target; dims smaller than target use the padded dim.
+
+    Blocks stay multiples of 8 (the f32 sublane count) when dim allows,
+    so the VPU/MXU tiles stay aligned even for the small shapes the
+    hypothesis sweep generates.
+    """
+    if dim >= target:
+        return target
+    return _ceil_to(dim, 8) if dim > 8 else dim
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def pallas_matmul(
+    a,
+    b,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+):
+    """``a @ b`` via a grid of MXU-shaped tiles.
+
+    Arbitrary ``[m, k] @ [k, n]`` shapes are supported by zero-padding up
+    to the block grid and slicing the result back; zero padding is exact
+    for matmul.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad matmul shapes {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    if (mp, kp) != (m, k):
+        a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=interpret,
+    )(a, b)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+@jax.custom_vjp
+def linear(x, w, b):
+    """The hashed output layer: ``x @ w + b`` with a Pallas forward/backward.
+
+    ``custom_vjp`` so that ``jax.grad`` through the training loss routes
+    the three large matmuls (fwd, dx, dw) through :func:`pallas_matmul`
+    instead of XLA's generic dot.
+    """
+    return pallas_matmul(x, w) + b[None, :]
+
+
+def _linear_fwd(x, w, b):
+    return linear(x, w, b), (x, w)
+
+
+def _linear_bwd(res, g):
+    x, w = res
+    # dx = g @ w^T ; dw = x^T @ g ; db = sum_batch g.
+    dx = pallas_matmul(g, w.T)
+    dw = pallas_matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+def vmem_footprint_bytes(
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    dtype_bytes: int = 4,
+) -> int:
+    """Static VMEM footprint of one grid step (perf-pass reporting)."""
+    return dtype_bytes * (
+        block_m * block_k + block_k * block_n + block_m * block_n
+    )

@@ -1,0 +1,161 @@
+"""L2: the FedMLH / FedAvg classifier as a JAX compute graph.
+
+Both algorithms share one architecture (paper Section 6 "Baselines"):
+a 2-hidden-layer MLP over feature-hashed inputs. The only difference is
+the width of the last layer -- ``p`` classes for FedAvg, ``B`` buckets
+for one FedMLH sub-model -- so one set of functions serves both; the
+output width is baked into each AOT artifact's shapes.
+
+Everything here is build-time only. ``aot.py`` lowers:
+
+- ``train_step``:  (w1,b1,w2,b2,w3,b3, x, y, lr) -> (w1',...,b3', loss)
+  one SGD minibatch step, forward + backward + update fused in one HLO
+  so the rust coordinator's local-epoch loop is a single PJRT execute
+  per batch with buffer-resident parameters.
+- ``predict``:     (w1,b1,w2,b2,w3,b3, x) -> logits
+- ``decode``:      (logits[R,n,B], idx[R,p]) -> scores[n,p]
+
+The last layer and the loss route through the L1 Pallas kernels
+(:mod:`kernels.hashed_linear`, :mod:`kernels.bce`); the two hidden
+layers are plain jnp (they are small: d*h + h*h << h*out for extreme
+output widths) and XLA fuses them.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bce_logits_loss, linear, sketch_decode
+
+# Parameter tuple order -- the rust side (runtime::manifest) relies on it.
+PARAM_NAMES = ("w1", "b1", "w2", "b2", "w3", "b3")
+
+
+def param_shapes(d: int, h: int, out: int):
+    """Shapes of the parameter tuple for input dim d, hidden h, output out."""
+    return ((d, h), (h,), (h, h), (h,), (h, out), (out,))
+
+
+def init_params(key, d: int, h: int, out: int):
+    """He-uniform init (test/reference use; the rust side owns real init)."""
+    shapes = param_shapes(d, h, out)
+    keys = jax.random.split(key, len(shapes))
+    params = []
+    for k, shape in zip(keys, shapes):
+        if len(shape) == 2:
+            bound = jnp.sqrt(6.0 / shape[0])
+            params.append(jax.random.uniform(k, shape, jnp.float32, -bound, bound))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+def forward(params, x):
+    """MLP forward; the wide output layer is the Pallas ``linear`` kernel."""
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jax.nn.relu(jnp.matmul(x, w1) + b1[None, :])
+    h2 = jax.nn.relu(jnp.matmul(h1, w2) + b2[None, :])
+    return linear(h2, w3, b3)
+
+
+def loss_fn(params, x, y):
+    """Mean multi-hot BCE-with-logits (Pallas fused loss kernel)."""
+    return bce_logits_loss(forward(params, x), y)
+
+
+def train_step(w1, b1, w2, b2, w3, b3, x, y, lr):
+    """One SGD step; flat-arg signature so the HLO entry takes 9 buffers.
+
+    ``lr`` is a scalar *input* (not baked in) so one compiled artifact
+    serves every learning-rate sweep.
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return new + (loss,)
+
+
+def train_scan(w1, b1, w2, b2, w3, b3, xs, ys, lr):
+    """S fused SGD steps in one HLO module via ``jax.lax.scan``.
+
+    ``xs`` is ``[S, n, d]``, ``ys`` is ``[S, n, out]`` — S consecutive
+    minibatches of one client epoch. Bit-for-bit the same math as S
+    sequential :func:`train_step` executions, but one PJRT dispatch and
+    one parameter round trip instead of S, which removes the per-step
+    host↔device copy overhead that dominates small-step training (see
+    EXPERIMENTS.md §Perf). Returns updated params + the *sum* of the S
+    pre-update losses (the coordinator divides by S).
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+
+    def body(p, batch):
+        x, y = batch
+        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        return tuple(w - lr * g for w, g in zip(p, grads)), loss
+
+    params, losses = jax.lax.scan(body, params, (xs, ys))
+    return params + (jnp.sum(losses),)
+
+
+def predict(w1, b1, w2, b2, w3, b3, x):
+    """Inference logits for a feature-hashed batch."""
+    return forward((w1, b1, w2, b2, w3, b3), x)
+
+
+def decode(logits, idx):
+    """Count-sketch mean decode of R sub-model logit tables (Fig. 1b)."""
+    return sketch_decode(logits, idx)
+
+
+# -- reference (pure-jnp) twins used by python/tests to validate the
+#    pallas-routed graph end to end ------------------------------------
+
+def forward_ref(params, x):
+    from .kernels import ref
+
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jax.nn.relu(jnp.matmul(x, w1) + b1[None, :])
+    h2 = jax.nn.relu(jnp.matmul(h1, w2) + b2[None, :])
+    return ref.linear_ref(h2, w3, b3)
+
+
+def loss_fn_ref(params, x, y):
+    from .kernels import ref
+
+    return ref.bce_logits_loss_ref(forward_ref(params, x), y)
+
+
+def train_step_ref(w1, b1, w2, b2, w3, b3, x, y, lr):
+    params = (w1, b1, w2, b2, w3, b3)
+    loss, grads = jax.value_and_grad(loss_fn_ref)(params, x, y)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return new + (loss,)
+
+
+def train_scan_ref(w1, b1, w2, b2, w3, b3, xs, ys, lr):
+    """Scan twin of :func:`train_scan` over the pure-jnp graph.
+
+    Lowered into the ``*_fast`` artifact family: numerically identical
+    to the Pallas-routed variants (asserted by python/tests and the rust
+    runtime integration tests) but ~7x faster under the CPU PJRT plugin,
+    where interpret-mode Pallas emits a blocked while-loop XLA cannot
+    rewrite into one GEMM. See DESIGN.md / EXPERIMENTS.md §Perf.
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+
+    def body(p, batch):
+        x, y = batch
+        loss, grads = jax.value_and_grad(loss_fn_ref)(p, x, y)
+        return tuple(w - lr * g for w, g in zip(p, grads)), loss
+
+    params, losses = jax.lax.scan(body, params, (xs, ys))
+    return params + (jnp.sum(losses),)
+
+
+def predict_ref(w1, b1, w2, b2, w3, b3, x):
+    return forward_ref((w1, b1, w2, b2, w3, b3), x)
+
+
+def decode_ref(logits, idx):
+    from .kernels import ref
+
+    return ref.sketch_decode_ref(logits, idx)

@@ -1,0 +1,141 @@
+"""Artifact variant table: which HLO executables `aot.py` emits.
+
+One `Preset` per paper dataset (scaled to this testbed -- see DESIGN.md
+section 3 for the substitution rationale) plus `tiny` for tests. For each
+preset we emit:
+
+- ``<preset>.fedavg.{train,predict}``   -- full-p output layer
+- ``<preset>.fedmlh.{train,predict}``   -- B-bucket output layer (shared
+  by all R sub-models: identical shapes, one compile, R executions)
+- ``<preset>.{fedavg,fedmlh}.train8``   -- 8 SGD steps fused via
+  jax.lax.scan (one dispatch per 8 batches; the perf-pass hot path)
+- ``<preset>.fedmlh.decode``            -- count-sketch mean decode
+
+plus extra fedmlh variants for the Figure-5 hyper-parameter sweeps
+(different B / R change artifact shapes).
+
+The same tables are mirrored in rust (`config::presets`); the manifest
+emitted by aot.py is the source of truth the rust side validates against.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Preset:
+    name: str
+    d: int          # hashed feature dimension (d-tilde in the paper)
+    p: int          # number of classes
+    n_train: int    # synthetic train samples (generated on the rust side)
+    n_test: int
+    hidden: int
+    r: int          # hash tables / sub-models
+    b: int          # buckets per table
+    batch: int
+    lr: float
+    paper_analog: str
+    # Figure 5 sweep values (empty = no sweep artifacts for this preset).
+    sweep_b: tuple = field(default_factory=tuple)
+    sweep_r: tuple = field(default_factory=tuple)
+
+
+PRESETS = [
+    Preset("tiny", d=32, p=64, n_train=512, n_test=128, hidden=16,
+           r=2, b=16, batch=16, lr=0.1, paper_analog="(test only)"),
+    Preset("eurlex", d=256, p=4000, n_train=6000, n_test=1500, hidden=128,
+           r=4, b=250, batch=64, lr=32.0, paper_analog="EURLex-4K",
+           sweep_b=(125, 500, 1000), sweep_r=(2, 8)),
+    Preset("wiki31", d=512, p=8000, n_train=4000, n_test=1000, hidden=128,
+           r=4, b=500, batch=64, lr=48.0, paper_analog="Wiki10-31K",
+           sweep_b=(250, 1000, 2000), sweep_r=(2, 8)),
+    Preset("amztitle", d=512, p=16384, n_train=8000, n_test=2000,
+           hidden=128, r=4, b=1024, batch=64, lr=64.0,
+           paper_analog="LF-AmazonTitle-131K"),
+    Preset("wikititle", d=512, p=32768, n_train=8000, n_test=2000,
+           hidden=128, r=8, b=2048, batch=64, lr=64.0,
+           paper_analog="LF-WikiSeeAlsoTitles-320K"),
+]
+
+PRESET_BY_NAME = {p.name: p for p in PRESETS}
+
+
+# Steps fused into one HLO dispatch by the train_scan variants.
+SCAN_STEPS = 8
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One HLO artifact to emit."""
+
+    key: str        # manifest key, e.g. "eurlex.fedmlh.train"
+    kind: str       # "train" | "train_scan" | "predict" | "decode"
+    preset: str
+    d: int
+    hidden: int
+    out: int        # p (fedavg) or B (fedmlh sub-model)
+    batch: int
+    r: int = 0      # decode only
+    p: int = 0      # decode only
+    scan: int = 0   # train_scan only: fused steps S
+    impl: str = "pallas"   # "pallas" (L1 kernels) | "jnp" (ref twins)
+
+
+def variants_for(preset: Preset):
+    """All artifacts for one preset (base config + figure-5 sweeps)."""
+    vs = []
+
+    def model_pair(tag: str, out: int):
+        vs.append(Variant(f"{preset.name}.{tag}.train", "train",
+                          preset.name, preset.d, preset.hidden, out,
+                          preset.batch))
+        vs.append(Variant(f"{preset.name}.{tag}.train{SCAN_STEPS}",
+                          "train_scan", preset.name, preset.d,
+                          preset.hidden, out, preset.batch,
+                          scan=SCAN_STEPS))
+        vs.append(Variant(f"{preset.name}.{tag}.predict", "predict",
+                          preset.name, preset.d, preset.hidden, out,
+                          preset.batch))
+
+    model_pair("fedavg", preset.p)
+    model_pair("fedmlh", preset.b)
+    vs.append(Variant(f"{preset.name}.fedmlh.decode", "decode",
+                      preset.name, preset.d, preset.hidden, preset.b,
+                      preset.batch, r=preset.r, p=preset.p))
+    # "_fast" family: identical math lowered through the pure-jnp ref
+    # twins -- the CPU-testbed hot path for long sweeps (interpret-mode
+    # Pallas emulation costs ~7x on the last-layer matmul; see DESIGN.md
+    # section Perf). Kernel-vs-ref equality is pinned by python/tests.
+    for tag, out in (("fedavg_fast", preset.p), ("fedmlh_fast", preset.b)):
+        vs.append(Variant(f"{preset.name}.{tag}.train", "train",
+                          preset.name, preset.d, preset.hidden, out,
+                          preset.batch, impl="jnp"))
+        vs.append(Variant(f"{preset.name}.{tag}.train{SCAN_STEPS}",
+                          "train_scan", preset.name, preset.d,
+                          preset.hidden, out, preset.batch,
+                          scan=SCAN_STEPS, impl="jnp"))
+        vs.append(Variant(f"{preset.name}.{tag}.predict", "predict",
+                          preset.name, preset.d, preset.hidden, out,
+                          preset.batch, impl="jnp"))
+    vs.append(Variant(f"{preset.name}.fedmlh_fast.decode", "decode",
+                      preset.name, preset.d, preset.hidden, preset.b,
+                      preset.batch, r=preset.r, p=preset.p, impl="jnp"))
+    # Figure-5 B sweep: new train/predict/decode shapes per B.
+    for b in preset.sweep_b:
+        model_pair(f"fedmlh_b{b}", b)
+        vs.append(Variant(f"{preset.name}.fedmlh_b{b}.decode", "decode",
+                          preset.name, preset.d, preset.hidden, b,
+                          preset.batch, r=preset.r, p=preset.p))
+    # Figure-5 R sweep: same sub-model shapes, different table count --
+    # only the decode artifact changes (idx matrix has R rows).
+    for r in preset.sweep_r:
+        vs.append(Variant(f"{preset.name}.fedmlh_r{r}.decode", "decode",
+                          preset.name, preset.d, preset.hidden, preset.b,
+                          preset.batch, r=r, p=preset.p))
+    return vs
+
+
+def all_variants():
+    out = []
+    for p in PRESETS:
+        out.extend(variants_for(p))
+    return out

@@ -1,0 +1,210 @@
+"""Pallas kernels vs pure-jnp oracles -- the CORE correctness signal.
+
+hypothesis sweeps shapes (including non-multiples of the block sizes,
+which exercise the zero-pad paths) and value regimes (extreme logits for
+BCE stability). Every property asserts allclose against kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    bce_logits_loss,
+    linear,
+    pallas_matmul,
+    ref,
+    sketch_decode,
+)
+from compile.kernels.bce import _bce_grad, _bce_sum
+from compile.kernels.hashed_linear import vmem_footprint_bytes
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+dims = st.integers(min_value=1, max_value=96)
+
+
+def _arr(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(**SETTINGS)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_pallas_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _arr(rng, m, k), _arr(rng, k, n)
+    got = pallas_matmul(a, b)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_matmul_large_blocks():
+    """Shapes bigger than one block in every grid axis."""
+    rng = np.random.default_rng(7)
+    a, b = _arr(rng, 300, 260), _arr(rng, 260, 1100)
+    np.testing.assert_allclose(
+        pallas_matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_pallas_matmul_rejects_bad_shapes():
+    a = jnp.zeros((3, 4))
+    b = jnp.zeros((5, 6))
+    with pytest.raises(ValueError):
+        pallas_matmul(a, b)
+
+
+def test_vmem_footprint_under_tpu_budget():
+    # Default tiles must leave VMEM headroom for double buffering.
+    assert vmem_footprint_bytes() * 2 < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------- linear
+
+@settings(**SETTINGS)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_linear_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, m, k), _arr(rng, k, n), _arr(rng, n)
+    np.testing.assert_allclose(
+        linear(x, w, b), ref.linear_ref(x, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(2, 32),
+    k=st.integers(2, 32),
+    n=st.integers(2, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_vjp_matches_ref_vjp(m, k, n, seed):
+    """grad through (pallas linear -> pallas bce) == grad through jnp twin."""
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, m, k), _arr(rng, k, n), _arr(rng, n)
+    y = (rng.random((m, n)) < 0.1).astype(np.float32)
+
+    def f_pallas(x, w, b):
+        return bce_logits_loss(linear(x, w, b), y)
+
+    def f_ref(x, w, b):
+        return ref.bce_logits_loss_ref(ref.linear_ref(x, w, b), y)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for got, want in zip(gp, gr):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------------- bce
+
+@settings(**SETTINGS)
+@given(
+    m=dims,
+    n=dims,
+    scale=st.sampled_from([0.1, 1.0, 10.0, 50.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bce_loss_matches_ref(m, n, scale, seed):
+    rng = np.random.default_rng(seed)
+    z = _arr(rng, m, n, scale=scale)
+    y = (rng.random((m, n)) < 0.2).astype(np.float32)
+    np.testing.assert_allclose(
+        bce_logits_loss(z, y),
+        ref.bce_logits_loss_ref(z, y),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_bce_loss_stable_at_extreme_logits():
+    """No overflow/NaN at |z| = 80 where naive sigmoid-log blows up."""
+    z = jnp.array([[80.0, -80.0], [0.0, 80.0]], jnp.float32)
+    y = jnp.array([[1.0, 0.0], [1.0, 1.0]], jnp.float32)
+    loss = bce_logits_loss(z, y)
+    assert np.isfinite(float(loss))
+    np.testing.assert_allclose(
+        loss, ref.bce_logits_loss_ref(z, y), rtol=1e-6, atol=1e-7
+    )
+
+
+@settings(**SETTINGS)
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_bce_grad_matches_analytic(m, n, seed):
+    rng = np.random.default_rng(seed)
+    z = _arr(rng, m, n, scale=3.0)
+    y = (rng.random((m, n)) < 0.2).astype(np.float32)
+    got = jax.grad(bce_logits_loss)(z, y)
+    np.testing.assert_allclose(got, ref.bce_grad_ref(z, y), rtol=1e-4, atol=1e-7)
+
+
+def test_bce_pad_correction_exact():
+    """Odd shapes hit the zero-pad path; the log(2) correction is exact."""
+    rng = np.random.default_rng(3)
+    z = _arr(rng, 9, 130)  # 130 pads to block multiple
+    y = (rng.random((9, 130)) < 0.5).astype(np.float32)
+    np.testing.assert_allclose(
+        bce_logits_loss(z, y),
+        ref.bce_logits_loss_ref(z, y),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------- decode
+
+@settings(**SETTINGS)
+@given(
+    r=st.integers(1, 8),
+    n=st.integers(1, 16),
+    b=st.integers(2, 64),
+    p=st.integers(1, 700),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sketch_decode_matches_ref(r, n, b, p, seed):
+    rng = np.random.default_rng(seed)
+    logits = _arr(rng, r, n, b)
+    idx = rng.integers(0, b, size=(r, p)).astype(np.int32)
+    np.testing.assert_allclose(
+        sketch_decode(logits, idx),
+        ref.sketch_decode_ref(logits, idx),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_sketch_decode_mean_of_constant_tables():
+    """If every table holds the same value v, every class scores v."""
+    r, n, b, p = 4, 3, 8, 40
+    logits = np.full((r, n, b), 2.5, np.float32)
+    idx = np.random.default_rng(0).integers(0, b, (r, p)).astype(np.int32)
+    out = sketch_decode(logits, idx)
+    np.testing.assert_allclose(out, np.full((n, p), 2.5, np.float32), rtol=1e-6)
+
+
+def test_sketch_decode_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        sketch_decode(jnp.zeros((2, 3, 4)), jnp.zeros((3, 10), jnp.int32))
+
+
+# ------------------------------------------------- internal pallas paths
+
+def test_bce_sum_internal_blocked_path():
+    rng = np.random.default_rng(11)
+    z = _arr(rng, 17, 23)
+    y = (rng.random((17, 23)) < 0.3).astype(np.float32)
+    got = _bce_sum(z, y, block_m=8, block_n=8, interpret=True)
+    want = ref.bce_logits_loss_ref(z, y) * (17 * 23)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_bce_grad_internal_scaling():
+    rng = np.random.default_rng(12)
+    z = _arr(rng, 5, 6)
+    y = (rng.random((5, 6)) < 0.3).astype(np.float32)
+    got = _bce_grad(z, y, jnp.float32(1.0 / 30), block_m=8, block_n=8,
+                    interpret=True)
+    np.testing.assert_allclose(got, ref.bce_grad_ref(z, y), rtol=1e-5, atol=1e-7)

@@ -1,0 +1,151 @@
+"""L2 model: pallas-routed graph == jnp twin; SGD actually learns."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def _data(rng, n, d, out, positives=3):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = np.zeros((n, out), np.float32)
+    for i in range(n):
+        y[i, rng.integers(0, out, positives)] = 1.0
+    return x, y
+
+
+def test_param_shapes_order_matches_names():
+    shapes = model.param_shapes(10, 4, 7)
+    assert len(shapes) == len(model.PARAM_NAMES) == 6
+    assert shapes[0] == (10, 4) and shapes[4] == (4, 7) and shapes[5] == (7,)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    d=st.integers(4, 40),
+    h=st.integers(4, 32),
+    out=st.integers(4, 80),
+    n=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_train_step_matches_ref(d, h, out, n, seed):
+    rng = np.random.default_rng(seed)
+    params = model.init_params(jax.random.PRNGKey(seed), d, h, out)
+    x, y = _data(rng, n, d, out)
+    lr = jnp.float32(0.1)
+    got = model.train_step(*params, x, y, lr)
+    want = model.train_step_ref(*params, x, y, lr)
+    for g, w in zip(got, want):
+        # Differences are pure float reassociation (blocked vs flat sums);
+        # tolerances sized for f32 accumulation over <=96-wide tiles.
+        np.testing.assert_allclose(g, w, rtol=1e-3, atol=5e-4)
+
+
+def test_predict_shape_and_forward_consistency():
+    params = model.init_params(jax.random.PRNGKey(0), 12, 8, 20)
+    x = np.random.default_rng(0).standard_normal((5, 12)).astype(np.float32)
+    logits = model.predict(*params, x)
+    assert logits.shape == (5, 20)
+    np.testing.assert_allclose(
+        logits, model.forward(params, x), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_sgd_reduces_loss_on_learnable_task():
+    """A few steps on a fixed batch must reduce the pallas-routed loss."""
+    rng = np.random.default_rng(42)
+    d, h, out, n = 16, 12, 24, 32
+    params = model.init_params(jax.random.PRNGKey(1), d, h, out)
+    x, y = _data(rng, n, d, out)
+    lr = jnp.float32(0.5)
+    first = float(model.loss_fn(params, x, y))
+    for _ in range(20):
+        res = model.train_step(*params, x, y, lr)
+        params = res[:6]
+    last = float(res[6])
+    assert last < first * 0.9, (first, last)
+
+
+def test_train_step_loss_is_pre_update_loss():
+    """Returned loss is evaluated at the *input* params (paper's Alg 2)."""
+    params = model.init_params(jax.random.PRNGKey(2), 8, 6, 10)
+    rng = np.random.default_rng(3)
+    x, y = _data(rng, 4, 8, 10)
+    res = model.train_step(*params, x, y, jnp.float32(0.1))
+    np.testing.assert_allclose(
+        res[6], model.loss_fn(params, x, y), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_decode_is_kernel_decode():
+    rng = np.random.default_rng(5)
+    logits = rng.standard_normal((3, 4, 8)).astype(np.float32)
+    idx = rng.integers(0, 8, (3, 50)).astype(np.int32)
+    from compile.kernels import ref
+
+    np.testing.assert_allclose(
+        model.decode(logits, idx),
+        ref.sketch_decode_ref(logits, idx),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+# -- scan-fused training (the *.train8 artifacts) ----------------------
+
+def test_train_scan_equals_sequential_steps():
+    """S scan-fused steps == S sequential train_step calls, bitwise-ish."""
+    rng = np.random.default_rng(3)
+    d, h, out, n, S = 6, 5, 9, 4, 3
+    params = model.init_params(jax.random.PRNGKey(0), d, h, out)
+    xs = rng.standard_normal((S, n, d)).astype(np.float32)
+    ys = (rng.random((S, n, out)) < 0.3).astype(np.float32)
+    lr = jnp.float32(0.2)
+
+    seq = params
+    losses = []
+    for s in range(S):
+        out_step = model.train_step(*seq, xs[s], ys[s], lr)
+        seq, losses = out_step[:6], losses + [out_step[6]]
+
+    scanned = model.train_scan(*params, jnp.asarray(xs), jnp.asarray(ys), lr)
+    for a, b in zip(scanned[:6], seq):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(
+        float(scanned[6]), float(np.sum(losses)), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_train_scan_ref_equals_pallas_scan():
+    """The *_fast family twin is numerically the same graph."""
+    rng = np.random.default_rng(4)
+    d, h, out, n, S = 5, 4, 11, 3, 2
+    params = model.init_params(jax.random.PRNGKey(1), d, h, out)
+    xs = jnp.asarray(rng.standard_normal((S, n, d)).astype(np.float32))
+    ys = jnp.asarray((rng.random((S, n, out)) < 0.4).astype(np.float32))
+    a = model.train_scan(*params, xs, ys, jnp.float32(0.1))
+    b = model.train_scan_ref(*params, xs, ys, jnp.float32(0.1))
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=2e-5, rtol=2e-5)
+
+
+def test_predict_ref_and_decode_ref_match_pallas():
+    rng = np.random.default_rng(5)
+    d, h, out, n = 7, 6, 13, 5
+    params = model.init_params(jax.random.PRNGKey(2), d, h, out)
+    x = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(model.predict(*params, x)),
+        np.asarray(model.predict_ref(*params, x)),
+        atol=2e-5, rtol=2e-5,
+    )
+    r, b, p = 3, 8, 21
+    logits = jnp.asarray(rng.standard_normal((r, n, b)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, b, (r, p)).astype(np.int32))
+    np.testing.assert_allclose(
+        np.asarray(model.decode(logits, idx)),
+        np.asarray(model.decode_ref(logits, idx)),
+        atol=1e-6,
+    )

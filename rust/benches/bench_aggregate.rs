@@ -1,0 +1,31 @@
+//! Aggregation benchmarks (Algorithm 2 line 17): weighted parameter
+//! averaging at every preset's model size, for S=4 and S=10 clients.
+//! This is the L3 server-side cost that scales with model bytes — the
+//! quantity FedMLH shrinks.
+
+use fedmlh::bench::Bencher;
+use fedmlh::config::presets::PRESETS;
+use fedmlh::federated::aggregate::{aggregate, Weighting};
+use fedmlh::model::params::ModelParams;
+
+fn main() {
+    let mut b = Bencher::from_env("aggregate");
+
+    for preset in PRESETS {
+        for (algo, out) in [("fedavg", preset.p), ("fedmlh_sub", preset.b)] {
+            let models: Vec<ModelParams> = (0..10)
+                .map(|i| ModelParams::init(preset.d, preset.hidden, out, i as u64))
+                .collect();
+            for s in [4usize, 10] {
+                let refs: Vec<(&ModelParams, usize)> =
+                    models[..s].iter().map(|m| (m, 100)).collect();
+                let mb = models[0].byte_size() as f64 / 1e6;
+                b.bench_val(
+                    &format!("{}/{algo}/S{s} ({mb:.1}MB)", preset.name),
+                    || aggregate(&refs, Weighting::Uniform).unwrap(),
+                );
+            }
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,47 @@
+//! Count-sketch decode benchmarks (Fig. 1b): the rust reference decode
+//! at every preset's (R, B, p) and, when artifacts are present, the
+//! compiled HLO decode through PJRT for comparison (§Perf L1/L3 split).
+
+use std::path::Path;
+
+use fedmlh::bench::Bencher;
+use fedmlh::config::{Algo, ExperimentConfig};
+use fedmlh::eval::decode::sketch_decode;
+use fedmlh::federated::backend::TrainBackend;
+use fedmlh::hashing::label_hash::LabelHasher;
+use fedmlh::runtime::{RuntimeClient, XlaBackend};
+
+fn main() {
+    let mut bench = Bencher::from_env("decode");
+
+    for name in ["eurlex", "wiki31", "amztitle", "wikititle"] {
+        let cfg = ExperimentConfig::preset(name).unwrap();
+        let (r, b, p, rows) = (cfg.r(), cfg.b(), cfg.preset.p, cfg.preset.batch);
+        let hasher = LabelHasher::new(1, r, p, b);
+        let idx = hasher.index_matrix_i32();
+        let logits: Vec<f32> = (0..r * rows * b).map(|i| (i as f32).sin()).collect();
+        bench.bench_val(&format!("rust/{name} R{r} B{b} p{p}"), || {
+            sketch_decode(&logits, &idx, r, rows, b, p)
+        });
+    }
+
+    // HLO decode (artifact-backed), when built.
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = RuntimeClient::new(dir).unwrap();
+        for name in ["eurlex", "amztitle"] {
+            let cfg = ExperimentConfig::preset(name).unwrap();
+            let be = XlaBackend::new(rt.clone(), &cfg, Algo::FedMlh).unwrap();
+            let (r, b, p, rows) = (cfg.r(), cfg.b(), cfg.preset.p, cfg.preset.batch);
+            let hasher = LabelHasher::new(1, r, p, b);
+            let idx = hasher.index_matrix_i32();
+            let logits: Vec<f32> = (0..r * rows * b).map(|i| (i as f32).sin()).collect();
+            bench.bench_val(&format!("hlo/{name} R{r} B{b} p{p}"), || {
+                be.decode(&logits, &idx, r, rows, b, p).unwrap()
+            });
+        }
+    } else {
+        eprintln!("# artifacts missing — skipping HLO decode benches");
+    }
+    bench.finish();
+}

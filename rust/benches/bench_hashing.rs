@@ -1,0 +1,54 @@
+//! Hashing-substrate micro-benchmarks: 2-universal evaluation, label
+//! hashing (Algorithm 2 lines 4–7), index-matrix construction and the
+//! count-sketch primitives. These are L3 per-batch hot-path pieces.
+
+use fedmlh::bench::Bencher;
+use fedmlh::hashing::count_sketch::{CountSketch, Estimator};
+use fedmlh::hashing::label_hash::LabelHasher;
+use fedmlh::hashing::universal::UniversalHash;
+use fedmlh::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::from_env("hashing");
+
+    // raw 2-universal throughput
+    let mut rng = Rng::new(1);
+    let h = UniversalHash::draw(&mut rng, 4096);
+    b.bench_val("universal/1e5_hashes", || {
+        let mut acc = 0usize;
+        for x in 0..100_000u64 {
+            acc ^= h.hash(x);
+        }
+        acc
+    });
+
+    // bucket-label construction at eurlex and amztitle scale
+    for (name, p, bb, r) in [("eurlex", 4000usize, 250usize, 4usize), ("amztitle", 16384, 1024, 4)] {
+        let hasher = LabelHasher::new(7, r, p, bb);
+        let positives: Vec<u32> = (0..8).map(|i| (i * (p / 8)) as u32).collect();
+        let mut out = vec![0.0f32; bb];
+        b.bench(&format!("bucket_labels/{name}_batch64"), || {
+            for _ in 0..64 {
+                hasher.bucket_labels_table_into(0, &positives, &mut out);
+            }
+        });
+        b.bench_val(&format!("index_matrix/{name}"), || hasher.index_matrix_i32());
+    }
+
+    // count-sketch insert + retrieve
+    let mut cs = CountSketch::new(3, 5, 1024);
+    b.bench("count_sketch/insert_1e4", || {
+        for i in 0..10_000u64 {
+            cs.insert(i, 1.0);
+        }
+    });
+    b.bench_val("count_sketch/retrieve_1e4", || {
+        let mut acc = 0.0f32;
+        for i in 0..10_000u64 {
+            acc += cs.retrieve(i, Estimator::Median);
+        }
+        acc
+    });
+
+    b.finish();
+}

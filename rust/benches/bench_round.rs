@@ -1,0 +1,75 @@
+//! Table 7 source: wall-clock of one client's local synchronization
+//! round (E = 5 epochs), FedAvg vs FedMLH, rust and XLA backends.
+//! The paper's claim is the ratio (FedMLH trains faster because the
+//! last layer is B-wide, not p-wide).
+
+use std::path::Path;
+
+use fedmlh::bench::Bencher;
+use fedmlh::config::{Algo, ExperimentConfig};
+use fedmlh::federated::backend::{RustBackend, TrainBackend};
+use fedmlh::federated::batcher::ClientBatcher;
+use fedmlh::harness;
+use fedmlh::model::params::ModelParams;
+use fedmlh::runtime::RuntimeClient;
+
+fn bench_local_round(
+    bench: &mut Bencher,
+    tag: &str,
+    cfg: &ExperimentConfig,
+    algo: Algo,
+    backend: &dyn TrainBackend,
+) {
+    let world = harness::build_world(cfg);
+    let scheme = fedmlh::algo::scheme_for(cfg, algo, &world.data.train);
+    let shard = &world.partition.clients[0];
+    let mut params = ModelParams::init(
+        cfg.preset.d,
+        cfg.preset.hidden,
+        scheme.out_dim(),
+        1,
+    );
+    bench.bench(tag, || {
+        // one sub-model's DeviceTrain (E epochs); FedMLH runs R of these
+        let mut batcher = ClientBatcher::new(
+            &world.data.train,
+            shard,
+            scheme.target(0),
+            cfg.preset.batch,
+            42,
+        );
+        backend
+            .local_train(&mut params, &mut batcher, cfg.local_epochs, cfg.lr)
+            .unwrap();
+    });
+}
+
+fn main() {
+    let mut bench = Bencher::from_env("round");
+    // keep the bench window reasonable: these are whole local rounds
+    let fast = std::env::var("FEDMLH_BENCH_FAST").ok().as_deref() == Some("1");
+    let presets: &[&str] = if fast { &["tiny"] } else { &["tiny", "eurlex"] };
+
+    for name in presets {
+        let cfg = ExperimentConfig::preset(name).unwrap();
+        let rust = RustBackend::with_batch(cfg.preset.batch);
+        bench_local_round(&mut bench, &format!("rust/{name}/fedavg_E5"), &cfg, Algo::FedAvg, &rust);
+        bench_local_round(&mut bench, &format!("rust/{name}/fedmlh_sub_E5"), &cfg, Algo::FedMlh, &rust);
+    }
+
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = RuntimeClient::new(dir).unwrap();
+        for name in presets {
+            let cfg = ExperimentConfig::preset(name).unwrap();
+            for algo in [Algo::FedAvg, Algo::FedMlh] {
+                let be = fedmlh::runtime::XlaBackend::new(rt.clone(), &cfg, algo).unwrap();
+                let tag = format!("xla/{name}/{}_E5", if algo == Algo::FedAvg { "fedavg" } else { "fedmlh_sub" });
+                bench_local_round(&mut bench, &tag, &cfg, algo, &be);
+            }
+        }
+    } else {
+        eprintln!("# artifacts missing — skipping XLA round benches");
+    }
+    bench.finish();
+}

@@ -1,0 +1,36 @@
+//! End-to-end table regeneration benchmark: times a full FedAvg+FedMLH
+//! comparison pair (the generator of Tables 3–7) on the tiny preset,
+//! plus the per-table formatting. `FEDMLH_BENCH_FULL=eurlex` upgrades
+//! the measured preset (minutes, not seconds).
+
+use fedmlh::bench::Bencher;
+use fedmlh::config::ExperimentConfig;
+use fedmlh::harness::{self, tables, BackendKind, HarnessOpts};
+
+fn main() {
+    let mut bench = Bencher::from_env("tables");
+    let preset = std::env::var("FEDMLH_BENCH_FULL").unwrap_or_else(|_| "tiny".into());
+    let rounds = if preset == "tiny" { 5 } else { 10 };
+
+    let cfg = ExperimentConfig::preset(&preset).unwrap();
+    let mk_opts = |backend| HarnessOpts {
+        backend,
+        rounds: Some(rounds),
+        ..HarnessOpts::default()
+    };
+
+    bench.min_iters = 3;
+    let mut last_pair = None;
+    bench.bench(&format!("pair/{preset}/rust_{rounds}r"), || {
+        last_pair = Some(harness::run_pair(&cfg, &mk_opts(BackendKind::Rust)).unwrap());
+    });
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        bench.bench(&format!("pair/{preset}/xla_{rounds}r"), || {
+            last_pair = Some(harness::run_pair(&cfg, &mk_opts(BackendKind::Xla)).unwrap());
+        });
+    }
+
+    let pairs = vec![last_pair.unwrap()];
+    bench.bench_val("format/tables_3_to_7", || tables::all_pair_tables(&pairs));
+    bench.finish();
+}

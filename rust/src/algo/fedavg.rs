@@ -1,0 +1,78 @@
+//! FedAvg baseline (McMahan et al., 2017; paper Section 3.1).
+//!
+//! One global model whose last layer spans all `p` classes, trained on
+//! raw multi-hot class labels; inference scores are the logits
+//! themselves. This is the comparison baseline of every table in the
+//! paper's evaluation.
+
+use anyhow::Result;
+
+use crate::federated::backend::TrainBackend;
+use crate::federated::batcher::Target;
+
+use super::LabelScheme;
+
+/// The degenerate one-model scheme.
+pub struct FedAvgScheme {
+    p: usize,
+}
+
+impl FedAvgScheme {
+    pub fn new(p: usize) -> Self {
+        FedAvgScheme { p }
+    }
+}
+
+impl LabelScheme for FedAvgScheme {
+    fn n_models(&self) -> usize {
+        1
+    }
+
+    fn out_dim(&self) -> usize {
+        self.p
+    }
+
+    fn target(&self, j: usize) -> Target {
+        assert_eq!(j, 0, "FedAvg has a single model");
+        Target::Classes
+    }
+
+    fn scores(
+        &self,
+        logits: &[Vec<f32>],
+        rows: usize,
+        _backend: &dyn TrainBackend,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(logits.len(), 1);
+        // Logits over classes ARE the scores; truncate padding rows.
+        Ok(logits[0][..rows * self.p].to_vec())
+    }
+
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::federated::backend::RustBackend;
+
+    #[test]
+    fn passthrough_scores() {
+        let s = FedAvgScheme::new(3);
+        assert_eq!(s.n_models(), 1);
+        assert_eq!(s.out_dim(), 3);
+        let logits = vec![vec![1.0, 2.0, 3.0, 9.0, 9.0, 9.0]];
+        let backend = RustBackend::new();
+        let scores = s.scores(&logits, 1, &backend).unwrap();
+        assert_eq!(scores, vec![1.0, 2.0, 3.0]); // padded row dropped
+        assert!(matches!(s.target(0), Target::Classes));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_submodel_index() {
+        FedAvgScheme::new(3).target(1);
+    }
+}

@@ -1,0 +1,133 @@
+//! FedMLH (the paper's contribution, Section 4 / Algorithm 2).
+//!
+//! R independent sub-models, each trained against the bucket labels of
+//! its own 2-universal hash table over the p classes; at inference the
+//! per-class score is the count-sketch *mean* of the R bucket logits the
+//! class hashes into (Fig. 1b). The hash tables are drawn once from the
+//! run seed — the analog of the server broadcast in Algorithm 2 line 3.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::federated::backend::TrainBackend;
+use crate::federated::batcher::Target;
+use crate::hashing::label_hash::LabelHasher;
+use crate::util::rng::derive_seed;
+
+use super::LabelScheme;
+
+/// R-sub-model scheme with shared hash tables.
+pub struct FedMlhScheme {
+    hasher: Arc<LabelHasher>,
+    /// Cached `[R, p]` class→bucket matrix for the decode path.
+    idx: Vec<i32>,
+    p: usize,
+}
+
+impl FedMlhScheme {
+    pub fn new(seed: u64, r: usize, p: usize, b: usize) -> Self {
+        let hasher = Arc::new(LabelHasher::new(
+            derive_seed(seed, 0x3e_747ab1e5),
+            r,
+            p,
+            b,
+        ));
+        let idx = hasher.index_matrix_i32();
+        FedMlhScheme { hasher, idx, p }
+    }
+
+    pub fn hasher(&self) -> &Arc<LabelHasher> {
+        &self.hasher
+    }
+
+    pub fn index_matrix(&self) -> &[i32] {
+        &self.idx
+    }
+}
+
+impl LabelScheme for FedMlhScheme {
+    fn n_models(&self) -> usize {
+        self.hasher.r()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.hasher.b()
+    }
+
+    fn target(&self, j: usize) -> Target {
+        assert!(j < self.hasher.r());
+        Target::Buckets {
+            hasher: self.hasher.clone(),
+            table: j,
+        }
+    }
+
+    fn scores(
+        &self,
+        logits: &[Vec<f32>],
+        rows: usize,
+        backend: &dyn TrainBackend,
+    ) -> Result<Vec<f32>> {
+        let r = self.hasher.r();
+        let b = self.hasher.b();
+        assert_eq!(logits.len(), r);
+        // Flatten [R][rows_padded * B] → [R, rows, B]; the per-model
+        // logits may be padded past `rows` — take exactly rows*b each.
+        let mut flat = Vec::with_capacity(r * rows * b);
+        for table in logits {
+            assert!(table.len() >= rows * b);
+            flat.extend_from_slice(&table[..rows * b]);
+        }
+        backend.decode(&flat, &self.idx, r, rows, b, self.p)
+    }
+
+    fn name(&self) -> &'static str {
+        "fedmlh"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::decode::sketch_decode;
+    use crate::federated::backend::RustBackend;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dimensions() {
+        let s = FedMlhScheme::new(1, 4, 100, 16);
+        assert_eq!(s.n_models(), 4);
+        assert_eq!(s.out_dim(), 16);
+        assert_eq!(s.index_matrix().len(), 400);
+        assert!(matches!(s.target(3), Target::Buckets { table: 3, .. }));
+    }
+
+    #[test]
+    fn scores_match_direct_decode() {
+        let s = FedMlhScheme::new(2, 3, 50, 8);
+        let mut rng = Rng::new(4);
+        let rows = 2;
+        // padded logits: 4 rows worth, only 2 real
+        let logits: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..4 * 8).map(|_| rng.next_f32()).collect())
+            .collect();
+        let backend = RustBackend::new();
+        let got = s.scores(&logits, rows, &backend).unwrap();
+        let mut flat = Vec::new();
+        for t in &logits {
+            flat.extend_from_slice(&t[..rows * 8]);
+        }
+        let want = sketch_decode(&flat, s.index_matrix(), 3, rows, 8, 50);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn seeded_hash_tables_are_stable() {
+        let a = FedMlhScheme::new(9, 2, 30, 4);
+        let b = FedMlhScheme::new(9, 2, 30, 4);
+        assert_eq!(a.index_matrix(), b.index_matrix());
+        let c = FedMlhScheme::new(10, 2, 30, 4);
+        assert_ne!(a.index_matrix(), c.index_matrix());
+    }
+}

@@ -1,0 +1,59 @@
+//! The two algorithms under study, expressed as label/score schemes the
+//! federated server is generic over.
+//!
+//! - [`fedavg`] — the baseline: one global model with a full `p`-way
+//!   output layer trained on raw class labels.
+//! - [`fedmlh`] — the paper's contribution: R sub-models over B-bucket
+//!   hashed labels, count-sketch mean decode at inference.
+
+pub mod fedavg;
+pub mod fedmlh;
+
+use anyhow::Result;
+
+use crate::config::{Algo, ExperimentConfig};
+use crate::data::dataset::Dataset;
+use crate::federated::backend::TrainBackend;
+use crate::federated::batcher::Target;
+
+/// How an algorithm maps datasets to training targets and sub-model
+/// logits to class scores. One implementation per paper baseline.
+pub trait LabelScheme {
+    /// Number of independently-federated models (1 or R).
+    fn n_models(&self) -> usize;
+
+    /// Output width of each model (p or B).
+    fn out_dim(&self) -> usize;
+
+    /// Training target for sub-model `j`.
+    fn target(&self, j: usize) -> Target;
+
+    /// Combine per-model logits (each flat `[rows, out_dim]`) into class
+    /// scores (flat `[rows, p]`).
+    fn scores(
+        &self,
+        logits: &[Vec<f32>],
+        rows: usize,
+        backend: &dyn TrainBackend,
+    ) -> Result<Vec<f32>>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Build the scheme for `algo` under `cfg` (hash functions are drawn
+/// from the config seed, mirroring the server broadcast of Algorithm 2).
+pub fn scheme_for(
+    cfg: &ExperimentConfig,
+    algo: Algo,
+    ds: &Dataset,
+) -> Box<dyn LabelScheme> {
+    match algo {
+        Algo::FedAvg => Box::new(fedavg::FedAvgScheme::new(ds.p())),
+        Algo::FedMlh => Box::new(fedmlh::FedMlhScheme::new(
+            cfg.seed,
+            cfg.r(),
+            ds.p(),
+            cfg.b(),
+        )),
+    }
+}

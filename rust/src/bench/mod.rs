@@ -1,0 +1,216 @@
+//! Minimal benchmarking harness (criterion is unavailable offline; all
+//! `[[bench]]` targets set `harness = false` and drive this instead).
+//!
+//! Usage from a bench binary:
+//!
+//! ```no_run
+//! use fedmlh::bench::Bencher;
+//! let mut b = Bencher::from_env("bench_example");
+//! b.bench("aggregate/tiny", || { /* measured body */ });
+//! b.finish();
+//! ```
+//!
+//! Protocol: warm up, then run timed iterations until both a minimum
+//! iteration count and a minimum measurement window are reached; report
+//! mean / median / p95 per iteration plus throughput hooks. Output is
+//! one aligned text row per benchmark (and optionally a CSV under
+//! `results/` for EXPERIMENTS.md).
+
+use std::time::Instant;
+
+/// Per-benchmark summary statistics (seconds per iteration).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    fn from_samples(name: &str, mut samples: Vec<f64>) -> Stats {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let pick = |q: f64| samples[((n as f64 - 1.0) * q).round() as usize];
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            median: pick(0.5),
+            p95: pick(0.95),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    /// Render seconds in the most readable unit.
+    pub fn fmt_time(seconds: f64) -> String {
+        if seconds >= 1.0 {
+            format!("{seconds:.3} s")
+        } else if seconds >= 1e-3 {
+            format!("{:.3} ms", seconds * 1e3)
+        } else if seconds >= 1e-6 {
+            format!("{:.3} us", seconds * 1e6)
+        } else {
+            format!("{:.1} ns", seconds * 1e9)
+        }
+    }
+}
+
+/// The bench driver: collects [`Stats`] rows and prints a table.
+pub struct Bencher {
+    suite: String,
+    /// Minimum timed iterations per benchmark.
+    pub min_iters: usize,
+    /// Minimum total measurement window per benchmark (seconds).
+    pub min_seconds: f64,
+    /// Warmup iterations (untimed).
+    pub warmup: usize,
+    results: Vec<Stats>,
+    quiet: bool,
+}
+
+impl Bencher {
+    pub fn new(suite: &str) -> Self {
+        Bencher {
+            suite: suite.to_string(),
+            min_iters: 10,
+            min_seconds: 0.25,
+            warmup: 2,
+            results: Vec::new(),
+            quiet: false,
+        }
+    }
+
+    /// Construct honoring `FEDMLH_BENCH_FAST=1` (CI smoke: 3 iters, no
+    /// window) and `--quiet`.
+    pub fn from_env(suite: &str) -> Self {
+        let mut b = Self::new(suite);
+        if std::env::var("FEDMLH_BENCH_FAST").ok().as_deref() == Some("1") {
+            b.min_iters = 3;
+            b.min_seconds = 0.0;
+            b.warmup = 1;
+        }
+        if std::env::args().any(|a| a == "--quiet") {
+            b.quiet = true;
+        }
+        eprintln!("# suite {suite}");
+        b
+    }
+
+    /// Measure `f` (called once per iteration) and record a row.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.min_iters * 2);
+        let window = Instant::now();
+        loop {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+            if samples.len() >= self.min_iters
+                && window.elapsed().as_secs_f64() >= self.min_seconds
+            {
+                break;
+            }
+            // Hard cap so a slow benchmark cannot hang the suite.
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        let stats = Stats::from_samples(name, samples);
+        if !self.quiet {
+            println!(
+                "{:<44} {:>12} {:>12} {:>12}  x{}",
+                format!("{}/{}", self.suite, stats.name),
+                Stats::fmt_time(stats.median),
+                Stats::fmt_time(stats.mean),
+                Stats::fmt_time(stats.p95),
+                stats.iters
+            );
+        }
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Measure `f` which returns a value (prevents dead-code elimination
+    /// via `std::hint::black_box`).
+    pub fn bench_val<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        self.bench(name, || {
+            std::hint::black_box(f());
+        })
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Render all rows as CSV (EXPERIMENTS.md appendix material).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("suite,name,iters,median_s,mean_s,p95_s,min_s,max_s\n");
+        for s in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{:.9},{:.9},{:.9},{:.9},{:.9}\n",
+                self.suite, s.name, s.iters, s.median, s.mean, s.p95, s.min, s.max
+            ));
+        }
+        out
+    }
+
+    /// Print the header + flush the CSV if `FEDMLH_BENCH_CSV` names a
+    /// directory. Call once at the end of the bench binary.
+    pub fn finish(&self) {
+        if let Ok(dir) = std::env::var("FEDMLH_BENCH_CSV") {
+            let path = std::path::Path::new(&dir).join(format!("{}.csv", self.suite));
+            if std::fs::create_dir_all(&dir).is_ok() {
+                let _ = std::fs::write(&path, self.to_csv());
+                eprintln!("# wrote {}", path.display());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_samples("x", vec![3.0, 1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn bencher_runs_minimum_iterations() {
+        let mut b = Bencher::new("test");
+        b.quiet = true;
+        b.min_iters = 5;
+        b.min_seconds = 0.0;
+        b.warmup = 0;
+        let mut count = 0u32;
+        b.bench("count", || {
+            count += 1;
+        });
+        assert!(count >= 5);
+        assert_eq!(b.results().len(), 1);
+        let csv = b.to_csv();
+        assert!(csv.contains("test,count,"), "{csv}");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(Stats::fmt_time(2.5), "2.500 s");
+        assert_eq!(Stats::fmt_time(0.002), "2.000 ms");
+        assert_eq!(Stats::fmt_time(3.5e-6), "3.500 us");
+        assert_eq!(Stats::fmt_time(5e-9), "5.0 ns");
+    }
+}

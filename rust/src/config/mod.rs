@@ -1,0 +1,216 @@
+//! Experiment configuration: dataset presets (mirroring
+//! `python/compile/variants.py`) and the federated-learning setup from
+//! the paper's Section 6.
+
+pub mod presets;
+
+use anyhow::{bail, Result};
+
+pub use presets::{DatasetPreset, PRESETS};
+
+/// Which algorithm a run trains (paper's two baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// FedAvg with the full p-way output layer (McMahan et al., 2017).
+    FedAvg,
+    /// Federated Multiple Label Hashing: R sub-models over B buckets.
+    FedMlh,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::FedAvg => "fedavg",
+            Algo::FedMlh => "fedmlh",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Algo> {
+        match s {
+            "fedavg" => Ok(Algo::FedAvg),
+            "fedmlh" => Ok(Algo::FedMlh),
+            other => bail!("unknown algo '{other}' (expected fedavg|fedmlh)"),
+        }
+    }
+}
+
+/// Full experiment description. Defaults mirror the paper's FL setup
+/// (Section 6): K = 10 clients, S = 4 sampled per round, E = 5 local
+/// epochs, T = 70 synchronization rounds, early stopping on the mean of
+/// top-1/3/5 accuracy.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub preset: DatasetPreset,
+    /// Total number of local clients (paper: 10).
+    pub clients: usize,
+    /// Clients sampled per synchronization round (paper: 4).
+    pub clients_per_round: usize,
+    /// Local epochs per round (paper: 5).
+    pub local_epochs: usize,
+    /// Max synchronization rounds (paper: 70).
+    pub rounds: usize,
+    /// Early-stop patience in rounds (0 disables early stopping).
+    pub patience: usize,
+    /// SGD learning rate (input to the AOT train step, not baked in).
+    pub lr: f32,
+    /// Root seed; every stream (data, partition, hashing, sampling) is
+    /// derived from it.
+    pub seed: u64,
+    /// Evaluate on the test set every `eval_every` rounds.
+    pub eval_every: usize,
+    /// Override R (hash tables). 0 = preset default.
+    pub override_r: usize,
+    /// Override B (buckets per table). 0 = preset default.
+    pub override_b: usize,
+    /// Use the `*_fast` artifact family (identical math lowered through
+    /// the pure-jnp ref twins instead of interpret-mode Pallas — ~7×
+    /// faster on the CPU PJRT plugin; see DESIGN.md §Perf). Ignored by
+    /// the rust backend. Not combinable with `override_b` (no fast
+    /// sweep artifacts are emitted).
+    pub fast_artifacts: bool,
+}
+
+impl ExperimentConfig {
+    pub fn new(preset: DatasetPreset) -> Self {
+        let lr = preset.lr;
+        ExperimentConfig {
+            preset,
+            clients: 10,
+            clients_per_round: 4,
+            local_epochs: 5,
+            rounds: 70,
+            patience: 10,
+            lr,
+            seed: 42,
+            eval_every: 1,
+            override_r: 0,
+            override_b: 0,
+            fast_artifacts: false,
+        }
+    }
+
+    /// Look up a named preset ("tiny", "eurlex", ...).
+    pub fn preset(name: &str) -> Result<Self> {
+        Ok(Self::new(presets::by_name(name)?))
+    }
+
+    /// Effective number of hash tables (after overrides).
+    pub fn r(&self) -> usize {
+        if self.override_r > 0 {
+            self.override_r
+        } else {
+            self.preset.r
+        }
+    }
+
+    /// Effective buckets per table (after overrides).
+    pub fn b(&self) -> usize {
+        if self.override_b > 0 {
+            self.override_b
+        } else {
+            self.preset.b
+        }
+    }
+
+    /// Output width of one trained model: p for FedAvg, B for a FedMLH
+    /// sub-model.
+    pub fn out_dim(&self, algo: Algo) -> usize {
+        match algo {
+            Algo::FedAvg => self.preset.p,
+            Algo::FedMlh => self.b(),
+        }
+    }
+
+    /// The artifact key prefix a run loads, e.g. "eurlex.fedmlh" or
+    /// "eurlex.fedmlh_b500" for a Figure-5 sweep point.
+    pub fn artifact_tag(&self, algo: Algo) -> String {
+        let fast = if self.fast_artifacts { "_fast" } else { "" };
+        match algo {
+            Algo::FedAvg => format!("{}.fedavg{fast}", self.preset.name),
+            Algo::FedMlh => {
+                if self.override_b > 0 && self.override_b != self.preset.b {
+                    format!("{}.fedmlh_b{}", self.preset.name, self.override_b)
+                } else {
+                    format!("{}.fedmlh{fast}", self.preset.name)
+                }
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.clients == 0 || self.clients_per_round == 0 {
+            bail!("clients and clients_per_round must be positive");
+        }
+        if self.clients_per_round > self.clients {
+            bail!(
+                "clients_per_round {} > clients {}",
+                self.clients_per_round,
+                self.clients
+            );
+        }
+        if self.local_epochs == 0 || self.rounds == 0 {
+            bail!("local_epochs and rounds must be positive");
+        }
+        if self.b() == 0 || self.r() == 0 {
+            bail!("R and B must be positive");
+        }
+        if self.b() > self.preset.p {
+            bail!("B {} exceeds class count {}", self.b(), self.preset.p);
+        }
+        if !(self.lr > 0.0) {
+            bail!("lr must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_lookup_and_defaults() {
+        let cfg = ExperimentConfig::preset("eurlex").unwrap();
+        assert_eq!(cfg.clients, 10);
+        assert_eq!(cfg.clients_per_round, 4);
+        assert_eq!(cfg.local_epochs, 5);
+        assert_eq!(cfg.rounds, 70);
+        assert_eq!(cfg.r(), 4);
+        assert_eq!(cfg.b(), 250);
+        assert!(ExperimentConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn out_dim_per_algo() {
+        let cfg = ExperimentConfig::preset("eurlex").unwrap();
+        assert_eq!(cfg.out_dim(Algo::FedAvg), 4000);
+        assert_eq!(cfg.out_dim(Algo::FedMlh), 250);
+    }
+
+    #[test]
+    fn artifact_tags() {
+        let mut cfg = ExperimentConfig::preset("eurlex").unwrap();
+        assert_eq!(cfg.artifact_tag(Algo::FedAvg), "eurlex.fedavg");
+        assert_eq!(cfg.artifact_tag(Algo::FedMlh), "eurlex.fedmlh");
+        cfg.override_b = 500;
+        assert_eq!(cfg.artifact_tag(Algo::FedMlh), "eurlex.fedmlh_b500");
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.validate().unwrap();
+        cfg.clients_per_round = 99;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.override_b = 10_000_000;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn algo_parse_roundtrip() {
+        assert_eq!(Algo::parse("fedavg").unwrap(), Algo::FedAvg);
+        assert_eq!(Algo::parse("fedmlh").unwrap(), Algo::FedMlh);
+        assert!(Algo::parse("sgd").is_err());
+    }
+}

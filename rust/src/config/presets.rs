@@ -1,0 +1,191 @@
+//! Dataset presets: scaled analogs of the paper's four extreme
+//! classification datasets (Table 1), plus a `tiny` preset for tests.
+//!
+//! This table MUST stay in sync with `python/compile/variants.py` — the
+//! AOT manifest is the source of truth and `runtime::manifest` validates
+//! shapes at load time, so drift fails fast rather than silently.
+//!
+//! Scaling rationale (DESIGN.md §3): the real datasets are unavailable
+//! offline, and this testbed is a single CPU core rather than a P100
+//! cluster. We preserve the quantities the paper's analysis depends on —
+//! power-law label frequencies (Fig 2a), infrequent-class positive mass
+//! (Fig 2b), the B/p compression ratio and the non-iid partition — and
+//! scale N and p down so full 70-round runs are feasible.
+
+use anyhow::{bail, Result};
+
+/// One dataset configuration (paper Tables 1 and 2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetPreset {
+    pub name: &'static str,
+    /// Analog of the paper dataset this preset stands in for.
+    pub paper_analog: &'static str,
+    /// Hashed feature dimension (the paper's d-tilde; inputs are
+    /// feature-hashed before training, Section 6).
+    pub d: usize,
+    /// Number of classes p.
+    pub p: usize,
+    /// Training samples N.
+    pub n_train: usize,
+    /// Held-out test samples.
+    pub n_test: usize,
+    /// Hidden width of the 2-hidden-layer MLP.
+    pub hidden: usize,
+    /// FedMLH hash tables / sub-models (paper Table 2).
+    pub r: usize,
+    /// Buckets per hash table (paper Table 2).
+    pub b: usize,
+    /// Minibatch size baked into the AOT artifacts.
+    pub batch: usize,
+    /// Default SGD learning rate.
+    pub lr: f32,
+    /// Zipf exponent of the label-frequency law (Fig 2a).
+    pub zipf_alpha: f64,
+    /// Mean positive labels per sample (multi-label).
+    pub labels_per_sample: f64,
+    /// Figure-5 sweep values for B (artifacts exist for these).
+    pub sweep_b: &'static [usize],
+    /// Figure-5 sweep values for R (decode artifacts exist for these).
+    pub sweep_r: &'static [usize],
+}
+
+pub const PRESETS: &[DatasetPreset] = &[
+    DatasetPreset {
+        name: "tiny",
+        paper_analog: "(test only)",
+        d: 32,
+        p: 64,
+        n_train: 512,
+        n_test: 128,
+        hidden: 16,
+        r: 2,
+        b: 16,
+        batch: 16,
+        lr: 0.1,
+        zipf_alpha: 1.1,
+        labels_per_sample: 3.0,
+        sweep_b: &[],
+        sweep_r: &[],
+    },
+    DatasetPreset {
+        name: "eurlex",
+        paper_analog: "EURLex-4K",
+        d: 256,
+        p: 4000,
+        n_train: 6000,
+        n_test: 1500,
+        hidden: 128,
+        r: 4,
+        b: 250,
+        batch: 64,
+        lr: 32.0,
+        zipf_alpha: 1.1,
+        labels_per_sample: 5.0,
+        sweep_b: &[125, 500, 1000],
+        sweep_r: &[2, 8],
+    },
+    DatasetPreset {
+        name: "wiki31",
+        paper_analog: "Wiki10-31K",
+        d: 512,
+        p: 8000,
+        n_train: 4000,
+        n_test: 1000,
+        hidden: 128,
+        r: 4,
+        b: 500,
+        batch: 64,
+        lr: 48.0,
+        zipf_alpha: 1.05,
+        labels_per_sample: 8.0,
+        sweep_b: &[250, 1000, 2000],
+        sweep_r: &[2, 8],
+    },
+    DatasetPreset {
+        name: "amztitle",
+        paper_analog: "LF-AmazonTitle-131K",
+        d: 512,
+        p: 16384,
+        n_train: 8000,
+        n_test: 2000,
+        hidden: 128,
+        r: 4,
+        b: 1024,
+        batch: 64,
+        lr: 64.0,
+        zipf_alpha: 1.15,
+        labels_per_sample: 3.0,
+        sweep_b: &[],
+        sweep_r: &[],
+    },
+    DatasetPreset {
+        name: "wikititle",
+        paper_analog: "LF-WikiSeeAlsoTitles-320K",
+        d: 512,
+        p: 32768,
+        n_train: 8000,
+        n_test: 2000,
+        hidden: 128,
+        r: 8,
+        b: 2048,
+        batch: 64,
+        lr: 64.0,
+        zipf_alpha: 1.2,
+        labels_per_sample: 2.5,
+        sweep_b: &[],
+        sweep_r: &[],
+    },
+];
+
+/// Look up a preset by name.
+pub fn by_name(name: &str) -> Result<DatasetPreset> {
+    for p in PRESETS {
+        if p.name == name {
+            return Ok(p.clone());
+        }
+    }
+    let names: Vec<_> = PRESETS.iter().map(|p| p.name).collect();
+    bail!("unknown preset '{name}' (available: {names:?})")
+}
+
+/// The four paper datasets, in the paper's column order.
+pub fn paper_presets() -> Vec<DatasetPreset> {
+    ["eurlex", "wiki31", "amztitle", "wikititle"]
+        .iter()
+        .map(|n| by_name(n).unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolvable() {
+        for p in PRESETS {
+            assert_eq!(by_name(p.name).unwrap(), *p);
+        }
+        assert!(by_name("bogus").is_err());
+    }
+
+    #[test]
+    fn paper_presets_in_column_order() {
+        let names: Vec<_> = paper_presets().iter().map(|p| p.name).collect();
+        assert_eq!(names, vec!["eurlex", "wiki31", "amztitle", "wikititle"]);
+    }
+
+    #[test]
+    fn compression_holds_for_every_preset() {
+        // FedMLH's premise: R*B << p so the hashed output layer is smaller.
+        for p in PRESETS.iter().filter(|p| p.name != "tiny") {
+            assert!(p.r * p.b < p.p, "{}: R*B={} >= p={}", p.name, p.r * p.b, p.p);
+        }
+    }
+
+    #[test]
+    fn batch_divides_reasonably() {
+        for p in PRESETS {
+            assert!(p.batch > 0 && p.n_test >= p.batch, "{}", p.name);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! In-memory extreme multi-label dataset: dense (feature-hashed) inputs
+//! plus CSR-style sparse positive-label lists.
+
+use anyhow::{bail, Result};
+
+/// A multi-label dataset with dense f32 features and sparse labels.
+///
+/// Features are stored post-feature-hashing (dimension `d`), matching
+/// the paper's Section 6 setup where "both baselines are run on the
+/// feature hashed data". Labels are positive-class id lists per sample.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    d: usize,
+    p: usize,
+    /// Row-major `[n, d]` features.
+    features: Vec<f32>,
+    /// CSR offsets into `label_data`, length n+1.
+    label_offsets: Vec<usize>,
+    label_data: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn new(d: usize, p: usize) -> Self {
+        Dataset {
+            d,
+            p,
+            features: Vec::new(),
+            label_offsets: vec![0],
+            label_data: Vec::new(),
+        }
+    }
+
+    /// Append one sample. `labels` must be sorted-or-not positive ids < p.
+    pub fn push(&mut self, features: &[f32], labels: &[u32]) -> Result<()> {
+        if features.len() != self.d {
+            bail!("feature dim {} != {}", features.len(), self.d);
+        }
+        if let Some(&bad) = labels.iter().find(|&&l| l as usize >= self.p) {
+            bail!("label {bad} out of range p={}", self.p);
+        }
+        self.features.extend_from_slice(features);
+        self.label_data.extend_from_slice(labels);
+        self.label_offsets.push(self.label_data.len());
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.label_offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn features_of(&self, i: usize) -> &[f32] {
+        &self.features[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn labels_of(&self, i: usize) -> &[u32] {
+        &self.label_data[self.label_offsets[i]..self.label_offsets[i + 1]]
+    }
+
+    /// Total number of positive instances N_lab = Σ_j n_j.
+    pub fn total_positives(&self) -> usize {
+        self.label_data.len()
+    }
+
+    /// Positive-instance count per class (n_j in the paper).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.p];
+        for &l in &self.label_data {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+
+    /// Gather a padded feature batch: rows `idx`, zero-padded to
+    /// `batch` rows. Returns (flat `[batch, d]`, real row count).
+    pub fn feature_batch(&self, idx: &[usize], batch: usize) -> (Vec<f32>, usize) {
+        assert!(idx.len() <= batch);
+        let mut out = vec![0.0f32; batch * self.d];
+        for (row, &i) in idx.iter().enumerate() {
+            out[row * self.d..(row + 1) * self.d].copy_from_slice(self.features_of(i));
+        }
+        (out, idx.len())
+    }
+
+    /// Dense multi-hot class label batch `[batch, p]` (FedAvg target).
+    pub fn class_label_batch(&self, idx: &[usize], batch: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; batch * self.p];
+        for (row, &i) in idx.iter().enumerate() {
+            for &l in self.labels_of(i) {
+                out[row * self.p + l as usize] = 1.0;
+            }
+        }
+        out
+    }
+
+    /// Restrict to a subset of sample indices (client shard view).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut out = Dataset::new(self.d, self.p);
+        for &i in idx {
+            out.push(self.features_of(i), self.labels_of(i)).unwrap();
+        }
+        out
+    }
+}
+
+/// Iterate minibatch index ranges over `n` samples (last batch short).
+pub fn batch_ranges(n: usize, batch: usize) -> Vec<(usize, usize)> {
+    assert!(batch > 0);
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < n {
+        out.push((start, (start + batch).min(n)));
+        start += batch;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_ds() -> Dataset {
+        let mut ds = Dataset::new(3, 10);
+        ds.push(&[1.0, 2.0, 3.0], &[0, 5]).unwrap();
+        ds.push(&[4.0, 5.0, 6.0], &[9]).unwrap();
+        ds.push(&[7.0, 8.0, 9.0], &[]).unwrap();
+        ds
+    }
+
+    #[test]
+    fn push_and_access() {
+        let ds = sample_ds();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.features_of(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(ds.labels_of(0), &[0, 5]);
+        assert_eq!(ds.labels_of(2), &[] as &[u32]);
+        assert_eq!(ds.total_positives(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let mut ds = Dataset::new(3, 10);
+        assert!(ds.push(&[1.0], &[0]).is_err());
+        assert!(ds.push(&[1.0, 2.0, 3.0], &[10]).is_err());
+    }
+
+    #[test]
+    fn class_counts_match() {
+        let ds = sample_ds();
+        let counts = ds.class_counts();
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[5], 1);
+        assert_eq!(counts[9], 1);
+        assert_eq!(counts.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn feature_batch_pads_with_zeros() {
+        let ds = sample_ds();
+        let (batch, real) = ds.feature_batch(&[2, 0], 4);
+        assert_eq!(real, 2);
+        assert_eq!(&batch[0..3], &[7.0, 8.0, 9.0]);
+        assert_eq!(&batch[3..6], &[1.0, 2.0, 3.0]);
+        assert!(batch[6..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn class_label_batch_multihot() {
+        let ds = sample_ds();
+        let y = ds.class_label_batch(&[0], 2);
+        assert_eq!(y.len(), 20);
+        assert_eq!(y[0], 1.0);
+        assert_eq!(y[5], 1.0);
+        assert_eq!(y.iter().filter(|&&v| v > 0.0).count(), 2);
+    }
+
+    #[test]
+    fn subset_preserves_rows() {
+        let ds = sample_ds();
+        let sub = ds.subset(&[1, 1, 0]);
+        assert_eq!(sub.len(), 3);
+        assert_eq!(sub.features_of(0), ds.features_of(1));
+        assert_eq!(sub.labels_of(2), ds.labels_of(0));
+    }
+
+    #[test]
+    fn batch_ranges_cover_everything() {
+        assert_eq!(batch_ranges(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(batch_ranges(0, 4), vec![]);
+        assert_eq!(batch_ranges(4, 4), vec![(0, 4)]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Signed feature hashing: sparse high-dimensional inputs → dense d̃.
+//!
+//! The paper (Section 6): "Since the input features are sparse for most
+//! of the extreme classification datasets, feature hashing is widely
+//! used to reduce the memory cost. Here, we also use feature hashing to
+//! reduce the feature dimension." Both the synthetic generator and the
+//! XC-format loader route raw sparse features through this map.
+//!
+//! `x̃[h(i)] += s(i) · v_i` with `h` 2-universal into d̃ and `s` a ±1
+//! sign hash (the sign keeps the map an ℓ2-isometry in expectation).
+
+use crate::util::rng::{derive_seed, Rng};
+
+use super::super::hashing::universal::UniversalHash;
+
+/// A seeded feature-hashing projection raw-dim → d̃.
+#[derive(Clone, Debug)]
+pub struct FeatureHasher {
+    h: UniversalHash,
+    d_out: usize,
+}
+
+impl FeatureHasher {
+    pub fn new(seed: u64, d_out: usize) -> Self {
+        let mut rng = Rng::new(derive_seed(seed, 0xfea_7));
+        FeatureHasher {
+            h: UniversalHash::draw(&mut rng, d_out),
+            d_out,
+        }
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    /// Hash a sparse vector `(index, value)` into `out` (accumulating;
+    /// caller zeroes `out` first if needed).
+    pub fn hash_into(&self, sparse: &[(u32, f32)], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d_out);
+        for &(i, v) in sparse {
+            out[self.h.hash(i as u64)] += self.h.sign(i as u64) * v;
+        }
+    }
+
+    /// Convenience: allocate and hash.
+    pub fn hash(&self, sparse: &[(u32, f32)]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.d_out];
+        self.hash_into(sparse, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn deterministic() {
+        let a = FeatureHasher::new(5, 16);
+        let b = FeatureHasher::new(5, 16);
+        let sparse = [(0u32, 1.0f32), (100, -2.0), (5000, 0.5)];
+        assert_eq!(a.hash(&sparse), b.hash(&sparse));
+    }
+
+    #[test]
+    fn linear_in_values() {
+        check("feature hash linear", 20, |g| {
+            let fh = FeatureHasher::new(g.rng().next_u64(), g.usize_in(4, 64));
+            let n = g.usize_in(1, 30);
+            let xs: Vec<(u32, f32)> = (0..n)
+                .map(|_| (g.usize_in(0, 10_000) as u32, g.f32_in(-2.0, 2.0)))
+                .collect();
+            let ys: Vec<(u32, f32)> = xs.iter().map(|&(i, v)| (i, 2.0 * v)).collect();
+            let hx = fh.hash(&xs);
+            let hy = fh.hash(&ys);
+            for (a, b) in hx.iter().zip(hy.iter()) {
+                assert!((2.0 * a - b).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn norm_preserved_in_expectation() {
+        // Average ratio ‖x̃‖²/‖x‖² over many draws ≈ 1 (the sign hash
+        // cancels cross terms in expectation).
+        let mut ratio_sum = 0.0f64;
+        let trials = 200;
+        let mut rng = Rng::new(1234);
+        for t in 0..trials {
+            let fh = FeatureHasher::new(t as u64, 64);
+            let sparse: Vec<(u32, f32)> = (0..40)
+                .map(|_| (rng.below(100_000) as u32, rng.gaussian_f32(0.0, 1.0)))
+                .collect();
+            let nx: f32 = sparse.iter().map(|(_, v)| v * v).sum();
+            let hx = fh.hash(&sparse);
+            let nh: f32 = hx.iter().map(|v| v * v).sum();
+            ratio_sum += (nh / nx) as f64;
+        }
+        let mean_ratio = ratio_sum / trials as f64;
+        assert!((mean_ratio - 1.0).abs() < 0.15, "mean ratio {mean_ratio}");
+    }
+
+    #[test]
+    fn accumulates_into_existing_buffer() {
+        let fh = FeatureHasher::new(9, 8);
+        let mut buf = vec![1.0f32; 8];
+        fh.hash_into(&[(3, 2.0)], &mut buf);
+        let fresh = fh.hash(&[(3, 2.0)]);
+        for i in 0..8 {
+            assert!((buf[i] - 1.0 - fresh[i]).abs() < 1e-6);
+        }
+    }
+}

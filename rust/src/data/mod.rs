@@ -1,0 +1,18 @@
+//! Datasets: synthetic extreme multi-label generation, feature hashing,
+//! the XC-repository file format, and label-frequency statistics.
+//!
+//! The paper evaluates on four public XC datasets we cannot download in
+//! this offline environment; [`synth`] generates scaled analogs that
+//! preserve the properties the paper's analysis rests on (power-law
+//! label frequencies, heavy infrequent-class positive mass, learnable
+//! feature→label structure). [`xc_format`] reads the XC repository's
+//! sparse format so the real datasets drop in unchanged when available.
+
+pub mod dataset;
+pub mod feature_hash;
+pub mod stats;
+pub mod synth;
+pub mod xc_format;
+
+pub use dataset::Dataset;
+pub use synth::SynthSpec;

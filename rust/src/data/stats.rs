@@ -1,0 +1,174 @@
+//! Label-frequency statistics: the series behind paper Figure 2a/2b and
+//! the frequent/infrequent class split used by the partitioner (Fig. 2c)
+//! and the per-group accuracy metrics (Fig. 3).
+
+use super::dataset::Dataset;
+
+/// Per-class positive counts plus derived series.
+#[derive(Clone, Debug)]
+pub struct LabelStats {
+    /// n_j: positive instances per class.
+    pub counts: Vec<usize>,
+    /// Sample count the stats were computed over.
+    pub n_samples: usize,
+}
+
+/// One (x, y) point of a CDF-style curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CurvePoint {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl LabelStats {
+    pub fn from_dataset(ds: &Dataset) -> Self {
+        LabelStats {
+            counts: ds.class_counts(),
+            n_samples: ds.len(),
+        }
+    }
+
+    /// Total positive instances N_lab.
+    pub fn total_positives(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Normalized label frequency per class (n_j / N samples).
+    pub fn normalized_freq(&self) -> Vec<f64> {
+        let n = self.n_samples.max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / n).collect()
+    }
+
+    /// Figure 2a: empirical CDF of normalized positive-instance
+    /// frequency, evaluated at `grid` (x = freq threshold, y = fraction
+    /// of classes at or below it).
+    pub fn freq_cdf(&self, grid: &[f64]) -> Vec<CurvePoint> {
+        let freqs = self.normalized_freq();
+        let p = freqs.len().max(1) as f64;
+        grid.iter()
+            .map(|&x| CurvePoint {
+                x,
+                y: freqs.iter().filter(|&&f| f <= x).count() as f64 / p,
+            })
+            .collect()
+    }
+
+    /// Figure 2b: share of all positive instances contributed by classes
+    /// with normalized frequency ≤ x.
+    pub fn positive_mass_cdf(&self, grid: &[f64]) -> Vec<CurvePoint> {
+        let n = self.n_samples.max(1) as f64;
+        let total = self.total_positives().max(1) as f64;
+        grid.iter()
+            .map(|&x| {
+                let mass: usize = self
+                    .counts
+                    .iter()
+                    .filter(|&&c| c as f64 / n <= x)
+                    .sum();
+                CurvePoint {
+                    x,
+                    y: mass as f64 / total,
+                }
+            })
+            .collect()
+    }
+
+    /// The `k` most frequent classes, ordered by descending count
+    /// (ties broken by class id for determinism).
+    pub fn top_k_classes(&self, k: usize) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..self.counts.len() as u32).collect();
+        order.sort_by(|&a, &b| {
+            self.counts[b as usize]
+                .cmp(&self.counts[a as usize])
+                .then(a.cmp(&b))
+        });
+        order.truncate(k);
+        order
+    }
+
+    /// Boolean mask: is class `j` frequent (member of the top-k)?
+    pub fn frequent_mask(&self, k: usize) -> Vec<bool> {
+        let mut mask = vec![false; self.counts.len()];
+        for c in self.top_k_classes(k) {
+            mask[c as usize] = true;
+        }
+        mask
+    }
+
+    /// Standard log-spaced grid for the Fig 2 curves.
+    pub fn log_grid() -> Vec<f64> {
+        let mut grid = Vec::new();
+        let mut x = 1e-5;
+        while x <= 1.0 + 1e-12 {
+            grid.push(x);
+            x *= 10f64.powf(0.25);
+        }
+        grid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds_with_counts() -> Dataset {
+        // class 0: 4 positives, class 1: 2, class 2: 1, class 3: 0
+        let mut ds = Dataset::new(1, 4);
+        ds.push(&[0.0], &[0, 1]).unwrap();
+        ds.push(&[0.0], &[0]).unwrap();
+        ds.push(&[0.0], &[0, 1, 2]).unwrap();
+        ds.push(&[0.0], &[0]).unwrap();
+        ds
+    }
+
+    #[test]
+    fn counts_and_totals() {
+        let st = LabelStats::from_dataset(&ds_with_counts());
+        assert_eq!(st.counts, vec![4, 2, 1, 0]);
+        assert_eq!(st.total_positives(), 7);
+        assert_eq!(st.n_samples, 4);
+    }
+
+    #[test]
+    fn freq_cdf_monotone_and_bounded() {
+        let st = LabelStats::from_dataset(&ds_with_counts());
+        let grid = [0.0, 0.3, 0.6, 1.0];
+        let cdf = st.freq_cdf(&grid);
+        // class freqs: 1.0, 0.5, 0.25, 0.0
+        assert_eq!(cdf[0].y, 0.25); // only class 3 at freq 0
+        assert_eq!(cdf[1].y, 0.5); // + class 2 (0.25)
+        assert_eq!(cdf[2].y, 0.75); // + class 1 (0.5)
+        assert_eq!(cdf[3].y, 1.0);
+        for w in cdf.windows(2) {
+            assert!(w[1].y >= w[0].y);
+        }
+    }
+
+    #[test]
+    fn positive_mass_cdf_matches_hand_count() {
+        let st = LabelStats::from_dataset(&ds_with_counts());
+        let pts = st.positive_mass_cdf(&[0.3, 1.0]);
+        // classes with freq <= 0.3: class 2 (1) and class 3 (0) → 1/7
+        assert!((pts[0].y - 1.0 / 7.0).abs() < 1e-12);
+        assert!((pts[1].y - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top_k_ordering_deterministic() {
+        let st = LabelStats::from_dataset(&ds_with_counts());
+        assert_eq!(st.top_k_classes(2), vec![0, 1]);
+        assert_eq!(st.top_k_classes(10), vec![0, 1, 2, 3]);
+        let mask = st.frequent_mask(2);
+        assert_eq!(mask, vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn log_grid_spans_decades() {
+        let g = LabelStats::log_grid();
+        assert!(g[0] <= 1e-5 * 1.01 && *g.last().unwrap() <= 1.0);
+        assert!(g.len() > 15);
+        for w in g.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! Synthetic extreme multi-label generator (the offline stand-in for the
+//! XC-repository datasets — DESIGN.md §3 documents the substitution).
+//!
+//! Construction, per preset:
+//!
+//! 1. **Label law**: class frequencies follow Zipf(α) (paper Fig. 2a:
+//!    "the distribution of positive instance frequency follows a power
+//!    law in all the datasets"). Each sample draws `k ~ 1 + Poisson-ish`
+//!    positive classes from the Zipf law (deduplicated), so infrequent
+//!    classes still carry a large share of the positive mass (Fig. 2b).
+//! 2. **Class prototypes**: every class gets a sparse signature in a raw
+//!    feature space of dimension `raw_dim` (a handful of indices with
+//!    gaussian weights) — the analog of the bag-of-words features of
+//!    EURLex/Wikipedia/Amazon titles.
+//! 3. **Samples**: raw features = sum of the prototypes of the sample's
+//!    positive classes + sparse background noise, then **feature-hashed**
+//!    to d̃ through [`super::feature_hash`], exactly as the paper hashes
+//!    its real features.
+//!
+//! The task is learnable (features determine labels up to noise), so
+//! FedMLH-vs-FedAvg accuracy orderings are meaningful, while the label
+//! statistics reproduce the regime the paper's Lemma 1 / Theorem 2
+//! analysis targets.
+
+use crate::config::DatasetPreset;
+use crate::util::rng::{derive_seed, Rng, Zipf};
+
+use super::dataset::Dataset;
+use super::feature_hash::FeatureHasher;
+
+/// Generator parameters (derived from a preset, overridable for tests).
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub d: usize,
+    pub p: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub zipf_alpha: f64,
+    pub labels_per_sample: f64,
+    /// Raw (pre-hash) feature dimension.
+    pub raw_dim: usize,
+    /// Non-zero raw indices per class prototype.
+    pub proto_nnz: usize,
+    /// Background-noise raw indices per sample.
+    pub noise_nnz: usize,
+    /// Noise amplitude relative to prototype weights.
+    pub noise_scale: f32,
+}
+
+impl SynthSpec {
+    pub fn from_preset(p: &DatasetPreset) -> Self {
+        SynthSpec {
+            d: p.d,
+            p: p.p,
+            n_train: p.n_train,
+            n_test: p.n_test,
+            zipf_alpha: p.zipf_alpha,
+            labels_per_sample: p.labels_per_sample,
+            raw_dim: 4 * p.d,
+            proto_nnz: 12,
+            noise_nnz: 8,
+            noise_scale: 0.3,
+        }
+    }
+}
+
+/// Sparse class prototypes in the raw feature space.
+struct Prototypes {
+    /// (index, weight) lists, one per class.
+    rows: Vec<Vec<(u32, f32)>>,
+}
+
+impl Prototypes {
+    fn generate(spec: &SynthSpec, rng: &mut Rng) -> Self {
+        let rows = (0..spec.p)
+            .map(|_| {
+                (0..spec.proto_nnz)
+                    .map(|_| {
+                        (
+                            rng.below(spec.raw_dim) as u32,
+                            rng.gaussian_f32(0.0, 1.0),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        Prototypes { rows }
+    }
+}
+
+/// Generated train/test pair.
+pub struct SynthData {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Draw one sample's positive label set from the Zipf law.
+fn draw_labels(spec: &SynthSpec, zipf: &Zipf, rng: &mut Rng) -> Vec<u32> {
+    // 1 + geometric-ish count with mean ≈ labels_per_sample.
+    let extra = spec.labels_per_sample - 1.0;
+    let mut k = 1;
+    while (k as f64) < 1.0 + 4.0 * extra && rng.bernoulli(extra / (extra + 1.0)) {
+        k += 1;
+    }
+    let mut labels: Vec<u32> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let c = zipf.sample(rng) as u32;
+        if !labels.contains(&c) {
+            labels.push(c);
+        }
+    }
+    labels
+}
+
+fn make_sample(
+    spec: &SynthSpec,
+    protos: &Prototypes,
+    hasher: &FeatureHasher,
+    zipf: &Zipf,
+    rng: &mut Rng,
+) -> (Vec<f32>, Vec<u32>) {
+    let labels = draw_labels(spec, zipf, rng);
+    let mut out = vec![0.0f32; spec.d];
+    for &c in &labels {
+        hasher.hash_into(&protos.rows[c as usize], &mut out);
+    }
+    // background noise
+    let noise: Vec<(u32, f32)> = (0..spec.noise_nnz)
+        .map(|_| {
+            (
+                rng.below(spec.raw_dim) as u32,
+                rng.gaussian_f32(0.0, spec.noise_scale),
+            )
+        })
+        .collect();
+    hasher.hash_into(&noise, &mut out);
+    (out, labels)
+}
+
+/// Generate the full train/test pair for `spec`, deterministically from
+/// `seed`. Prototypes and the feature-hash function are shared between
+/// the splits (same "world"), sample draws are independent.
+pub fn generate(spec: &SynthSpec, seed: u64) -> SynthData {
+    let mut proto_rng = Rng::new(derive_seed(seed, 0x5f_01));
+    let protos = Prototypes::generate(spec, &mut proto_rng);
+    let hasher = FeatureHasher::new(derive_seed(seed, 0x5f_02), spec.d);
+    let zipf = Zipf::new(spec.p, spec.zipf_alpha);
+
+    let gen_split = |n: usize, stream: u64| {
+        let mut rng = Rng::new(derive_seed(seed, stream));
+        let mut ds = Dataset::new(spec.d, spec.p);
+        for _ in 0..n {
+            let (x, y) = make_sample(spec, &protos, &hasher, &zipf, &mut rng);
+            ds.push(&x, &y).unwrap();
+        }
+        ds
+    };
+
+    SynthData {
+        train: gen_split(spec.n_train, 0x5f_10),
+        test: gen_split(spec.n_test, 0x5f_20),
+    }
+}
+
+/// Generate from a preset with its default spec.
+pub fn generate_preset(preset: &DatasetPreset, seed: u64) -> SynthData {
+    generate(&SynthSpec::from_preset(preset), seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::by_name;
+
+    fn tiny_spec() -> SynthSpec {
+        let mut s = SynthSpec::from_preset(&by_name("tiny").unwrap());
+        s.n_train = 400;
+        s.n_test = 100;
+        s
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = tiny_spec();
+        let a = generate(&spec, 7);
+        let b = generate(&spec, 7);
+        assert_eq!(a.train.features_of(3), b.train.features_of(3));
+        assert_eq!(a.train.labels_of(3), b.train.labels_of(3));
+        let c = generate(&spec, 8);
+        assert_ne!(a.train.features_of(3), c.train.features_of(3));
+    }
+
+    #[test]
+    fn sizes_and_label_sanity() {
+        let spec = tiny_spec();
+        let data = generate(&spec, 1);
+        assert_eq!(data.train.len(), 400);
+        assert_eq!(data.test.len(), 100);
+        for i in 0..data.train.len() {
+            let labels = data.train.labels_of(i);
+            assert!(!labels.is_empty(), "every sample has >=1 positive");
+            let mut sorted = labels.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), labels.len(), "no duplicate labels");
+        }
+    }
+
+    #[test]
+    fn label_frequencies_follow_power_law() {
+        let spec = tiny_spec();
+        let data = generate(&spec, 3);
+        let mut counts = data.train.class_counts();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // Head class much heavier than the median class.
+        let head = counts[0];
+        let median = counts[counts.len() / 2];
+        assert!(head >= 8 * median.max(1), "head {head} median {median}");
+    }
+
+    #[test]
+    fn mean_labels_per_sample_near_spec() {
+        let mut spec = tiny_spec();
+        spec.n_train = 2000;
+        spec.labels_per_sample = 3.0;
+        let data = generate(&spec, 5);
+        let mean = data.train.total_positives() as f64 / data.train.len() as f64;
+        // Dedup against Zipf reduces the mean a bit; wide tolerance.
+        assert!((1.5..4.5).contains(&mean), "mean labels {mean}");
+    }
+
+    #[test]
+    fn features_are_informative() {
+        // Samples sharing a class should correlate more than random pairs.
+        let spec = tiny_spec();
+        let data = generate(&spec, 11);
+        let ds = &data.train;
+        let cos = |a: &[f32], b: &[f32]| {
+            let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+            let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+            dot / (na * nb + 1e-9)
+        };
+        // find two samples sharing their first label, and two not sharing
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        'outer: for i in 0..ds.len() {
+            for j in (i + 1)..ds.len() {
+                let share = ds.labels_of(i).iter().any(|l| ds.labels_of(j).contains(l));
+                let c = cos(ds.features_of(i), ds.features_of(j));
+                if share {
+                    same.push(c);
+                } else {
+                    diff.push(c);
+                }
+                if same.len() > 200 && diff.len() > 200 {
+                    break 'outer;
+                }
+            }
+        }
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        assert!(
+            mean(&same) > mean(&diff) + 0.05,
+            "shared-label cosine {} vs {}",
+            mean(&same),
+            mean(&diff)
+        );
+    }
+}

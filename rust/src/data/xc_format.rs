@@ -1,0 +1,142 @@
+//! Reader for the Extreme Classification repository data format
+//! (Bhatia et al.), so the paper's real datasets drop in when available:
+//!
+//! ```text
+//! <num_samples> <num_features> <num_labels>
+//! l1,l2,...  f1:v1 f2:v2 ...
+//! ```
+//!
+//! Samples may have zero labels; feature indices are 0-based sparse
+//! `idx:value` pairs. Features are routed through
+//! [`super::feature_hash::FeatureHasher`] to d̃, matching the paper's
+//! preprocessing ("we also perform feature hashing to all the datasets").
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::dataset::Dataset;
+use super::feature_hash::FeatureHasher;
+
+/// Parse XC-format text into a feature-hashed [`Dataset`].
+pub fn parse_xc(text: &str, d_out: usize, hash_seed: u64) -> Result<Dataset> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or_else(|| anyhow!("empty XC file"))?;
+    let mut head = header.split_whitespace();
+    let n: usize = head
+        .next()
+        .ok_or_else(|| anyhow!("bad header"))?
+        .parse()
+        .context("num_samples")?;
+    let _d_raw: usize = head
+        .next()
+        .ok_or_else(|| anyhow!("bad header"))?
+        .parse()
+        .context("num_features")?;
+    let p: usize = head
+        .next()
+        .ok_or_else(|| anyhow!("bad header"))?
+        .parse()
+        .context("num_labels")?;
+
+    let hasher = FeatureHasher::new(hash_seed, d_out);
+    let mut ds = Dataset::new(d_out, p);
+    let mut sparse: Vec<(u32, f32)> = Vec::new();
+
+    for (lineno, line) in lines.enumerate() {
+        let line = line.trim();
+        // Label block is everything before the first space (may be empty
+        // for unlabeled rows that start with a space).
+        let (label_part, feat_part) = match line.split_once(' ') {
+            Some((l, f)) => (l, f),
+            None => (line, ""),
+        };
+        let mut labels: Vec<u32> = Vec::new();
+        if !label_part.is_empty() && !label_part.contains(':') {
+            for tok in label_part.split(',') {
+                if tok.is_empty() {
+                    continue;
+                }
+                let l: u32 = tok
+                    .parse()
+                    .with_context(|| format!("line {}: label '{tok}'", lineno + 2))?;
+                labels.push(l);
+            }
+        }
+        sparse.clear();
+        let feats = if label_part.contains(':') {
+            // row had no label block at all
+            line
+        } else {
+            feat_part
+        };
+        for tok in feats.split_whitespace() {
+            let (i, v) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow!("line {}: bad pair '{tok}'", lineno + 2))?;
+            sparse.push((
+                i.parse().with_context(|| format!("line {}", lineno + 2))?,
+                v.parse().with_context(|| format!("line {}", lineno + 2))?,
+            ));
+        }
+        ds.push(&hasher.hash(&sparse), &labels)?;
+    }
+
+    if ds.len() != n {
+        bail!("header says {n} samples, file has {}", ds.len());
+    }
+    Ok(ds)
+}
+
+/// Load an XC-format file from disk.
+pub fn load_xc(path: &std::path::Path, d_out: usize, hash_seed: u64) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_xc(&text, d_out, hash_seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+3 10000 50
+1,4 0:1.5 17:2.0 900:0.5
+7 3:1.0
+0,2,49 5:0.25 9999:1.0
+";
+
+    #[test]
+    fn parses_counts_and_labels() {
+        let ds = parse_xc(SAMPLE, 16, 1).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.d(), 16);
+        assert_eq!(ds.p(), 50);
+        assert_eq!(ds.labels_of(0), &[1, 4]);
+        assert_eq!(ds.labels_of(1), &[7]);
+        assert_eq!(ds.labels_of(2), &[0, 2, 49]);
+    }
+
+    #[test]
+    fn features_are_hashed_consistently() {
+        let ds = parse_xc(SAMPLE, 16, 1).unwrap();
+        let hasher = FeatureHasher::new(1, 16);
+        let want = hasher.hash(&[(0, 1.5), (17, 2.0), (900, 0.5)]);
+        assert_eq!(ds.features_of(0), &want[..]);
+    }
+
+    #[test]
+    fn unlabeled_row_with_colon_start() {
+        let text = "1 100 5\n3:1.0 4:2.0\n";
+        let ds = parse_xc(text, 8, 0).unwrap();
+        assert_eq!(ds.labels_of(0), &[] as &[u32]);
+        let hasher = FeatureHasher::new(0, 8);
+        assert_eq!(ds.features_of(0), &hasher.hash(&[(3, 1.0), (4, 2.0)])[..]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_xc("", 8, 0).is_err());
+        assert!(parse_xc("2 10 5\n0 1:1.0\n", 8, 0).is_err()); // count mismatch
+        assert!(parse_xc("1 10 5\n0 1-1.0\n", 8, 0).is_err()); // bad pair
+        assert!(parse_xc("1 10 5\n99 1:1.0\n", 8, 0).is_err()); // label >= p
+    }
+}

@@ -1,0 +1,88 @@
+//! Count-sketch mean decode in rust (paper Fig. 1b).
+//!
+//! `scores[n, j] = (1/R) Σ_r logits[r, n, h_r(j)]` — the same math as
+//! the L1 `sketch_decode` Pallas kernel. The rust version exists (a) as
+//! the fallback when no decode artifact is loaded (RustBackend), and
+//! (b) to cross-validate the AOT decode artifact numerically.
+
+/// Decode `logits` (flat `[r, rows, b]`) into class scores
+/// (flat `[rows, p]`) using `idx` (flat `[r, p]`, class→bucket).
+pub fn sketch_decode(
+    logits: &[f32],
+    idx: &[i32],
+    r: usize,
+    rows: usize,
+    b: usize,
+    p: usize,
+) -> Vec<f32> {
+    assert_eq!(logits.len(), r * rows * b, "logits shape");
+    assert_eq!(idx.len(), r * p, "idx shape");
+    let mut scores = vec![0.0f32; rows * p];
+    let inv_r = 1.0 / r as f32;
+    for t in 0..r {
+        let idx_row = &idx[t * p..(t + 1) * p];
+        for n in 0..rows {
+            let table = &logits[(t * rows + n) * b..(t * rows + n + 1) * b];
+            let out = &mut scores[n * p..(n + 1) * p];
+            for (o, &bucket) in out.iter_mut().zip(idx_row.iter()) {
+                *o += table[bucket as usize] * inv_r;
+            }
+        }
+    }
+    scores
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::label_hash::LabelHasher;
+    use crate::util::prop::check;
+
+    #[test]
+    fn single_table_is_gather() {
+        // r=1: score[n,j] = logits[0,n,idx[j]]
+        let logits = [1.0f32, 2.0, 3.0, 4.0]; // rows=2, b=2
+        let idx = [1i32, 0, 1];
+        let scores = sketch_decode(&logits, &idx, 1, 2, 2, 3);
+        assert_eq!(scores, vec![2.0, 1.0, 2.0, 4.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn mean_over_tables() {
+        check("decode mean", 30, |g| {
+            let r = g.usize_in(1, 6);
+            let rows = g.usize_in(1, 5);
+            let b = g.usize_in(2, 20);
+            let p = g.usize_in(1, 50);
+            let logits = g.vec_f32(r * rows * b, -3.0, 3.0);
+            let idx: Vec<i32> = (0..r * p).map(|_| g.usize_in(0, b) as i32).collect();
+            let scores = sketch_decode(&logits, &idx, r, rows, b, p);
+            // brute-force check a few entries
+            for probe in 0..5 {
+                let n = probe % rows;
+                let j = (probe * 13) % p;
+                let want: f32 = (0..r)
+                    .map(|t| logits[(t * rows + n) * b + idx[t * p + j] as usize])
+                    .sum::<f32>()
+                    / r as f32;
+                let got = scores[n * p + j];
+                assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+            }
+        });
+    }
+
+    #[test]
+    fn works_with_label_hasher_matrix() {
+        let h = LabelHasher::new(3, 2, 20, 4);
+        let idx = h.index_matrix_i32();
+        let logits = vec![0.5f32; 2 * 1 * 4];
+        let scores = sketch_decode(&logits, &idx, 2, 1, 4, 20);
+        assert!(scores.iter().all(|&s| (s - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    #[should_panic(expected = "logits shape")]
+    fn rejects_bad_shapes() {
+        sketch_decode(&[0.0; 4], &[0; 2], 2, 2, 2, 1);
+    }
+}

@@ -1,0 +1,203 @@
+//! Accuracy metrics: top-1/3/5 precision, overall and split by
+//! frequent vs infrequent classes (paper Fig. 3: "top-k
+//! frequent/infrequent class accuracy is defined as # of correctly
+//! predicted frequent/infrequent class labels / k; the sum of the two is
+//! the overall top-k accuracy").
+
+use crate::data::dataset::Dataset;
+use crate::data::stats::LabelStats;
+
+use super::topk::top_k;
+
+/// The paper reports @1, @3 and @5.
+pub const KS: [usize; 3] = [1, 3, 5];
+
+/// Accuracy numbers for one evaluation pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AccuracyReport {
+    pub top1: f64,
+    pub top3: f64,
+    pub top5: f64,
+    /// Frequent-class share of each top-k accuracy (Fig. 3 middle).
+    pub freq1: f64,
+    pub freq3: f64,
+    pub freq5: f64,
+    /// Infrequent-class share (Fig. 3 right). `topk = freqk + infreqk`.
+    pub infreq1: f64,
+    pub infreq3: f64,
+    pub infreq5: f64,
+    pub samples: usize,
+}
+
+impl AccuracyReport {
+    /// Mean of top-1/3/5 — the early-stopping criterion ("the best
+    /// accuracy (the average of top 1, 3 and 5 accuracy)").
+    pub fn mean_topk(&self) -> f64 {
+        (self.top1 + self.top3 + self.top5) / 3.0
+    }
+
+    pub fn at(&self, k: usize) -> f64 {
+        match k {
+            1 => self.top1,
+            3 => self.top3,
+            5 => self.top5,
+            _ => panic!("unsupported k {k}"),
+        }
+    }
+}
+
+/// Streaming evaluator: feed per-sample class scores, read the report.
+pub struct Evaluator {
+    frequent: Vec<bool>,
+    /// per-k accumulators: (hits_total, hits_frequent)
+    acc: [(f64, f64); 3],
+    samples: usize,
+}
+
+impl Evaluator {
+    /// `frequent_classes`: how many top classes count as frequent (same
+    /// k the partitioner used, so Fig. 3 reflects the partition).
+    pub fn new(train_stats: &LabelStats, frequent_classes: usize) -> Self {
+        Evaluator {
+            frequent: train_stats.frequent_mask(frequent_classes),
+            acc: [(0.0, 0.0); 3],
+            samples: 0,
+        }
+    }
+
+    /// Feed one sample's class scores and its positive labels.
+    pub fn add_sample(&mut self, scores: &[f32], positives: &[u32]) {
+        debug_assert_eq!(scores.len(), self.frequent.len());
+        for (slot, &k) in KS.iter().enumerate() {
+            let picked = top_k(scores, k);
+            let mut hits = 0usize;
+            let mut freq_hits = 0usize;
+            for &c in &picked {
+                if positives.contains(&(c as u32)) {
+                    hits += 1;
+                    if self.frequent[c] {
+                        freq_hits += 1;
+                    }
+                }
+            }
+            self.acc[slot].0 += hits as f64 / k as f64;
+            self.acc[slot].1 += freq_hits as f64 / k as f64;
+        }
+        self.samples += 1;
+    }
+
+    /// Finalize into a report (averages over samples fed so far).
+    pub fn report(&self) -> AccuracyReport {
+        let n = self.samples.max(1) as f64;
+        let t = |slot: usize| self.acc[slot].0 / n;
+        let f = |slot: usize| self.acc[slot].1 / n;
+        AccuracyReport {
+            top1: t(0),
+            top3: t(1),
+            top5: t(2),
+            freq1: f(0),
+            freq3: f(1),
+            freq5: f(2),
+            infreq1: t(0) - f(0),
+            infreq3: t(1) - f(1),
+            infreq5: t(2) - f(2),
+            samples: self.samples,
+        }
+    }
+}
+
+/// Evaluate dense per-sample score rows against a dataset's labels.
+/// `scores` is flat `[n, p]` for samples `idx`.
+pub fn evaluate_scores(
+    ds: &Dataset,
+    idx: &[usize],
+    scores: &[f32],
+    evaluator: &mut Evaluator,
+) {
+    let p = ds.p();
+    assert_eq!(scores.len(), idx.len() * p);
+    for (row, &i) in idx.iter().enumerate() {
+        evaluator.add_sample(&scores[row * p..(row + 1) * p], ds.labels_of(i));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_for(p: usize, counts: &[(usize, usize)]) -> LabelStats {
+        let mut c = vec![0usize; p];
+        for &(class, count) in counts {
+            c[class] = count;
+        }
+        LabelStats {
+            counts: c,
+            n_samples: 100,
+        }
+    }
+
+    #[test]
+    fn perfect_and_zero_predictions() {
+        let stats = stats_for(10, &[(0, 50), (1, 40)]);
+        let mut ev = Evaluator::new(&stats, 2);
+        // scores rank class 3 first; positives = {3}
+        let mut scores = vec![0.0f32; 10];
+        scores[3] = 1.0;
+        ev.add_sample(&scores, &[3]);
+        let r = ev.report();
+        assert!((r.top1 - 1.0).abs() < 1e-12);
+        assert!((r.top3 - 1.0 / 3.0).abs() < 1e-12);
+        assert!((r.top5 - 0.2).abs() < 1e-12);
+        // class 3 is infrequent (frequent = {0,1})
+        assert_eq!(r.freq1, 0.0);
+        assert!((r.infreq1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frequent_infrequent_sum_to_total() {
+        let stats = stats_for(20, &[(0, 9), (5, 8), (7, 7)]);
+        let mut ev = Evaluator::new(&stats, 3);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..50 {
+            let scores: Vec<f32> = (0..20).map(|_| rng.next_f32()).collect();
+            let positives: Vec<u32> = (0..3).map(|_| rng.below(20) as u32).collect();
+            ev.add_sample(&scores, &positives);
+        }
+        let r = ev.report();
+        for (t, f, i) in [
+            (r.top1, r.freq1, r.infreq1),
+            (r.top3, r.freq3, r.infreq3),
+            (r.top5, r.freq5, r.infreq5),
+        ] {
+            assert!((f + i - t).abs() < 1e-12);
+            assert!(f >= 0.0 && i >= 0.0 && t <= 1.0);
+        }
+        assert_eq!(r.samples, 50);
+    }
+
+    #[test]
+    fn mean_topk_is_early_stop_criterion() {
+        let r = AccuracyReport {
+            top1: 0.6,
+            top3: 0.3,
+            top5: 0.3,
+            ..Default::default()
+        };
+        assert!((r.mean_topk() - 0.4).abs() < 1e-12);
+        assert_eq!(r.at(1), 0.6);
+    }
+
+    #[test]
+    fn evaluate_scores_maps_rows_to_samples() {
+        let mut ds = Dataset::new(1, 4);
+        ds.push(&[0.0], &[2]).unwrap();
+        ds.push(&[0.0], &[0]).unwrap();
+        let stats = LabelStats::from_dataset(&ds);
+        let mut ev = Evaluator::new(&stats, 1);
+        // two rows of scores: row 0 ranks class 2 top (hit), row 1 ranks 3 (miss)
+        let scores = vec![0.0, 0.0, 1.0, 0.5, 0.1, 0.0, 0.0, 0.9];
+        evaluate_scores(&ds, &[0, 1], &scores, &mut ev);
+        let r = ev.report();
+        assert!((r.top1 - 0.5).abs() < 1e-12);
+    }
+}

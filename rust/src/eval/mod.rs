@@ -1,0 +1,9 @@
+//! Evaluation: top-k precision (the paper's metric), the count-sketch
+//! decode that recovers class scores from FedMLH sub-model logits, and
+//! the frequent/infrequent accuracy split of Figure 3.
+
+pub mod decode;
+pub mod metrics;
+pub mod topk;
+
+pub use metrics::{AccuracyReport, Evaluator};

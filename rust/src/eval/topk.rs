@@ -1,0 +1,108 @@
+//! Top-k selection over class scores.
+//!
+//! The paper's metric: "top-k accuracy is measured by the precision of
+//! the top k classes with largest predicted log-probability". For
+//! extreme p, a full sort per sample is the serving-path bottleneck, so
+//! selection uses a bounded binary heap (O(p log k), k ∈ {1,3,5}).
+
+/// Indices of the `k` largest values, in descending value order.
+/// Ties break toward the lower index (deterministic).
+pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    // min-heap of (value, Reverse(index)) of size k, implemented on a Vec
+    // to avoid pulling in BinaryHeap float-ordering workarounds.
+    let mut heap: Vec<(f32, usize)> = Vec::with_capacity(k);
+
+    let worse = |a: (f32, usize), b: (f32, usize)| -> bool {
+        // a is worse than b if smaller value, or equal value with higher index
+        a.0 < b.0 || (a.0 == b.0 && a.1 > b.1)
+    };
+
+    for (i, &v) in scores.iter().enumerate() {
+        let cand = (v, i);
+        if heap.len() < k {
+            heap.push(cand);
+            heap.sort_by(|x, y| {
+                if worse(*x, *y) {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Greater
+                }
+            });
+        } else if worse(heap[0], cand) {
+            heap[0] = cand;
+            // restore ascending-by-badness order with one pass
+            let mut j = 0;
+            while j + 1 < k && worse(heap[j + 1], heap[j]) {
+                heap.swap(j, j + 1);
+                j += 1;
+            }
+        }
+    }
+    heap.reverse();
+    heap.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Precision@k for one sample: |top_k ∩ positives| / k.
+pub fn precision_at_k(scores: &[f32], positives: &[u32], k: usize) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    let picked = top_k(scores, k);
+    let hits = picked
+        .iter()
+        .filter(|&&i| positives.contains(&(i as u32)))
+        .count();
+    hits as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn picks_largest_in_order() {
+        let scores = [0.1, 0.9, 0.5, 0.7, 0.3];
+        assert_eq!(top_k(&scores, 3), vec![1, 3, 2]);
+        assert_eq!(top_k(&scores, 1), vec![1]);
+        assert_eq!(top_k(&scores, 0), Vec::<usize>::new());
+        assert_eq!(top_k(&scores, 99).len(), 5);
+    }
+
+    #[test]
+    fn tie_break_is_lower_index() {
+        let scores = [0.5, 0.5, 0.5];
+        assert_eq!(top_k(&scores, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn matches_full_sort() {
+        check("topk vs sort", 40, |g| {
+            let n = g.usize_in(1, 400);
+            let k = g.usize_in(1, 10);
+            let scores = g.vec_f32(n, -5.0, 5.0);
+            let got = top_k(&scores, k);
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                scores[b]
+                    .partial_cmp(&scores[a])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            order.truncate(k.min(n));
+            assert_eq!(got, order);
+        });
+    }
+
+    #[test]
+    fn precision_counts_hits() {
+        let scores = [0.9, 0.1, 0.8, 0.2];
+        // top-2 = {0, 2}; positives = {2, 3} → 1 hit / 2
+        assert!((precision_at_k(&scores, &[2, 3], 2) - 0.5).abs() < 1e-12);
+        assert_eq!(precision_at_k(&scores, &[], 2), 0.0);
+    }
+}

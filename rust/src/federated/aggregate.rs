@@ -1,0 +1,137 @@
+//! Parameter aggregation (paper Algorithm 2 line 17, FedAvg §3.1).
+//!
+//! FedMLH aggregates uniformly over the selected clients
+//! (`w ← Σ_k w_k / S`); classic FedAvg weights by client sample count
+//! (`w ← Σ_k n_k/N · w_k`). Both are supported; the harness uses uniform
+//! weights for both algorithms, matching the paper's Algorithm 2.
+
+use anyhow::{bail, Result};
+
+use crate::model::params::ModelParams;
+
+/// Aggregation weighting scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Weighting {
+    /// `1/S` each (Algorithm 2 line 17).
+    Uniform,
+    /// `n_k / Σ n_k` (McMahan et al. FedAvg).
+    BySamples,
+}
+
+/// Aggregate `locals` (paired with their shard sizes) into a fresh
+/// global model.
+pub fn aggregate(
+    locals: &[(&ModelParams, usize)],
+    weighting: Weighting,
+) -> Result<ModelParams> {
+    if locals.is_empty() {
+        bail!("aggregate() needs at least one local model");
+    }
+    let (d, h, out) = {
+        let p = locals[0].0;
+        (p.d, p.hidden, p.out)
+    };
+    let mut global = ModelParams::zeros(d, h, out);
+    let weights = weights_for(locals, weighting);
+    for ((local, _), w) in locals.iter().zip(weights.iter()) {
+        global.accumulate(local, *w as f32)?;
+    }
+    Ok(global)
+}
+
+fn weights_for(locals: &[(&ModelParams, usize)], weighting: Weighting) -> Vec<f64> {
+    match weighting {
+        Weighting::Uniform => vec![1.0 / locals.len() as f64; locals.len()],
+        Weighting::BySamples => {
+            let total: usize = locals.iter().map(|(_, n)| n).sum();
+            locals
+                .iter()
+                .map(|(_, n)| *n as f64 / total.max(1) as f64)
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn constant_params(v: f32) -> ModelParams {
+        let mut p = ModelParams::zeros(2, 3, 4);
+        for t in p.tensors.iter_mut() {
+            t.fill(v);
+        }
+        p
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let a = constant_params(1.0);
+        let b = constant_params(3.0);
+        let g = aggregate(&[(&a, 10), (&b, 90)], Weighting::Uniform).unwrap();
+        for t in &g.tensors {
+            assert!(t.data().iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn sample_weighted_mean() {
+        let a = constant_params(1.0);
+        let b = constant_params(3.0);
+        let g = aggregate(&[(&a, 25), (&b, 75)], Weighting::BySamples).unwrap();
+        for t in &g.tensors {
+            assert!(t.data().iter().all(|&v| (v - 2.5).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn rejects_empty_and_mismatched() {
+        assert!(aggregate(&[], Weighting::Uniform).is_err());
+        let a = constant_params(1.0);
+        let b = ModelParams::zeros(9, 3, 4);
+        assert!(aggregate(&[(&a, 1), (&b, 1)], Weighting::Uniform).is_err());
+    }
+
+    #[test]
+    fn aggregate_stays_in_convex_hull() {
+        // Property: every aggregated coordinate lies within the min/max of
+        // the locals' coordinates (convex combination invariant).
+        check("convex hull", 20, |g| {
+            let k = g.usize_in(1, 6);
+            let locals: Vec<ModelParams> = (0..k)
+                .map(|i| {
+                    let mut p = ModelParams::zeros(2, 2, 2);
+                    for t in p.tensors.iter_mut() {
+                        for v in t.data_mut() {
+                            *v = g.f32_in(-5.0, 5.0) + i as f32;
+                        }
+                    }
+                    p
+                })
+                .collect();
+            let sizes: Vec<usize> = (0..k).map(|_| g.usize_in(1, 100)).collect();
+            let refs: Vec<(&ModelParams, usize)> =
+                locals.iter().zip(sizes.iter().copied()).collect();
+            for weighting in [Weighting::Uniform, Weighting::BySamples] {
+                let agg = aggregate(&refs, weighting).unwrap();
+                for ti in 0..agg.tensors.len() {
+                    for (ei, &v) in agg.tensors[ti].data().iter().enumerate() {
+                        let lo = locals
+                            .iter()
+                            .map(|l| l.tensors[ti].data()[ei])
+                            .fold(f32::INFINITY, f32::min);
+                        let hi = locals
+                            .iter()
+                            .map(|l| l.tensors[ti].data()[ei])
+                            .fold(f32::NEG_INFINITY, f32::max);
+                        assert!(
+                            v >= lo - 1e-5 && v <= hi + 1e-5,
+                            "coordinate escaped hull: {v} not in [{lo}, {hi}]"
+                        );
+                    }
+                }
+            }
+        });
+    }
+}

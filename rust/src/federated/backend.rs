@@ -1,0 +1,183 @@
+//! The training backend abstraction.
+//!
+//! [`TrainBackend`] is the seam between the federated coordinator and
+//! the compute substrate. Two implementations:
+//!
+//! - [`RustBackend`] — the pure-rust reference MLP
+//!   ([`crate::model::mlp`]). Exact same math as the AOT graph; used by
+//!   fast tests and as the numeric cross-check.
+//! - [`crate::runtime::XlaBackend`] — executes the AOT HLO artifacts on
+//!   the PJRT CPU client (the production path; python is never loaded).
+
+use anyhow::Result;
+
+use crate::model::mlp;
+use crate::model::params::ModelParams;
+
+use super::batcher::ClientBatcher;
+
+/// Statistics from one client's local training round (E epochs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrainStats {
+    /// SGD steps executed.
+    pub steps: usize,
+    /// Mean per-step (pre-update) loss.
+    pub mean_loss: f64,
+    /// Wall-clock seconds spent in the backend.
+    pub seconds: f64,
+}
+
+/// A compute backend able to run the paper's three operations.
+pub trait TrainBackend {
+    /// Run `epochs` local epochs of SGD on `params` over the client's
+    /// shard (paper Algorithm 2 `DeviceTrain`). `params` is updated in
+    /// place.
+    fn local_train(
+        &self,
+        params: &mut ModelParams,
+        batcher: &mut ClientBatcher<'_>,
+        epochs: usize,
+        lr: f32,
+    ) -> Result<TrainStats>;
+
+    /// Inference logits for a padded `[batch, d]` input; returns flat
+    /// `[batch, out]`. `batch` must equal the backend's fixed batch size.
+    fn predict(&self, params: &ModelParams, x: &[f32]) -> Result<Vec<f32>>;
+
+    /// Count-sketch mean decode: `logits` flat `[r, batch, b]`, `idx`
+    /// flat `[r, p]` → scores flat `[batch, p]`.
+    fn decode(
+        &self,
+        logits: &[f32],
+        idx: &[i32],
+        r: usize,
+        rows: usize,
+        b: usize,
+        p: usize,
+    ) -> Result<Vec<f32>>;
+
+    /// Fixed batch size (baked into AOT artifacts; the rust backend
+    /// adopts whatever the batcher uses, but reports the config batch).
+    fn batch_size(&self) -> usize;
+
+    /// Human-readable name for logs/EXPERIMENTS.md.
+    fn name(&self) -> &str;
+}
+
+/// Pure-rust backend over [`crate::model::mlp`].
+#[derive(Debug, Default)]
+pub struct RustBackend {
+    batch: usize,
+}
+
+impl RustBackend {
+    pub fn new() -> Self {
+        RustBackend { batch: 0 }
+    }
+
+    /// With an explicit nominal batch size (only used by `batch_size()`).
+    pub fn with_batch(batch: usize) -> Self {
+        RustBackend { batch }
+    }
+}
+
+impl TrainBackend for RustBackend {
+    fn local_train(
+        &self,
+        params: &mut ModelParams,
+        batcher: &mut ClientBatcher<'_>,
+        epochs: usize,
+        lr: f32,
+    ) -> Result<TrainStats> {
+        let t0 = std::time::Instant::now();
+        let mut ws = mlp::Workspace::new(params, batcher.batch_size());
+        let mut steps = 0usize;
+        let mut loss_sum = 0.0f64;
+        for epoch in 0..epochs {
+            batcher.reset(epoch);
+            while let Some(batch) = batcher.next_batch() {
+                loss_sum += mlp::train_step(params, &mut ws, batch.x, batch.y, lr) as f64;
+                steps += 1;
+            }
+        }
+        Ok(TrainStats {
+            steps,
+            mean_loss: if steps > 0 { loss_sum / steps as f64 } else { 0.0 },
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn predict(&self, params: &ModelParams, x: &[f32]) -> Result<Vec<f32>> {
+        let rows = x.len() / params.d;
+        Ok(mlp::forward(params, x, rows))
+    }
+
+    fn decode(
+        &self,
+        logits: &[f32],
+        idx: &[i32],
+        r: usize,
+        rows: usize,
+        b: usize,
+        p: usize,
+    ) -> Result<Vec<f32>> {
+        Ok(crate::eval::decode::sketch_decode(logits, idx, r, rows, b, p))
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn name(&self) -> &str {
+        "rust-reference"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::by_name;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::federated::batcher::Target;
+
+    #[test]
+    fn local_train_reduces_loss_on_tiny() {
+        let mut spec = SynthSpec::from_preset(&by_name("tiny").unwrap());
+        spec.n_train = 256;
+        let data = generate(&spec, 2);
+        let ds = &data.train;
+        let samples: Vec<usize> = (0..ds.len()).collect();
+        let mut params = ModelParams::init(ds.d(), 16, ds.p(), 1);
+        let backend = RustBackend::new();
+
+        let mut batcher = ClientBatcher::new(ds, &samples, Target::Classes, 16, 4);
+        let first = backend
+            .local_train(&mut params, &mut batcher, 1, 0.5)
+            .unwrap();
+        let mut batcher = ClientBatcher::new(ds, &samples, Target::Classes, 16, 4);
+        let later = backend
+            .local_train(&mut params, &mut batcher, 3, 0.5)
+            .unwrap();
+        assert!(later.mean_loss < first.mean_loss, "{later:?} vs {first:?}");
+        assert_eq!(first.steps, 16); // 256/16 batches × 1 epoch
+        assert_eq!(later.steps, 48);
+    }
+
+    #[test]
+    fn predict_shape() {
+        let params = ModelParams::init(8, 4, 10, 0);
+        let backend = RustBackend::new();
+        let x = vec![0.1f32; 3 * 8];
+        let z = backend.predict(&params, &x).unwrap();
+        assert_eq!(z.len(), 3 * 10);
+    }
+
+    #[test]
+    fn decode_delegates_to_eval() {
+        let backend = RustBackend::new();
+        let logits = vec![1.0f32, 2.0, 3.0, 4.0];
+        let idx = vec![0i32, 1];
+        let scores = backend.decode(&logits, &idx, 1, 2, 2, 2).unwrap();
+        assert_eq!(scores, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,265 @@
+//! Client-side minibatch assembly.
+//!
+//! A [`ClientBatcher`] walks one client's shard in shuffled order each
+//! epoch and materializes `(x, y)` minibatches into reused buffers — the
+//! dense multi-hot targets (`[batch, p]` for FedAvg, `[batch, B]` for a
+//! FedMLH sub-model, Algorithm 2 line 6) are never stored for the whole
+//! shard, only per batch, which keeps FedAvg's `p`-wide targets from
+//! blowing up memory at p = 32k.
+//!
+//! Only **full** batches are emitted (the AOT train step has a fixed
+//! batch shape baked in); the per-epoch reshuffle rotates which samples
+//! fall into the dropped tail, so in expectation every sample is seen.
+
+use std::sync::Arc;
+
+use crate::data::dataset::Dataset;
+use crate::hashing::label_hash::LabelHasher;
+use crate::util::rng::{derive_seed, Rng};
+
+/// What the training targets are.
+#[derive(Clone)]
+pub enum Target {
+    /// Raw multi-hot class labels (FedAvg).
+    Classes,
+    /// Bucket labels of hash table `table` (FedMLH sub-model `table`).
+    Buckets { hasher: Arc<LabelHasher>, table: usize },
+}
+
+impl Target {
+    pub fn out_dim(&self, ds: &Dataset) -> usize {
+        match self {
+            Target::Classes => ds.p(),
+            Target::Buckets { hasher, .. } => hasher.b(),
+        }
+    }
+}
+
+/// One emitted minibatch (borrows the batcher's internal buffers).
+pub struct Batch<'a> {
+    /// Flat `[batch, d]` features.
+    pub x: &'a [f32],
+    /// Flat `[batch, out]` multi-hot targets.
+    pub y: &'a [f32],
+}
+
+/// Shuffled full-batch iterator over one client shard.
+pub struct ClientBatcher<'a> {
+    ds: &'a Dataset,
+    /// This client's sample indices (the partition shard), in the
+    /// original order — each `reset(epoch)` shuffles a fresh copy so the
+    /// same (seed, epoch) always yields the same batch stream.
+    base: Vec<usize>,
+    /// Working copy walked by the current epoch.
+    samples: Vec<usize>,
+    target: Target,
+    batch: usize,
+    out_dim: usize,
+    seed: u64,
+    // iteration state
+    cursor: usize,
+    x_buf: Vec<f32>,
+    y_buf: Vec<f32>,
+}
+
+impl<'a> ClientBatcher<'a> {
+    pub fn new(
+        ds: &'a Dataset,
+        samples: &[usize],
+        target: Target,
+        batch: usize,
+        seed: u64,
+    ) -> Self {
+        let out_dim = target.out_dim(ds);
+        ClientBatcher {
+            ds,
+            base: samples.to_vec(),
+            samples: samples.to_vec(),
+            target,
+            batch,
+            out_dim,
+            seed,
+            cursor: usize::MAX,
+            x_buf: vec![0.0; batch * ds.d()],
+            y_buf: vec![0.0; batch * out_dim],
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    pub fn d(&self) -> usize {
+        self.ds.d()
+    }
+
+    /// Full batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.samples.len() / self.batch
+    }
+
+    /// Start (or restart) an epoch: reshuffle with an epoch-specific seed.
+    pub fn reset(&mut self, epoch: usize) {
+        let mut rng = Rng::new(derive_seed(self.seed, 0xba7c_0000 + epoch as u64));
+        self.samples.copy_from_slice(&self.base);
+        rng.shuffle(&mut self.samples);
+        self.cursor = 0;
+    }
+
+    /// Materialize the next full batch directly into caller-owned
+    /// buffers (the scan path: batches are staged into `[S, batch, ·]`
+    /// slabs, so writing there directly skips one copy through the
+    /// internal buffers). Returns `false` when the epoch is exhausted.
+    pub fn next_batch_into(&mut self, x_out: &mut [f32], y_out: &mut [f32]) -> bool {
+        assert!(self.cursor != usize::MAX, "call reset(epoch) first");
+        if self.cursor + self.batch > self.samples.len() {
+            return false;
+        }
+        let d = self.ds.d();
+        debug_assert_eq!(x_out.len(), self.batch * d);
+        debug_assert_eq!(y_out.len(), self.batch * self.out_dim);
+        let idx = &self.samples[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        for (row, &i) in idx.iter().enumerate() {
+            x_out[row * d..(row + 1) * d].copy_from_slice(self.ds.features_of(i));
+        }
+        match &self.target {
+            Target::Classes => {
+                y_out.fill(0.0);
+                let p = self.ds.p();
+                for (row, &i) in idx.iter().enumerate() {
+                    for &l in self.ds.labels_of(i) {
+                        y_out[row * p + l as usize] = 1.0;
+                    }
+                }
+            }
+            Target::Buckets { hasher, table } => {
+                let b = hasher.b();
+                for (row, &i) in idx.iter().enumerate() {
+                    hasher.bucket_labels_table_into(
+                        *table,
+                        self.ds.labels_of(i),
+                        &mut y_out[row * b..(row + 1) * b],
+                    );
+                }
+            }
+        }
+        true
+    }
+
+    /// Next full batch of this epoch, or `None` when exhausted.
+    pub fn next_batch(&mut self) -> Option<Batch<'_>> {
+        // Route through `next_batch_into` on the internal buffers
+        // (temporarily taken to satisfy the borrow checker).
+        let mut x = std::mem::take(&mut self.x_buf);
+        let mut y = std::mem::take(&mut self.y_buf);
+        let ok = self.next_batch_into(&mut x, &mut y);
+        self.x_buf = x;
+        self.y_buf = y;
+        if ok {
+            Some(Batch {
+                x: &self.x_buf,
+                y: &self.y_buf,
+            })
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::by_name;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn tiny() -> Dataset {
+        let mut spec = SynthSpec::from_preset(&by_name("tiny").unwrap());
+        spec.n_train = 100;
+        generate(&spec, 1).train
+    }
+
+    #[test]
+    fn emits_full_batches_only() {
+        let ds = tiny();
+        let samples: Vec<usize> = (0..50).collect();
+        let mut b = ClientBatcher::new(&ds, &samples, Target::Classes, 16, 1);
+        b.reset(0);
+        let mut count = 0;
+        while let Some(batch) = b.next_batch() {
+            assert_eq!(batch.x.len(), 16 * ds.d());
+            assert_eq!(batch.y.len(), 16 * ds.p());
+            count += 1;
+        }
+        assert_eq!(count, 3); // 50 / 16
+        assert_eq!(b.batches_per_epoch(), 3);
+    }
+
+    #[test]
+    fn class_targets_match_labels() {
+        let ds = tiny();
+        let samples: Vec<usize> = (0..32).collect();
+        let mut b = ClientBatcher::new(&ds, &samples, Target::Classes, 32, 7);
+        b.reset(0);
+        // find the shuffled order by matching features
+        let batch = b.next_batch().unwrap();
+        let d = ds.d();
+        let p = ds.p();
+        for row in 0..32 {
+            let xrow = &batch.x[row * d..(row + 1) * d];
+            let i = (0..32).find(|&i| ds.features_of(i) == xrow).unwrap();
+            for c in 0..p {
+                let want = ds.labels_of(i).contains(&(c as u32));
+                assert_eq!(batch.y[row * p + c] > 0.5, want);
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_targets_match_hasher() {
+        let ds = tiny();
+        let hasher = Arc::new(LabelHasher::new(9, 2, ds.p(), 8));
+        let samples: Vec<usize> = (0..16).collect();
+        let mut b = ClientBatcher::new(
+            &ds,
+            &samples,
+            Target::Buckets {
+                hasher: hasher.clone(),
+                table: 1,
+            },
+            16,
+            3,
+        );
+        assert_eq!(b.out_dim(), 8);
+        b.reset(0);
+        let batch = b.next_batch().unwrap();
+        let d = ds.d();
+        for row in 0..16 {
+            let xrow = &batch.x[row * d..(row + 1) * d];
+            let i = (0..16).find(|&i| ds.features_of(i) == xrow).unwrap();
+            let mut want = vec![0.0f32; 8];
+            hasher.bucket_labels_table_into(1, ds.labels_of(i), &mut want);
+            assert_eq!(&batch.y[row * 8..(row + 1) * 8], &want[..]);
+        }
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let ds = tiny();
+        let samples: Vec<usize> = (0..64).collect();
+        let mut b = ClientBatcher::new(&ds, &samples, Target::Classes, 16, 5);
+        b.reset(0);
+        let first: Vec<f32> = b.next_batch().unwrap().x.to_vec();
+        b.reset(1);
+        let second: Vec<f32> = b.next_batch().unwrap().x.to_vec();
+        assert_ne!(first, second, "epoch reshuffle changed nothing");
+        // same epoch seed → same order
+        b.reset(0);
+        let again: Vec<f32> = b.next_batch().unwrap().x.to_vec();
+        assert_eq!(first, again);
+    }
+}

@@ -1,0 +1,120 @@
+//! Communication-volume accounting (paper Table 4, Figure 4).
+//!
+//! The paper: "The communication volume is defined as the size of the
+//! model parameters (in bytes) communicated between local clients and
+//! central server during the training", measured "until the model
+//! achieves the best accuracy". Per synchronization round each selected
+//! client downloads the global model and uploads its update — for FedMLH
+//! that is R sub-models each way (they are communicated independently;
+//! no parameters flow between sub-models).
+
+/// Byte meter for one training run.
+#[derive(Clone, Debug, Default)]
+pub struct CommMeter {
+    download_bytes: u64,
+    upload_bytes: u64,
+    /// Cumulative total at the end of each completed round (Fig 4 x-axis).
+    per_round_totals: Vec<u64>,
+}
+
+impl CommMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one client downloading `bytes` of global parameters.
+    pub fn download(&mut self, bytes: usize) {
+        self.download_bytes += bytes as u64;
+    }
+
+    /// Record one client uploading `bytes` of updated parameters.
+    pub fn upload(&mut self, bytes: usize) {
+        self.upload_bytes += bytes as u64;
+    }
+
+    /// Close out a synchronization round (snapshots the running total).
+    pub fn end_round(&mut self) {
+        self.per_round_totals.push(self.total());
+    }
+
+    pub fn total(&self) -> u64 {
+        self.download_bytes + self.upload_bytes
+    }
+
+    pub fn downloaded(&self) -> u64 {
+        self.download_bytes
+    }
+
+    pub fn uploaded(&self) -> u64 {
+        self.upload_bytes
+    }
+
+    /// Cumulative bytes at the end of round `r` (0-based).
+    pub fn total_at_round(&self, r: usize) -> u64 {
+        self.per_round_totals.get(r).copied().unwrap_or(0)
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.per_round_totals.len()
+    }
+
+    pub fn per_round_totals(&self) -> &[u64] {
+        &self.per_round_totals
+    }
+}
+
+/// Closed-form per-round volume: `clients × (down + up) × model_bytes ×
+/// n_models` — used by tests and the Table 4 analytic cross-check.
+pub fn expected_round_bytes(clients: usize, model_bytes: usize, n_models: usize) -> u64 {
+    (clients * 2 * model_bytes * n_models) as u64
+}
+
+/// Pretty-print bytes the way the paper's Table 4 does (Mb/Gb).
+pub fn format_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= 1e9 {
+        format!("{:.1}Gb", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1}Mb", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1}Kb", b / 1e3)
+    } else {
+        format!("{bytes}b")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_snapshots() {
+        let mut m = CommMeter::new();
+        m.download(100);
+        m.upload(50);
+        m.end_round();
+        m.download(100);
+        m.upload(50);
+        m.end_round();
+        assert_eq!(m.total(), 300);
+        assert_eq!(m.downloaded(), 200);
+        assert_eq!(m.uploaded(), 100);
+        assert_eq!(m.total_at_round(0), 150);
+        assert_eq!(m.total_at_round(1), 300);
+        assert_eq!(m.rounds(), 2);
+    }
+
+    #[test]
+    fn expected_formula() {
+        // 4 clients, 1MB model, 3 sub-models: 4 × 2 × 1e6 × 3
+        assert_eq!(expected_round_bytes(4, 1_000_000, 3), 24_000_000);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(format_bytes(500), "500b");
+        assert_eq!(format_bytes(2_500), "2.5Kb");
+        assert_eq!(format_bytes(199_700_000), "199.7Mb");
+        assert_eq!(format_bytes(7_200_000_000), "7.2Gb");
+    }
+}

@@ -1,0 +1,88 @@
+//! Early stopping on the paper's criterion: "the best accuracy (the
+//! average of top 1, 3 and 5 accuracy)" with a patience window.
+//! Table 4/6 report communication volume / rounds *to reach the best
+//! accuracy*, so the tracker also remembers when the best was seen.
+
+/// Best-metric tracker with patience.
+#[derive(Clone, Debug)]
+pub struct EarlyStopper {
+    patience: usize,
+    best: f64,
+    best_round: usize,
+    since_best: usize,
+    observed: usize,
+}
+
+impl EarlyStopper {
+    /// `patience` rounds without improvement stop training; 0 disables
+    /// stopping (but the best round is still tracked).
+    pub fn new(patience: usize) -> Self {
+        EarlyStopper {
+            patience,
+            best: f64::NEG_INFINITY,
+            best_round: 0,
+            since_best: 0,
+            observed: 0,
+        }
+    }
+
+    /// Record the metric for `round`; returns `true` if training should
+    /// stop *after* this round.
+    pub fn observe(&mut self, round: usize, metric: f64) -> bool {
+        self.observed += 1;
+        if metric > self.best {
+            self.best = metric;
+            self.best_round = round;
+            self.since_best = 0;
+            false
+        } else {
+            self.since_best += 1;
+            self.patience > 0 && self.since_best >= self.patience
+        }
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+
+    /// Round index (0-based) at which the best metric occurred.
+    pub fn best_round(&self) -> usize {
+        self.best_round
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_best_and_stops() {
+        let mut es = EarlyStopper::new(2);
+        assert!(!es.observe(0, 0.1));
+        assert!(!es.observe(1, 0.3));
+        assert!(!es.observe(2, 0.2)); // 1 since best
+        assert!(es.observe(3, 0.25)); // 2 since best → stop
+        assert_eq!(es.best_round(), 1);
+        assert!((es.best() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn patience_zero_never_stops() {
+        let mut es = EarlyStopper::new(0);
+        for r in 0..100 {
+            assert!(!es.observe(r, -1.0 * r as f64));
+        }
+        assert_eq!(es.best_round(), 0);
+    }
+
+    #[test]
+    fn improvement_resets_patience() {
+        let mut es = EarlyStopper::new(2);
+        assert!(!es.observe(0, 0.1));
+        assert!(!es.observe(1, 0.05));
+        assert!(!es.observe(2, 0.2)); // new best resets
+        assert!(!es.observe(3, 0.1));
+        assert!(es.observe(4, 0.1));
+        assert_eq!(es.best_round(), 2);
+    }
+}

@@ -1,0 +1,176 @@
+//! Per-round training history — the raw series behind Figure 3
+//! (accuracy vs round), Figure 4 (accuracy vs communication volume) and
+//! Tables 4/6/7.
+
+use crate::eval::metrics::AccuracyReport;
+use crate::util::json::Json;
+
+/// One evaluated synchronization round.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundRecord {
+    /// 0-based round index.
+    pub round: usize,
+    pub accuracy: AccuracyReport,
+    /// Cumulative communication bytes after this round.
+    pub comm_bytes: u64,
+    /// Wall-clock seconds of this round's local training + aggregation.
+    pub round_seconds: f64,
+    /// Mean local training loss across the round's clients.
+    pub mean_loss: f64,
+}
+
+/// The full run history.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub records: Vec<RoundRecord>,
+}
+
+impl History {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Record with the best mean top-k accuracy (paper's "best accuracy").
+    pub fn best(&self) -> Option<&RoundRecord> {
+        self.records.iter().max_by(|a, b| {
+            a.accuracy
+                .mean_topk()
+                .partial_cmp(&b.accuracy.mean_topk())
+                .unwrap()
+        })
+    }
+
+    /// Mean wall-clock seconds per synchronization round (Table 7).
+    pub fn mean_round_seconds(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.round_seconds).sum::<f64>() / self.records.len() as f64
+    }
+
+    /// CSV with one row per evaluated round (figure regeneration).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,top1,top3,top5,freq1,freq3,freq5,infreq1,infreq3,infreq5,comm_bytes,round_seconds,mean_loss\n",
+        );
+        for r in &self.records {
+            let a = &r.accuracy;
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.4},{:.6}\n",
+                r.round,
+                a.top1,
+                a.top3,
+                a.top5,
+                a.freq1,
+                a.freq3,
+                a.freq5,
+                a.infreq1,
+                a.infreq3,
+                a.infreq5,
+                r.comm_bytes,
+                r.round_seconds,
+                r.mean_loss
+            ));
+        }
+        out
+    }
+
+    /// JSON series (used by `results/*.json`).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("round", Json::num(r.round as f64)),
+                        ("top1", Json::num(r.accuracy.top1)),
+                        ("top3", Json::num(r.accuracy.top3)),
+                        ("top5", Json::num(r.accuracy.top5)),
+                        ("infreq1", Json::num(r.accuracy.infreq1)),
+                        ("comm_bytes", Json::num(r.comm_bytes as f64)),
+                        ("round_seconds", Json::num(r.round_seconds)),
+                        ("mean_loss", Json::num(r.mean_loss)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, top1: f64, secs: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            accuracy: AccuracyReport {
+                top1,
+                top3: top1,
+                top5: top1,
+                ..Default::default()
+            },
+            comm_bytes: (round as u64 + 1) * 100,
+            round_seconds: secs,
+            mean_loss: 1.0 / (round + 1) as f64,
+        }
+    }
+
+    #[test]
+    fn best_round_by_mean_topk() {
+        let mut h = History::new();
+        h.push(rec(0, 0.2, 1.0));
+        h.push(rec(1, 0.5, 1.0));
+        h.push(rec(2, 0.4, 1.0));
+        assert_eq!(h.best().unwrap().round, 1);
+        assert_eq!(h.len(), 3);
+    }
+
+    #[test]
+    fn mean_round_seconds() {
+        let mut h = History::new();
+        h.push(rec(0, 0.1, 2.0));
+        h.push(rec(1, 0.1, 4.0));
+        assert!((h.mean_round_seconds() - 3.0).abs() < 1e-12);
+        assert_eq!(History::new().mean_round_seconds(), 0.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut h = History::new();
+        h.push(rec(0, 0.25, 1.5));
+        let csv = h.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("round,top1"));
+        assert!(lines[1].starts_with("0,0.25"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut h = History::new();
+        h.push(rec(0, 0.25, 1.5));
+        let j = h.to_json();
+        let parsed = Json::parse(&j.to_string_pretty(0)).unwrap();
+        assert_eq!(
+            parsed.as_arr().unwrap()[0]
+                .expect("top1")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            0.25
+        );
+    }
+}

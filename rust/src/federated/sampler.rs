@@ -1,0 +1,69 @@
+//! Per-round client sampling (Algorithm 2 line 10: "Randomly select a
+//! set K_t that includes S out of K clients").
+
+use crate::util::rng::{derive_seed, Rng};
+
+/// Seeded sampler: round `t` always draws the same subset for the same
+//  run seed, so paired FedMLH/FedAvg comparisons see identical client
+/// schedules (removes one source of comparison noise).
+#[derive(Clone, Debug)]
+pub struct ClientSampler {
+    clients: usize,
+    per_round: usize,
+    seed: u64,
+}
+
+impl ClientSampler {
+    pub fn new(clients: usize, per_round: usize, seed: u64) -> Self {
+        assert!(per_round <= clients && per_round > 0);
+        ClientSampler {
+            clients,
+            per_round,
+            seed,
+        }
+    }
+
+    /// The S client ids participating in round `t`.
+    pub fn sample(&self, round: usize) -> Vec<usize> {
+        let mut rng = Rng::new(derive_seed(self.seed, 0x5a3e_0000 + round as u64));
+        rng.sample_without_replacement(self.clients, self.per_round)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_round() {
+        let s = ClientSampler::new(10, 4, 7);
+        assert_eq!(s.sample(3), s.sample(3));
+        assert_ne!(s.sample(3), s.sample(4));
+    }
+
+    #[test]
+    fn correct_size_and_distinct() {
+        let s = ClientSampler::new(10, 4, 1);
+        for t in 0..50 {
+            let picked = s.sample(t);
+            assert_eq!(picked.len(), 4);
+            let mut sorted = picked.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 4);
+            assert!(sorted.iter().all(|&c| c < 10));
+        }
+    }
+
+    #[test]
+    fn covers_all_clients_eventually() {
+        let s = ClientSampler::new(10, 4, 2);
+        let mut seen = vec![false; 10];
+        for t in 0..30 {
+            for c in s.sample(t) {
+                seen[c] = true;
+            }
+        }
+        assert!(seen.into_iter().all(|s| s));
+    }
+}

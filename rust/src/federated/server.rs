@@ -1,0 +1,294 @@
+//! The synchronization-round loop — paper Algorithm 2, lines 9–20.
+//!
+//! Per round `t`:
+//! 1. sample S of K clients ([`super::sampler`]),
+//! 2. for each selected client and each sub-model `j`, clone the global
+//!    parameters, run E local epochs through the [`TrainBackend`]
+//!    (`DeviceTrain`), and meter the down/up-load bytes,
+//! 3. aggregate each sub-model uniformly over the S updates
+//!    ([`super::aggregate`], line 17),
+//! 4. evaluate on the test set (predict per sub-model → scheme decode →
+//!    top-k metrics) and early-stop on the mean top-k accuracy.
+//!
+//! The loop is algorithm-agnostic: FedAvg is a [`LabelScheme`] with one
+//! sub-model over class labels, FedMLH has R sub-models over bucket
+//! labels (see [`crate::algo`]).
+
+use anyhow::Result;
+
+use crate::algo::LabelScheme;
+use crate::config::ExperimentConfig;
+use crate::data::dataset::{batch_ranges, Dataset};
+use crate::data::stats::LabelStats;
+use crate::eval::metrics::{evaluate_scores, AccuracyReport, Evaluator};
+use crate::model::params::ModelParams;
+use crate::partition::Partition;
+use crate::util::rng::derive_seed;
+
+use super::aggregate::{aggregate, Weighting};
+use super::backend::TrainBackend;
+use super::batcher::ClientBatcher;
+use super::comm::CommMeter;
+use super::early_stop::EarlyStopper;
+use super::history::{History, RoundRecord};
+use super::sampler::ClientSampler;
+
+/// Everything a finished run reports (inputs to Tables 3–7, Figs 3–5).
+#[derive(Debug)]
+pub struct RunOutput {
+    pub history: History,
+    pub comm: CommMeter,
+    /// Best-round accuracy (paper's reporting point).
+    pub best: AccuracyReport,
+    /// 1-based round count to reach the best accuracy (Table 6).
+    pub best_round: usize,
+    /// Cumulative communication bytes at the best round (Table 4).
+    pub comm_to_best: u64,
+    /// Rounds actually executed (≤ cfg.rounds under early stopping).
+    pub rounds_run: usize,
+    /// Per-client model memory: all sub-models (Table 5).
+    pub model_bytes: usize,
+    pub n_models: usize,
+    pub total_seconds: f64,
+}
+
+/// Run one federated training experiment.
+pub fn run(
+    cfg: &ExperimentConfig,
+    scheme: &dyn LabelScheme,
+    backend: &dyn TrainBackend,
+    train: &Dataset,
+    test: &Dataset,
+    partition: &Partition,
+) -> Result<RunOutput> {
+    cfg.validate()?;
+    let t_start = std::time::Instant::now();
+    let n_models = scheme.n_models();
+    let out_dim = scheme.out_dim();
+    let batch = cfg.preset.batch;
+
+    // Global sub-models (Algorithm 2: independent init per table).
+    let mut globals: Vec<ModelParams> = (0..n_models)
+        .map(|j| {
+            ModelParams::init(
+                train.d(),
+                cfg.preset.hidden,
+                out_dim,
+                derive_seed(cfg.seed, 0x1417_0000 + j as u64),
+            )
+        })
+        .collect();
+    let model_bytes_each = globals[0].byte_size();
+
+    let sampler = ClientSampler::new(cfg.clients, cfg.clients_per_round, cfg.seed);
+    let mut comm = CommMeter::new();
+    let mut history = History::new();
+    let mut stopper = EarlyStopper::new(cfg.patience);
+
+    // Evaluation machinery (frequent split mirrors the partitioner).
+    let train_stats = LabelStats::from_dataset(train);
+    let frequent_k = partition.class_owner.len().max(1);
+    let test_batches = batch_ranges(test.len(), batch);
+
+    let mut rounds_run = 0usize;
+    'rounds: for round in 0..cfg.rounds {
+        let t_round = std::time::Instant::now();
+        let selected = sampler.sample(round);
+
+        // -- local training (Algorithm 2 lines 11–15)
+        let mut locals: Vec<Vec<ModelParams>> = Vec::with_capacity(selected.len());
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        for &client in &selected {
+            let shard = &partition.clients[client];
+            let mut per_model = Vec::with_capacity(n_models);
+            for j in 0..n_models {
+                // download global sub-model j
+                comm.download(model_bytes_each);
+                let mut local = globals[j].clone();
+                let mut batcher = ClientBatcher::new(
+                    train,
+                    shard,
+                    scheme.target(j),
+                    batch,
+                    derive_seed(cfg.seed, ((round * cfg.clients + client) * n_models + j) as u64),
+                );
+                let stats = backend.local_train(&mut local, &mut batcher, cfg.local_epochs, cfg.lr)?;
+                if stats.steps > 0 {
+                    loss_sum += stats.mean_loss;
+                    loss_n += 1;
+                }
+                // upload update
+                comm.upload(model_bytes_each);
+                per_model.push(local);
+            }
+            locals.push(per_model);
+        }
+
+        // -- aggregation (line 17), uniform 1/S as in Algorithm 2
+        for j in 0..n_models {
+            let refs: Vec<(&ModelParams, usize)> = locals
+                .iter()
+                .zip(selected.iter())
+                .map(|(models, &client)| (&models[j], partition.clients[client].len()))
+                .collect();
+            globals[j] = aggregate(&refs, Weighting::Uniform)?;
+        }
+        comm.end_round();
+        let round_seconds = t_round.elapsed().as_secs_f64();
+        rounds_run = round + 1;
+
+        // -- evaluation
+        if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            let report = evaluate(
+                scheme, backend, &globals, test, &train_stats, frequent_k, batch, &test_batches,
+            )?;
+            history.push(RoundRecord {
+                round,
+                accuracy: report,
+                comm_bytes: comm.total(),
+                round_seconds,
+                mean_loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 },
+            });
+            if stopper.observe(round, report.mean_topk()) {
+                break 'rounds;
+            }
+        }
+    }
+
+    let best_rec = *history
+        .best()
+        .ok_or_else(|| anyhow::anyhow!("no evaluation rounds recorded"))?;
+    Ok(RunOutput {
+        best: best_rec.accuracy,
+        best_round: best_rec.round + 1,
+        comm_to_best: best_rec.comm_bytes,
+        rounds_run,
+        model_bytes: model_bytes_each * n_models,
+        n_models,
+        total_seconds: t_start.elapsed().as_secs_f64(),
+        history,
+        comm,
+    })
+}
+
+/// Full test-set evaluation: predict per sub-model, decode, top-k.
+#[allow(clippy::too_many_arguments)]
+fn evaluate(
+    scheme: &dyn LabelScheme,
+    backend: &dyn TrainBackend,
+    globals: &[ModelParams],
+    test: &Dataset,
+    train_stats: &LabelStats,
+    frequent_k: usize,
+    batch: usize,
+    test_batches: &[(usize, usize)],
+) -> Result<AccuracyReport> {
+    let mut evaluator = Evaluator::new(train_stats, frequent_k);
+    for &(start, end) in test_batches {
+        let idx: Vec<usize> = (start..end).collect();
+        let (x, rows) = test.feature_batch(&idx, batch);
+        let logits: Vec<Vec<f32>> = globals
+            .iter()
+            .map(|g| backend.predict(g, &x))
+            .collect::<Result<_>>()?;
+        let scores = scheme.scores(&logits, rows, backend)?;
+        evaluate_scores(test, &idx, &scores, &mut evaluator);
+    }
+    Ok(evaluator.report())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::scheme_for;
+    use crate::config::{Algo, ExperimentConfig};
+    use crate::data::synth::generate_preset;
+    use crate::federated::backend::RustBackend;
+    use crate::partition::noniid::{partition as noniid, NonIidOptions};
+
+    fn tiny_run(algo: Algo, rounds: usize) -> RunOutput {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.rounds = rounds;
+        cfg.patience = 0;
+        cfg.clients = 4;
+        cfg.clients_per_round = 2;
+        cfg.local_epochs = 1;
+        let data = generate_preset(&cfg.preset, cfg.seed);
+        let part = noniid(&data.train, &NonIidOptions::new(cfg.clients), cfg.seed);
+        let scheme = scheme_for(&cfg, algo, &data.train);
+        let backend = RustBackend::new();
+        run(&cfg, scheme.as_ref(), &backend, &data.train, &data.test, &part).unwrap()
+    }
+
+    #[test]
+    fn fedavg_learns_on_tiny() {
+        let out = tiny_run(Algo::FedAvg, 6);
+        assert_eq!(out.rounds_run, 6);
+        assert_eq!(out.n_models, 1);
+        let first = out.history.records.first().unwrap().accuracy.top1;
+        assert!(
+            out.best.top1 > first,
+            "no improvement: {first} -> {}",
+            out.best.top1
+        );
+        // comm accounting: 2 clients × 2 dirs × model × 6 rounds
+        let expect = 2 * 2 * out.model_bytes as u64 * 6;
+        assert_eq!(out.comm.total(), expect);
+    }
+
+    #[test]
+    fn fedmlh_learns_and_uses_r_models() {
+        let out = tiny_run(Algo::FedMlh, 6);
+        assert_eq!(out.n_models, 2); // tiny preset R=2
+        assert!(out.best.top1 > 0.05, "top1 {}", out.best.top1);
+        // FedMLH per-round comm is R sub-models each way
+        let expect = 2 * 2 * out.model_bytes as u64 * 6;
+        assert_eq!(out.comm.total(), expect);
+    }
+
+    #[test]
+    fn fedmlh_submodel_smaller_than_fedavg() {
+        // On the tiny preset (p = 64) the hidden layers dominate, so the
+        // R-sub-model *total* can exceed FedAvg — the paper's Table-5
+        // win needs extreme p (asserted structurally in model::params
+        // and end-to-end by the eurlex+ harness runs). What must hold at
+        // any scale: each sub-model is strictly smaller than the full
+        // model, because B < p shrinks the only differing layer.
+        let a = tiny_run(Algo::FedAvg, 1);
+        let m = tiny_run(Algo::FedMlh, 1);
+        assert!(
+            m.model_bytes / m.n_models < a.model_bytes,
+            "sub-model {} >= fedavg {}",
+            m.model_bytes / m.n_models,
+            a.model_bytes
+        );
+    }
+
+    #[test]
+    fn early_stopping_stops() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.rounds = 50;
+        cfg.patience = 2;
+        cfg.clients = 2;
+        cfg.clients_per_round = 1;
+        cfg.local_epochs = 1;
+        cfg.lr = 0.0; // no learning → accuracy flat → stop after patience
+        let data = generate_preset(&cfg.preset, cfg.seed);
+        let part = noniid(&data.train, &NonIidOptions::new(cfg.clients), cfg.seed);
+        let scheme = scheme_for(&cfg, Algo::FedAvg, &data.train);
+        let backend = RustBackend::new();
+        // lr=0 fails validation; bypass via minimal positive lr
+        cfg.lr = 1e-12;
+        let out = run(&cfg, scheme.as_ref(), &backend, &data.train, &data.test, &part).unwrap();
+        assert!(out.rounds_run <= 4, "ran {} rounds", out.rounds_run);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let a = tiny_run(Algo::FedMlh, 3);
+        let b = tiny_run(Algo::FedMlh, 3);
+        assert_eq!(a.best.top1, b.best.top1);
+        assert_eq!(a.comm.total(), b.comm.total());
+    }
+}

@@ -1,0 +1,245 @@
+//! Figures 2–5 of the paper as CSV series (plot-ready: every figure is
+//! a set of (x, series…) rows the paper draws as lines/bars).
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::data::dataset::Dataset;
+use crate::data::stats::LabelStats;
+use crate::federated::history::History;
+use crate::partition::Partition;
+
+use super::report::Csv;
+use super::{run_fedmlh_only, HarnessOpts, PairResult};
+
+/// Figure 2a — CDF of the normalized positive-instance frequency
+/// (power-law class imbalance).
+pub fn fig2a(ds: &Dataset) -> String {
+    let stats = LabelStats::from_dataset(ds);
+    let grid = LabelStats::log_grid();
+    let mut csv = Csv::new(&["norm_freq", "cdf"]);
+    for pt in stats.freq_cdf(&grid) {
+        csv.row(&[format!("{:.3e}", pt.x), format!("{:.6}", pt.y)]);
+    }
+    csv.render()
+}
+
+/// Figure 2b — proportion of positive instances contributed by classes
+/// below each normalized frequency (the "infrequent classes carry ~70%
+/// of positives" curve).
+pub fn fig2b(ds: &Dataset) -> String {
+    let stats = LabelStats::from_dataset(ds);
+    let grid = LabelStats::log_grid();
+    let mut csv = Csv::new(&["norm_freq", "positive_mass"]);
+    for pt in stats.positive_mass_cdf(&grid) {
+        csv.row(&[format!("{:.3e}", pt.x), format!("{:.6}", pt.y)]);
+    }
+    csv.render()
+}
+
+/// Figure 2c — the non-iid partition: per (client, frequent class)
+/// sample counts (the paper's colored bar chart).
+pub fn fig2c(ds: &Dataset, part: &Partition) -> String {
+    let mut csv = Csv::new(&["client", "frequent_class", "samples"]);
+    for (client, shard) in part.clients.iter().enumerate() {
+        // count per frequent class on this client
+        for (slot, &(class, _owner)) in part.class_owner.iter().enumerate() {
+            let count = shard
+                .iter()
+                .filter(|&&i| ds.labels_of(i).contains(&class))
+                .count();
+            if count > 0 {
+                csv.row(&[
+                    client.to_string(),
+                    format!("f{slot}"),
+                    count.to_string(),
+                ]);
+            }
+        }
+    }
+    csv.render()
+}
+
+fn history_rows(csv: &mut Csv, algo: &str, h: &History) {
+    for rec in &h.records {
+        let a = &rec.accuracy;
+        csv.row(&[
+            algo.to_string(),
+            (rec.round + 1).to_string(),
+            format!("{:.6}", a.top1),
+            format!("{:.6}", a.top3),
+            format!("{:.6}", a.top5),
+            format!("{:.6}", a.freq1),
+            format!("{:.6}", a.freq3),
+            format!("{:.6}", a.freq5),
+            format!("{:.6}", a.infreq1),
+            format!("{:.6}", a.infreq3),
+            format!("{:.6}", a.infreq5),
+            rec.comm_bytes.to_string(),
+            format!("{:.4}", rec.round_seconds),
+            format!("{:.6}", rec.mean_loss),
+        ]);
+    }
+}
+
+const CURVE_HEADER: [&str; 14] = [
+    "algo", "round", "top1", "top3", "top5", "freq1", "freq3", "freq5", "infreq1", "infreq3",
+    "infreq5", "comm_bytes", "round_seconds", "mean_loss",
+];
+
+/// Figure 3 — accuracy curves (total / frequent / infrequent) per round
+/// for both algorithms, from one pair run.
+pub fn fig3(pair: &PairResult) -> String {
+    let mut csv = Csv::new(&CURVE_HEADER);
+    history_rows(&mut csv, "fedmlh", &pair.fedmlh.history);
+    history_rows(&mut csv, "fedavg", &pair.fedavg.history);
+    csv.render()
+}
+
+/// Figure 4 — test accuracy vs cumulative communication volume. The
+/// same series as Fig. 3 keyed by `comm_bytes` instead of `round`; we
+/// emit one CSV and let the plot choose the x column, exactly like the
+/// paper reuses the training trace.
+pub fn fig4(pair: &PairResult) -> String {
+    fig3(pair)
+}
+
+/// One Figure-5 sweep point.
+#[derive(Debug)]
+pub struct SweepPoint {
+    /// The swept value (B or R).
+    pub value: usize,
+    pub top1: f64,
+    pub top3: f64,
+    pub top5: f64,
+    pub best_round: usize,
+    pub model_bytes: usize,
+}
+
+/// Figure 5a/5c — FedMLH sensitivity to hash-table size B (R fixed).
+pub fn fig5_sweep_b(
+    cfg: &ExperimentConfig,
+    values: &[usize],
+    opts: &HarnessOpts,
+) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::with_capacity(values.len());
+    for &b in values {
+        let mut c = cfg.clone();
+        c.override_b = b;
+        let run = run_fedmlh_only(&c, opts)?;
+        out.push(SweepPoint {
+            value: b,
+            top1: run.best.top1,
+            top3: run.best.top3,
+            top5: run.best.top5,
+            best_round: run.best_round,
+            model_bytes: run.model_bytes,
+        });
+    }
+    Ok(out)
+}
+
+/// Figure 5b/5d — FedMLH sensitivity to the number of hash tables R
+/// (B fixed).
+pub fn fig5_sweep_r(
+    cfg: &ExperimentConfig,
+    values: &[usize],
+    opts: &HarnessOpts,
+) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::with_capacity(values.len());
+    for &r in values {
+        let mut c = cfg.clone();
+        c.override_r = r;
+        let run = run_fedmlh_only(&c, opts)?;
+        out.push(SweepPoint {
+            value: r,
+            top1: run.best.top1,
+            top3: run.best.top3,
+            top5: run.best.top5,
+            best_round: run.best_round,
+            model_bytes: run.model_bytes,
+        });
+    }
+    Ok(out)
+}
+
+/// Render sweep points as CSV (`param` column is "B" or "R").
+pub fn fig5_csv(param: &str, points: &[SweepPoint]) -> String {
+    let mut csv = Csv::new(&["param", "value", "top1", "top3", "top5", "best_round", "model_bytes"]);
+    for p in points {
+        csv.row(&[
+            param.to_string(),
+            p.value.to_string(),
+            format!("{:.6}", p.top1),
+            format!("{:.6}", p.top3),
+            format!("{:.6}", p.top5),
+            p.best_round.to_string(),
+            p.model_bytes.to_string(),
+        ]);
+    }
+    csv.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::generate_preset;
+    use crate::harness::{build_world, run_pair, BackendKind};
+
+    fn quick_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.clients = 4;
+        cfg.clients_per_round = 2;
+        cfg.local_epochs = 1;
+        cfg
+    }
+
+    fn quick_opts() -> HarnessOpts {
+        HarnessOpts {
+            backend: BackendKind::Rust,
+            rounds: Some(2),
+            ..HarnessOpts::default()
+        }
+    }
+
+    #[test]
+    fn fig2_series_have_rows() {
+        let data = generate_preset(&quick_cfg().preset, 1);
+        let a = fig2a(&data.train);
+        let b = fig2b(&data.train);
+        assert!(a.lines().count() > 5, "{a}");
+        assert!(b.lines().count() > 5, "{b}");
+        // CDFs end at 1
+        let last = a.lines().last().unwrap();
+        assert!(last.ends_with("1.000000"), "{last}");
+    }
+
+    #[test]
+    fn fig2c_counts_match_partition() {
+        let cfg = quick_cfg();
+        let world = build_world(&cfg);
+        let csv = fig2c(&world.data.train, &world.partition);
+        assert!(csv.lines().count() > 1, "{csv}");
+    }
+
+    #[test]
+    fn fig3_has_both_algos() {
+        let pair = run_pair(&quick_cfg(), &quick_opts()).unwrap();
+        let csv = fig3(&pair);
+        assert!(csv.contains("fedmlh") && csv.contains("fedavg"));
+        // 2 rounds × 2 algos + header
+        assert_eq!(csv.trim().lines().count(), 1 + 4);
+    }
+
+    #[test]
+    fn fig5_sweeps_run() {
+        let cfg = quick_cfg();
+        let pts = fig5_sweep_b(&cfg, &[8, 32], &quick_opts()).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert!(pts[0].model_bytes < pts[1].model_bytes);
+        let csv = fig5_csv("B", &pts);
+        assert!(csv.contains("B,8"), "{csv}");
+        let pts_r = fig5_sweep_r(&cfg, &[1, 3], &quick_opts()).unwrap();
+        assert!(pts_r[0].model_bytes < pts_r[1].model_bytes);
+    }
+}

@@ -1,0 +1,343 @@
+//! The experiment harness: regenerates every table and figure in the
+//! paper's evaluation section (see DESIGN.md §6 for the full index).
+//!
+//! One [`run_pair`] trains FedAvg and FedMLH under identical conditions
+//! (same synthetic dataset, same non-iid partition, same FL setup);
+//! Tables 3–7 and Figures 3–4 are different projections of that pair,
+//! so the CLI runs the pair once and formats everything from it.
+//!
+//! - [`tables`] — Tables 1–7 as markdown (paper layout, measured values).
+//! - [`figures`] — Figures 2–5 as CSV series (plot-ready).
+//! - [`report`] — markdown/CSV formatting + `results/` persistence.
+
+pub mod figures;
+pub mod report;
+pub mod tables;
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Algo, ExperimentConfig};
+use crate::data::synth::{generate_preset, SynthData};
+use crate::federated::backend::{RustBackend, TrainBackend};
+use crate::federated::server::{self, RunOutput};
+use crate::partition::noniid::{partition as noniid_partition, NonIidOptions};
+use crate::partition::Partition;
+use crate::runtime::{RuntimeClient, XlaBackend, DEFAULT_ARTIFACT_DIR};
+
+/// Which compute substrate executes training.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust reference MLP (no artifacts needed; CI/test default).
+    Rust,
+    /// Compiled HLO artifacts on the PJRT CPU client (production path).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "rust" => Ok(BackendKind::Rust),
+            "xla" => Ok(BackendKind::Xla),
+            other => bail!("unknown backend '{other}' (expected rust|xla)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Rust => "rust",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Harness-level options shared by the CLI, examples and benches.
+#[derive(Clone, Debug)]
+pub struct HarnessOpts {
+    pub backend: BackendKind,
+    pub artifact_dir: PathBuf,
+    /// Write CSV/markdown outputs under this directory when set.
+    pub out_dir: Option<PathBuf>,
+    /// Override the number of synchronization rounds (quick runs).
+    pub rounds: Option<usize>,
+    /// Route the xla backend through the `*_fast` artifact family
+    /// (jnp-lowered twins; see `ExperimentConfig::fast_artifacts`).
+    pub fast: bool,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for HarnessOpts {
+    fn default() -> Self {
+        HarnessOpts {
+            backend: BackendKind::Rust,
+            artifact_dir: PathBuf::from(DEFAULT_ARTIFACT_DIR),
+            out_dir: None,
+            rounds: None,
+            fast: false,
+            seed: 42,
+            verbose: false,
+        }
+    }
+}
+
+impl HarnessOpts {
+    /// Apply the overrides to a preset config.
+    pub fn configure(&self, cfg: &mut ExperimentConfig) {
+        cfg.seed = self.seed;
+        if let Some(r) = self.rounds {
+            cfg.rounds = r;
+        }
+        // B-sweep overrides have no fast artifacts; keep the Pallas tag.
+        if self.fast && cfg.override_b == 0 {
+            cfg.fast_artifacts = true;
+        }
+    }
+}
+
+/// The shared world of one comparison: dataset + non-iid partition.
+pub struct World {
+    pub data: SynthData,
+    pub partition: Partition,
+}
+
+/// Generate the dataset and the frequent-class non-iid partition
+/// (paper Section 6 "Non-iid data partition", Fig. 2c) for a config.
+pub fn build_world(cfg: &ExperimentConfig) -> World {
+    let data = generate_preset(&cfg.preset, cfg.seed);
+    let partition = noniid_partition(
+        &data.train,
+        &NonIidOptions::new(cfg.clients),
+        cfg.seed,
+    );
+    World { data, partition }
+}
+
+/// Build the training backend for `cfg` × `algo`. The `rt` client is
+/// shared across backends so each artifact compiles once per process.
+pub fn make_backend(
+    kind: BackendKind,
+    rt: Option<&Rc<RuntimeClient>>,
+    cfg: &ExperimentConfig,
+    algo: Algo,
+) -> Result<Box<dyn TrainBackend>> {
+    match kind {
+        BackendKind::Rust => Ok(Box::new(RustBackend::with_batch(cfg.preset.batch))),
+        BackendKind::Xla => {
+            let rt = match rt {
+                Some(rt) => rt.clone(),
+                None => RuntimeClient::new(&PathBuf::from(DEFAULT_ARTIFACT_DIR))?,
+            };
+            Ok(Box::new(XlaBackend::new(rt, cfg, algo)?))
+        }
+    }
+}
+
+/// Train one algorithm end to end on a fresh world seeded by `seed`.
+/// This is the library's one-call entrypoint (see the crate example).
+pub fn run_algo(
+    cfg: &ExperimentConfig,
+    algo: Algo,
+    backend: &dyn TrainBackend,
+    seed: u64,
+) -> Result<RunOutput> {
+    let mut cfg = cfg.clone();
+    cfg.seed = seed;
+    let world = build_world(&cfg);
+    let scheme = crate::algo::scheme_for(&cfg, algo, &world.data.train);
+    server::run(
+        &cfg,
+        scheme.as_ref(),
+        backend,
+        &world.data.train,
+        &world.data.test,
+        &world.partition,
+    )
+}
+
+/// FedAvg + FedMLH trained under identical conditions — the input to
+/// Tables 3–7 and Figures 3–4.
+pub struct PairResult {
+    pub cfg: ExperimentConfig,
+    pub fedavg: RunOutput,
+    pub fedmlh: RunOutput,
+}
+
+impl PairResult {
+    /// Communication-cost ratio (Table 4's "CC Ratio"): FedAvg over
+    /// FedMLH, bytes to best accuracy.
+    pub fn cc_ratio(&self) -> f64 {
+        self.fedavg.comm_to_best as f64 / (self.fedmlh.comm_to_best.max(1)) as f64
+    }
+
+    /// Memory ratio (Table 5): per-client model bytes, FedAvg / FedMLH.
+    pub fn memory_ratio(&self) -> f64 {
+        self.fedavg.model_bytes as f64 / self.fedmlh.model_bytes.max(1) as f64
+    }
+
+    /// Rounds-to-best ratio (Table 6).
+    pub fn rounds_ratio(&self) -> f64 {
+        self.fedavg.best_round as f64 / self.fedmlh.best_round.max(1) as f64
+    }
+
+    /// First round (1-based) at which FedMLH's mean top-k accuracy
+    /// reaches FedAvg's *best* — the convergence-speed comparison that
+    /// stays meaningful when both algorithms are still improving at the
+    /// round cap (Table 6's mechanism). `None` if FedMLH never gets
+    /// there.
+    pub fn fedmlh_rounds_to_match_fedavg_best(&self) -> Option<usize> {
+        let target = self.fedavg.best.mean_topk();
+        self.fedmlh
+            .history
+            .records
+            .iter()
+            .find(|r| r.accuracy.mean_topk() >= target)
+            .map(|r| r.round + 1)
+    }
+
+    /// Per-round wall-clock ratio (Table 7).
+    pub fn time_ratio(&self) -> f64 {
+        let avg = self.fedavg.history.mean_round_seconds();
+        let mlh = self.fedmlh.history.mean_round_seconds();
+        if mlh > 0.0 {
+            avg / mlh
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Run the FedAvg/FedMLH pair for one preset config on the same world.
+pub fn run_pair(cfg: &ExperimentConfig, opts: &HarnessOpts) -> Result<PairResult> {
+    let mut cfg = cfg.clone();
+    opts.configure(&mut cfg);
+    cfg.validate()?;
+    let world = build_world(&cfg);
+
+    let rt = match opts.backend {
+        BackendKind::Xla => Some(RuntimeClient::new(&opts.artifact_dir)?),
+        BackendKind::Rust => None,
+    };
+
+    let mut outs = Vec::with_capacity(2);
+    for algo in [Algo::FedAvg, Algo::FedMlh] {
+        if opts.verbose {
+            eprintln!(
+                "[harness] {} × {} on preset '{}' ({} backend, ≤{} rounds)…",
+                algo.name(),
+                cfg.preset.paper_analog,
+                cfg.preset.name,
+                opts.backend.name(),
+                cfg.rounds
+            );
+        }
+        let backend = make_backend(opts.backend, rt.as_ref(), &cfg, algo)?;
+        let scheme = crate::algo::scheme_for(&cfg, algo, &world.data.train);
+        let out = server::run(
+            &cfg,
+            scheme.as_ref(),
+            backend.as_ref(),
+            &world.data.train,
+            &world.data.test,
+            &world.partition,
+        )?;
+        if opts.verbose {
+            eprintln!(
+                "[harness]   best mean@k {:.4} at round {} ({} rounds run, {:.1}s)",
+                out.best.mean_topk(),
+                out.best_round,
+                out.rounds_run,
+                out.total_seconds
+            );
+        }
+        outs.push(out);
+    }
+    let fedmlh = outs.pop().unwrap();
+    let fedavg = outs.pop().unwrap();
+    Ok(PairResult {
+        cfg,
+        fedavg,
+        fedmlh,
+    })
+}
+
+/// Run FedMLH alone (hyper-parameter sweeps, Figure 5).
+pub fn run_fedmlh_only(cfg: &ExperimentConfig, opts: &HarnessOpts) -> Result<RunOutput> {
+    let mut cfg = cfg.clone();
+    opts.configure(&mut cfg);
+    cfg.validate()?;
+    let world = build_world(&cfg);
+    let rt = match opts.backend {
+        BackendKind::Xla => Some(RuntimeClient::new(&opts.artifact_dir)?),
+        BackendKind::Rust => None,
+    };
+    let backend = make_backend(opts.backend, rt.as_ref(), &cfg, Algo::FedMlh)?;
+    let scheme = crate::algo::scheme_for(&cfg, Algo::FedMlh, &world.data.train);
+    server::run(
+        &cfg,
+        scheme.as_ref(),
+        backend.as_ref(),
+        &world.data.train,
+        &world.data.test,
+        &world.partition,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> HarnessOpts {
+        HarnessOpts {
+            rounds: Some(3),
+            ..HarnessOpts::default()
+        }
+    }
+
+    fn quick_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.clients = 4;
+        cfg.clients_per_round = 2;
+        cfg.local_epochs = 1;
+        cfg.patience = 0;
+        cfg
+    }
+
+    #[test]
+    fn pair_runs_and_ratios_are_sane() {
+        let pair = run_pair(&quick_cfg(), &quick_opts()).unwrap();
+        // tiny's p = 64 is too small for the Table-5 effect (hidden
+        // layers dominate); the > 1 ratios are asserted on the eurlex+
+        // presets by the harness integration test. Here: finite + sane.
+        assert!(pair.memory_ratio() > 0.0 && pair.memory_ratio().is_finite());
+        assert!(pair.cc_ratio() > 0.0 && pair.cc_ratio().is_finite());
+        assert!(pair.fedavg.rounds_run == 3 && pair.fedmlh.rounds_run == 3);
+    }
+
+    #[test]
+    fn run_algo_matches_doc_example() {
+        let cfg = quick_cfg();
+        let backend = RustBackend::new();
+        let mut cfg2 = cfg.clone();
+        cfg2.rounds = 2;
+        let out = run_algo(&cfg2, Algo::FedMlh, &backend, 42).unwrap();
+        assert!(out.best.top1 >= 0.0 && out.best.top1 <= 1.0);
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("rust").unwrap(), BackendKind::Rust);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn deterministic_pairs() {
+        let a = run_pair(&quick_cfg(), &quick_opts()).unwrap();
+        let b = run_pair(&quick_cfg(), &quick_opts()).unwrap();
+        assert_eq!(a.fedavg.best.top1, b.fedavg.best.top1);
+        assert_eq!(a.fedmlh.best.top1, b.fedmlh.best.top1);
+    }
+}

@@ -1,0 +1,178 @@
+//! Markdown/CSV formatting and `results/` persistence for the harness.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A simple pipe-table builder (GitHub-flavoured markdown).
+pub struct Markdown {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Markdown {
+    pub fn new(header: &[&str]) -> Self {
+        Markdown {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width != header width"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row.iter()) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(widths.iter())
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        let dashes: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|", dashes.join("-|-")));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A CSV builder (no quoting needed: all cells are numbers/identifiers).
+pub struct Csv {
+    lines: Vec<String>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv {
+            lines: vec![header.join(",")],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        self.lines.push(cells.join(","));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = self.lines.join("\n");
+        s.push('\n');
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Write a harness output file under `out_dir` (created on demand).
+pub fn write_result(out_dir: &Path, name: &str, content: &str) -> Result<()> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let path = out_dir.join(name);
+    std::fs::write(&path, content).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+// -- number formatting shared by tables --------------------------------
+
+/// `0.5931` → `"59.3%"`.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", 100.0 * v)
+}
+
+/// `0.5931, 0.5031` → `"59.3% (+9.0%)"` (Table 3 cell layout).
+pub fn pct_with_delta(ours: f64, baseline: f64) -> String {
+    format!(
+        "{} ({}{:.1}%)",
+        pct(ours),
+        if ours >= baseline { "+" } else { "" },
+        100.0 * (ours - baseline)
+    )
+}
+
+/// `2.41` → `"2.41x"`.
+pub fn ratio(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+/// Bytes with the unit the paper uses (Mb/Gb decimal).
+pub fn mb(bytes: u64) -> String {
+    let mbv = bytes as f64 / 1e6;
+    if mbv >= 1000.0 {
+        format!("{:.1} Gb", mbv / 1000.0)
+    } else {
+        format!("{mbv:.1} Mb")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_renders_aligned() {
+        let mut t = Markdown::new(&["name", "v"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("| name      | v |"), "{s}");
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn markdown_rejects_ragged_rows() {
+        Markdown::new(&["a", "b"]).row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut c = Csv::new(&["x", "y"]);
+        c.row(&["1".into(), "2".into()]);
+        assert_eq!(c.render(), "x,y\n1,2\n");
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.593), "59.3%");
+        assert_eq!(pct_with_delta(0.593, 0.503), "59.3% (+9.0%)");
+        assert_eq!(ratio(18.754), "18.75x");
+        assert_eq!(mb(199_700_000), "199.7 Mb");
+        assert_eq!(mb(7_200_000_000), "7.2 Gb");
+    }
+
+    #[test]
+    fn write_result_creates_dirs() {
+        let dir = std::env::temp_dir().join("fedmlh_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_result(&dir, "t.csv", "a,b\n").unwrap();
+        assert_eq!(std::fs::read_to_string(dir.join("t.csv")).unwrap(), "a,b\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,184 @@
+//! The classic count sketch (paper Section 3.2, Algorithm 1).
+//!
+//! FedMLH is "count sketch over the label space with learned buckets":
+//! this module is the plain data-structure version, kept as a substrate
+//! both because the paper's background defines it and because tests use
+//! it to validate the mean/median retrieval estimators the decode path
+//! inherits.
+
+use crate::util::rng::{derive_seed, Rng};
+
+use super::universal::UniversalHash;
+
+/// Count sketch with K hash tables of R buckets each.
+#[derive(Clone, Debug)]
+pub struct CountSketch {
+    hashes: Vec<UniversalHash>,
+    /// `table[k][bucket]` accumulator matrix M.
+    table: Vec<Vec<f32>>,
+    buckets: usize,
+}
+
+/// Retrieval estimator: the paper uses median classically but adopts the
+/// mean for FedMLH's log-probability decode ("we may also take the
+/// mean ... by the law of large numbers, mean also gives a good central
+/// estimate").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Estimator {
+    Median,
+    Mean,
+}
+
+impl CountSketch {
+    pub fn new(seed: u64, k: usize, buckets: usize) -> Self {
+        assert!(k > 0 && buckets > 0);
+        let hashes = (0..k)
+            .map(|j| {
+                let mut rng = Rng::new(derive_seed(seed, 0xc5_000 + j as u64));
+                UniversalHash::draw(&mut rng, buckets)
+            })
+            .collect();
+        CountSketch {
+            hashes,
+            table: vec![vec![0.0; buckets]; k],
+            buckets,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.hashes.len()
+    }
+
+    pub fn buckets(&self) -> usize {
+        self.buckets
+    }
+
+    /// Algorithm 1 line 4: `M[j, h_j(i)] += x_i * s_j(i)`.
+    pub fn insert(&mut self, i: u64, x: f32) {
+        for (j, h) in self.hashes.iter().enumerate() {
+            self.table[j][h.hash(i)] += x * h.sign(i);
+        }
+    }
+
+    /// Insert a whole vector (index = component).
+    pub fn insert_vector(&mut self, xs: &[f32]) {
+        for (i, &x) in xs.iter().enumerate() {
+            self.insert(i as u64, x);
+        }
+    }
+
+    /// Algorithm 1 line 6: estimate of x_i.
+    pub fn retrieve(&self, i: u64, est: Estimator) -> f32 {
+        let mut vals: Vec<f32> = self
+            .hashes
+            .iter()
+            .enumerate()
+            .map(|(j, h)| self.table[j][h.hash(i)] * h.sign(i))
+            .collect();
+        match est {
+            Estimator::Mean => vals.iter().sum::<f32>() / vals.len() as f32,
+            Estimator::Median => {
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let n = vals.len();
+                if n % 2 == 1 {
+                    vals[n / 2]
+                } else {
+                    0.5 * (vals[n / 2 - 1] + vals[n / 2])
+                }
+            }
+        }
+    }
+
+    /// Merge another sketch built with the same seed/k/buckets
+    /// (sketches are linear — this is what makes them federable).
+    pub fn merge(&mut self, other: &CountSketch) {
+        assert_eq!(self.hashes, other.hashes, "incompatible sketches");
+        for (mine, theirs) in self.table.iter_mut().zip(other.table.iter()) {
+            for (a, b) in mine.iter_mut().zip(theirs.iter()) {
+                *a += b;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn exact_when_no_collisions() {
+        // One heavy item, huge table: retrieval is exact.
+        let mut cs = CountSketch::new(1, 3, 4096);
+        cs.insert(42, 7.5);
+        assert!((cs.retrieve(42, Estimator::Median) - 7.5).abs() < 1e-6);
+        assert!((cs.retrieve(42, Estimator::Mean) - 7.5).abs() < 1e-6);
+        assert!(cs.retrieve(43, Estimator::Median).abs() < 1e-6);
+    }
+
+    #[test]
+    fn recovers_heavy_hitters() {
+        let mut cs = CountSketch::new(2, 5, 256);
+        let n = 2000usize;
+        let mut xs = vec![1.0f32; n];
+        xs[17] = 500.0;
+        xs[1203] = -400.0;
+        cs.insert_vector(&xs);
+        let a = cs.retrieve(17, Estimator::Median);
+        let b = cs.retrieve(1203, Estimator::Median);
+        assert!((a - 500.0).abs() < 50.0, "{a}");
+        assert!((b + 400.0).abs() < 50.0, "{b}");
+    }
+
+    #[test]
+    fn median_estimate_unbiased_on_average() {
+        check("cs unbiased", 10, |g| {
+            let seed = g.rng().next_u64();
+            let mut cs = CountSketch::new(seed, 5, 128);
+            let n = 500;
+            let xs: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            cs.insert_vector(&xs);
+            // average absolute error stays below the l2/ sqrt(B) noise scale
+            let l2: f32 = xs.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let noise = l2 / (128f32).sqrt();
+            let mut err_sum = 0.0f32;
+            for i in 0..n {
+                err_sum += (cs.retrieve(i as u64, Estimator::Median) - xs[i]).abs();
+            }
+            let mean_err = err_sum / n as f32;
+            assert!(mean_err < 3.0 * noise, "{mean_err} vs {noise}");
+        });
+    }
+
+    #[test]
+    fn sketches_are_linear_under_merge() {
+        let seed = 99;
+        let mut a = CountSketch::new(seed, 3, 64);
+        let mut b = CountSketch::new(seed, 3, 64);
+        let mut whole = CountSketch::new(seed, 3, 64);
+        let xs: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            whole.insert(i as u64, x);
+            if i % 2 == 0 {
+                a.insert(i as u64, x);
+            } else {
+                b.insert(i as u64, x);
+            }
+        }
+        a.merge(&b);
+        for i in 0..100u64 {
+            assert!(
+                (a.retrieve(i, Estimator::Median) - whole.retrieve(i, Estimator::Median)).abs()
+                    < 1e-5
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_incompatible() {
+        let mut a = CountSketch::new(1, 3, 64);
+        let b = CountSketch::new(2, 3, 64);
+        a.merge(&b);
+    }
+}

@@ -1,0 +1,208 @@
+//! R-table label hashing (paper Algorithm 2, lines 2–7).
+//!
+//! The server draws R independent 2-universal functions
+//! `h_j: {0..p-1} -> {0..B-1}` once and broadcasts them; every client
+//! then maps each sample's multi-hot class label vector `y ∈ {0,1}^p`
+//! to R multi-hot *bucket* label vectors `z_j ∈ {0,1}^B`, where bucket
+//! `i` of table `j` is the union of the labels hashed into it:
+//!
+//! `z[j][i] = ⋁_{l : h_j(l) = i} y[l]`  (line 6)
+//!
+//! The class→bucket index matrix (`idx[r][class]`) is also what the
+//! count-sketch decode consumes at inference, both in rust
+//! ([`crate::eval::decode`]) and in the AOT decode artifact.
+
+use crate::util::rng::{derive_seed, Rng};
+
+use super::universal::UniversalHash;
+
+/// The broadcast hashing state shared by server and all clients.
+#[derive(Clone, Debug)]
+pub struct LabelHasher {
+    /// `tables[r][class] = bucket` — precomputed h_r over all p classes.
+    tables: Vec<Vec<u32>>,
+    p: usize,
+    b: usize,
+}
+
+impl LabelHasher {
+    /// Draw R independent functions (seeded; every component that needs
+    /// the same tables derives the same seed).
+    pub fn new(seed: u64, r: usize, p: usize, b: usize) -> Self {
+        assert!(r > 0 && p > 0 && b > 0);
+        let mut tables = Vec::with_capacity(r);
+        for j in 0..r {
+            let mut rng = Rng::new(derive_seed(seed, 0x4a5_000 + j as u64));
+            let h = UniversalHash::draw(&mut rng, b);
+            tables.push((0..p).map(|c| h.hash(c as u64) as u32).collect());
+        }
+        LabelHasher { tables, p, b }
+    }
+
+    pub fn r(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn b(&self) -> usize {
+        self.b
+    }
+
+    /// Bucket of `class` in table `r`.
+    #[inline]
+    pub fn bucket(&self, r: usize, class: usize) -> usize {
+        self.tables[r][class] as usize
+    }
+
+    /// The `[R, p]` int32 index matrix the decode artifact consumes
+    /// (row-major).
+    pub fn index_matrix_i32(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.r() * self.p);
+        for t in &self.tables {
+            out.extend(t.iter().map(|&b| b as i32));
+        }
+        out
+    }
+
+    /// Map a sparse positive-class list to the R multi-hot bucket label
+    /// vectors, written into `out` (length R*B, zeroed by this call).
+    pub fn bucket_labels_into(&self, positives: &[u32], out: &mut [f32]) {
+        assert_eq!(out.len(), self.r() * self.b);
+        out.fill(0.0);
+        for (j, table) in self.tables.iter().enumerate() {
+            let row = &mut out[j * self.b..(j + 1) * self.b];
+            for &c in positives {
+                row[table[c as usize] as usize] = 1.0;
+            }
+        }
+    }
+
+    /// Bucket labels for table `j` only (length B, zeroed by this call).
+    pub fn bucket_labels_table_into(&self, j: usize, positives: &[u32], out: &mut [f32]) {
+        assert_eq!(out.len(), self.b);
+        out.fill(0.0);
+        let table = &self.tables[j];
+        for &c in positives {
+            out[table[c as usize] as usize] = 1.0;
+        }
+    }
+
+    /// Number of classes landing in each bucket of table `j`
+    /// (load statistics; Lemma 1 empirics).
+    pub fn bucket_loads(&self, j: usize) -> Vec<usize> {
+        let mut loads = vec![0usize; self.b];
+        for &b in &self.tables[j] {
+            loads[b as usize] += 1;
+        }
+        loads
+    }
+
+    /// Whether any pair of classes collides in *all* tables (the event
+    /// Lemma 2 bounds: such a pair is indistinguishable to FedMLH).
+    /// O(p²·R) — intended for tests and the theory harness at small p.
+    pub fn has_fully_colliding_pair(&self) -> bool {
+        for x in 0..self.p {
+            for y in (x + 1)..self.p {
+                if (0..self.r()).all(|j| self.tables[j][x] == self.tables[j][y]) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn deterministic_and_broadcastable() {
+        let a = LabelHasher::new(7, 3, 100, 10);
+        let b = LabelHasher::new(7, 3, 100, 10);
+        assert_eq!(a.index_matrix_i32(), b.index_matrix_i32());
+        let c = LabelHasher::new(8, 3, 100, 10);
+        assert_ne!(a.index_matrix_i32(), c.index_matrix_i32());
+    }
+
+    #[test]
+    fn tables_are_independent() {
+        let h = LabelHasher::new(7, 2, 1000, 16);
+        let same = (0..1000)
+            .filter(|&c| h.bucket(0, c) == h.bucket(1, c))
+            .count();
+        // If tables were identical this would be 1000; independent ≈ 1000/16.
+        assert!(same < 150, "tables look identical: {same}");
+    }
+
+    #[test]
+    fn bucket_labels_are_union_of_hashed_positives() {
+        check("bucket labels union", 30, |g| {
+            let p = g.usize_in(10, 300);
+            let b = g.usize_in(2, 40);
+            let r = g.usize_in(1, 5);
+            let h = LabelHasher::new(g.rng().next_u64(), r, p, b);
+            let n_pos = g.usize_in(1, 10.min(p));
+            let positives: Vec<u32> = (0..n_pos)
+                .map(|_| g.usize_in(0, p) as u32)
+                .collect();
+            let mut out = vec![0.0f32; r * b];
+            h.bucket_labels_into(&positives, &mut out);
+            // brute force union
+            for j in 0..r {
+                for i in 0..b {
+                    let want = positives.iter().any(|&c| h.bucket(j, c as usize) == i);
+                    let got = out[j * b + i] > 0.5;
+                    assert_eq!(got, want, "table {j} bucket {i}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn per_table_matches_full() {
+        let h = LabelHasher::new(3, 4, 200, 25);
+        let positives = [1u32, 5, 77, 199];
+        let mut full = vec![0.0f32; 4 * 25];
+        h.bucket_labels_into(&positives, &mut full);
+        for j in 0..4 {
+            let mut one = vec![0.0f32; 25];
+            h.bucket_labels_table_into(j, &positives, &mut one);
+            assert_eq!(&full[j * 25..(j + 1) * 25], &one[..]);
+        }
+    }
+
+    #[test]
+    fn index_matrix_layout() {
+        let h = LabelHasher::new(11, 2, 50, 8);
+        let m = h.index_matrix_i32();
+        assert_eq!(m.len(), 100);
+        for c in 0..50 {
+            assert_eq!(m[c] as usize, h.bucket(0, c));
+            assert_eq!(m[50 + c] as usize, h.bucket(1, c));
+        }
+    }
+
+    #[test]
+    fn bucket_loads_sum_to_p() {
+        let h = LabelHasher::new(13, 3, 500, 32);
+        for j in 0..3 {
+            let loads = h.bucket_loads(j);
+            assert_eq!(loads.iter().sum::<usize>(), 500);
+        }
+    }
+
+    #[test]
+    fn full_collision_detection() {
+        // R=1: any bucket with >= 2 classes is a fully-colliding pair.
+        let h = LabelHasher::new(1, 1, 100, 4);
+        assert!(h.has_fully_colliding_pair());
+        // Large B, enough tables: collision-free w.h.p. (Lemma 2).
+        let h = LabelHasher::new(1, 4, 50, 64);
+        assert!(!h.has_fully_colliding_pair());
+    }
+}

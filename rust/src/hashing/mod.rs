@@ -1,0 +1,18 @@
+//! Label hashing: the core mechanism of FedMLH.
+//!
+//! - [`universal`] — seeded 2-universal hash family `h(x) = ((a·x + b)
+//!   mod P) mod B` (paper Algorithm 2, line 2: the *server* draws the R
+//!   functions once and broadcasts them, so every client buckets classes
+//!   identically).
+//! - [`label_hash`] — the R-table class→bucket maps and multi-hot bucket
+//!   label construction (Algorithm 2, lines 4–7).
+//! - [`count_sketch`] — the classic count sketch of Section 3.2, built as
+//!   a standalone substrate (and used by tests to cross-validate the
+//!   mean-decode estimator the paper adopts).
+
+pub mod count_sketch;
+pub mod label_hash;
+pub mod universal;
+
+pub use label_hash::LabelHasher;
+pub use universal::UniversalHash;

@@ -1,0 +1,169 @@
+//! Seeded 2-universal hash family.
+//!
+//! `h(x) = ((a·x + b) mod P) mod range` with P a Mersenne prime
+//! (2^61 − 1), `a` uniform in [1, P), `b` uniform in [0, P). The family
+//! is 2-universal: for x ≠ y, Pr[h(x) = h(y)] ≤ 1/range (up to the usual
+//! floor bias ≤ range/P, negligible at P ≈ 2^61). FedMLH needs genuine
+//! independence *between* the R tables (paper Lemma 2 assumes it), which
+//! seeded draws of (a, b) provide.
+
+use crate::util::rng::Rng;
+
+/// The Mersenne prime 2^61 − 1.
+pub const P61: u64 = (1 << 61) - 1;
+
+/// One member of the family; also carries a ±1 sign hash (used by the
+/// count-sketch substrate; label hashing ignores it).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UniversalHash {
+    a: u64,
+    b: u64,
+    sign_a: u64,
+    sign_b: u64,
+    range: u64,
+}
+
+#[inline]
+fn mod_p61(x: u128) -> u64 {
+    // Fast reduction modulo the Mersenne prime 2^61-1: fold the high
+    // bits twice (first fold leaves up to 65 bits, second leaves 62).
+    let s = (x & P61 as u128) + (x >> 61);
+    let mut s = ((s & P61 as u128) + (s >> 61)) as u64;
+    if s >= P61 {
+        s -= P61;
+    }
+    s
+}
+
+impl UniversalHash {
+    /// Draw a hash function with the given output range from `rng`.
+    pub fn draw(rng: &mut Rng, range: usize) -> Self {
+        assert!(range > 0, "hash range must be positive");
+        let a = 1 + (rng.next_u64() % (P61 - 1));
+        let b = rng.next_u64() % P61;
+        let sign_a = 1 + (rng.next_u64() % (P61 - 1));
+        let sign_b = rng.next_u64() % P61;
+        UniversalHash {
+            a,
+            b,
+            sign_a,
+            sign_b,
+            range: range as u64,
+        }
+    }
+
+    /// Bucket of `x` in `[0, range)`.
+    #[inline]
+    pub fn hash(&self, x: u64) -> usize {
+        let v = mod_p61(self.a as u128 * x as u128 + self.b as u128);
+        (v % self.range) as usize
+    }
+
+    /// ±1 sign of `x` (count-sketch sign hash).
+    #[inline]
+    pub fn sign(&self, x: u64) -> f32 {
+        let v = mod_p61(self.sign_a as u128 * x as u128 + self.sign_b as u128);
+        if v & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    pub fn range(&self) -> usize {
+        self.range as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let h1 = UniversalHash::draw(&mut r1, 100);
+        let h2 = UniversalHash::draw(&mut r2, 100);
+        for x in 0..1000u64 {
+            assert_eq!(h1.hash(x), h2.hash(x));
+            assert_eq!(h1.sign(x), h2.sign(x));
+        }
+    }
+
+    #[test]
+    fn outputs_in_range() {
+        check("hash in range", 30, |g| {
+            let range = g.usize_in(1, 5000);
+            let h = UniversalHash::draw(g.rng(), range);
+            for _ in 0..100 {
+                let x = g.rng().next_u64() % 1_000_000;
+                assert!(h.hash(x) < range);
+                let s = h.sign(x);
+                assert!(s == 1.0 || s == -1.0);
+            }
+        });
+    }
+
+    #[test]
+    fn buckets_roughly_uniform() {
+        let mut rng = Rng::new(99);
+        let b = 50;
+        let h = UniversalHash::draw(&mut rng, b);
+        let mut counts = vec![0usize; b];
+        let n = 100_000u64;
+        for x in 0..n {
+            counts[h.hash(x)] += 1;
+        }
+        let expect = n as f64 / b as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.15, "bucket {i}: {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn collision_rate_near_two_universal_bound() {
+        // Empirical pairwise collision probability over random pairs must
+        // be ~1/range.
+        let mut rng = Rng::new(31);
+        let range = 64;
+        let mut collisions = 0usize;
+        let trials = 30_000;
+        for t in 0..trials {
+            let h = if t % 100 == 0 {
+                UniversalHash::draw(&mut rng, range)
+            } else {
+                UniversalHash::draw(&mut rng, range)
+            };
+            let x = rng.next_u64() % 1_000_000;
+            let mut y = rng.next_u64() % 1_000_000;
+            if y == x {
+                y += 1;
+            }
+            if h.hash(x) == h.hash(y) {
+                collisions += 1;
+            }
+        }
+        let rate = collisions as f64 / trials as f64;
+        let bound = 1.0 / range as f64;
+        assert!(rate < bound * 1.4, "rate {rate} vs bound {bound}");
+    }
+
+    #[test]
+    fn signs_balanced() {
+        let mut rng = Rng::new(8);
+        let h = UniversalHash::draw(&mut rng, 10);
+        let pos: usize = (0..10_000u64).filter(|&x| h.sign(x) > 0.0).count();
+        assert!((4500..5500).contains(&pos), "{pos}");
+    }
+
+    #[test]
+    fn mod_p61_matches_naive() {
+        check("mod p61", 50, |g| {
+            let x = (g.rng().next_u64() as u128) * (g.rng().next_u64() as u128 >> 3);
+            assert_eq!(mod_p61(x), (x % P61 as u128) as u64);
+        });
+    }
+}

@@ -1,0 +1,56 @@
+//! # FedMLH — Federated Multiple Label Hashing
+//!
+//! Production-oriented reproduction of *"Federated Multiple Label Hashing
+//! (FedMLH): Communication Efficient Federated Learning on Extreme
+//! Classification Tasks"* (Dai, Dun, Tang, Kyrillidis, Shrivastava, 2021).
+//!
+//! FedMLH hashes the `p` output classes of an extreme multi-label
+//! classifier into `R` independent hash tables of `B ≪ p` buckets
+//! (a count sketch over the label space), trains one federated sub-model
+//! per table against the *bucket* labels, and recovers per-class scores
+//! at inference by averaging the `R` bucket log-probabilities each class
+//! hashes into. This simultaneously shrinks the model/communication
+//! volume and re-balances the class distribution (paper Lemma 1,
+//! Theorem 2).
+//!
+//! ## Architecture (three layers, python never on the training path)
+//!
+//! - **L3 (this crate)** — the federated coordinator: client sampling,
+//!   local-training orchestration, per-sub-model FedAvg aggregation,
+//!   communication accounting, non-iid partitioning, evaluation, and the
+//!   table/figure harness.
+//! - **L2** — the MLP forward/backward + SGD step, written in JAX
+//!   (`python/compile/model.py`) and AOT-lowered to HLO text.
+//! - **L1** — Pallas kernels for the wide output layer, the fused BCE
+//!   loss and the count-sketch decode (`python/compile/kernels/`).
+//!
+//! The rust runtime loads `artifacts/*.hlo.txt` through the PJRT C API
+//! (`xla` crate) once and then executes them with buffer-resident
+//! parameters; see [`runtime`].
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use fedmlh::config::ExperimentConfig;
+//! use fedmlh::federated::backend::RustBackend;
+//! use fedmlh::harness::run_algo;
+//!
+//! let cfg = ExperimentConfig::preset("tiny").unwrap();
+//! let backend = RustBackend::new();
+//! let out = run_algo(&cfg, fedmlh::config::Algo::FedMlh, &backend, 42).unwrap();
+//! println!("best top1 = {:.3}", out.best.top1);
+//! ```
+
+pub mod algo;
+pub mod bench;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod federated;
+pub mod harness;
+pub mod hashing;
+pub mod model;
+pub mod partition;
+pub mod runtime;
+pub mod theory;
+pub mod util;

@@ -1,0 +1,15 @@
+//! Host-side model state and the pure-rust reference MLP.
+//!
+//! - [`params`] — the six parameter tensors of the 2-hidden-layer MLP
+//!   (the paper's shared architecture), their initialization, byte
+//!   accounting (Table 5) and the flat buffer layout the AOT artifacts
+//!   consume.
+//! - [`mlp`] — a from-scratch rust implementation of exactly the same
+//!   forward/backward/SGD math as the L2 JAX graph. It backs the
+//!   [`crate::federated::backend::RustBackend`] used by fast tests, and
+//!   cross-validates the AOT artifacts numerically (integration tests).
+
+pub mod mlp;
+pub mod params;
+
+pub use params::ModelParams;

@@ -1,0 +1,192 @@
+//! The 2-hidden-layer MLP's parameter set (paper Section 6 "Baselines":
+//! "Both algorithms use the same MLP network (with two hidden layers)
+//! for each dataset, besides the last fully connected layer").
+//!
+//! Tensor order `w1, b1, w2, b2, w3, b3` is a contract shared with the
+//! AOT artifacts (`python/compile/model.py::PARAM_NAMES`) — the train
+//! step takes them as its first six inputs and returns them as its
+//! first six outputs, in this order.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::{derive_seed, Rng};
+use crate::util::tensor::Tensor;
+
+/// Number of parameter tensors.
+pub const N_PARAMS: usize = 6;
+
+/// The MLP parameters: input dim `d`, hidden width `h`, output width
+/// `out` (p for FedAvg, B for one FedMLH sub-model).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelParams {
+    pub d: usize,
+    pub hidden: usize,
+    pub out: usize,
+    /// w1 [d,h], b1 [h], w2 [h,h], b2 [h], w3 [h,out], b3 [out]
+    pub tensors: Vec<Tensor>,
+}
+
+impl ModelParams {
+    /// Parameter tensor shapes for (d, hidden, out).
+    pub fn shapes(d: usize, hidden: usize, out: usize) -> [Vec<usize>; N_PARAMS] {
+        [
+            vec![d, hidden],
+            vec![hidden],
+            vec![hidden, hidden],
+            vec![hidden],
+            vec![hidden, out],
+            vec![out],
+        ]
+    }
+
+    /// Zero-initialized (aggregation accumulators).
+    pub fn zeros(d: usize, hidden: usize, out: usize) -> Self {
+        let tensors = Self::shapes(d, hidden, out)
+            .iter()
+            .map(|s| Tensor::zeros(s))
+            .collect();
+        ModelParams {
+            d,
+            hidden,
+            out,
+            tensors,
+        }
+    }
+
+    /// He-uniform weight init (U[-√(6/fan_in), +√(6/fan_in)]), zero
+    /// biases — the same scheme as `python/compile/model.py::init_params`.
+    pub fn init(d: usize, hidden: usize, out: usize, seed: u64) -> Self {
+        let mut p = Self::zeros(d, hidden, out);
+        for (i, t) in p.tensors.iter_mut().enumerate() {
+            if t.shape().len() == 2 {
+                let fan_in = t.shape()[0] as f32;
+                let bound = (6.0 / fan_in).sqrt();
+                let mut rng = Rng::new(derive_seed(seed, 0x1417 + i as u64));
+                for v in t.data_mut() {
+                    *v = rng.range_f64(-bound as f64, bound as f64) as f32;
+                }
+            }
+        }
+        p
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Bytes of one full model copy (f32) — the unit of Table 5 (memory)
+    /// and Table 4 (per-sync communication volume is one copy up + one
+    /// copy down per selected client, per sub-model).
+    pub fn byte_size(&self) -> usize {
+        self.tensors.iter().map(|t| t.byte_size()).sum()
+    }
+
+    /// `self = Σ scale_i · others_i` is built by repeated [`Self::accumulate`];
+    /// this zeroes the accumulator first.
+    pub fn zero_(&mut self) {
+        for t in self.tensors.iter_mut() {
+            t.fill(0.0);
+        }
+    }
+
+    /// `self += other * scale` (FedAvg aggregation primitive).
+    pub fn accumulate(&mut self, other: &ModelParams, scale: f32) -> Result<()> {
+        if (self.d, self.hidden, self.out) != (other.d, other.hidden, other.out) {
+            bail!(
+                "param shape mismatch ({},{},{}) vs ({},{},{})",
+                self.d,
+                self.hidden,
+                self.out,
+                other.d,
+                other.hidden,
+                other.out
+            );
+        }
+        for (a, b) in self.tensors.iter_mut().zip(other.tensors.iter()) {
+            a.axpy(b, scale)?;
+        }
+        Ok(())
+    }
+
+    /// Max |Δ| across all tensors (numeric cross-checks).
+    pub fn max_abs_diff(&self, other: &ModelParams) -> Result<f32> {
+        let mut m = 0.0f32;
+        for (a, b) in self.tensors.iter().zip(other.tensors.iter()) {
+            m = m.max(a.max_abs_diff(b)?);
+        }
+        Ok(m)
+    }
+
+    pub fn w1(&self) -> &Tensor {
+        &self.tensors[0]
+    }
+    pub fn b1(&self) -> &Tensor {
+        &self.tensors[1]
+    }
+    pub fn w2(&self) -> &Tensor {
+        &self.tensors[2]
+    }
+    pub fn b2(&self) -> &Tensor {
+        &self.tensors[3]
+    }
+    pub fn w3(&self) -> &Tensor {
+        &self.tensors[4]
+    }
+    pub fn b3(&self) -> &Tensor {
+        &self.tensors[5]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_counts() {
+        let p = ModelParams::zeros(10, 4, 7);
+        assert_eq!(p.num_params(), 10 * 4 + 4 + 16 + 4 + 4 * 7 + 7);
+        assert_eq!(p.byte_size(), p.num_params() * 4);
+        assert_eq!(p.w3().shape(), &[4, 7]);
+    }
+
+    #[test]
+    fn init_deterministic_and_bounded() {
+        let a = ModelParams::init(20, 8, 30, 3);
+        let b = ModelParams::init(20, 8, 30, 3);
+        assert_eq!(a, b);
+        let c = ModelParams::init(20, 8, 30, 4);
+        assert!(a.max_abs_diff(&c).unwrap() > 0.0);
+        // He bound for w1: sqrt(6/20)
+        let bound = (6.0f32 / 20.0).sqrt();
+        for &v in a.w1().data() {
+            assert!(v.abs() <= bound);
+        }
+        // biases zero
+        assert!(a.b1().data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn accumulate_weighted_average() {
+        let mut acc = ModelParams::zeros(2, 2, 2);
+        let mut a = ModelParams::zeros(2, 2, 2);
+        let mut b = ModelParams::zeros(2, 2, 2);
+        a.tensors[0].fill(1.0);
+        b.tensors[0].fill(3.0);
+        acc.accumulate(&a, 0.5).unwrap();
+        acc.accumulate(&b, 0.5).unwrap();
+        assert!(acc.tensors[0].data().iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        let wrong = ModelParams::zeros(3, 2, 2);
+        assert!(acc.accumulate(&wrong, 1.0).is_err());
+    }
+
+    #[test]
+    fn memory_ratio_matches_paper_structure() {
+        // Table 5 mechanism: FedAvg holds one p-output model; FedMLH
+        // holds R B-output models. Check the ratio formula on eurlex dims.
+        let fedavg = ModelParams::zeros(256, 128, 4000);
+        let sub = ModelParams::zeros(256, 128, 250);
+        let ratio = fedavg.byte_size() as f64 / (4 * sub.byte_size()) as f64;
+        assert!(ratio > 1.0, "FedMLH should be smaller: ratio {ratio}");
+    }
+}

@@ -1,0 +1,257 @@
+//! Inter-client class-distribution divergence (Theorem 2 empirics).
+//!
+//! π^(k) is client k's positive-instance proportion over classes;
+//! ω^(k) is the same over FedMLH's B buckets. Theorem 2:
+//! `KL(ω^(a), ω^(b)) < KL(π^(a), π^(b))` — hashing into fewer buckets
+//! strictly shrinks the divergence. The harness computes both on real
+//! partitions (and the theory tests on random simplexes).
+
+use crate::data::dataset::Dataset;
+use crate::hashing::label_hash::LabelHasher;
+
+use super::Partition;
+
+/// Smoothed positive-instance proportions per class for one client.
+/// Theorem 2 assumes strictly positive proportions; empirical
+/// distributions have zeros, so we add-ε smooth before normalizing
+/// (standard for empirical KL).
+pub fn class_distribution(ds: &Dataset, samples: &[usize], eps: f64) -> Vec<f64> {
+    let mut counts = vec![0.0f64; ds.p()];
+    for &i in samples {
+        for &l in ds.labels_of(i) {
+            counts[l as usize] += 1.0;
+        }
+    }
+    normalize_smoothed(&mut counts, eps);
+    counts
+}
+
+/// Same but over buckets of one hash table.
+pub fn bucket_distribution(
+    ds: &Dataset,
+    samples: &[usize],
+    hasher: &LabelHasher,
+    table: usize,
+    eps: f64,
+) -> Vec<f64> {
+    let mut counts = vec![0.0f64; hasher.b()];
+    for &i in samples {
+        for &l in ds.labels_of(i) {
+            counts[hasher.bucket(table, l as usize)] += 1.0;
+        }
+    }
+    normalize_smoothed(&mut counts, eps);
+    counts
+}
+
+fn normalize_smoothed(counts: &mut [f64], eps: f64) {
+    for c in counts.iter_mut() {
+        *c += eps;
+    }
+    let total: f64 = counts.iter().sum();
+    for c in counts.iter_mut() {
+        *c /= total;
+    }
+}
+
+/// KL(a ‖ b) in nats; inputs must be strictly positive distributions.
+pub fn kl(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(&pa, &pb)| {
+            debug_assert!(pa > 0.0 && pb > 0.0);
+            pa * (pa / pb).ln()
+        })
+        .sum()
+}
+
+/// KL over bucket aggregates of two distributions that share a
+/// class→bucket map: a bucket is empty in `a` iff it is empty in `b`
+/// (it received no classes), and such paired zeros contribute 0
+/// (lim x→0 of x·ln(x/x)). Any `a_i > 0, b_i = 0` would be an infinite
+/// divergence and is rejected.
+pub fn kl_shared_support(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(&pa, &pb)| {
+            if pa == 0.0 && pb == 0.0 {
+                0.0
+            } else {
+                assert!(
+                    pa > 0.0 && pb > 0.0,
+                    "supports differ: {pa} vs {pb} — not a shared-map aggregate"
+                );
+                pa * (pa / pb).ln()
+            }
+        })
+        .sum()
+}
+
+/// Map a class distribution to the induced bucket distribution under a
+/// class→bucket map (pure aggregation; used by Theorem 2 MC checks).
+pub fn aggregate_to_buckets(pi: &[f64], bucket_of: &[usize], b: usize) -> Vec<f64> {
+    assert_eq!(pi.len(), bucket_of.len());
+    let mut omega = vec![0.0f64; b];
+    for (j, &p) in pi.iter().enumerate() {
+        omega[bucket_of[j]] += p;
+    }
+    omega
+}
+
+/// Mean pairwise KL across clients for class distributions (π) and, per
+/// hash table, bucket distributions (ω). Returns (kl_pi, mean kl_omega).
+pub fn mean_pairwise_divergence(
+    ds: &Dataset,
+    part: &Partition,
+    hasher: &LabelHasher,
+    eps: f64,
+) -> (f64, f64) {
+    let k = part.clients.len();
+    let pis: Vec<Vec<f64>> = part
+        .clients
+        .iter()
+        .map(|s| class_distribution(ds, s, eps))
+        .collect();
+    let mut kl_pi = 0.0;
+    let mut pairs = 0usize;
+    for a in 0..k {
+        for b in 0..k {
+            if a != b {
+                kl_pi += kl(&pis[a], &pis[b]);
+                pairs += 1;
+            }
+        }
+    }
+    kl_pi /= pairs.max(1) as f64;
+
+    let mut kl_omega = 0.0;
+    for t in 0..hasher.r() {
+        let oms: Vec<Vec<f64>> = part
+            .clients
+            .iter()
+            .map(|s| bucket_distribution(ds, s, hasher, t, eps))
+            .collect();
+        let mut acc = 0.0;
+        for a in 0..k {
+            for b in 0..k {
+                if a != b {
+                    acc += kl(&oms[a], &oms[b]);
+                }
+            }
+        }
+        kl_omega += acc / pairs.max(1) as f64;
+    }
+    kl_omega /= hasher.r() as f64;
+    (kl_pi, kl_omega)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kl_basics() {
+        let u = vec![0.5, 0.5];
+        assert!(kl(&u, &u).abs() < 1e-12);
+        let v = vec![0.9, 0.1];
+        assert!(kl(&v, &u) > 0.0);
+        // KL is asymmetric
+        assert!((kl(&v, &u) - kl(&u, &v)).abs() > 1e-6);
+    }
+
+    #[test]
+    fn aggregation_preserves_mass() {
+        check("bucket mass", 30, |g| {
+            let p = g.usize_in(4, 200);
+            let b = g.usize_in(1, p);
+            let pi = g.simplex(p);
+            let bucket_of: Vec<usize> = (0..p).map(|_| g.usize_in(0, b)).collect();
+            let om = aggregate_to_buckets(&pi, &bucket_of, b);
+            let total: f64 = om.iter().sum();
+            assert!((total - 1.0).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn theorem2_holds_on_random_simplexes() {
+        // KL over buckets <= KL over classes, for any shared class→bucket
+        // map and any two strictly-positive class distributions.
+        check("theorem 2", 50, |g| {
+            let p = g.usize_in(4, 300);
+            let b = g.usize_in(1, p);
+            let pi_a = g.simplex(p);
+            let pi_b = g.simplex(p);
+            let bucket_of: Vec<usize> = (0..p).map(|_| g.usize_in(0, b)).collect();
+            let om_a = aggregate_to_buckets(&pi_a, &bucket_of, b);
+            let om_b = aggregate_to_buckets(&pi_b, &bucket_of, b);
+            // remove empty buckets (KL needs positive support)
+            let (oa, ob): (Vec<f64>, Vec<f64>) = om_a
+                .iter()
+                .zip(om_b.iter())
+                .filter(|(&a, &b)| a > 0.0 && b > 0.0)
+                .unzip();
+            let lhs = kl(&oa, &ob);
+            let rhs = kl(&pi_a, &pi_b);
+            assert!(
+                lhs <= rhs + 1e-9,
+                "KL(omega)={lhs} > KL(pi)={rhs} (p={p}, b={b})"
+            );
+        });
+    }
+
+    #[test]
+    fn noniid_partition_diverges_more_than_iid() {
+        use crate::config::presets::by_name;
+        use crate::data::synth::{generate, SynthSpec};
+        use crate::partition::{iid, noniid};
+
+        // Enough samples that sampling noise (which inflates the iid KL)
+        // is small next to the structural divergence of the partition.
+        let mut spec = SynthSpec::from_preset(&by_name("tiny").unwrap());
+        spec.n_train = 4000;
+        let ds = generate(&spec, 4).train;
+        let hasher = LabelHasher::new(4, 2, ds.p(), 16);
+        let non = noniid::partition(&ds, &noniid::NonIidOptions::new(6), 1);
+        let iid_part = iid::partition(ds.len(), 6, 1);
+        let (kl_non, _) = mean_pairwise_divergence(&ds, &non, &hasher, 1e-3);
+        let (kl_iid, _) = mean_pairwise_divergence(&ds, &iid_part, &hasher, 1e-3);
+        assert!(
+            kl_non > 1.5 * kl_iid,
+            "non-iid KL {kl_non} not >> iid KL {kl_iid}"
+        );
+    }
+
+    #[test]
+    fn hashing_shrinks_divergence_on_real_partition() {
+        use crate::config::presets::by_name;
+        use crate::data::synth::{generate, SynthSpec};
+        use crate::partition::noniid;
+
+        let mut spec = SynthSpec::from_preset(&by_name("tiny").unwrap());
+        spec.n_train = 800;
+        let ds = generate(&spec, 4).train;
+        let hasher = LabelHasher::new(4, 2, ds.p(), 8);
+        let part = noniid::partition(&ds, &noniid::NonIidOptions::new(6), 1);
+        let (kl_pi, kl_omega) = mean_pairwise_divergence(&ds, &part, &hasher, 1e-3);
+        assert!(
+            kl_omega < kl_pi,
+            "bucket KL {kl_omega} not below class KL {kl_pi}"
+        );
+    }
+
+    #[test]
+    fn class_distribution_counts() {
+        let mut ds = Dataset::new(1, 3);
+        ds.push(&[0.0], &[0, 1]).unwrap();
+        ds.push(&[0.0], &[0]).unwrap();
+        let d = class_distribution(&ds, &[0, 1], 0.0);
+        assert!((d[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((d[1] - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(d[2], 0.0);
+        let _ = Rng::new(0);
+    }
+}

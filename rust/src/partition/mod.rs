@@ -1,0 +1,45 @@
+//! Client data partitioning.
+//!
+//! - [`noniid`] — the paper's frequent-class partition (Section 6,
+//!   Fig. 2c): each frequent class's positive samples go to one random
+//!   client, so clients see disjoint frequent classes.
+//! - [`iid`] — uniform random control partition.
+//! - [`divergence`] — pairwise KL divergence of client label
+//!   distributions, the quantity Theorem 2 proves label hashing shrinks.
+
+pub mod divergence;
+pub mod iid;
+pub mod noniid;
+
+/// A partition of train-sample indices across clients. A sample may
+/// appear on several clients (the paper: "samples with more than one
+/// positive instance among frequent classes are assigned to multiple
+/// clients").
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Sample indices per client.
+    pub clients: Vec<Vec<usize>>,
+    /// frequent class id → owning client (empty for iid partitions).
+    pub class_owner: Vec<(u32, usize)>,
+}
+
+impl Partition {
+    /// Total assignments (≥ dataset size when samples are replicated).
+    pub fn total_assignments(&self) -> usize {
+        self.clients.iter().map(|c| c.len()).sum()
+    }
+
+    /// Every sample index in [0, n) appears on at least one client.
+    pub fn covers(&self, n: usize) -> bool {
+        let mut seen = vec![false; n];
+        for c in &self.clients {
+            for &i in c {
+                if i >= n {
+                    return false;
+                }
+                seen[i] = true;
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+}

@@ -1,0 +1,175 @@
+//! The paper's non-iid partition (Section 6 "Non-iid data partition").
+//!
+//! For each *frequent* class j: collect D(j) = {samples with y_j = 1}
+//! and assign all of D(j) to one uniformly-drawn client. Clients thus
+//! hold disjoint sets of frequent classes (Fig. 2c); samples positive in
+//! several frequent classes are replicated onto each owner. Samples with
+//! no frequent positive are assigned to one random client so the
+//! partition covers the dataset.
+
+use crate::data::dataset::Dataset;
+use crate::data::stats::LabelStats;
+use crate::util::rng::{derive_seed, Rng};
+
+use super::Partition;
+
+/// Options for the frequent-class partitioner.
+#[derive(Clone, Debug)]
+pub struct NonIidOptions {
+    /// Number of clients K.
+    pub clients: usize,
+    /// How many top classes count as "frequent". The paper partitions on
+    /// the classes that dominate Fig. 2a's head; we default to 4 per
+    /// client so every client owns a few frequent classes.
+    pub frequent_classes: usize,
+}
+
+impl NonIidOptions {
+    pub fn new(clients: usize) -> Self {
+        NonIidOptions {
+            clients,
+            frequent_classes: 4 * clients,
+        }
+    }
+}
+
+/// Build the paper's non-iid partition.
+pub fn partition(ds: &Dataset, opts: &NonIidOptions, seed: u64) -> Partition {
+    assert!(opts.clients > 0);
+    let stats = LabelStats::from_dataset(ds);
+    let frequent = stats.top_k_classes(opts.frequent_classes);
+    let mut rng = Rng::new(derive_seed(seed, 0x9a47));
+
+    // class → owning client
+    let mut owner_of_class = vec![usize::MAX; ds.p()];
+    let mut class_owner: Vec<(u32, usize)> = Vec::with_capacity(frequent.len());
+    for (rank, &c) in frequent.iter().enumerate() {
+        // Round-robin over a shuffled client order keeps client loads
+        // balanced while the *choice* of classes per client stays random
+        // (pure uniform draws can starve a client of frequent classes).
+        let k = if rank % opts.clients == 0 {
+            rng.below(opts.clients)
+        } else {
+            (class_owner[rank - 1].1 + 1) % opts.clients
+        };
+        owner_of_class[c as usize] = k;
+        class_owner.push((c, k));
+    }
+
+    let mut clients: Vec<Vec<usize>> = vec![Vec::new(); opts.clients];
+    for i in 0..ds.len() {
+        let mut assigned = [false; 64];
+        debug_assert!(opts.clients <= 64);
+        let mut any = false;
+        for &l in ds.labels_of(i) {
+            let owner = owner_of_class[l as usize];
+            if owner != usize::MAX && !assigned[owner] {
+                clients[owner].push(i);
+                assigned[owner] = true;
+                any = true;
+            }
+        }
+        if !any {
+            clients[rng.below(opts.clients)].push(i);
+        }
+    }
+
+    Partition {
+        clients,
+        class_owner,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::by_name;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::util::prop::check;
+
+    fn tiny_data() -> Dataset {
+        let mut spec = SynthSpec::from_preset(&by_name("tiny").unwrap());
+        spec.n_train = 600;
+        generate(&spec, 3).train
+    }
+
+    #[test]
+    fn covers_all_samples() {
+        let ds = tiny_data();
+        let part = partition(&ds, &NonIidOptions::new(10), 1);
+        assert!(part.covers(ds.len()));
+        assert_eq!(part.clients.len(), 10);
+    }
+
+    #[test]
+    fn frequent_classes_have_single_owner() {
+        let ds = tiny_data();
+        let part = partition(&ds, &NonIidOptions::new(10), 1);
+        // ownership map is a function: each class appears once
+        let mut seen = std::collections::HashSet::new();
+        for (c, k) in &part.class_owner {
+            assert!(seen.insert(*c), "class {c} owned twice");
+            assert!(*k < 10);
+        }
+        // every positive sample of an owned class is on the owner
+        for (c, k) in &part.class_owner {
+            for i in 0..ds.len() {
+                if ds.labels_of(i).contains(c) {
+                    assert!(
+                        part.clients[*k].contains(&i),
+                        "sample {i} of class {c} missing from client {k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let ds = tiny_data();
+        let a = partition(&ds, &NonIidOptions::new(5), 9);
+        let b = partition(&ds, &NonIidOptions::new(5), 9);
+        assert_eq!(a.clients, b.clients);
+        let c = partition(&ds, &NonIidOptions::new(5), 10);
+        assert_ne!(a.clients, c.clients);
+    }
+
+    #[test]
+    fn clients_have_distinct_frequent_profiles() {
+        // The point of the partition: client class distributions diverge.
+        let ds = tiny_data();
+        let part = partition(&ds, &NonIidOptions::new(4), 2);
+        // each client's dominant frequent class should be owned by it
+        for (c, k) in part.class_owner.iter().take(4) {
+            let count_owner = part.clients[*k]
+                .iter()
+                .filter(|&&i| ds.labels_of(i).contains(c))
+                .count();
+            for other in 0..4 {
+                if other == *k {
+                    continue;
+                }
+                let count_other = part.clients[other]
+                    .iter()
+                    .filter(|&&i| ds.labels_of(i).contains(c))
+                    .count();
+                assert!(
+                    count_owner >= count_other,
+                    "class {c}: owner {k} has {count_owner} < client {other}'s {count_other}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_client_nonempty_on_reasonable_data() {
+        check("nonempty clients", 5, |g| {
+            let ds = tiny_data();
+            let k = g.usize_in(2, 11);
+            let part = partition(&ds, &NonIidOptions::new(k), g.rng().next_u64());
+            for (i, c) in part.clients.iter().enumerate() {
+                assert!(!c.is_empty(), "client {i}/{k} empty");
+            }
+        });
+    }
+}

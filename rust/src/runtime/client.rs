@@ -1,0 +1,150 @@
+//! The PJRT CPU client plus a compile cache.
+//!
+//! Compiling an HLO module is the expensive part (XLA optimization
+//! pipeline); executing it is cheap. [`RuntimeClient`] therefore keeps
+//! one `PjRtClient` for the process and memoizes
+//! `HloModuleProto::from_text_file → compile` per artifact key, so each
+//! model variant is compiled exactly once no matter how many federated
+//! clients/rounds execute it (FedMLH's R sub-models share one artifact —
+//! identical shapes — so R federated streams cost one compile).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+
+/// A loaded PJRT CPU client with its artifact manifest and compile cache.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl RuntimeClient {
+    /// Create the PJRT CPU client and load `<dir>/manifest.json`.
+    pub fn new(artifact_dir: &Path) -> Result<Rc<Self>> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client init failed")?;
+        Ok(Rc::new(RuntimeClient {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (memoized). HLO **text** is the
+    /// interchange format: jax ≥ 0.5 emits protos with 64-bit
+    /// instruction ids which xla_extension 0.5.1 rejects; the text
+    /// parser reassigns ids (see DESIGN.md §2 and aot.py).
+    pub fn load(&self, key: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(key) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(key)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile of {key}"))?,
+        );
+        self.cache
+            .borrow_mut()
+            .insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Host → device transfer of an f32 tensor.
+    pub fn to_device_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("host→device f32 transfer")
+    }
+
+    /// Host → device transfer of an i32 tensor.
+    pub fn to_device_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("host→device i32 transfer")
+    }
+}
+
+impl std::fmt::Debug for RuntimeClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RuntimeClient")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.manifest.artifacts.len())
+            .field("compiled", &self.compiled_count())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Guard: these tests only run after `make artifacts`.
+    fn available() -> bool {
+        artifact_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn load_compile_and_cache() {
+        if !available() {
+            return;
+        }
+        let rt = RuntimeClient::new(&artifact_dir()).unwrap();
+        assert_eq!(rt.compiled_count(), 0);
+        let a = rt.load("tiny.fedavg.predict").unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+        let b = rt.load("tiny.fedavg.predict").unwrap();
+        assert_eq!(rt.compiled_count(), 1, "second load must hit the cache");
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn missing_artifact_fails_with_context() {
+        if !available() {
+            return;
+        }
+        let rt = RuntimeClient::new(&artifact_dir()).unwrap();
+        let err = match rt.load("tiny.nonexistent.train") {
+            Ok(_) => panic!("load of unknown artifact must fail"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("not in manifest"), "{err}");
+    }
+
+    #[test]
+    fn missing_dir_is_actionable() {
+        let err = RuntimeClient::new(Path::new("/nonexistent/artifacts"))
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

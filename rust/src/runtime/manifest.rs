@@ -1,0 +1,273 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime.
+//!
+//! The manifest records, for every emitted HLO module, the entry
+//! signature (input order, dtypes, shapes) and the output layout. The
+//! runtime validates every buffer against it before the first execute,
+//! so a preset/artifact mismatch fails with a readable error instead of
+//! an XLA shape check deep inside PJRT.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype '{other}' in manifest"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+        }
+    }
+}
+
+/// One named tensor in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    /// Manifest key, e.g. `eurlex.fedmlh.train`.
+    pub key: String,
+    /// File name inside the artifact directory.
+    pub file: String,
+    /// `train` | `predict` | `decode`.
+    pub kind: String,
+    /// Preset this artifact belongs to.
+    pub preset: String,
+    /// Entry parameters, in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tuple elements, in order.
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactEntry {
+    /// Input spec by name (signature sanity checks in the backend).
+    pub fn input(&self, name: &str) -> Result<&TensorSpec> {
+        self.inputs
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("artifact {}: no input '{name}'", self.key))
+    }
+}
+
+/// The parsed manifest plus the directory it came from.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+fn parse_tensor(j: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: j.expect("name")?.as_str()?.to_string(),
+        dtype: Dtype::parse(j.expect("dtype")?.as_str()?)?,
+        shape: j.expect("shape")?.usize_list()?,
+    })
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (split out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest.json parse error")?;
+        let format = root.expect("format")?.as_usize()?;
+        if format != 1 {
+            bail!("unsupported manifest format {format} (expected 1)");
+        }
+        let mut artifacts = BTreeMap::new();
+        for (key, entry) in root.expect("artifacts")?.as_obj()? {
+            let inputs = entry
+                .expect("inputs")?
+                .as_arr()?
+                .iter()
+                .map(parse_tensor)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("artifact {key}: bad inputs"))?;
+            let outputs = entry
+                .expect("outputs")?
+                .as_arr()?
+                .iter()
+                .map(parse_tensor)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("artifact {key}: bad outputs"))?;
+            artifacts.insert(
+                key.clone(),
+                ArtifactEntry {
+                    key: key.clone(),
+                    file: entry.expect("file")?.as_str()?.to_string(),
+                    kind: entry.expect("kind")?.as_str()?.to_string(),
+                    preset: entry.expect("preset")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    /// Entry by key, with a helpful error naming near misses.
+    pub fn entry(&self, key: &str) -> Result<&ArtifactEntry> {
+        if let Some(e) = self.artifacts.get(key) {
+            return Ok(e);
+        }
+        let prefix = key.split('.').next().unwrap_or(key);
+        let near: Vec<&str> = self
+            .artifacts
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .map(|s| s.as_str())
+            .collect();
+        bail!(
+            "artifact '{key}' not in manifest (have for this preset: {}) — \
+             re-run `make artifacts` if presets changed",
+            if near.is_empty() {
+                "none".to_string()
+            } else {
+                near.join(", ")
+            }
+        )
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.artifacts.contains_key(key)
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn path_of(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(key)?.file))
+    }
+
+    /// All keys for one preset (diagnostics, tests).
+    pub fn keys_for_preset(&self, preset: &str) -> Vec<&str> {
+        self.artifacts
+            .values()
+            .filter(|e| e.preset == preset)
+            .map(|e| e.key.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "presets": {"tiny": {"d": 32}},
+      "artifacts": {
+        "tiny.fedavg.train": {
+          "file": "tiny.fedavg.train.hlo.txt",
+          "kind": "train",
+          "preset": "tiny",
+          "sha256": "x",
+          "inputs": [
+            {"name": "w1", "dtype": "f32", "shape": [32, 16]},
+            {"name": "lr", "dtype": "f32", "shape": []}
+          ],
+          "outputs": [
+            {"name": "loss", "dtype": "f32", "shape": []}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let e = m.entry("tiny.fedavg.train").unwrap();
+        assert_eq!(e.kind, "train");
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![32, 16]);
+        assert_eq!(e.inputs[0].elements(), 512);
+        assert_eq!(e.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(e.input("lr").unwrap().dtype, Dtype::F32);
+        assert!(e.input("nope").is_err());
+        assert_eq!(
+            m.path_of("tiny.fedavg.train").unwrap(),
+            PathBuf::from("/tmp/a/tiny.fedavg.train.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_key_lists_preset_artifacts() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let err = m.entry("tiny.fedmlh.train").unwrap_err().to_string();
+        assert!(err.contains("tiny.fedavg.train"), "{err}");
+        assert!(!m.contains("tiny.fedmlh.train"));
+    }
+
+    #[test]
+    fn rejects_unknown_format() {
+        let bad = SAMPLE.replace("\"format\": 1", "\"format\": 9");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f16\"");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn keys_for_preset_filters() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.keys_for_preset("tiny"), vec!["tiny.fedavg.train"]);
+        assert!(m.keys_for_preset("eurlex").is_empty());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Only meaningful after `make artifacts`; skip silently otherwise.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.contains("tiny.fedavg.train"));
+            let e = m.entry("tiny.fedmlh.decode").unwrap();
+            assert_eq!(e.kind, "decode");
+            assert_eq!(e.inputs[1].dtype, Dtype::I32);
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! The PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`)
+//! emitted by `python/compile/aot.py` and executes them on the PJRT CPU
+//! client. This is the only place the `xla` crate is touched; python is
+//! never on the training path.
+//!
+//! - [`manifest`] — parses `artifacts/manifest.json` (entry signatures,
+//!   shapes, hashes) so buffers are validated *before* the first execute.
+//! - [`client`] — a [`client::RuntimeClient`]: one `PjRtClient` plus a
+//!   compile cache keyed by artifact name (each HLO module is compiled
+//!   exactly once per process, then re-executed).
+//! - [`train_exec`] — [`train_exec::XlaBackend`], the production
+//!   [`crate::federated::backend::TrainBackend`]: the local-training
+//!   loop, prediction and count-sketch decode all route through compiled
+//!   HLO executables.
+
+pub mod client;
+pub mod manifest;
+pub mod train_exec;
+
+pub use client::RuntimeClient;
+pub use manifest::{ArtifactEntry, Dtype, Manifest, TensorSpec};
+pub use train_exec::XlaBackend;
+
+/// Default artifact directory, relative to the repo root (where `cargo`
+/// runs from). Overridable everywhere via `--artifacts <dir>`.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,519 @@
+//! [`XlaBackend`] — the production training backend: every train step,
+//! prediction and count-sketch decode is one PJRT execute of an AOT
+//! artifact. The whole local-training loop (paper Algorithm 2
+//! `DeviceTrain`) runs without touching python.
+//!
+//! The train-step HLO is `(w1..b3, x, y, lr) → (w1'..b3', loss)` — one
+//! fused forward+backward+SGD module, so a local epoch is
+//! `batches_per_epoch` executes with the parameters round-tripping
+//! through host literals (on the CPU plugin device memory *is* host
+//! memory, so this is a memcpy, not a PCIe transfer; see
+//! EXPERIMENTS.md §Perf for the measured breakdown).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Algo, ExperimentConfig};
+use crate::federated::backend::{TrainBackend, TrainStats};
+use crate::federated::batcher::ClientBatcher;
+use crate::model::params::{ModelParams, N_PARAMS};
+
+use super::client::RuntimeClient;
+use super::manifest::ArtifactEntry;
+
+/// Execute with rust-owned input buffers.
+///
+/// NOT `exe.execute::<Literal>(..)`: the xla crate's literal path leaks
+/// every input's device buffer (the C++ wrapper `release()`s them and
+/// never frees after the run — ~3.5 MB/step at eurlex scale, found as
+/// a 34 GB OOM after ~25 rounds). `PjRtBuffer`s created on the rust
+/// side carry a proper `Drop`, so this path is leak-free (and skips the
+/// intermediate `Literal` copy entirely).
+fn execute_buffers(
+    rt: &RuntimeClient,
+    exe: &xla::PjRtLoadedExecutable,
+    f32_inputs: &[(&[f32], &[usize])],
+    i32_input: Option<(&[i32], &[usize])>,
+) -> Result<xla::Literal> {
+    let mut bufs = Vec::with_capacity(f32_inputs.len() + 1);
+    for (data, dims) in f32_inputs {
+        bufs.push(rt.to_device_f32(data, dims)?);
+    }
+    if let Some((data, dims)) = i32_input {
+        bufs.push(rt.to_device_i32(data, dims)?);
+    }
+    let result = exe.execute_b(&bufs)?[0][0]
+        .to_literal_sync()
+        .context("device→host")?;
+    Ok(result)
+}
+
+/// TrainBackend over compiled HLO artifacts.
+pub struct XlaBackend {
+    rt: Rc<RuntimeClient>,
+    train: Rc<xla::PjRtLoadedExecutable>,
+    /// Scan-fused train step: S consecutive minibatches per dispatch
+    /// (`<tag>.train8`). The perf-pass hot path — removes S−1 of every
+    /// S parameter round trips and dispatches (§Perf). `None` when the
+    /// manifest predates the scan variants.
+    train_scan: Option<(Rc<xla::PjRtLoadedExecutable>, usize)>,
+    predict: Rc<xla::PjRtLoadedExecutable>,
+    /// `None` when the manifest carries no decode artifact for this
+    /// configuration (e.g. FedAvg, or a B×R override combination the
+    /// sweep tables don't cover) — decode then falls back to the rust
+    /// reference path, which the integration tests pin to the HLO one.
+    decode: Option<Rc<xla::PjRtLoadedExecutable>>,
+    /// (d, hidden, out) of one model; `batch` baked into the artifacts.
+    d: usize,
+    hidden: usize,
+    out: usize,
+    batch: usize,
+    /// Decode artifact dims (r, p), when present.
+    decode_rp: Option<(usize, usize)>,
+    name: String,
+}
+
+/// Check a manifest entry's input against expectations.
+fn expect_shape(e: &ArtifactEntry, name: &str, want: &[usize]) -> Result<()> {
+    let spec = e.input(name)?;
+    if spec.shape != want {
+        bail!(
+            "artifact {}: input '{name}' has shape {:?}, run expects {:?} — \
+             preset/config drift; re-run `make artifacts`",
+            e.key,
+            spec.shape,
+            want
+        );
+    }
+    Ok(())
+}
+
+impl XlaBackend {
+    /// Load (and compile, memoized) the artifacts for `cfg` × `algo`.
+    pub fn new(rt: Rc<RuntimeClient>, cfg: &ExperimentConfig, algo: Algo) -> Result<Self> {
+        let tag = cfg.artifact_tag(algo);
+        let (d, hidden, out, batch) = (
+            cfg.preset.d,
+            cfg.preset.hidden,
+            cfg.out_dim(algo),
+            cfg.preset.batch,
+        );
+
+        let train_entry = rt.manifest().entry(&format!("{tag}.train"))?.clone();
+        expect_shape(&train_entry, "w1", &[d, hidden])?;
+        expect_shape(&train_entry, "w3", &[hidden, out])?;
+        expect_shape(&train_entry, "x", &[batch, d])?;
+        expect_shape(&train_entry, "y", &[batch, out])?;
+        if train_entry.inputs.len() != N_PARAMS + 3 {
+            bail!(
+                "artifact {}: expected {} inputs, manifest lists {}",
+                train_entry.key,
+                N_PARAMS + 3,
+                train_entry.inputs.len()
+            );
+        }
+
+        let train = rt.load(&train_entry.key)?;
+        // Optional scan-fused variant (any `<tag>.trainN` in the manifest).
+        let mut train_scan = None;
+        for s in [8usize] {
+            let key = format!("{tag}.train{s}");
+            if rt.manifest().contains(&key) {
+                let e = rt.manifest().entry(&key)?;
+                let xs = e.input("xs")?;
+                if xs.shape == [s, batch, d] {
+                    train_scan = Some((rt.load(&key)?, s));
+                }
+            }
+        }
+        let predict = rt.load(&format!("{tag}.predict"))?;
+
+        let mut decode = None;
+        let mut decode_rp = None;
+        if algo == Algo::FedMlh {
+            // Figure-5 R sweeps change only the decode artifact's idx rows.
+            let decode_key = if cfg.override_r > 0 && cfg.override_r != cfg.preset.r {
+                format!("{}.fedmlh_r{}.decode", cfg.preset.name, cfg.override_r)
+            } else {
+                format!("{tag}.decode")
+            };
+            if rt.manifest().contains(&decode_key) {
+                let e = rt.manifest().entry(&decode_key)?;
+                let logits_spec = e.input("logits")?;
+                if logits_spec.shape != [cfg.r(), batch, out] {
+                    bail!(
+                        "decode artifact {decode_key}: logits shape {:?} vs run's [{}, {batch}, {out}]",
+                        logits_spec.shape,
+                        cfg.r()
+                    );
+                }
+                let p = e.input("idx")?.shape[1];
+                decode_rp = Some((cfg.r(), p));
+                decode = Some(rt.load(&decode_key)?);
+            }
+        }
+
+        Ok(XlaBackend {
+            rt,
+            train,
+            train_scan,
+            predict,
+            decode,
+            d,
+            hidden,
+            out,
+            batch,
+            decode_rp,
+            name: format!("xla:{tag}"),
+        })
+    }
+
+    /// Convenience: open the default artifact dir and build a backend.
+    pub fn open(artifact_dir: &Path, cfg: &ExperimentConfig, algo: Algo) -> Result<Self> {
+        let rt = RuntimeClient::new(artifact_dir)?;
+        Self::new(rt, cfg, algo)
+    }
+
+    /// The runtime (shared compile cache) this backend executes on.
+    pub fn runtime(&self) -> &Rc<RuntimeClient> {
+        &self.rt
+    }
+
+    /// Whether the count-sketch decode runs as compiled HLO (vs the rust
+    /// fallback).
+    pub fn hlo_decode(&self) -> bool {
+        self.decode.is_some()
+    }
+
+    fn check_params(&self, params: &ModelParams) -> Result<()> {
+        if (params.d, params.hidden, params.out) != (self.d, self.hidden, self.out) {
+            bail!(
+                "{}: params ({},{},{}) do not match artifact ({},{},{})",
+                self.name,
+                params.d,
+                params.hidden,
+                params.out,
+                self.d,
+                self.hidden,
+                self.out
+            );
+        }
+        Ok(())
+    }
+
+    /// One fused SGD step; copies updated parameters back into `params`
+    /// and returns the pre-update loss.
+    pub fn step(&self, params: &mut ModelParams, x: &[f32], y: &[f32], lr: f32) -> Result<f32> {
+        self.check_params(params)?;
+        let lr_data = [lr];
+        let mut inputs: Vec<(&[f32], &[usize])> = params
+            .tensors
+            .iter()
+            .map(|t| (t.data(), t.shape()))
+            .collect();
+        let x_dims = [self.batch, self.d];
+        let y_dims = [self.batch, self.out];
+        inputs.push((x, &x_dims));
+        inputs.push((y, &y_dims));
+        inputs.push((&lr_data, &[]));
+        let result = execute_buffers(&self.rt, &self.train, &inputs, None)
+            .context("train step")?;
+        let outs = result.to_tuple()?;
+        if outs.len() != N_PARAMS + 1 {
+            bail!(
+                "{}: train step returned {}-tuple, expected {}",
+                self.name,
+                outs.len(),
+                N_PARAMS + 1
+            );
+        }
+        for (tensor, lit) in params.tensors.iter_mut().zip(outs.iter()) {
+            lit.copy_raw_to::<f32>(tensor.data_mut())
+                .context("copying updated params")?;
+        }
+        let loss = outs[N_PARAMS].get_first_element::<f32>()?;
+        Ok(loss)
+    }
+
+    /// Fused steps per dispatch (1 when no scan artifact is loaded).
+    pub fn scan_steps(&self) -> usize {
+        self.train_scan.as_ref().map(|(_, s)| *s).unwrap_or(1)
+    }
+
+    /// S fused SGD steps in one dispatch: `xs` flat `[S, batch, d]`,
+    /// `ys` flat `[S, batch, out]`. Returns the *sum* of the S losses.
+    pub fn step_scan(
+        &self,
+        params: &mut ModelParams,
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let (exe, s) = self
+            .train_scan
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("{}: no scan artifact loaded", self.name))?;
+        self.check_params(params)?;
+        debug_assert_eq!(xs.len(), s * self.batch * self.d);
+        debug_assert_eq!(ys.len(), s * self.batch * self.out);
+        let lr_data = [lr];
+        let mut inputs: Vec<(&[f32], &[usize])> = params
+            .tensors
+            .iter()
+            .map(|t| (t.data(), t.shape()))
+            .collect();
+        let xs_dims = [*s, self.batch, self.d];
+        let ys_dims = [*s, self.batch, self.out];
+        inputs.push((xs, &xs_dims));
+        inputs.push((ys, &ys_dims));
+        inputs.push((&lr_data, &[]));
+        let result =
+            execute_buffers(&self.rt, exe, &inputs, None).context("train scan")?;
+        let outs = result.to_tuple()?;
+        for (tensor, lit) in params.tensors.iter_mut().zip(outs.iter()) {
+            lit.copy_raw_to::<f32>(tensor.data_mut())
+                .context("copying updated params (scan)")?;
+        }
+        Ok(outs[N_PARAMS].get_first_element::<f32>()?)
+    }
+}
+
+impl TrainBackend for XlaBackend {
+    fn local_train(
+        &self,
+        params: &mut ModelParams,
+        batcher: &mut ClientBatcher<'_>,
+        epochs: usize,
+        lr: f32,
+    ) -> Result<TrainStats> {
+        if batcher.batch_size() != self.batch {
+            bail!(
+                "{}: batcher batch {} != artifact batch {}",
+                self.name,
+                batcher.batch_size(),
+                self.batch
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let mut steps = 0usize;
+        let mut loss_sum = 0.0f64;
+        let scan = self.scan_steps();
+        // Chunk buffers for the scan path (reused across epochs).
+        let mut xs = vec![0.0f32; scan * self.batch * self.d];
+        let mut ys = vec![0.0f32; scan * self.batch * self.out];
+        let (xlen, ylen) = (self.batch * self.d, self.batch * self.out);
+        for epoch in 0..epochs {
+            batcher.reset(epoch);
+            let mut filled = 0usize;
+            if scan > 1 {
+                // Stage batches straight into the [S, batch, ·] slabs —
+                // no intermediate copy through the batcher's buffers.
+                while batcher.next_batch_into(
+                    &mut xs[filled * xlen..(filled + 1) * xlen],
+                    &mut ys[filled * ylen..(filled + 1) * ylen],
+                ) {
+                    filled += 1;
+                    if filled == scan {
+                        loss_sum += self.step_scan(params, &xs, &ys, lr)? as f64;
+                        steps += scan;
+                        filled = 0;
+                    }
+                }
+            } else {
+                while let Some(batch) = batcher.next_batch() {
+                    loss_sum += self.step(params, batch.x, batch.y, lr)? as f64;
+                    steps += 1;
+                }
+            }
+            // Tail of the epoch: single fused steps.
+            for i in 0..filled {
+                loss_sum += self.step(
+                    params,
+                    &xs[i * xlen..(i + 1) * xlen],
+                    &ys[i * ylen..(i + 1) * ylen],
+                    lr,
+                )? as f64;
+                steps += 1;
+            }
+        }
+        Ok(TrainStats {
+            steps,
+            mean_loss: if steps > 0 { loss_sum / steps as f64 } else { 0.0 },
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn predict(&self, params: &ModelParams, x: &[f32]) -> Result<Vec<f32>> {
+        self.check_params(params)?;
+        if x.len() != self.batch * self.d {
+            bail!(
+                "{}: predict input len {} != batch {} × d {}",
+                self.name,
+                x.len(),
+                self.batch,
+                self.d
+            );
+        }
+        let mut inputs: Vec<(&[f32], &[usize])> = params
+            .tensors
+            .iter()
+            .map(|t| (t.data(), t.shape()))
+            .collect();
+        let x_dims = [self.batch, self.d];
+        inputs.push((x, &x_dims));
+        let result =
+            execute_buffers(&self.rt, &self.predict, &inputs, None).context("predict")?;
+        let logits = result.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+
+    fn decode(
+        &self,
+        logits: &[f32],
+        idx: &[i32],
+        r: usize,
+        rows: usize,
+        b: usize,
+        p: usize,
+    ) -> Result<Vec<f32>> {
+        let (exe, (art_r, art_p)) = match (&self.decode, self.decode_rp) {
+            (Some(exe), Some(rp)) if rp == (r, p) && b == self.out && rows <= self.batch => {
+                (exe, rp)
+            }
+            // Shape not covered by an artifact → rust reference decode.
+            _ => return Ok(crate::eval::decode::sketch_decode(logits, idx, r, rows, b, p)),
+        };
+        debug_assert_eq!((r, p), (art_r, art_p));
+        // Pad [r, rows, b] → [r, batch, b] (the artifact's fixed batch).
+        let mut padded = vec![0.0f32; r * self.batch * b];
+        for table in 0..r {
+            let src = &logits[table * rows * b..(table + 1) * rows * b];
+            padded[table * self.batch * b..table * self.batch * b + rows * b]
+                .copy_from_slice(src);
+        }
+        let logits_dims = [r, self.batch, b];
+        let idx_dims = [r, p];
+        let result = execute_buffers(
+            &self.rt,
+            exe,
+            &[(&padded, &logits_dims)],
+            Some((idx, &idx_dims)),
+        )
+        .context("decode")?;
+        let scores = result.to_tuple1()?.to_vec::<f32>()?;
+        Ok(scores[..rows * p].to_vec())
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::data::synth::generate_preset;
+    use crate::federated::backend::RustBackend;
+    use crate::federated::batcher::Target;
+
+    fn artifact_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn available() -> bool {
+        artifact_dir().join("manifest.json").exists()
+    }
+
+    fn tiny_backend(algo: Algo) -> (ExperimentConfig, XlaBackend) {
+        let cfg = ExperimentConfig::preset("tiny").unwrap();
+        let be = XlaBackend::open(&artifact_dir(), &cfg, algo).unwrap();
+        (cfg, be)
+    }
+
+    #[test]
+    fn step_matches_rust_reference() {
+        if !available() {
+            return;
+        }
+        let (cfg, be) = tiny_backend(Algo::FedAvg);
+        let data = generate_preset(&cfg.preset, 7);
+        let ds = &data.train;
+        let samples: Vec<usize> = (0..64).collect();
+        let mut xla_params = ModelParams::init(ds.d(), cfg.preset.hidden, ds.p(), 3);
+        let mut rust_params = xla_params.clone();
+
+        let mut batcher =
+            ClientBatcher::new(ds, &samples, Target::Classes, cfg.preset.batch, 11);
+        batcher.reset(0);
+        let rust = RustBackend::new();
+        let mut ws = crate::model::mlp::Workspace::new(&rust_params, cfg.preset.batch);
+        while let Some(batch) = batcher.next_batch() {
+            let l_xla = be.step(&mut xla_params, batch.x, batch.y, cfg.lr).unwrap();
+            let l_rust =
+                crate::model::mlp::train_step(&mut rust_params, &mut ws, batch.x, batch.y, cfg.lr);
+            assert!(
+                (l_xla - l_rust).abs() < 1e-4,
+                "loss drift: xla {l_xla} vs rust {l_rust}"
+            );
+        }
+        let drift = xla_params.max_abs_diff(&rust_params).unwrap();
+        assert!(drift < 1e-4, "param drift after epoch: {drift}");
+        let _ = rust;
+    }
+
+    #[test]
+    fn predict_matches_rust_forward() {
+        if !available() {
+            return;
+        }
+        let (cfg, be) = tiny_backend(Algo::FedMlh);
+        let params = ModelParams::init(cfg.preset.d, cfg.preset.hidden, cfg.b(), 5);
+        let x: Vec<f32> = (0..cfg.preset.batch * cfg.preset.d)
+            .map(|i| ((i % 13) as f32 - 6.0) / 6.0)
+            .collect();
+        let got = be.predict(&params, &x).unwrap();
+        let want = crate::model::mlp::forward(&params, &x, cfg.preset.batch);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn hlo_decode_matches_rust_decode() {
+        if !available() {
+            return;
+        }
+        let (cfg, be) = tiny_backend(Algo::FedMlh);
+        assert!(be.hlo_decode());
+        let (r, b, p) = (cfg.r(), cfg.b(), cfg.preset.p);
+        let rows = cfg.preset.batch - 3; // deliberately partial
+        let logits: Vec<f32> = (0..r * rows * b).map(|i| (i as f32).sin()).collect();
+        let hasher = crate::hashing::label_hash::LabelHasher::new(1, r, p, b);
+        let idx = hasher.index_matrix_i32();
+        let got = be.decode(&logits, &idx, r, rows, b, p).unwrap();
+        let want = crate::eval::decode::sketch_decode(&logits, &idx, r, rows, b, p);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        if !available() {
+            return;
+        }
+        let (_cfg, be) = tiny_backend(Algo::FedAvg);
+        let mut wrong = ModelParams::init(8, 4, 10, 1);
+        let err = be.step(&mut wrong, &[0.0; 8], &[0.0; 10], 0.1).unwrap_err();
+        assert!(err.to_string().contains("do not match artifact"));
+    }
+}

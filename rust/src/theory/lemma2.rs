@@ -1,0 +1,109 @@
+//! Lemma 2 — class distinguishability constrains how small B can get.
+//!
+//! Two classes that collide in *every* one of the R tables are
+//! indistinguishable to the decoder. Under independent uniform hashing a
+//! fixed pair fully collides with probability `B^{−R}`; a union bound
+//! over all `p(p−1)/2` pairs gives
+//!
+//! ```text
+//! P(∃ fully-colliding pair) ≤ p(p−1)/2 · B^{−R} ≤ δ
+//!   ⟺  B ≥ (p(p−1)/2δ)^{1/R}
+//! ```
+
+use crate::hashing::label_hash::LabelHasher;
+use crate::util::rng::derive_seed;
+
+/// Union bound on the probability that some pair of classes collides in
+/// all R tables.
+pub fn collision_union_bound(p: usize, b: usize, r: usize) -> f64 {
+    assert!(p >= 2 && b >= 1 && r >= 1);
+    let pairs = 0.5 * p as f64 * (p as f64 - 1.0);
+    (pairs * (b as f64).powi(-(r as i32))).min(1.0)
+}
+
+/// The paper's minimum hash-table size: smallest `B` with
+/// `P(full collision) ≤ δ` by the union bound.
+pub fn lemma2_min_buckets(p: usize, r: usize, delta: f64) -> f64 {
+    assert!(p >= 2 && r >= 1);
+    assert!(delta > 0.0 && delta < 1.0);
+    let pairs = 0.5 * p as f64 * (p as f64 - 1.0);
+    (pairs / delta).powf(1.0 / r as f64)
+}
+
+/// Monte-Carlo estimate of the full-collision probability: draw `trials`
+/// independent R-table hasher families over (p, b) and count the
+/// fraction that contain at least one fully-colliding class pair.
+pub fn all_table_collision_probability_mc(
+    p: usize,
+    b: usize,
+    r: usize,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    assert!(trials >= 1);
+    let mut hits = 0usize;
+    for t in 0..trials {
+        let hasher = LabelHasher::new(derive_seed(seed, 0x1e_a002 + t as u64), r, p, b);
+        if hasher.has_fully_colliding_pair() {
+            hits += 1;
+        }
+    }
+    hits as f64 / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_buckets_inverts_union_bound() {
+        for &(p, r, delta) in &[(100usize, 2usize, 0.05f64), (4000, 4, 0.01), (64, 3, 0.1)] {
+            let b_min = lemma2_min_buckets(p, r, delta);
+            // At B = ⌈b_min⌉ the union bound is ≤ δ; just below it is > δ.
+            assert!(collision_union_bound(p, b_min.ceil() as usize, r) <= delta + 1e-12);
+            let below = (b_min * 0.9).floor().max(1.0) as usize;
+            if (below as f64) < b_min {
+                assert!(collision_union_bound(p, below, r) > delta);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_configs_are_collision_safe() {
+        // Every Table-2 configuration satisfies the lemma comfortably at
+        // δ = 0.05 (scaled presets; the check is structural).
+        for &(p, b, r) in &[(4000usize, 250usize, 4usize), (8000, 500, 4), (32768, 2048, 8)] {
+            let bound = collision_union_bound(p, b, r);
+            assert!(bound < 0.05, "p={p} B={b} R={r}: bound {bound}");
+        }
+    }
+
+    #[test]
+    fn mc_within_union_bound() {
+        // MC collision frequency never exceeds the union bound (it is an
+        // upper bound) but should be of comparable order when small.
+        let (p, b, r) = (60usize, 40usize, 2usize);
+        let bound = collision_union_bound(p, b, r);
+        let mc = all_table_collision_probability_mc(p, b, r, 300, 3);
+        assert!(
+            mc <= bound + 3.0 * (bound / 300.0).sqrt() + 0.02,
+            "MC {mc} far above union bound {bound}"
+        );
+    }
+
+    #[test]
+    fn tiny_tables_do_collide() {
+        // Degenerate: B=1 → every pair collides in every table.
+        let mc = all_table_collision_probability_mc(10, 1, 3, 20, 1);
+        assert_eq!(mc, 1.0);
+        assert_eq!(collision_union_bound(10, 1, 3), 1.0);
+    }
+
+    #[test]
+    fn more_tables_reduce_collisions() {
+        let (p, b) = (80usize, 16usize);
+        let one = all_table_collision_probability_mc(p, b, 1, 400, 9);
+        let three = all_table_collision_probability_mc(p, b, 3, 400, 9);
+        assert!(three < one, "R=3 {three} !< R=1 {one}");
+    }
+}

@@ -1,0 +1,27 @@
+//! The paper's Section-5 analysis, made executable.
+//!
+//! Each result ships as (a) the closed-form bound from the paper and
+//! (b) a Monte-Carlo estimator over the same random object, so the
+//! `fedmlh theory` subcommand (and the `theory_validation` integration
+//! tests) can verify the bound *holds* and report how tight it is on
+//! real partitions:
+//!
+//! - [`lemma1`] — bucket positive-instance count lower bound:
+//!   `E(B_i | h(j)=i) ≥ n_j + (N_lab − n_j)/B − N_lab/B²`.
+//! - [`lemma2`] — class distinguishability: with
+//!   `B ≥ (p(p−1)/2δ)^{1/R}` no two classes collide in *all* R tables
+//!   with probability ≥ 1 − δ.
+//! - [`theorem2`] — KL contraction: hashing classes into buckets
+//!   strictly shrinks the inter-client distribution divergence,
+//!   `KL(ω⁽ᵃ⁾‖ω⁽ᵇ⁾) ≤ KL(π⁽ᵃ⁾‖π⁽ᵇ⁾)` (log-sum inequality).
+
+pub mod lemma1;
+pub mod lemma2;
+pub mod theorem2;
+
+pub use lemma1::{
+    expected_bucket_positives_exact, expected_bucket_positives_mc,
+    expected_bucket_positives_mc_stats, lemma1_lower_bound,
+};
+pub use lemma2::{all_table_collision_probability_mc, collision_union_bound, lemma2_min_buckets};
+pub use theorem2::{kl_contraction_mc, kl_contraction_on_partition, KlContraction};

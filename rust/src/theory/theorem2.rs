@@ -1,0 +1,167 @@
+//! Theorem 2 — FedMLH shrinks the inter-client class-distribution
+//! divergence.
+//!
+//! For clients a and b with class-proportion vectors π⁽ᵃ⁾, π⁽ᵇ⁾ and the
+//! bucket proportions ω⁽ᵃ⁾, ω⁽ᵇ⁾ induced by any class→bucket map, the
+//! log-sum inequality gives
+//!
+//! ```text
+//! KL(ω⁽ᵃ⁾ ‖ ω⁽ᵇ⁾) ≤ KL(π⁽ᵃ⁾ ‖ π⁽ᵇ⁾)
+//! ```
+//!
+//! with equality only when the map never merges classes with different
+//! likelihood ratios — i.e. hashing into B < p buckets *strictly*
+//! contracts the non-iid divergence the paper blames for FedAvg's
+//! degradation.
+
+use crate::data::dataset::Dataset;
+use crate::hashing::label_hash::LabelHasher;
+use crate::partition::divergence::{aggregate_to_buckets, class_distribution, kl, kl_shared_support};
+use crate::partition::Partition;
+use crate::util::prop::Gen;
+use crate::util::rng::derive_seed;
+
+/// One KL-contraction measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct KlContraction {
+    /// Mean pairwise KL over class distributions (π).
+    pub kl_classes: f64,
+    /// Mean pairwise KL over bucket distributions (ω), averaged over the
+    /// R hash tables.
+    pub kl_buckets: f64,
+}
+
+impl KlContraction {
+    /// Contraction factor `KL(π) / KL(ω)` (≥ 1 when the theorem holds).
+    pub fn factor(&self) -> f64 {
+        if self.kl_buckets <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.kl_classes / self.kl_buckets
+        }
+    }
+
+    pub fn holds(&self) -> bool {
+        self.kl_buckets <= self.kl_classes + 1e-12
+    }
+}
+
+/// Measure the contraction on a real partition: mean pairwise KL across
+/// clients, over classes vs over each hash table's buckets.
+pub fn kl_contraction_on_partition(
+    ds: &Dataset,
+    part: &Partition,
+    hasher: &LabelHasher,
+    eps: f64,
+) -> KlContraction {
+    let k = part.clients.len();
+    let pis: Vec<Vec<f64>> = part
+        .clients
+        .iter()
+        .map(|s| class_distribution(ds, s, eps))
+        .collect();
+
+    let mut kl_pi = 0.0f64;
+    let mut kl_omega = 0.0f64;
+    let mut pairs = 0usize;
+    // Precompute class→bucket maps per table.
+    let maps: Vec<Vec<usize>> = (0..hasher.r())
+        .map(|t| (0..ds.p()).map(|c| hasher.bucket(t, c)).collect())
+        .collect();
+    for a in 0..k {
+        for b in 0..k {
+            if a == b {
+                continue;
+            }
+            kl_pi += kl(&pis[a], &pis[b]);
+            for map in &maps {
+                let oa = aggregate_to_buckets(&pis[a], map, hasher.b());
+                let ob = aggregate_to_buckets(&pis[b], map, hasher.b());
+                kl_omega += kl_shared_support(&oa, &ob) / hasher.r() as f64;
+            }
+            pairs += 1;
+        }
+    }
+    let pairs = pairs.max(1) as f64;
+    KlContraction {
+        kl_classes: kl_pi / pairs,
+        kl_buckets: kl_omega / pairs,
+    }
+}
+
+/// Monte-Carlo check on random strictly-positive distributions: draws
+/// `trials` (π⁽ᵃ⁾, π⁽ᵇ⁾, random class→bucket map) triples and returns
+/// the worst observed `KL(ω) − KL(π)` (≤ 0 iff the theorem held in every
+/// trial) together with the mean contraction factor.
+pub fn kl_contraction_mc(p: usize, b: usize, trials: usize, seed: u64) -> (f64, f64) {
+    assert!(p >= 2 && b >= 1 && b <= p && trials >= 1);
+    let mut worst_violation = f64::NEG_INFINITY;
+    let mut factor_sum = 0.0f64;
+    for t in 0..trials {
+        let mut g = Gen::new(derive_seed(seed, 0x7e0_2 + t as u64));
+        let pi_a = g.simplex(p);
+        let pi_b = g.simplex(p);
+        let map: Vec<usize> = (0..p).map(|_| g.rng().below(b)).collect();
+        let kl_pi = kl(&pi_a, &pi_b);
+        let oa = aggregate_to_buckets(&pi_a, &map, b);
+        let ob = aggregate_to_buckets(&pi_b, &map, b);
+        let kl_o = kl_shared_support(&oa, &ob);
+        worst_violation = worst_violation.max(kl_o - kl_pi);
+        factor_sum += if kl_o > 0.0 { kl_pi / kl_o } else { 1.0 };
+    }
+    (worst_violation, factor_sum / trials as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::generate_preset;
+    use crate::partition::noniid::{partition as noniid, NonIidOptions};
+
+    #[test]
+    fn mc_never_violates() {
+        for &(p, b) in &[(10usize, 3usize), (50, 10), (100, 100)] {
+            let (worst, factor) = kl_contraction_mc(p, b, 200, 5);
+            assert!(worst <= 1e-10, "violation {worst} at p={p} B={b}");
+            assert!(factor >= 1.0 - 1e-9, "mean factor {factor}");
+        }
+    }
+
+    #[test]
+    fn identity_map_preserves_kl() {
+        // B = p with the identity map: ω is a permutation of π → KL equal.
+        let pi_a = vec![0.5, 0.3, 0.2];
+        let pi_b = vec![0.2, 0.3, 0.5];
+        let map = vec![0usize, 1, 2];
+        let oa = aggregate_to_buckets(&pi_a, &map, 3);
+        let kl_pi = kl(&pi_a, &pi_b);
+        let kl_o = kl(&oa, &aggregate_to_buckets(&pi_b, &map, 3));
+        assert!((kl_pi - kl_o).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_bucket_collapses_divergence() {
+        let pi_a = vec![0.9, 0.05, 0.05];
+        let pi_b = vec![0.05, 0.05, 0.9];
+        let map = vec![0usize, 0, 0];
+        let kl_o = kl(
+            &aggregate_to_buckets(&pi_a, &map, 1),
+            &aggregate_to_buckets(&pi_b, &map, 1),
+        );
+        assert!(kl_o.abs() < 1e-12, "B=1 must zero the divergence");
+    }
+
+    #[test]
+    fn holds_on_real_noniid_partition() {
+        let cfg = crate::config::ExperimentConfig::preset("tiny").unwrap();
+        let data = generate_preset(&cfg.preset, 3);
+        let part = noniid(&data.train, &NonIidOptions::new(6), 3);
+        let hasher = LabelHasher::new(3, cfg.r(), data.train.p(), cfg.b());
+        let c = kl_contraction_on_partition(&data.train, &part, &hasher, 1e-3);
+        assert!(c.holds(), "theorem 2 violated: {c:?}");
+        assert!(
+            c.factor() > 1.0,
+            "expected strict contraction on non-iid data: {c:?}"
+        );
+    }
+}

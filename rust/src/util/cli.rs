@@ -1,0 +1,240 @@
+//! Declarative command-line flag parsing (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with generated `--help` text. Used by the
+//! `fedmlh` binary and the examples.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// One declared flag.
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative arg parser: declare flags, then [`Args::parse`].
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare a value flag with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a required value flag.
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (false unless present).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some("false".to_string()),
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nFlags:\n", self.program, self.about);
+        for f in &self.flags {
+            let d = match (&f.default, f.is_bool) {
+                (_, true) => " (switch)".to_string(),
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse a token list (no program name).
+    pub fn parse(mut self, argv: &[String]) -> Result<Parsed> {
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| anyhow!("unknown flag --{name}\n\n{}", self.usage()))?
+                    .clone();
+                let value = if spec.is_bool {
+                    match inline {
+                        Some(v) => v,
+                        None => "true".to_string(),
+                    }
+                } else {
+                    match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow!("flag --{name} needs a value"))?
+                                .clone()
+                        }
+                    }
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // defaults + required check
+        for f in &self.flags {
+            if !self.values.contains_key(&f.name) {
+                match &f.default {
+                    Some(d) => {
+                        self.values.insert(f.name.clone(), d.clone());
+                    }
+                    None => bail!("missing required flag --{}\n\n{}", f.name, self.usage()),
+                }
+            }
+        }
+        Ok(Parsed {
+            values: self.values,
+            positional: self.positional,
+        })
+    }
+}
+
+/// Parse result with typed getters.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name) == "true"
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn parser() -> Args {
+        Args::new("t", "test")
+            .flag("rounds", "70", "rounds")
+            .switch("quick", "quick mode")
+            .required("preset", "preset name")
+    }
+
+    #[test]
+    fn defaults_and_values() {
+        let p = parser()
+            .parse(&argv(&["--preset", "eurlex", "--quick"]))
+            .unwrap();
+        assert_eq!(p.get("preset"), "eurlex");
+        assert_eq!(p.get_usize("rounds").unwrap(), 70);
+        assert!(p.get_bool("quick"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positional() {
+        let p = parser()
+            .parse(&argv(&["--preset=tiny", "--rounds=3", "pos1"]))
+            .unwrap();
+        assert_eq!(p.get("preset"), "tiny");
+        assert_eq!(p.get_usize("rounds").unwrap(), 3);
+        assert!(!p.get_bool("quick"));
+        assert_eq!(p.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(parser().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        let err = parser()
+            .parse(&argv(&["--preset", "x", "--nope"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown flag"));
+    }
+
+    #[test]
+    fn help_includes_flags() {
+        let err = parser().parse(&argv(&["--help"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--rounds") && msg.contains("(required)"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Dependency-free substrates: RNG, JSON, tensors, CLI, timing,
+//! property testing.
+//!
+//! The offline crate registry only carries the `xla` closure, so the
+//! pieces a production service would pull from crates.io (rand, serde,
+//! clap, proptest, criterion) are implemented here, small and tested.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tensor;
+pub mod timer;

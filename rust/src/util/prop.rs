@@ -1,0 +1,144 @@
+//! Seeded randomized property testing (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` generated inputs; on failure it
+//! reports the case index and the seed that reproduces it, so a failing
+//! property is a one-line repro:
+//!
+//! ```no_run
+//! use fedmlh::util::prop::{check, Gen};
+//! check("sum is commutative", 64, |g: &mut Gen| {
+//!     let a = g.f32_in(-10.0, 10.0);
+//!     let b = g.f32_in(-10.0, 10.0);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Standalone generator (Monte-Carlo helpers outside [`check`]).
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            case: 0,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.rng.below(hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    /// Vector of uniform f32s.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Strictly positive probability vector summing to 1.
+    pub fn simplex(&mut self, len: usize) -> Vec<f64> {
+        let raw: Vec<f64> = (0..len).map(|_| self.rng.next_f64() + 1e-3).collect();
+        let total: f64 = raw.iter().sum();
+        raw.into_iter().map(|x| x / total).collect()
+    }
+}
+
+/// Run `prop` over `cases` seeded inputs. Panics (with the reproducing
+/// seed) on the first failing case. Honors `FEDMLH_PROP_SEED` to replay.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let base = std::env::var("FEDMLH_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xfed_317u64);
+    for case in 0..cases {
+        let seed = super::rng::derive_seed(base, case as u64);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            case,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay: FEDMLH_PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("counts", 10, |_g| {
+            count += 1;
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn failing_property_reports_case_and_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("fails", 5, |g| {
+                assert!(g.case < 3, "boom at {}", g.case);
+            });
+        });
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| format!("{payload:?}"));
+        assert!(msg.contains("failed at case 3"), "{msg}");
+        assert!(msg.contains("FEDMLH_PROP_SEED"), "{msg}");
+    }
+
+    #[test]
+    fn simplex_sums_to_one_and_positive() {
+        check("simplex", 20, |g| {
+            let len = g.usize_in(1, 50);
+            let s = g.simplex(len);
+            let total: f64 = s.iter().sum();
+            assert!((total - 1.0).abs() < 1e-9);
+            assert!(s.iter().all(|&x| x > 0.0));
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        check("ranges", 50, |g| {
+            let u = g.usize_in(3, 9);
+            assert!((3..9).contains(&u));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        });
+    }
+}

@@ -1,0 +1,303 @@
+//! Deterministic pseudo-random generation: splitmix64 seeding +
+//! xoshiro256++ streams, plus the samplers the data generator needs
+//! (uniform, gaussian, Zipf, shuffles, weighted choice).
+//!
+//! Everything in the system that draws randomness takes an explicit
+//! [`Rng`] (or a seed), so every experiment is bit-reproducible from its
+//! config seed — a hard requirement for the paper-reproduction harness.
+
+/// splitmix64: used to expand a user seed into xoshiro state and to
+/// derive independent per-component seeds (client id, hash table id…).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Derive a stream-specific seed (e.g. per client) from a root seed.
+pub fn derive_seed(root: u64, stream: u64) -> u64 {
+    let mut s = root ^ 0xa076_1d64_78bd_642f_u64.wrapping_mul(stream.wrapping_add(1));
+    let a = splitmix64(&mut s);
+    let b = splitmix64(&mut s);
+    a ^ b.rotate_left(17)
+}
+
+/// xoshiro256++ — fast, high-quality, 2^256 period.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via splitmix64 (never yields the all-zero state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free for our use).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply keeps the modulo bias below 2^-64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// simplicity; generation is not a hot path).
+    pub fn gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > f64::EPSILON {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    pub fn gaussian_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.gaussian() as f32
+    }
+
+    /// `true` with probability `p`.
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample {k} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Index drawn from an (unnormalized, non-negative) weight vector.
+    pub fn weighted_choice(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut u = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// Zipf(α) sampler over `{0, .., n-1}` by inverse-CDF on the precomputed
+/// normalized weights — the label-frequency law of extreme-classification
+/// datasets (paper Fig. 2a: "the distribution of positive instance
+/// frequency follows a power law in all the datasets").
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, alpha: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += (k as f64).powf(-alpha);
+            cdf.push(acc);
+        }
+        let norm = acc;
+        for c in cdf.iter_mut() {
+            *c /= norm;
+        }
+        Zipf { cdf }
+    }
+
+    /// Probability mass of rank `i` (0-based; rank 0 is the most frequent).
+    pub fn pmf(&self, i: usize) -> f64 {
+        if i == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[i] - self.cdf[i - 1]
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        // binary search over the CDF
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(Rng::new(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn derive_seed_changes_with_stream() {
+        let s0 = derive_seed(1, 0);
+        let s1 = derive_seed(1, 1);
+        assert_ne!(s0, s1);
+        assert_eq!(derive_seed(1, 5), derive_seed(1, 5));
+    }
+
+    #[test]
+    fn uniform_below_in_range_and_spread() {
+        let mut rng = Rng::new(3);
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            let v = rng.below(10);
+            counts[v] += 1;
+        }
+        for c in counts {
+            assert!((700..1300).contains(&c), "unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::new(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(5);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_without_replacement_distinct() {
+        let mut rng = Rng::new(9);
+        let s = rng.sample_without_replacement(10, 4);
+        assert_eq!(s.len(), 4);
+        let mut t = s.clone();
+        t.sort_unstable();
+        t.dedup();
+        assert_eq!(t.len(), 4);
+        assert!(t.iter().all(|&i| i < 10));
+    }
+
+    #[test]
+    #[should_panic]
+    fn sample_more_than_population_panics() {
+        Rng::new(0).sample_without_replacement(3, 4);
+    }
+
+    #[test]
+    fn weighted_choice_respects_weights() {
+        let mut rng = Rng::new(13);
+        let w = [0.0, 9.0, 1.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[rng.weighted_choice(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert!(counts[1] > 8 * counts[2], "{counts:?}");
+    }
+
+    #[test]
+    fn zipf_is_power_law() {
+        let z = Zipf::new(1000, 1.2);
+        // pmf ratio between rank 1 and rank 10 ≈ 10^1.2
+        let ratio = z.pmf(0) / z.pmf(9);
+        assert!((ratio - 10f64.powf(1.2)).abs() / 10f64.powf(1.2) < 0.01);
+        let mut rng = Rng::new(17);
+        let mut head = 0usize;
+        let n = 20_000;
+        for _ in 0..n {
+            if z.sample(&mut rng) < 10 {
+                head += 1;
+            }
+        }
+        let expect = z.cdf[9];
+        let got = head as f64 / n as f64;
+        assert!((got - expect).abs() < 0.02, "got {got} expect {expect}");
+    }
+
+    #[test]
+    fn zipf_pmf_sums_to_one() {
+        let z = Zipf::new(257, 0.9);
+        let total: f64 = (0..257).map(|i| z.pmf(i)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,181 @@
+//! Row-major f32 tensors for host-side parameter and batch storage.
+//!
+//! Only what the coordinator needs: shaped storage, elementwise
+//! arithmetic for aggregation, and (de)serialization into the flat
+//! buffers PJRT consumes. Heavy math lives in the AOT artifacts (L2/L1)
+//! or in [`crate::model::mlp`] (the pure-rust mock backend).
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor (rank 0, 1 or 2 in practice).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Bytes on the wire / in memory (f32).
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Row slice of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// `self += other * scale` (shape-checked) — the aggregation primitive.
+    pub fn axpy(&mut self, other: &Tensor, scale: f32) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("axpy shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b * scale;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Max |a - b| across elements (numeric cross-checks).
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("diff shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape_checks() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.byte_size(), 24);
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        let s = Tensor::scalar(4.0);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.data(), &[4.0]);
+    }
+
+    #[test]
+    fn indexing_rows() {
+        let mut t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.at2(1, 2), 6.0);
+        t.set2(0, 1, 9.0);
+        assert_eq!(t.row(0), &[1., 9., 3.]);
+        t.row_mut(1)[0] = -4.0;
+        assert_eq!(t.at2(1, 0), -4.0);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(&[3], vec![1., 2., 3.]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![10., 10., 10.]).unwrap();
+        a.axpy(&b, 0.5).unwrap();
+        assert_eq!(a.data(), &[6., 7., 8.]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12., 14., 16.]);
+        let c = Tensor::zeros(&[4]);
+        assert!(a.axpy(&c, 1.0).is_err());
+    }
+
+    #[test]
+    fn diff_and_norm() {
+        let a = Tensor::from_vec(&[2], vec![3., 4.]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![3., 4.5]).unwrap();
+        assert!((a.l2_norm() - 5.0).abs() < 1e-6);
+        assert!((a.max_abs_diff(&b).unwrap() - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,89 @@
+//! Wall-clock timing helpers for the harness and the bench substrate.
+
+use std::time::Instant;
+
+/// A named stopwatch accumulating multiple timed sections.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    sections: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.sections
+            .push((name.to_string(), t0.elapsed().as_secs_f64()));
+        out
+    }
+
+    /// Add an externally measured duration.
+    pub fn record(&mut self, name: &str, seconds: f64) {
+        self.sections.push((name.to_string(), seconds));
+    }
+
+    /// Total seconds recorded under `name`.
+    pub fn total(&self, name: &str) -> f64 {
+        self.sections
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, s)| s)
+            .sum()
+    }
+
+    pub fn sections(&self) -> &[(String, f64)] {
+        &self.sections
+    }
+
+    /// "name: 1.234s, other: 0.5s" summary, aggregated by name.
+    pub fn summary(&self) -> String {
+        let mut names: Vec<&str> = Vec::new();
+        for (n, _) in &self.sections {
+            if !names.contains(&n.as_str()) {
+                names.push(n);
+            }
+        }
+        names
+            .iter()
+            .map(|n| format!("{n}: {:.3}s", self.total(n)))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// Measure a closure's wall-clock seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_by_name() {
+        let mut sw = Stopwatch::new();
+        sw.record("a", 1.0);
+        sw.record("b", 0.5);
+        sw.record("a", 2.0);
+        assert!((sw.total("a") - 3.0).abs() < 1e-12);
+        assert!((sw.total("b") - 0.5).abs() < 1e-12);
+        assert_eq!(sw.total("missing"), 0.0);
+        let s = sw.summary();
+        assert!(s.contains("a: 3.000s") && s.contains("b: 0.500s"), "{s}");
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

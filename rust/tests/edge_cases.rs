@@ -1,0 +1,157 @@
+//! Edge cases and failure injection across the public API surface.
+
+use fedmlh::config::{Algo, ExperimentConfig};
+use fedmlh::data::dataset::{batch_ranges, Dataset};
+use fedmlh::data::feature_hash::FeatureHasher;
+use fedmlh::data::xc_format::parse_xc;
+use fedmlh::eval::topk::top_k;
+use fedmlh::federated::backend::RustBackend;
+use fedmlh::federated::batcher::{ClientBatcher, Target};
+use fedmlh::harness::{self, BackendKind, HarnessOpts};
+use fedmlh::hashing::label_hash::LabelHasher;
+use fedmlh::model::params::ModelParams;
+
+#[test]
+fn shard_smaller_than_batch_trains_zero_steps() {
+    // A client whose shard is below the batch size contributes no full
+    // batch — the server must survive (steps = 0, no NaNs).
+    let ds = {
+        let mut d = Dataset::new(4, 8);
+        for i in 0..5 {
+            d.push(&[i as f32; 4], &[i as u32 % 8]).unwrap();
+        }
+        d
+    };
+    let samples: Vec<usize> = (0..5).collect();
+    let mut b = ClientBatcher::new(&ds, &samples, Target::Classes, 16, 1);
+    let mut params = ModelParams::init(4, 4, 8, 1);
+    let stats = RustBackend::new()
+        .local_train(&mut params, &mut b, 3, 0.1)
+        .unwrap();
+    assert_eq!(stats.steps, 0);
+    assert_eq!(stats.mean_loss, 0.0);
+    use fedmlh::federated::backend::TrainBackend;
+}
+
+#[test]
+fn single_client_single_round_degenerate_fl() {
+    let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+    cfg.clients = 1;
+    cfg.clients_per_round = 1;
+    cfg.rounds = 1;
+    cfg.local_epochs = 1;
+    let opts = HarnessOpts {
+        backend: BackendKind::Rust,
+        rounds: Some(1),
+        ..HarnessOpts::default()
+    };
+    let pair = harness::run_pair(&cfg, &opts).unwrap();
+    assert_eq!(pair.fedavg.rounds_run, 1);
+}
+
+#[test]
+fn empty_and_malformed_xc_inputs() {
+    // header only, no samples
+    let ds = parse_xc("0 5 7\n", 4, 1).unwrap();
+    assert_eq!(ds.len(), 0);
+    assert_eq!(ds.p(), 7);
+    // malformed: non-numeric label
+    assert!(parse_xc("1 5 7\nfoo 0:1.0\n", 4, 1).is_err());
+    // malformed: feature index out of range is accepted via hashing
+    // (raw features are hashed into d_out), but bad pairs are not
+    assert!(parse_xc("1 5 7\n1 0-1.0\n", 4, 1).is_err());
+}
+
+#[test]
+fn xc_roundtrip_format() {
+    let text = "2 6 4\n0,2 1:0.5 3:1.5\n1 0:2.0\n";
+    let ds = parse_xc(text, 8, 3).unwrap();
+    assert_eq!(ds.len(), 2);
+    assert_eq!(ds.labels_of(0), &[0, 2]);
+    assert_eq!(ds.labels_of(1), &[1]);
+    // feature hashing is deterministic given the seed
+    let ds2 = parse_xc(text, 8, 3).unwrap();
+    assert_eq!(ds.features_of(0), ds2.features_of(0));
+}
+
+#[test]
+fn top_k_degenerate_inputs() {
+    // k larger than the score vector
+    assert_eq!(top_k(&[1.0, 2.0], 5).len(), 2);
+    // all-equal scores: k distinct indices
+    let got = top_k(&[7.0; 10], 3);
+    assert_eq!(got.len(), 3);
+    let mut sorted = got.clone();
+    sorted.dedup();
+    assert_eq!(sorted.len(), 3);
+    // NaN-free negative scores
+    assert_eq!(top_k(&[-3.0, -1.0, -2.0], 1), vec![1]);
+}
+
+#[test]
+fn batch_ranges_cover_exactly() {
+    for (n, b) in [(0usize, 4usize), (3, 4), (4, 4), (9, 4), (100, 7)] {
+        let ranges = batch_ranges(n, b);
+        let covered: usize = ranges.iter().map(|(s, e)| e - s).sum();
+        assert_eq!(covered, n, "n={n} b={b}");
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "gap in ranges");
+        }
+    }
+}
+
+#[test]
+fn feature_hasher_is_linear() {
+    let h = FeatureHasher::new(5, 16);
+    let a = vec![(1u32, 2.0f32), (100, -1.0)];
+    let b = vec![(7u32, 3.0f32)];
+    let mut ab: Vec<(u32, f32)> = a.clone();
+    ab.extend(b.clone());
+    let ha = h.hash(&a);
+    let hb = h.hash(&b);
+    let hab = h.hash(&ab);
+    for i in 0..16 {
+        assert!((hab[i] - ha[i] - hb[i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn label_hasher_rejects_out_of_range_table() {
+    let h = LabelHasher::new(1, 2, 10, 4);
+    let result = std::panic::catch_unwind(|| h.bucket(5, 0));
+    assert!(result.is_err(), "table index 5 of 2 must panic");
+}
+
+#[test]
+fn config_rejects_fast_plus_b_override_semantics() {
+    // --fast + B override keeps the Pallas tag (no fast sweep artifacts).
+    let mut cfg = ExperimentConfig::preset("eurlex").unwrap();
+    cfg.override_b = 500;
+    let opts = HarnessOpts {
+        fast: true,
+        ..HarnessOpts::default()
+    };
+    let mut c = cfg.clone();
+    opts.configure(&mut c);
+    assert!(!c.fast_artifacts, "fast must be ignored under a B override");
+    assert_eq!(c.artifact_tag(Algo::FedMlh), "eurlex.fedmlh_b500");
+}
+
+#[test]
+fn zero_lr_fails_validation_and_negative_too() {
+    let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+    cfg.lr = 0.0;
+    assert!(cfg.validate().is_err());
+    cfg.lr = -1.0;
+    assert!(cfg.validate().is_err());
+    cfg.lr = f32::NAN;
+    assert!(cfg.validate().is_err(), "NaN lr must fail");
+}
+
+#[test]
+fn dataset_rejects_inconsistent_rows() {
+    let mut ds = Dataset::new(4, 10);
+    assert!(ds.push(&[0.0; 3], &[1]).is_err(), "wrong feature width");
+    assert!(ds.push(&[0.0; 4], &[10]).is_err(), "label out of range");
+    assert!(ds.push(&[0.0; 4], &[9]).is_ok());
+}

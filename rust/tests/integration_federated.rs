@@ -1,0 +1,169 @@
+//! End-to-end federated training over the pure-rust backend: the whole
+//! stack (synth data → non-iid partition → schemes → server loop →
+//! decode → metrics) without artifacts, so it runs everywhere.
+
+use fedmlh::config::{Algo, ExperimentConfig};
+use fedmlh::federated::backend::RustBackend;
+use fedmlh::federated::comm::expected_round_bytes;
+use fedmlh::harness::{self, BackendKind, HarnessOpts};
+
+fn quick_cfg(rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+    cfg.rounds = rounds;
+    cfg.patience = 0;
+    cfg
+}
+
+fn opts(rounds: usize) -> HarnessOpts {
+    HarnessOpts {
+        backend: BackendKind::Rust,
+        rounds: Some(rounds),
+        ..HarnessOpts::default()
+    }
+}
+
+#[test]
+fn both_algorithms_learn_beyond_chance() {
+    let pair = harness::run_pair(&quick_cfg(12), &opts(12)).unwrap();
+    // tiny has p = 64 classes; chance top-1 ≈ a few %. Both algorithms
+    // must comfortably beat it after 12 rounds.
+    assert!(
+        pair.fedavg.best.top1 > 0.15,
+        "fedavg top1 {}",
+        pair.fedavg.best.top1
+    );
+    assert!(
+        pair.fedmlh.best.top1 > 0.15,
+        "fedmlh top1 {}",
+        pair.fedmlh.best.top1
+    );
+    // and accuracy must improve over the first evaluation.
+    let first = pair.fedmlh.history.records.first().unwrap().accuracy.top1;
+    assert!(pair.fedmlh.best.top1 > first);
+}
+
+#[test]
+fn communication_accounting_is_exact() {
+    let cfg = quick_cfg(5);
+    let pair = harness::run_pair(&cfg, &opts(5)).unwrap();
+    for out in [&pair.fedavg, &pair.fedmlh] {
+        let per_round = expected_round_bytes(
+            cfg.clients_per_round,
+            out.model_bytes / out.n_models,
+            out.n_models,
+        );
+        assert_eq!(out.comm.total(), per_round * out.rounds_run as u64);
+        // per-round totals are monotone non-decreasing cumulative sums
+        let totals = out.comm.per_round_totals();
+        assert_eq!(totals.len(), out.rounds_run);
+        assert!(totals.windows(2).all(|w| w[0] <= w[1]));
+    }
+}
+
+#[test]
+fn early_stopping_cuts_rounds() {
+    let mut cfg = quick_cfg(60);
+    cfg.patience = 3;
+    cfg.lr = 1e-9; // effectively frozen → flat accuracy → stop at ~4
+    let out = harness::run_algo(&cfg, Algo::FedAvg, &RustBackend::new(), 7).unwrap();
+    assert!(
+        out.rounds_run < 10,
+        "early stopping did not engage: {} rounds",
+        out.rounds_run
+    );
+}
+
+#[test]
+fn fedmlh_sub_models_are_independent_streams() {
+    // R sub-models must produce a decode that depends on all of them:
+    // zeroing one sub-model's logits changes scores.
+    let cfg = quick_cfg(3);
+    let world = harness::build_world(&cfg);
+    let scheme = fedmlh::algo::scheme_for(&cfg, Algo::FedMlh, &world.data.train);
+    let backend = RustBackend::new();
+    let rows = 4;
+    let b = cfg.b();
+    let logits: Vec<Vec<f32>> = (0..cfg.r())
+        .map(|t| (0..rows * b).map(|i| ((t * 31 + i) as f32).sin()).collect())
+        .collect();
+    let full = scheme.scores(&logits, rows, &backend).unwrap();
+    let mut zeroed = logits.clone();
+    zeroed[1].iter_mut().for_each(|v| *v = 0.0);
+    let partial = scheme.scores(&zeroed, rows, &backend).unwrap();
+    assert_ne!(full, partial);
+}
+
+#[test]
+fn seed_isolation_changes_everything_deterministically() {
+    let cfg = quick_cfg(3);
+    let mut o1 = opts(3);
+    o1.seed = 1;
+    let mut o2 = opts(3);
+    o2.seed = 2;
+    let a = harness::run_pair(&cfg, &o1).unwrap();
+    let b = harness::run_pair(&cfg, &o1).unwrap();
+    let c = harness::run_pair(&cfg, &o2).unwrap();
+    assert_eq!(a.fedmlh.best.top1, b.fedmlh.best.top1, "same seed must repro");
+    assert_ne!(
+        (a.fedmlh.best.top1, a.fedavg.best.top1),
+        (c.fedmlh.best.top1, c.fedavg.best.top1),
+        "different seed must change results"
+    );
+}
+
+#[test]
+fn b_and_r_overrides_flow_through() {
+    let mut cfg = quick_cfg(2);
+    cfg.override_b = 8;
+    cfg.override_r = 3;
+    let out = harness::run_algo(&cfg, Algo::FedMlh, &RustBackend::new(), 5).unwrap();
+    assert_eq!(out.n_models, 3);
+    // each sub-model's last layer is hidden×8 (+ bias 8)
+    let per_model = out.model_bytes / out.n_models;
+    let expect = (cfg.preset.d * cfg.preset.hidden
+        + cfg.preset.hidden
+        + cfg.preset.hidden * cfg.preset.hidden
+        + cfg.preset.hidden
+        + cfg.preset.hidden * 8
+        + 8)
+        * 4;
+    assert_eq!(per_model, expect);
+}
+
+#[test]
+fn infrequent_accuracy_split_is_consistent() {
+    let pair = harness::run_pair(&quick_cfg(6), &opts(6)).unwrap();
+    for out in [&pair.fedavg, &pair.fedmlh] {
+        for rec in &out.history.records {
+            let a = rec.accuracy;
+            // freq + infreq decompose the total at every k
+            assert!((a.freq1 + a.infreq1 - a.top1).abs() < 1e-9);
+            assert!((a.freq3 + a.infreq3 - a.top3).abs() < 1e-9);
+            assert!((a.freq5 + a.infreq5 - a.top5).abs() < 1e-9);
+            // all in [0, 1]
+            for v in [a.top1, a.top3, a.top5, a.freq1, a.infreq1] {
+                assert!((0.0..=1.0).contains(&v), "{a:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn iid_partition_control_runs() {
+    // The iid partitioner must slot into the same server loop.
+    let cfg = quick_cfg(3);
+    let world_data = fedmlh::data::synth::generate_preset(&cfg.preset, cfg.seed);
+    let part = fedmlh::partition::iid::partition(world_data.train.len(), cfg.clients, cfg.seed);
+    assert!(part.covers(world_data.train.len()));
+    let scheme = fedmlh::algo::scheme_for(&cfg, Algo::FedMlh, &world_data.train);
+    let out = fedmlh::federated::server::run(
+        &cfg,
+        scheme.as_ref(),
+        &RustBackend::new(),
+        &world_data.train,
+        &world_data.test,
+        &part,
+    )
+    .unwrap();
+    assert_eq!(out.rounds_run, 3);
+}

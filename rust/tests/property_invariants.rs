@@ -1,0 +1,240 @@
+//! Randomized property tests (in-tree `util::prop` driver) over the
+//! system's algebraic invariants.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use fedmlh::data::dataset::Dataset;
+use fedmlh::eval::decode::sketch_decode;
+use fedmlh::eval::topk::top_k;
+use fedmlh::federated::aggregate::{aggregate, Weighting};
+use fedmlh::hashing::count_sketch::{CountSketch, Estimator};
+use fedmlh::hashing::label_hash::LabelHasher;
+use fedmlh::model::params::ModelParams;
+use fedmlh::partition::noniid::{partition as noniid, NonIidOptions};
+use fedmlh::util::json::Json;
+use fedmlh::util::prop::{check, Gen};
+
+#[test]
+fn aggregation_stays_in_convex_hull() {
+    check("aggregate convex hull", 30, |g: &mut Gen| {
+        let (d, h, out) = (g.usize_in(1, 6), g.usize_in(1, 6), g.usize_in(1, 6));
+        let n = g.usize_in(2, 6);
+        let models: Vec<ModelParams> = (0..n)
+            .map(|i| {
+                let mut m = ModelParams::zeros(d, h, out);
+                for t in m.tensors.iter_mut() {
+                    for v in t.data_mut() {
+                        *v = g.f32_in(-3.0, 3.0) + i as f32;
+                    }
+                }
+                m
+            })
+            .collect();
+        let refs: Vec<(&ModelParams, usize)> =
+            models.iter().map(|m| (m, g.usize_in(1, 100))).collect();
+        for weighting in [Weighting::Uniform, Weighting::BySamples] {
+            let avg = aggregate(&refs, weighting).unwrap();
+            for (ti, t) in avg.tensors.iter().enumerate() {
+                for (vi, &v) in t.data().iter().enumerate() {
+                    let lo = models
+                        .iter()
+                        .map(|m| m.tensors[ti].data()[vi])
+                        .fold(f32::INFINITY, f32::min);
+                    let hi = models
+                        .iter()
+                        .map(|m| m.tensors[ti].data()[vi])
+                        .fold(f32::NEG_INFINITY, f32::max);
+                    assert!(
+                        v >= lo - 1e-4 && v <= hi + 1e-4,
+                        "avg {v} outside [{lo}, {hi}]"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn aggregation_of_identical_models_is_identity() {
+    check("aggregate identity", 20, |g: &mut Gen| {
+        let mut m = ModelParams::zeros(3, 4, 5);
+        for t in m.tensors.iter_mut() {
+            for v in t.data_mut() {
+                *v = g.f32_in(-1.0, 1.0);
+            }
+        }
+        let refs: Vec<(&ModelParams, usize)> = (0..4).map(|i| (&m, i + 1)).collect();
+        let avg = aggregate(&refs, Weighting::BySamples).unwrap();
+        assert!(avg.max_abs_diff(&m).unwrap() < 1e-5);
+    });
+}
+
+#[test]
+fn bucket_labels_equal_brute_force_union() {
+    check("bucket label union", 30, |g: &mut Gen| {
+        let p = g.usize_in(8, 200);
+        let b = g.usize_in(2, 32);
+        let r = g.usize_in(1, 5);
+        let hasher = LabelHasher::new(g.rng().next_u64(), r, p, b);
+        // random positive set
+        let n_pos = g.usize_in(1, p.min(12));
+        let positives: Vec<u32> = (0..n_pos).map(|_| g.usize_in(0, p - 1) as u32).collect();
+        for table in 0..r {
+            let mut got = vec![0.0f32; b];
+            hasher.bucket_labels_table_into(table, &positives, &mut got);
+            // brute force: bucket i is 1 iff some positive class hashes there
+            for i in 0..b {
+                let want = positives
+                    .iter()
+                    .any(|&c| hasher.bucket(table, c as usize) == i);
+                assert_eq!(got[i] > 0.5, want, "table {table} bucket {i}");
+            }
+        }
+    });
+}
+
+#[test]
+fn count_sketch_is_unbiased_for_single_heavy_item() {
+    check("count sketch recovery", 15, |g: &mut Gen| {
+        let buckets = g.usize_in(16, 64);
+        let k = g.usize_in(2, 5) | 1; // odd for a clean median
+        let mut cs = CountSketch::new(g.rng().next_u64(), k, buckets);
+        let heavy = g.usize_in(0, 999) as u64;
+        let weight = g.f32_in(5.0, 50.0);
+        cs.insert(heavy, weight);
+        // light noise
+        for _ in 0..buckets / 2 {
+            cs.insert(g.usize_in(1000, 2000) as u64, g.f32_in(-0.5, 0.5));
+        }
+        let est = cs.retrieve(heavy, Estimator::Median);
+        assert!(
+            (est - weight).abs() < weight * 0.6 + 1.0,
+            "heavy {weight} estimated {est}"
+        );
+    });
+}
+
+#[test]
+fn sketch_decode_matches_manual_mean() {
+    check("decode mean", 25, |g: &mut Gen| {
+        let r = g.usize_in(1, 4);
+        let rows = g.usize_in(1, 5);
+        let b = g.usize_in(2, 10);
+        let p = g.usize_in(2, 30);
+        let logits = g.vec_f32(r * rows * b, -5.0, 5.0);
+        let hasher = LabelHasher::new(g.rng().next_u64(), r, p, b);
+        let idx = hasher.index_matrix_i32();
+        let scores = sketch_decode(&logits, &idx, r, rows, b, p);
+        assert_eq!(scores.len(), rows * p);
+        for n in 0..rows {
+            for j in 0..p {
+                let mut want = 0.0f32;
+                for t in 0..r {
+                    let bucket = idx[t * p + j] as usize;
+                    want += logits[t * rows * b + n * b + bucket];
+                }
+                want /= r as f32;
+                let got = scores[n * p + j];
+                assert!((got - want).abs() < 1e-5, "({n},{j}): {got} vs {want}");
+            }
+        }
+    });
+}
+
+#[test]
+fn top_k_matches_full_sort() {
+    check("topk vs sort", 40, |g: &mut Gen| {
+        let n = g.usize_in(1, 200);
+        let k = g.usize_in(1, 8).min(n);
+        let scores = g.vec_f32(n, -100.0, 100.0);
+        let got = top_k(&scores, k);
+        assert_eq!(got.len(), k.min(n));
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        // compare as score multisets (ties can reorder indices)
+        let got_scores: Vec<f32> = got.iter().map(|&i| scores[i]).collect();
+        let want_scores: Vec<f32> = order[..k].iter().map(|&i| scores[i]).collect();
+        for (a, b) in got_scores.iter().zip(want_scores.iter()) {
+            assert_eq!(a, b, "topk scores diverge from sorted prefix");
+        }
+        // indices must be distinct
+        let set: HashSet<usize> = got.iter().copied().collect();
+        assert_eq!(set.len(), got.len());
+    });
+}
+
+#[test]
+fn noniid_partition_invariants() {
+    check("noniid partition", 8, |g: &mut Gen| {
+        let p = g.usize_in(10, 40);
+        let n = g.usize_in(60, 300);
+        let clients = g.usize_in(2, 8);
+        let mut ds = Dataset::new(4, p);
+        for _ in 0..n {
+            let x = g.vec_f32(4, -1.0, 1.0);
+            let l1 = g.usize_in(0, p - 1) as u32;
+            let l2 = g.usize_in(0, p - 1) as u32;
+            let labels = if l1 == l2 { vec![l1] } else { vec![l1, l2] };
+            ds.push(&x, &labels).unwrap();
+        }
+        let part = noniid(&ds, &NonIidOptions::new(clients), g.rng().next_u64());
+        // 1. covers every sample
+        assert!(part.covers(n));
+        // 2. frequent classes have exactly one owner
+        let mut seen = HashSet::new();
+        for (c, _) in &part.class_owner {
+            assert!(seen.insert(*c), "class {c} owned twice");
+        }
+        // 3. no client shard contains duplicates
+        for shard in &part.clients {
+            let set: HashSet<usize> = shard.iter().copied().collect();
+            assert_eq!(set.len(), shard.len());
+        }
+    });
+}
+
+#[test]
+fn json_roundtrips_harness_values() {
+    check("json roundtrip", 20, |g: &mut Gen| {
+        let vals: Vec<f64> = (0..g.usize_in(1, 8))
+            .map(|_| (g.f64_in(-1e6, 1e6) * 1e3).round() / 1e3)
+            .collect();
+        let obj = Json::obj(vec![
+            ("name", Json::str("run")),
+            ("vals", Json::arr_f64(&vals)),
+            ("n", Json::num(vals.len() as f64)),
+        ]);
+        let text = obj.to_string_pretty(2);
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.expect("n").unwrap().as_usize().unwrap(), vals.len());
+        let arr = back.expect("vals").unwrap().as_arr().unwrap();
+        for (a, b) in arr.iter().zip(vals.iter()) {
+            assert!((a.as_f64().unwrap() - b).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn label_hasher_is_deterministic_across_processes() {
+    // Fixed seed → fixed index matrix (the server/client broadcast
+    // contract of Algorithm 2 line 3 relies on this).
+    let a = LabelHasher::new(0xfed, 3, 100, 10).index_matrix_i32();
+    let b = LabelHasher::new(0xfed, 3, 100, 10).index_matrix_i32();
+    assert_eq!(a, b);
+    // and every entry is a valid bucket
+    assert!(a.iter().all(|&v| (0..10).contains(&v)));
+}
+
+#[test]
+fn batcher_target_arc_is_shared_not_cloned() {
+    // The hasher behind bucket targets is shared by Arc across R
+    // sub-model batchers (memory invariant for large p).
+    let hasher = Arc::new(LabelHasher::new(1, 4, 1000, 64));
+    let t0 = fedmlh::federated::batcher::Target::Buckets {
+        hasher: hasher.clone(),
+        table: 0,
+    };
+    drop(t0);
+    assert_eq!(Arc::strong_count(&hasher), 1);
+}

@@ -1,0 +1,128 @@
+//! Section-5 theory validated at realistic scale: the bounds hold on
+//! the actual preset datasets and partitions the experiments use.
+
+use fedmlh::config::ExperimentConfig;
+use fedmlh::harness;
+use fedmlh::hashing::label_hash::LabelHasher;
+use fedmlh::theory;
+use fedmlh::util::prop::check;
+
+#[test]
+fn lemma1_bound_holds_on_eurlex_scale_counts() {
+    // Zipf-like counts at eurlex scale: every class's bucket bound must
+    // be ≤ the Monte-Carlo expectation.
+    let cfg = ExperimentConfig::preset("eurlex").unwrap();
+    let data = fedmlh::data::synth::generate_preset(&cfg.preset, 11);
+    let counts = data.train.class_counts();
+    let n_lab: usize = counts.iter().sum();
+    for &j in &[0usize, 100, 2000, 3999] {
+        let bound = theory::lemma1_lower_bound(counts[j], n_lab, cfg.b());
+        let mc = theory::expected_bucket_positives_mc(&counts, j, cfg.b(), 60, 5);
+        assert!(
+            mc >= bound - 1e-9,
+            "class {j}: MC {mc} < bound {bound}"
+        );
+        // the re-balancing effect: infrequent classes gain a lot
+        if counts[j] < 5 {
+            assert!(
+                bound > 10.0 * (counts[j].max(1)) as f64,
+                "class {j} gained too little: {bound} from {}",
+                counts[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn lemma2_paper_table2_configs() {
+    // All four paper configurations are collision-safe at δ = 0.05 (the
+    // paper's real p values, not just the scaled analogs).
+    for &(p, b, r) in &[
+        (3993usize, 250usize, 4usize),   // Eurlex
+        (30938, 1000, 4),                // Wiki31
+        (131073, 4000, 4),               // AMZtitle
+        (312330, 5000, 8),               // Wikititle
+    ] {
+        let bound = theory::collision_union_bound(p, b, r);
+        assert!(bound < 0.05, "paper config p={p} B={b} R={r}: {bound}");
+        let min_b = theory::lemma2_min_buckets(p, r, 0.05);
+        assert!(
+            (b as f64) >= min_b * 0.8,
+            "paper B={b} far below lemma minimum {min_b:.0} (p={p}, R={r})"
+        );
+    }
+}
+
+#[test]
+fn lemma2_mc_tracks_bound_direction() {
+    check("lemma2 monotone in B", 5, |g| {
+        let p = g.usize_in(30, 120);
+        let r = g.usize_in(1, 3);
+        let b_small = g.usize_in(2, 8);
+        let b_large = b_small * 8;
+        let seed = g.rng().next_u64();
+        let small = theory::all_table_collision_probability_mc(p, b_small, r, 60, seed);
+        let large = theory::all_table_collision_probability_mc(p, b_large, r, 60, seed);
+        assert!(
+            large <= small + 0.1,
+            "collisions did not drop with B: {small} -> {large}"
+        );
+    });
+}
+
+#[test]
+fn theorem2_on_all_presets() {
+    for name in ["tiny", "eurlex"] {
+        let cfg = ExperimentConfig::preset(name).unwrap();
+        let world = harness::build_world(&cfg);
+        let hasher = LabelHasher::new(cfg.seed, cfg.r(), world.data.train.p(), cfg.b());
+        let c = theory::kl_contraction_on_partition(
+            &world.data.train,
+            &world.partition,
+            &hasher,
+            1e-3,
+        );
+        assert!(c.holds(), "{name}: {c:?}");
+        assert!(
+            c.factor() > 1.2,
+            "{name}: expected meaningful contraction, got {:.3}x",
+            c.factor()
+        );
+    }
+}
+
+#[test]
+fn theorem2_mc_large_random_instances() {
+    let (worst, factor) = theory::kl_contraction_mc(400, 50, 150, 99);
+    assert!(worst <= 1e-10, "violation {worst}");
+    assert!(factor > 1.0);
+}
+
+#[test]
+fn contraction_grows_as_b_shrinks() {
+    // Theorem 2's monotonicity remark: fewer buckets ⇒ more contraction
+    // (in expectation over hash draws).
+    let cfg = ExperimentConfig::preset("tiny").unwrap();
+    let world = harness::build_world(&cfg);
+    let p = world.data.train.p();
+    let mut factors = Vec::new();
+    for b in [32usize, 8, 2] {
+        // average over a few hasher draws to smooth hash luck
+        let mut f = 0.0;
+        for s in 0..5u64 {
+            let hasher = LabelHasher::new(1000 + s, 2, p, b);
+            let c = theory::kl_contraction_on_partition(
+                &world.data.train,
+                &world.partition,
+                &hasher,
+                1e-3,
+            );
+            f += c.factor() / 5.0;
+        }
+        factors.push(f);
+    }
+    assert!(
+        factors[0] < factors[2],
+        "contraction not increasing as B shrinks: {factors:?}"
+    );
+}
