@@ -25,9 +25,9 @@ fn main() {
         });
     }
 
-    // HLO decode (artifact-backed), when built.
+    // HLO decode (artifact-backed), when built with the xla feature.
     let dir = Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
+    if cfg!(feature = "xla") && dir.join("manifest.json").exists() {
         let rt = RuntimeClient::new(dir).unwrap();
         for name in ["eurlex", "amztitle"] {
             let cfg = ExperimentConfig::preset(name).unwrap();

@@ -58,7 +58,7 @@ fn main() {
     }
 
     let dir = Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
+    if cfg!(feature = "xla") && dir.join("manifest.json").exists() {
         let rt = RuntimeClient::new(dir).unwrap();
         for name in presets {
             let cfg = ExperimentConfig::preset(name).unwrap();

@@ -1,0 +1,56 @@
+//! Wire-codec benchmarks: encode/decode throughput and achieved
+//! compression per preset model size — the client-side cost of buying
+//! Table 4's communication reduction. Dense is the memcpy baseline;
+//! q8 pays a scan + scale; topk pays a sort over |delta|.
+//!
+//! The big presets (amztitle/wikititle FedAvg models are multi-million
+//! parameter) are skipped by default to keep the suite quick; set
+//! `FEDMLH_BENCH_WIRE_FULL=1` to include them.
+
+use fedmlh::bench::Bencher;
+use fedmlh::config::presets::by_name;
+use fedmlh::federated::wire::{decode_update, encode_update, CodecSpec};
+use fedmlh::model::params::ModelParams;
+use fedmlh::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bencher::from_env("wire");
+    let full = std::env::var("FEDMLH_BENCH_WIRE_FULL").ok().as_deref() == Some("1");
+    let presets: &[&str] = if full {
+        &["tiny", "eurlex", "wiki31", "amztitle", "wikititle"]
+    } else {
+        &["tiny", "eurlex"]
+    };
+
+    for name in presets {
+        let preset = by_name(name).unwrap();
+        for (tag, out) in [("fedavg", preset.p), ("fedmlh_sub", preset.b)] {
+            let global = ModelParams::init(preset.d, preset.hidden, out, 1);
+            let mut local = global.clone();
+            let mut rng = Rng::new(2);
+            for t in local.tensors.iter_mut() {
+                for v in t.data_mut() {
+                    *v += (rng.next_f32() - 0.5) * 0.05;
+                }
+            }
+            let dense_bytes = local.byte_size();
+            for codec in [
+                CodecSpec::Dense,
+                CodecSpec::QuantI8,
+                CodecSpec::TopK { frac: 0.1 },
+            ] {
+                let enc = encode_update(codec, &global, &local).unwrap();
+                let ratio = dense_bytes as f64 / enc.byte_len() as f64;
+                bench.bench_val(
+                    &format!("{name}/{tag}/encode/{} ({ratio:.1}x)", codec.name()),
+                    || encode_update(codec, &global, &local).unwrap(),
+                );
+                bench.bench_val(
+                    &format!("{name}/{tag}/decode/{}", codec.name()),
+                    || decode_update(&global, &enc).unwrap(),
+                );
+            }
+        }
+    }
+    bench.finish();
+}

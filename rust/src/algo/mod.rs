@@ -18,7 +18,12 @@ use crate::federated::batcher::Target;
 
 /// How an algorithm maps datasets to training targets and sub-model
 /// logits to class scores. One implementation per paper baseline.
-pub trait LabelScheme {
+///
+/// `Send + Sync` because the parallel round engine
+/// ([`crate::federated::engine::RoundEngine`]) shares the scheme across
+/// worker threads when building per-item batchers; both paper schemes
+/// are immutable plain data (FedMLH shares its hash tables via `Arc`).
+pub trait LabelScheme: Send + Sync {
     /// Number of independently-federated models (1 or R).
     fn n_models(&self) -> usize;
 

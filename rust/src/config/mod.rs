@@ -6,6 +6,8 @@ pub mod presets;
 
 use anyhow::{bail, Result};
 
+use crate::federated::wire::CodecSpec;
+
 pub use presets::{DatasetPreset, PRESETS};
 
 /// Which algorithm a run trains (paper's two baselines).
@@ -68,6 +70,12 @@ pub struct ExperimentConfig {
     /// the rust backend. Not combinable with `override_b` (no fast
     /// sweep artifacts are emitted).
     pub fast_artifacts: bool,
+    /// Worker threads for the round engine's local-training fan-out
+    /// (1 = sequential; results are worker-count-invariant either way).
+    pub workers: usize,
+    /// Wire codec for client→server updates (Table 4 accounting charges
+    /// the encoded bytes). `Dense` reproduces the seed accounting.
+    pub codec: CodecSpec,
 }
 
 impl ExperimentConfig {
@@ -86,6 +94,8 @@ impl ExperimentConfig {
             override_r: 0,
             override_b: 0,
             fast_artifacts: false,
+            workers: 1,
+            codec: CodecSpec::Dense,
         }
     }
 
@@ -160,6 +170,14 @@ impl ExperimentConfig {
         if !(self.lr > 0.0) {
             bail!("lr must be positive");
         }
+        if self.workers == 0 {
+            bail!("workers must be positive (1 = sequential)");
+        }
+        if let CodecSpec::TopK { frac } = self.codec {
+            if !(frac > 0.0 && frac <= 1.0) {
+                bail!("topk codec fraction must be in (0, 1], got {frac}");
+            }
+        }
         Ok(())
     }
 }
@@ -204,6 +222,20 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = ExperimentConfig::preset("tiny").unwrap();
         cfg.override_b = 10_000_000;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_covers_engine_and_codec() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        assert_eq!(cfg.workers, 1);
+        assert_eq!(cfg.codec, CodecSpec::Dense);
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        cfg.workers = 8;
+        cfg.codec = CodecSpec::TopK { frac: 0.1 };
+        cfg.validate().unwrap();
+        cfg.codec = CodecSpec::TopK { frac: 1.5 };
         assert!(cfg.validate().is_err());
     }
 

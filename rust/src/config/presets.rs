@@ -49,6 +49,21 @@ pub struct DatasetPreset {
     pub sweep_r: &'static [usize],
 }
 
+impl DatasetPreset {
+    /// `f32` parameter count of one trained model with output width
+    /// `out` (`p` for FedAvg, `B` for one FedMLH sub-model) — the unit
+    /// the wire codecs ([`crate::federated::wire`]) compress and the
+    /// closed-form Table 4/5 cross-checks start from. Derived from
+    /// [`crate::model::params::ModelParams::shapes`] so the layer
+    /// layout has a single source of truth.
+    pub fn param_count(&self, out: usize) -> usize {
+        crate::model::params::ModelParams::shapes(self.d, self.hidden, out)
+            .iter()
+            .map(|shape| shape.iter().product::<usize>())
+            .sum()
+    }
+}
+
 pub const PRESETS: &[DatasetPreset] = &[
     DatasetPreset {
         name: "tiny",
@@ -179,6 +194,16 @@ mod tests {
         // FedMLH's premise: R*B << p so the hashed output layer is smaller.
         for p in PRESETS.iter().filter(|p| p.name != "tiny") {
             assert!(p.r * p.b < p.p, "{}: R*B={} >= p={}", p.name, p.r * p.b, p.p);
+        }
+    }
+
+    #[test]
+    fn param_count_matches_model_params() {
+        use crate::model::params::ModelParams;
+        let p = by_name("tiny").unwrap();
+        for out in [p.p, p.b] {
+            let m = ModelParams::zeros(p.d, p.hidden, out);
+            assert_eq!(p.param_count(out), m.num_params());
         }
     }
 

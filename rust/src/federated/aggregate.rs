@@ -44,9 +44,17 @@ fn weights_for(locals: &[(&ModelParams, usize)], weighting: Weighting) -> Vec<f6
         Weighting::Uniform => vec![1.0 / locals.len() as f64; locals.len()],
         Weighting::BySamples => {
             let total: usize = locals.iter().map(|(_, n)| n).sum();
+            if total == 0 {
+                // Every shard is empty (e.g. all selected clients hold
+                // fewer samples than one batch). The old `total.max(1)`
+                // guard produced weights summing to 0 — a silent zero
+                // model out of `aggregate()`. Convex weights must sum
+                // to 1, so fall back to the uniform rule instead.
+                return weights_for(locals, Weighting::Uniform);
+            }
             locals
                 .iter()
-                .map(|(_, n)| *n as f64 / total.max(1) as f64)
+                .map(|(_, n)| *n as f64 / total as f64)
                 .collect()
         }
     }
@@ -82,6 +90,27 @@ mod tests {
         let g = aggregate(&[(&a, 25), (&b, 75)], Weighting::BySamples).unwrap();
         for t in &g.tensors {
             assert!(t.data().iter().all(|&v| (v - 2.5).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn by_samples_with_all_empty_shards_falls_back_to_uniform() {
+        // Regression: sizes (0, 0) used to yield weights (0, 0) via the
+        // `total.max(1)` guard, silently aggregating to the zero model.
+        let a = constant_params(1.0);
+        let b = constant_params(3.0);
+        let g = aggregate(&[(&a, 0), (&b, 0)], Weighting::BySamples).unwrap();
+        for t in &g.tensors {
+            assert!(
+                t.data().iter().all(|&v| (v - 2.0).abs() < 1e-6),
+                "expected the uniform mean, got {:?}",
+                &t.data()[..t.len().min(4)]
+            );
+        }
+        // One non-empty shard still dominates normally.
+        let g = aggregate(&[(&a, 0), (&b, 10)], Weighting::BySamples).unwrap();
+        for t in &g.tensors {
+            assert!(t.data().iter().all(|&v| (v - 3.0).abs() < 1e-6));
         }
     }
 

@@ -62,6 +62,16 @@ pub trait TrainBackend {
 
     /// Human-readable name for logs/EXPERIMENTS.md.
     fn name(&self) -> &str;
+
+    /// Thread-safe view of this backend for the parallel round engine
+    /// ([`crate::federated::engine::RoundEngine`]). `None` (the
+    /// default) keeps the engine on its sequential path — correct for
+    /// the PJRT backend, whose `Rc`/`RefCell` compile cache is
+    /// single-threaded by construction. Backends that are freely
+    /// shareable override this to `Some(self)`.
+    fn as_parallel(&self) -> Option<&(dyn TrainBackend + Sync)> {
+        None
+    }
 }
 
 /// Pure-rust backend over [`crate::model::mlp`].
@@ -130,6 +140,10 @@ impl TrainBackend for RustBackend {
 
     fn name(&self) -> &str {
         "rust-reference"
+    }
+
+    fn as_parallel(&self) -> Option<&(dyn TrainBackend + Sync)> {
+        Some(self)
     }
 }
 

@@ -9,10 +9,18 @@
 //! no parameters flow between sub-models).
 
 /// Byte meter for one training run.
-#[derive(Clone, Debug, Default)]
+///
+/// Since the wire-format layer ([`super::wire`]) landed, uploads are
+/// charged the *encoded* payload size; the dense `f32` equivalent is
+/// tracked alongside so compression wins are reportable
+/// ([`Self::upload_compression`]) without guessing.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommMeter {
     download_bytes: u64,
     upload_bytes: u64,
+    /// What the uploads would have cost as dense `f32` (the seed's
+    /// `model_bytes_each` flat accounting).
+    dense_upload_bytes: u64,
     /// Cumulative total at the end of each completed round (Fig 4 x-axis).
     per_round_totals: Vec<u64>,
 }
@@ -27,9 +35,17 @@ impl CommMeter {
         self.download_bytes += bytes as u64;
     }
 
-    /// Record one client uploading `bytes` of updated parameters.
+    /// Record one client uploading `bytes` of updated parameters
+    /// (uncompressed — dense equivalent equals the actual bytes).
     pub fn upload(&mut self, bytes: usize) {
-        self.upload_bytes += bytes as u64;
+        self.upload_encoded(bytes, bytes);
+    }
+
+    /// Record one client uploading an encoded update: `actual` bytes on
+    /// the wire, `dense_equiv` bytes had it shipped raw `f32`.
+    pub fn upload_encoded(&mut self, actual: usize, dense_equiv: usize) {
+        self.upload_bytes += actual as u64;
+        self.dense_upload_bytes += dense_equiv as u64;
     }
 
     /// Close out a synchronization round (snapshots the running total).
@@ -47,6 +63,21 @@ impl CommMeter {
 
     pub fn uploaded(&self) -> u64 {
         self.upload_bytes
+    }
+
+    /// Dense-`f32` equivalent of everything uploaded.
+    pub fn uploaded_dense_equiv(&self) -> u64 {
+        self.dense_upload_bytes
+    }
+
+    /// Uplink compression ratio (dense / actual; 1.0 when uncompressed
+    /// or nothing was uploaded yet).
+    pub fn upload_compression(&self) -> f64 {
+        if self.upload_bytes == 0 {
+            1.0
+        } else {
+            self.dense_upload_bytes as f64 / self.upload_bytes as f64
+        }
     }
 
     /// Cumulative bytes at the end of round `r` (0-based).
@@ -102,6 +133,22 @@ mod tests {
         assert_eq!(m.total_at_round(0), 150);
         assert_eq!(m.total_at_round(1), 300);
         assert_eq!(m.rounds(), 2);
+    }
+
+    #[test]
+    fn encoded_uploads_track_dense_equivalent() {
+        let mut m = CommMeter::new();
+        m.upload_encoded(25, 100);
+        m.upload_encoded(25, 100);
+        assert_eq!(m.uploaded(), 50);
+        assert_eq!(m.uploaded_dense_equiv(), 200);
+        assert!((m.upload_compression() - 4.0).abs() < 1e-12);
+        // plain uploads stay 1:1
+        let mut plain = CommMeter::new();
+        plain.upload(80);
+        assert_eq!(plain.uploaded_dense_equiv(), 80);
+        assert_eq!(plain.upload_compression(), 1.0);
+        assert_eq!(CommMeter::new().upload_compression(), 1.0);
     }
 
     #[test]

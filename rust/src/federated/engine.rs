@@ -1,0 +1,235 @@
+//! The parallel round engine — fans one synchronization round's
+//! `(selected client, sub-model)` work items across a worker pool.
+//!
+//! Each work item is a pure function of `(round, client, sub-model)`:
+//! clone the global sub-model, run E local epochs with the item's
+//! [`derive_seed`]-derived batch stream, and encode the update with the
+//! configured [`super::wire`] codec. Items never share mutable state,
+//! so executing them on N threads instead of one changes *nothing*
+//! about the numbers:
+//!
+//! - the per-item RNG seed depends only on `(round, client, sub-model)`
+//!   — the seed scheme the sequential loop always used;
+//! - results are written into their item-index slot and consumed in
+//!   deterministic `(selected order, sub-model)` order, so aggregation
+//!   and loss averaging see the identical operand order;
+//! - communication metering happens after the fan-in, in item order.
+//!
+//! `tests/parallel_determinism.rs` pins `workers = 4` to be
+//! bit-identical to `workers = 1`.
+//!
+//! Backends opt into the pool via
+//! [`TrainBackend::as_parallel`](super::backend::TrainBackend::as_parallel):
+//! the pure-rust backend is freely shareable, while the PJRT/`Rc`-based
+//! xla backend stays on the sequential path by construction.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::algo::LabelScheme;
+use crate::config::ExperimentConfig;
+use crate::data::dataset::Dataset;
+use crate::model::params::ModelParams;
+use crate::partition::Partition;
+use crate::util::rng::derive_seed;
+
+use super::backend::{TrainBackend, TrainStats};
+use super::batcher::ClientBatcher;
+use super::wire::{encode_update, EncodedUpdate};
+
+/// What one `(client, sub-model)` work item produces.
+#[derive(Clone, Debug)]
+pub struct ClientUpdate {
+    /// Local-training statistics (steps, mean loss, wall-clock).
+    pub stats: TrainStats,
+    /// The wire-encoded update the client ships back.
+    pub encoded: EncodedUpdate,
+}
+
+/// Worker-pool executor for one round's local-training fan-out.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundEngine {
+    workers: usize,
+}
+
+impl RoundEngine {
+    /// `workers = 1` is the sequential path; `N > 1` uses N OS threads
+    /// with an atomic work queue (items vary in cost with shard size,
+    /// so static chunking would straggle).
+    pub fn new(workers: usize) -> Self {
+        RoundEngine {
+            workers: workers.max(1),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Train every `(selected client, sub-model)` pair of one round.
+    ///
+    /// Returns updates indexed `[slot][sub-model]` where `slot` follows
+    /// `selected`'s order — independent of worker count or scheduling.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_round(
+        &self,
+        cfg: &ExperimentConfig,
+        scheme: &dyn LabelScheme,
+        backend: &dyn TrainBackend,
+        train: &Dataset,
+        partition: &Partition,
+        globals: &[ModelParams],
+        round: usize,
+        selected: &[usize],
+    ) -> Result<Vec<Vec<ClientUpdate>>> {
+        let n_models = globals.len();
+        let n_items = selected.len() * n_models;
+
+        // One work item; `be` is threaded through explicitly so the
+        // closure itself only captures Sync data.
+        let run_item = |be: &dyn TrainBackend, slot: usize, j: usize| -> Result<ClientUpdate> {
+            let client = selected[slot];
+            let shard = &partition.clients[client];
+            let mut local = globals[j].clone();
+            let mut batcher = ClientBatcher::new(
+                train,
+                shard,
+                scheme.target(j),
+                cfg.preset.batch,
+                derive_seed(
+                    cfg.seed,
+                    ((round * cfg.clients + client) * n_models + j) as u64,
+                ),
+            );
+            let stats = be.local_train(&mut local, &mut batcher, cfg.local_epochs, cfg.lr)?;
+            let encoded = encode_update(cfg.codec, &globals[j], &local)?;
+            Ok(ClientUpdate { stats, encoded })
+        };
+
+        let pool = self.workers.min(n_items.max(1));
+        let parallel_backend = if pool > 1 { backend.as_parallel() } else { None };
+
+        let collected: Vec<Result<ClientUpdate>> = match parallel_backend {
+            Some(sync_be) => {
+                let next = AtomicUsize::new(0);
+                let slots: Vec<Mutex<Option<Result<ClientUpdate>>>> =
+                    (0..n_items).map(|_| Mutex::new(None)).collect();
+                std::thread::scope(|scope| {
+                    for _ in 0..pool {
+                        scope.spawn(|| {
+                            let be: &dyn TrainBackend = sync_be;
+                            loop {
+                                let i = next.fetch_add(1, Ordering::Relaxed);
+                                if i >= n_items {
+                                    break;
+                                }
+                                let out = run_item(be, i / n_models, i % n_models);
+                                *slots[i].lock().unwrap() = Some(out);
+                            }
+                        });
+                    }
+                });
+                slots
+                    .into_iter()
+                    .map(|m| {
+                        m.into_inner()
+                            .expect("worker panicked mid-item")
+                            .expect("every item slot is filled before join")
+                    })
+                    .collect()
+            }
+            None => (0..n_items)
+                .map(|i| run_item(backend, i / n_models, i % n_models))
+                .collect(),
+        };
+
+        // Fan-in: fail on the first bad item in deterministic order,
+        // then group [slot][sub-model].
+        let mut flat = Vec::with_capacity(n_items);
+        for item in collected {
+            flat.push(item?);
+        }
+        let mut grouped = Vec::with_capacity(selected.len());
+        let mut items = flat.into_iter();
+        for _ in 0..selected.len() {
+            grouped.push((0..n_models).map(|_| items.next().expect("item count")).collect());
+        }
+        Ok(grouped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::scheme_for;
+    use crate::config::Algo;
+    use crate::data::synth::generate_preset;
+    use crate::federated::backend::RustBackend;
+    use crate::partition::noniid::{partition as noniid, NonIidOptions};
+
+    fn setup() -> (ExperimentConfig, crate::data::synth::SynthData, Partition) {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.clients = 4;
+        cfg.clients_per_round = 3;
+        cfg.local_epochs = 1;
+        let data = generate_preset(&cfg.preset, cfg.seed);
+        let part = noniid(&data.train, &NonIidOptions::new(cfg.clients), cfg.seed);
+        (cfg, data, part)
+    }
+
+    fn run_with(workers: usize) -> Vec<Vec<ClientUpdate>> {
+        let (cfg, data, part) = setup();
+        let scheme = scheme_for(&cfg, Algo::FedMlh, &data.train);
+        let backend = RustBackend::new();
+        let globals: Vec<ModelParams> = (0..scheme.n_models())
+            .map(|j| {
+                ModelParams::init(
+                    data.train.d(),
+                    cfg.preset.hidden,
+                    scheme.out_dim(),
+                    derive_seed(cfg.seed, 0x1417_0000 + j as u64),
+                )
+            })
+            .collect();
+        let selected = vec![0usize, 2, 3];
+        RoundEngine::new(workers)
+            .run_round(
+                &cfg,
+                scheme.as_ref(),
+                &backend,
+                &data.train,
+                &part,
+                &globals,
+                0,
+                &selected,
+            )
+            .unwrap()
+    }
+
+    #[test]
+    fn groups_by_client_then_model() {
+        let out = run_with(1);
+        assert_eq!(out.len(), 3);
+        for per_model in &out {
+            assert_eq!(per_model.len(), 2); // tiny preset R=2
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let seq = run_with(1);
+        for workers in [2usize, 4, 7] {
+            let par = run_with(workers);
+            assert_eq!(seq.len(), par.len());
+            for (a, b) in seq.iter().zip(par.iter()) {
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.encoded, y.encoded, "workers={workers}");
+                    assert_eq!(x.stats.steps, y.stats.steps);
+                    assert_eq!(x.stats.mean_loss, y.stats.mean_loss);
+                }
+            }
+        }
+    }
+}

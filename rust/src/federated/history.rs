@@ -6,7 +6,7 @@ use crate::eval::metrics::AccuracyReport;
 use crate::util::json::Json;
 
 /// One evaluated synchronization round.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RoundRecord {
     /// 0-based round index.
     pub round: usize,
@@ -20,7 +20,7 @@ pub struct RoundRecord {
 }
 
 /// The full run history.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct History {
     pub records: Vec<RoundRecord>,
 }

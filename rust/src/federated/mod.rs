@@ -1,20 +1,25 @@
 //! The federated coordinator — the paper's Algorithm 2 as a system.
 //!
 //! [`server`] owns the synchronization-round loop: sample S of K
-//! clients, run E local epochs on each (through a [`backend`] that is
-//! either the PJRT runtime executing AOT artifacts or the pure-rust
-//! reference trainer), aggregate per sub-model, account communication
-//! bytes, evaluate, early-stop. FedAvg is the degenerate case with one
-//! sub-model trained on raw class labels.
+//! clients, fan their local training out through the [`engine`] worker
+//! pool (through a [`backend`] that is either the PJRT runtime
+//! executing AOT artifacts or the pure-rust reference trainer), decode
+//! the [`wire`]-encoded updates, aggregate per sub-model, account
+//! communication bytes, evaluate, early-stop. FedAvg is the degenerate
+//! case with one sub-model trained on raw class labels.
 
 pub mod aggregate;
 pub mod backend;
 pub mod batcher;
 pub mod comm;
 pub mod early_stop;
+pub mod engine;
 pub mod history;
 pub mod sampler;
 pub mod server;
+pub mod wire;
 
 pub use backend::{RustBackend, TrainBackend};
+pub use engine::RoundEngine;
 pub use server::{run, RunOutput};
+pub use wire::{CodecSpec, EncodedUpdate};

@@ -2,17 +2,22 @@
 //!
 //! Per round `t`:
 //! 1. sample S of K clients ([`super::sampler`]),
-//! 2. for each selected client and each sub-model `j`, clone the global
-//!    parameters, run E local epochs through the [`TrainBackend`]
-//!    (`DeviceTrain`), and meter the down/up-load bytes,
-//! 3. aggregate each sub-model uniformly over the S updates
-//!    ([`super::aggregate`], line 17),
-//! 4. evaluate on the test set (predict per sub-model → scheme decode →
+//! 2. hand the `(client, sub-model)` work items to the
+//!    [`RoundEngine`](super::engine::RoundEngine), which runs E local
+//!    epochs per item through the [`TrainBackend`] (`DeviceTrain`) —
+//!    across `cfg.workers` threads when the backend allows — and
+//!    returns each client's [`super::wire`]-encoded update,
+//! 3. meter the downlink (dense global broadcast) and the uplink
+//!    (*encoded* bytes) in deterministic item order,
+//! 4. decode the updates and aggregate each sub-model uniformly over
+//!    the S clients ([`super::aggregate`], line 17),
+//! 5. evaluate on the test set (predict per sub-model → scheme decode →
 //!    top-k metrics) and early-stop on the mean top-k accuracy.
 //!
 //! The loop is algorithm-agnostic: FedAvg is a [`LabelScheme`] with one
 //! sub-model over class labels, FedMLH has R sub-models over bucket
-//! labels (see [`crate::algo`]).
+//! labels (see [`crate::algo`]). With the default `dense` codec and
+//! `workers = 1` this is bit-identical to the historical inline loop.
 
 use anyhow::Result;
 
@@ -27,11 +32,12 @@ use crate::util::rng::derive_seed;
 
 use super::aggregate::{aggregate, Weighting};
 use super::backend::TrainBackend;
-use super::batcher::ClientBatcher;
 use super::comm::CommMeter;
 use super::early_stop::EarlyStopper;
+use super::engine::RoundEngine;
 use super::history::{History, RoundRecord};
 use super::sampler::ClientSampler;
+use super::wire::decode_update;
 
 /// Everything a finished run reports (inputs to Tables 3–7, Figs 3–5).
 #[derive(Debug)]
@@ -50,6 +56,9 @@ pub struct RunOutput {
     pub model_bytes: usize,
     pub n_models: usize,
     pub total_seconds: f64,
+    /// The trained global sub-models at the end of the run (used by the
+    /// determinism tests and by callers that evaluate further).
+    pub final_globals: Vec<ModelParams>,
 }
 
 /// Run one federated training experiment.
@@ -90,47 +99,56 @@ pub fn run(
     let frequent_k = partition.class_owner.len().max(1);
     let test_batches = batch_ranges(test.len(), batch);
 
+    let engine = RoundEngine::new(cfg.workers);
+    if cfg.workers > 1 && backend.as_parallel().is_none() {
+        eprintln!(
+            "[server] backend '{}' is single-threaded; --workers {} falls back to sequential",
+            backend.name(),
+            cfg.workers
+        );
+    }
+
     let mut rounds_run = 0usize;
     'rounds: for round in 0..cfg.rounds {
         let t_round = std::time::Instant::now();
         let selected = sampler.sample(round);
 
-        // -- local training (Algorithm 2 lines 11–15)
-        let mut locals: Vec<Vec<ModelParams>> = Vec::with_capacity(selected.len());
+        // -- local training (Algorithm 2 lines 11–15), fanned out over
+        // the engine's worker pool; results come back in deterministic
+        // (selected order, sub-model) order regardless of worker count.
+        let updates = engine.run_round(
+            cfg, scheme, backend, train, partition, &globals, round, &selected,
+        )?;
+
+        // -- communication accounting + loss averaging, in item order.
+        // Downlink is the dense global broadcast; uplink is charged the
+        // codec's actual encoded bytes (Table 4 honesty under
+        // compression — the dense-equivalent is tracked alongside).
         let mut loss_sum = 0.0f64;
         let mut loss_n = 0usize;
-        for &client in &selected {
-            let shard = &partition.clients[client];
-            let mut per_model = Vec::with_capacity(n_models);
-            for j in 0..n_models {
-                // download global sub-model j
+        for per_model in &updates {
+            for upd in per_model {
                 comm.download(model_bytes_each);
-                let mut local = globals[j].clone();
-                let mut batcher = ClientBatcher::new(
-                    train,
-                    shard,
-                    scheme.target(j),
-                    batch,
-                    derive_seed(cfg.seed, ((round * cfg.clients + client) * n_models + j) as u64),
-                );
-                let stats = backend.local_train(&mut local, &mut batcher, cfg.local_epochs, cfg.lr)?;
-                if stats.steps > 0 {
-                    loss_sum += stats.mean_loss;
+                comm.upload_encoded(upd.encoded.byte_len(), model_bytes_each);
+                if upd.stats.steps > 0 {
+                    loss_sum += upd.stats.mean_loss;
                     loss_n += 1;
                 }
-                // upload update
-                comm.upload(model_bytes_each);
-                per_model.push(local);
             }
-            locals.push(per_model);
         }
 
-        // -- aggregation (line 17), uniform 1/S as in Algorithm 2
+        // -- decode + aggregation (line 17), uniform 1/S as in
+        // Algorithm 2. Decoding happens against the same global the
+        // clients downloaded (pre-aggregation `globals[j]`).
         for j in 0..n_models {
-            let refs: Vec<(&ModelParams, usize)> = locals
+            let decoded: Vec<ModelParams> = updates
+                .iter()
+                .map(|per_model| decode_update(&globals[j], &per_model[j].encoded))
+                .collect::<Result<_>>()?;
+            let refs: Vec<(&ModelParams, usize)> = decoded
                 .iter()
                 .zip(selected.iter())
-                .map(|(models, &client)| (&models[j], partition.clients[client].len()))
+                .map(|(model, &client)| (model, partition.clients[client].len()))
                 .collect();
             globals[j] = aggregate(&refs, Weighting::Uniform)?;
         }
@@ -169,6 +187,7 @@ pub fn run(
         total_seconds: t_start.elapsed().as_secs_f64(),
         history,
         comm,
+        final_globals: globals,
     })
 }
 

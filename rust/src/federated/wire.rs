@@ -1,0 +1,466 @@
+//! Update wire formats — the codec seam between a client's locally
+//! trained sub-model and the bytes that actually cross the network.
+//!
+//! The paper's headline is communication efficiency (Table 4: up to
+//! 18.75× less volume than FedAvg), and that accounting is only honest
+//! if the meter charges what a deployment would really ship. This
+//! module makes the payload explicit: clients encode their update with
+//! an [`CodecSpec`]-selected codec, [`super::comm::CommMeter`] charges
+//! the *encoded* byte count, and the server decodes before
+//! [`super::aggregate::aggregate`]. The default ([`CodecSpec::Dense`])
+//! reproduces the seed behavior bit-for-bit: raw `f32` parameters,
+//! `4 × num_params` bytes.
+//!
+//! ## Codecs and their related-work lineage
+//!
+//! - [`CodecSpec::Dense`] — raw `f32` values, the FedAvg/FedMLH
+//!   baseline wire format (McMahan et al., 2017). Lossless.
+//! - [`CodecSpec::QuantI8`] — per-tensor symmetric int8 quantization
+//!   (`scale = max|v| / 127`), the classic 4× "model compression for
+//!   upload" knob; the same role layer-wise pruning plays in FedLP
+//!   (Zhu et al., 2023, `Zhuzzq/FedLP`): a client-side lossy encoder
+//!   that the server can still aggregate after decoding.
+//! - [`CodecSpec::TopK`] — sparse coordinate updates selected by
+//!   largest |local − global| delta, the mechanism behind
+//!   category-aware sparse updates in CatFedAvg (arXiv 2011.07229) and
+//!   classic top-k gradient sparsification: ship only the coordinates
+//!   that moved. Entries carry the *replacement value* for the selected
+//!   coordinate (not the difference), so `frac = 1.0` reconstructs the
+//!   local model bit-for-bit; unselected coordinates keep the global
+//!   value the server already has.
+//!
+//! Error-feedback accumulators and server-side residual folding (the
+//! standard fixes for compounding sparsification error) are ROADMAP
+//! follow-ons; this layer deliberately stays stateless per round.
+//!
+//! ## Wire layout (little-endian)
+//!
+//! Both sides already share the model shape (it is broadcast once at
+//! setup, Algorithm 2 line 3), so no codec ships shape metadata:
+//!
+//! - `Dense`:    `num_params × f32`
+//! - `QuantI8`:  `n_tensors × f32` scales, then `num_params × i8`
+//! - `TopKDelta`: `u32` entry count, then per entry `u32` flat index +
+//!   `f32` value
+//!
+//! [`EncodedUpdate::byte_len`] is defined as `to_bytes().len()` and is
+//! what the meter charges — pinned by `tests/wire_roundtrip.rs`.
+
+use anyhow::{bail, Result};
+
+use crate::model::params::ModelParams;
+
+/// Which codec encodes client→server updates (CLI: `--codec`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CodecSpec {
+    /// Raw `f32` parameters — the seed wire format, lossless.
+    Dense,
+    /// Per-tensor symmetric int8 quantization (~4× smaller).
+    QuantI8,
+    /// Top-`frac` coordinates by |local − global|, `frac ∈ (0, 1]`.
+    TopK { frac: f32 },
+}
+
+impl CodecSpec {
+    /// Parse a CLI name; `topk_frac` only applies to the `topk` codec.
+    pub fn parse(name: &str, topk_frac: f32) -> Result<CodecSpec> {
+        match name {
+            "dense" => Ok(CodecSpec::Dense),
+            "q8" | "quant" => Ok(CodecSpec::QuantI8),
+            "topk" => {
+                if !(topk_frac > 0.0 && topk_frac <= 1.0) {
+                    bail!("topk fraction must be in (0, 1], got {topk_frac}");
+                }
+                Ok(CodecSpec::TopK { frac: topk_frac })
+            }
+            other => bail!("unknown codec '{other}' (expected dense|q8|topk)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecSpec::Dense => "dense",
+            CodecSpec::QuantI8 => "q8",
+            CodecSpec::TopK { .. } => "topk",
+        }
+    }
+}
+
+/// One encoded client update, ready to meter and ship.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EncodedUpdate {
+    /// Flat `f32` values in [`ModelParams::flat_values`] order.
+    Dense { values: Vec<f32> },
+    /// One scale per tensor plus `num_params` quantized values.
+    QuantI8 { scales: Vec<f32>, values: Vec<i8> },
+    /// Sorted `(flat index, replacement value)` pairs.
+    TopKDelta { entries: Vec<(u32, f32)> },
+}
+
+impl EncodedUpdate {
+    /// Exact payload size in bytes; equals `self.to_bytes().len()` and
+    /// is the number [`super::comm::CommMeter`] is charged.
+    pub fn byte_len(&self) -> usize {
+        match self {
+            EncodedUpdate::Dense { values } => 4 * values.len(),
+            EncodedUpdate::QuantI8 { scales, values } => 4 * scales.len() + values.len(),
+            EncodedUpdate::TopKDelta { entries } => 4 + 8 * entries.len(),
+        }
+    }
+
+    pub fn codec_name(&self) -> &'static str {
+        match self {
+            EncodedUpdate::Dense { .. } => "dense",
+            EncodedUpdate::QuantI8 { .. } => "q8",
+            EncodedUpdate::TopKDelta { .. } => "topk",
+        }
+    }
+
+    /// Serialize to the little-endian wire layout (module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        match self {
+            EncodedUpdate::Dense { values } => {
+                let mut out = Vec::with_capacity(4 * values.len());
+                for v in values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out
+            }
+            EncodedUpdate::QuantI8 { scales, values } => {
+                let mut out = Vec::with_capacity(4 * scales.len() + values.len());
+                for s in scales {
+                    out.extend_from_slice(&s.to_le_bytes());
+                }
+                for &q in values {
+                    out.push(q as u8);
+                }
+                out
+            }
+            EncodedUpdate::TopKDelta { entries } => {
+                let mut out = Vec::with_capacity(4 + 8 * entries.len());
+                out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+                for &(i, v) in entries {
+                    out.extend_from_slice(&i.to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out
+            }
+        }
+    }
+
+    /// Parse the wire layout back. `n_tensors`/`n_values` come from the
+    /// shared model shape (they are not on the wire).
+    pub fn from_bytes(
+        spec: CodecSpec,
+        n_tensors: usize,
+        n_values: usize,
+        bytes: &[u8],
+    ) -> Result<EncodedUpdate> {
+        fn f32_at(bytes: &[u8], off: usize) -> f32 {
+            f32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+        }
+        fn u32_at(bytes: &[u8], off: usize) -> u32 {
+            u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+        }
+        match spec {
+            CodecSpec::Dense => {
+                if bytes.len() != 4 * n_values {
+                    bail!(
+                        "dense payload is {} bytes, expected {}",
+                        bytes.len(),
+                        4 * n_values
+                    );
+                }
+                let values = (0..n_values).map(|i| f32_at(bytes, 4 * i)).collect();
+                Ok(EncodedUpdate::Dense { values })
+            }
+            CodecSpec::QuantI8 => {
+                let want = 4 * n_tensors + n_values;
+                if bytes.len() != want {
+                    bail!("q8 payload is {} bytes, expected {want}", bytes.len());
+                }
+                let scales = (0..n_tensors).map(|i| f32_at(bytes, 4 * i)).collect();
+                let values = bytes[4 * n_tensors..].iter().map(|&b| b as i8).collect();
+                Ok(EncodedUpdate::QuantI8 { scales, values })
+            }
+            CodecSpec::TopK { .. } => {
+                if bytes.len() < 4 {
+                    bail!("topk payload is {} bytes, expected at least 4", bytes.len());
+                }
+                let k = u32_at(bytes, 0) as usize;
+                if bytes.len() != 4 + 8 * k {
+                    bail!(
+                        "topk payload is {} bytes, header says {}",
+                        bytes.len(),
+                        4 + 8 * k
+                    );
+                }
+                let entries = (0..k)
+                    .map(|e| (u32_at(bytes, 4 + 8 * e), f32_at(bytes, 8 + 8 * e)))
+                    .collect();
+                Ok(EncodedUpdate::TopKDelta { entries })
+            }
+        }
+    }
+}
+
+/// Encode a client's trained sub-model against the global it downloaded.
+pub fn encode_update(
+    spec: CodecSpec,
+    global: &ModelParams,
+    local: &ModelParams,
+) -> Result<EncodedUpdate> {
+    if (global.d, global.hidden, global.out) != (local.d, local.hidden, local.out) {
+        bail!(
+            "encode shape mismatch: global ({},{},{}) vs local ({},{},{})",
+            global.d,
+            global.hidden,
+            global.out,
+            local.d,
+            local.hidden,
+            local.out
+        );
+    }
+    match spec {
+        CodecSpec::Dense => Ok(EncodedUpdate::Dense {
+            values: local.flat_values(),
+        }),
+        CodecSpec::QuantI8 => {
+            let mut scales = Vec::with_capacity(local.tensors.len());
+            let mut values = Vec::with_capacity(local.num_params());
+            for t in &local.tensors {
+                let mut max_abs = 0.0f32;
+                let mut finite = true;
+                for &v in t.data() {
+                    finite &= v.is_finite();
+                    max_abs = max_abs.max(v.abs());
+                }
+                if !finite {
+                    // Silently quantizing a diverged model would zero or
+                    // NaN-poison the whole tensor (f32::max skips NaN, and
+                    // `as i8` saturate-casts NaN to 0); fail loudly so q8
+                    // runs surface divergence the way dense runs do.
+                    bail!("q8 encode: non-finite parameter values in update");
+                }
+                let scale = max_abs / 127.0;
+                scales.push(scale);
+                if scale == 0.0 {
+                    values.extend(std::iter::repeat(0i8).take(t.len()));
+                } else {
+                    for &v in t.data() {
+                        values.push((v / scale).round().clamp(-127.0, 127.0) as i8);
+                    }
+                }
+            }
+            Ok(EncodedUpdate::QuantI8 { scales, values })
+        }
+        CodecSpec::TopK { frac } => {
+            if !(frac > 0.0 && frac <= 1.0) {
+                bail!("topk fraction must be in (0, 1], got {frac}");
+            }
+            let g = global.flat_values();
+            let l = local.flat_values();
+            let n = l.len();
+            let k = ((n as f64 * frac as f64).ceil() as usize).clamp(1, n);
+            // Deterministic selection: largest |delta| first, index as
+            // the tie-break. total_cmp gives a total order, so the kept
+            // set is unique and the parallel engine reproduces the
+            // sequential choice exactly; select_nth keeps this O(n)
+            // instead of a full sort over multi-million-param models.
+            let by_delta_desc = |a: &u32, b: &u32| {
+                let da = (l[*a as usize] - g[*a as usize]).abs();
+                let db = (l[*b as usize] - g[*b as usize]).abs();
+                db.total_cmp(&da).then(a.cmp(b))
+            };
+            let mut order: Vec<u32> = (0..n as u32).collect();
+            if k < n {
+                order.select_nth_unstable_by(k - 1, by_delta_desc);
+            }
+            let mut keep = order[..k].to_vec();
+            keep.sort_unstable();
+            let entries = keep.into_iter().map(|i| (i, l[i as usize])).collect();
+            Ok(EncodedUpdate::TopKDelta { entries })
+        }
+    }
+}
+
+/// Decode an update back into full parameters, against the same global
+/// the client encoded from.
+pub fn decode_update(global: &ModelParams, enc: &EncodedUpdate) -> Result<ModelParams> {
+    let n = global.num_params();
+    let mut out = ModelParams::zeros(global.d, global.hidden, global.out);
+    match enc {
+        EncodedUpdate::Dense { values } => {
+            out.set_from_flat(values)?;
+        }
+        EncodedUpdate::QuantI8 { scales, values } => {
+            if scales.len() != out.tensors.len() {
+                bail!(
+                    "q8 update has {} scales, model has {} tensors",
+                    scales.len(),
+                    out.tensors.len()
+                );
+            }
+            if values.len() != n {
+                bail!("q8 update has {} values, model has {n}", values.len());
+            }
+            let mut off = 0;
+            for (t, &scale) in out.tensors.iter_mut().zip(scales.iter()) {
+                let len = t.len();
+                let src = &values[off..off + len];
+                for (dst, &q) in t.data_mut().iter_mut().zip(src.iter()) {
+                    *dst = q as f32 * scale;
+                }
+                off += len;
+            }
+        }
+        EncodedUpdate::TopKDelta { entries } => {
+            let mut vals = global.flat_values();
+            for &(i, v) in entries {
+                let i = i as usize;
+                if i >= n {
+                    bail!("topk update index {i} out of range (model has {n} params)");
+                }
+                vals[i] = v;
+            }
+            out.set_from_flat(&vals)?;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_pair(seed: u64) -> (ModelParams, ModelParams) {
+        let global = ModelParams::init(5, 4, 7, seed);
+        let mut local = global.clone();
+        let mut rng = Rng::new(seed ^ 0xabc);
+        for t in local.tensors.iter_mut() {
+            for v in t.data_mut() {
+                *v += (rng.next_f32() - 0.5) * 0.2;
+            }
+        }
+        (global, local)
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(CodecSpec::parse("dense", 0.1).unwrap(), CodecSpec::Dense);
+        assert_eq!(CodecSpec::parse("q8", 0.1).unwrap(), CodecSpec::QuantI8);
+        assert_eq!(
+            CodecSpec::parse("topk", 0.25).unwrap(),
+            CodecSpec::TopK { frac: 0.25 }
+        );
+        assert!(CodecSpec::parse("topk", 0.0).is_err());
+        assert!(CodecSpec::parse("topk", 1.5).is_err());
+        assert!(CodecSpec::parse("gzip", 0.1).is_err());
+    }
+
+    #[test]
+    fn dense_is_lossless_and_sized_like_the_model() {
+        let (global, local) = random_pair(1);
+        let enc = encode_update(CodecSpec::Dense, &global, &local).unwrap();
+        assert_eq!(enc.byte_len(), local.byte_size());
+        let back = decode_update(&global, &enc).unwrap();
+        assert_eq!(back, local);
+    }
+
+    #[test]
+    fn q8_error_is_scale_bounded() {
+        let (global, local) = random_pair(2);
+        let enc = encode_update(CodecSpec::QuantI8, &global, &local).unwrap();
+        let back = decode_update(&global, &enc).unwrap();
+        for (t_local, t_back) in local.tensors.iter().zip(back.tensors.iter()) {
+            let max_abs = t_local.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = max_abs / 127.0;
+            let err = t_local.max_abs_diff(t_back).unwrap();
+            assert!(err <= scale * 0.5 + 1e-7, "err {err} vs scale {scale}");
+        }
+    }
+
+    #[test]
+    fn topk_full_fraction_reconstructs_exactly() {
+        let (global, local) = random_pair(3);
+        let enc = encode_update(CodecSpec::TopK { frac: 1.0 }, &global, &local).unwrap();
+        let back = decode_update(&global, &enc).unwrap();
+        assert_eq!(back, local);
+    }
+
+    #[test]
+    fn topk_partial_touches_only_k_coordinates() {
+        let (global, local) = random_pair(4);
+        let n = global.num_params();
+        let frac = 0.1f32;
+        let enc = encode_update(CodecSpec::TopK { frac }, &global, &local).unwrap();
+        let entries = match &enc {
+            EncodedUpdate::TopKDelta { entries } => entries,
+            other => panic!("wrong variant {other:?}"),
+        };
+        let k = ((n as f64 * frac as f64).ceil() as usize).clamp(1, n);
+        assert_eq!(entries.len(), k);
+        let back = decode_update(&global, &enc).unwrap();
+        let (gf, lf, bf) = (global.flat_values(), local.flat_values(), back.flat_values());
+        let mut kept = 0usize;
+        for i in 0..n {
+            if bf[i] == lf[i] && bf[i] != gf[i] {
+                kept += 1;
+            } else {
+                assert_eq!(bf[i], gf[i], "coordinate {i} neither kept nor global");
+            }
+        }
+        assert!(kept <= k);
+    }
+
+    #[test]
+    fn bytes_roundtrip_every_codec() {
+        let (global, local) = random_pair(5);
+        let n_tensors = global.tensors.len();
+        let n = global.num_params();
+        for spec in [
+            CodecSpec::Dense,
+            CodecSpec::QuantI8,
+            CodecSpec::TopK { frac: 0.3 },
+        ] {
+            let enc = encode_update(spec, &global, &local).unwrap();
+            let bytes = enc.to_bytes();
+            assert_eq!(bytes.len(), enc.byte_len(), "{}", enc.codec_name());
+            let back = EncodedUpdate::from_bytes(spec, n_tensors, n, &bytes).unwrap();
+            assert_eq!(back, enc);
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let a = ModelParams::zeros(2, 2, 2);
+        let b = ModelParams::zeros(3, 2, 2);
+        assert!(encode_update(CodecSpec::Dense, &a, &b).is_err());
+    }
+
+    #[test]
+    fn q8_rejects_non_finite_updates() {
+        let global = ModelParams::zeros(2, 2, 2);
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut local = global.clone();
+            local.tensors[0].data_mut()[1] = bad;
+            let err = encode_update(CodecSpec::QuantI8, &global, &local);
+            assert!(err.is_err(), "q8 must reject {bad}");
+        }
+        // dense still round-trips non-finite values (visibly, not silently)
+        let mut local = global.clone();
+        local.tensors[0].data_mut()[0] = f32::INFINITY;
+        let enc = encode_update(CodecSpec::Dense, &global, &local).unwrap();
+        let back = decode_update(&global, &enc).unwrap();
+        assert!(back.tensors[0].data()[0].is_infinite());
+    }
+
+    #[test]
+    fn all_zero_model_quantizes_to_zero_scales() {
+        let z = ModelParams::zeros(3, 2, 4);
+        let enc = encode_update(CodecSpec::QuantI8, &z, &z).unwrap();
+        let back = decode_update(&z, &enc).unwrap();
+        assert_eq!(back, z);
+    }
+}

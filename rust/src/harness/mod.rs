@@ -23,6 +23,7 @@ use crate::config::{Algo, ExperimentConfig};
 use crate::data::synth::{generate_preset, SynthData};
 use crate::federated::backend::{RustBackend, TrainBackend};
 use crate::federated::server::{self, RunOutput};
+use crate::federated::wire::CodecSpec;
 use crate::partition::noniid::{partition as noniid_partition, NonIidOptions};
 use crate::partition::Partition;
 use crate::runtime::{RuntimeClient, XlaBackend, DEFAULT_ARTIFACT_DIR};
@@ -67,6 +68,10 @@ pub struct HarnessOpts {
     pub fast: bool,
     pub seed: u64,
     pub verbose: bool,
+    /// Round-engine worker threads (`ExperimentConfig::workers`).
+    pub workers: usize,
+    /// Update wire codec (`ExperimentConfig::codec`).
+    pub codec: CodecSpec,
 }
 
 impl Default for HarnessOpts {
@@ -79,6 +84,8 @@ impl Default for HarnessOpts {
             fast: false,
             seed: 42,
             verbose: false,
+            workers: 1,
+            codec: CodecSpec::Dense,
         }
     }
 }
@@ -94,6 +101,8 @@ impl HarnessOpts {
         if self.fast && cfg.override_b == 0 {
             cfg.fast_artifacts = true;
         }
+        cfg.workers = self.workers;
+        cfg.codec = self.codec;
     }
 }
 

@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use fedmlh::config::presets::{by_name, paper_presets};
 use fedmlh::config::{Algo, DatasetPreset, ExperimentConfig};
+use fedmlh::federated::wire::CodecSpec;
 use fedmlh::harness::{self, figures, report, tables, BackendKind, HarnessOpts, PairResult};
 use fedmlh::hashing::label_hash::LabelHasher;
 use fedmlh::partition::divergence;
@@ -63,6 +64,9 @@ fn common_args(args: Args) -> Args {
         .flag("seed", "42", "root seed for data/partition/hashing/sampling")
         .flag("rounds", "0", "override synchronization rounds (0 = preset default 70)")
         .flag("out", "results", "output directory for CSV/markdown")
+        .flag("workers", "1", "round-engine worker threads (1 = sequential; results identical)")
+        .flag("codec", "dense", "update wire codec: dense | q8 | topk")
+        .flag("topk-frac", "0.1", "fraction of coordinates the topk codec ships")
         .switch("fast", "use the *_fast (jnp-lowered) artifact family — same math, ~7x faster on CPU")
         .switch("quiet", "suppress progress logging")
 }
@@ -77,6 +81,8 @@ fn opts_from(p: &Parsed) -> Result<HarnessOpts> {
         fast: p.get_bool("fast"),
         seed: p.get_u64("seed")?,
         verbose: !p.get_bool("quiet"),
+        workers: p.get_usize("workers")?,
+        codec: CodecSpec::parse(p.get("codec"), p.get_f32("topk-frac")?)?,
     })
 }
 
@@ -125,7 +131,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let scheme = fedmlh::algo::scheme_for(&cfg, algo, &world.data.train);
     if opts.verbose {
         eprintln!(
-            "[run] {} on '{}' ({}), K={} S={} E={} rounds≤{} backend={}",
+            "[run] {} on '{}' ({}), K={} S={} E={} rounds≤{} backend={} workers={} codec={}",
             algo.name(),
             cfg.preset.name,
             cfg.preset.paper_analog,
@@ -133,7 +139,9 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             cfg.clients_per_round,
             cfg.local_epochs,
             cfg.rounds,
-            backend.name()
+            backend.name(),
+            cfg.workers,
+            cfg.codec.name()
         );
     }
     let out = fedmlh::federated::server::run(
@@ -165,6 +173,13 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         report::mb(out.model_bytes as u64),
         out.history.mean_round_seconds(),
         out.total_seconds
+    );
+    println!(
+        "uplink: {} actual vs {} dense-equivalent ({:.2}x compression, codec={})",
+        report::mb(out.comm.uploaded()),
+        report::mb(out.comm.uploaded_dense_equiv()),
+        out.comm.upload_compression(),
+        cfg.codec.name()
     );
     if let Some(dir) = &opts.out_dir {
         let name = format!("run_{}_{}.csv", cfg.preset.name, algo.name());

@@ -109,6 +109,39 @@ impl ModelParams {
         Ok(())
     }
 
+    /// All parameter values as one flat vector in tensor order
+    /// `w1, b1, w2, b2, w3, b3` — the view the update wire codecs
+    /// ([`crate::federated::wire`]) encode and the PJRT buffers consume.
+    pub fn flat_values(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_params());
+        for t in &self.tensors {
+            out.extend_from_slice(t.data());
+        }
+        out
+    }
+
+    /// Overwrite every tensor from a flat value buffer (the inverse of
+    /// [`Self::flat_values`]; length-checked).
+    pub fn set_from_flat(&mut self, values: &[f32]) -> Result<()> {
+        if values.len() != self.num_params() {
+            bail!(
+                "flat buffer has {} values, model ({},{},{}) needs {}",
+                values.len(),
+                self.d,
+                self.hidden,
+                self.out,
+                self.num_params()
+            );
+        }
+        let mut off = 0;
+        for t in self.tensors.iter_mut() {
+            let len = t.len();
+            t.data_mut().copy_from_slice(&values[off..off + len]);
+            off += len;
+        }
+        Ok(())
+    }
+
     /// Max |Δ| across all tensors (numeric cross-checks).
     pub fn max_abs_diff(&self, other: &ModelParams) -> Result<f32> {
         let mut m = 0.0f32;
@@ -178,6 +211,18 @@ mod tests {
         assert!(acc.tensors[0].data().iter().all(|&v| (v - 2.0).abs() < 1e-6));
         let wrong = ModelParams::zeros(3, 2, 2);
         assert!(acc.accumulate(&wrong, 1.0).is_err());
+    }
+
+    #[test]
+    fn flat_roundtrip_preserves_every_tensor() {
+        let a = ModelParams::init(6, 4, 9, 11);
+        let flat = a.flat_values();
+        assert_eq!(flat.len(), a.num_params());
+        let mut b = ModelParams::zeros(6, 4, 9);
+        b.set_from_flat(&flat).unwrap();
+        assert_eq!(a, b);
+        // length mismatch is rejected
+        assert!(b.set_from_flat(&flat[..flat.len() - 1]).is_err());
     }
 
     #[test]

@@ -5,21 +5,40 @@
 //!
 //! - [`manifest`] — parses `artifacts/manifest.json` (entry signatures,
 //!   shapes, hashes) so buffers are validated *before* the first execute.
-//! - [`client`] — a [`client::RuntimeClient`]: one `PjRtClient` plus a
-//!   compile cache keyed by artifact name (each HLO module is compiled
-//!   exactly once per process, then re-executed).
-//! - [`train_exec`] — [`train_exec::XlaBackend`], the production
+//!   Pure rust; always compiled.
+//! - `client` — a `RuntimeClient`: one `PjRtClient` plus a compile cache
+//!   keyed by artifact name (each HLO module is compiled exactly once
+//!   per process, then re-executed). Requires the `xla` cargo feature.
+//! - `train_exec` — `XlaBackend`, the production
 //!   [`crate::federated::backend::TrainBackend`]: the local-training
 //!   loop, prediction and count-sketch decode all route through compiled
-//!   HLO executables.
+//!   HLO executables. Requires the `xla` cargo feature.
+//!
+//! Without the `xla` feature (the default in environments where the
+//! `xla` PJRT bindings are not vendored), [`stub`]-provided types with
+//! the identical API keep every caller compiling; constructing them
+//! fails with an actionable error and the pure-rust backend
+//! ([`crate::federated::backend::RustBackend`]) is the training path.
 
-pub mod client;
 pub mod manifest;
+
+#[cfg(feature = "xla")]
+pub mod client;
+#[cfg(feature = "xla")]
 pub mod train_exec;
 
+#[cfg(not(feature = "xla"))]
+pub mod stub;
+
+#[cfg(feature = "xla")]
 pub use client::RuntimeClient;
-pub use manifest::{ArtifactEntry, Dtype, Manifest, TensorSpec};
+#[cfg(feature = "xla")]
 pub use train_exec::XlaBackend;
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{RuntimeClient, XlaBackend};
+
+pub use manifest::{ArtifactEntry, Dtype, Manifest, TensorSpec};
 
 /// Default artifact directory, relative to the repo root (where `cargo`
 /// runs from). Overridable everywhere via `--artifacts <dir>`.

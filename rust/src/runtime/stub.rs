@@ -1,0 +1,177 @@
+//! API-identical stand-ins for the PJRT runtime, compiled when the
+//! `xla` cargo feature is **off**.
+//!
+//! The real `RuntimeClient`/`XlaBackend` (see `runtime::client` and
+//! `runtime::train_exec`) bind the external `xla` crate, which is not
+//! vendored in offline build environments. These stubs expose the same
+//! constructors and methods so the CLI, harness, benches and
+//! integration tests compile unchanged.
+//!
+//! The split of responsibilities mirrors what is actually xla-bound:
+//! [`RuntimeClient`] still loads and serves the artifact **manifest**
+//! (pure rust — `fedmlh artifacts` keeps working without the feature),
+//! while anything that would compile or execute HLO ([`XlaBackend`])
+//! fails at construction with an actionable error pointing at
+//! `--backend rust` / the missing feature.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Algo, ExperimentConfig};
+use crate::federated::backend::{TrainBackend, TrainStats};
+use crate::federated::batcher::ClientBatcher;
+use crate::model::params::ModelParams;
+
+use super::manifest::Manifest;
+
+const FEATURE_HINT: &str = "this build has no PJRT runtime (compiled without the `xla` cargo \
+     feature) — use `--backend rust`, or rebuild with `--features xla` \
+     and the xla crate available";
+
+/// Stand-in for the PJRT CPU client: serves the parsed manifest (pure
+/// rust), reports no compiled executables and no platform.
+#[derive(Debug)]
+pub struct RuntimeClient {
+    manifest: Manifest,
+}
+
+impl RuntimeClient {
+    /// Loads `<dir>/manifest.json` exactly like the real client (same
+    /// missing-artifact errors); succeeds so manifest-only callers
+    /// (e.g. `fedmlh artifacts`) work without the `xla` feature.
+    pub fn new(artifact_dir: &Path) -> Result<Rc<Self>> {
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(Rc::new(RuntimeClient { manifest }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable (no `xla` feature)".to_string()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        0
+    }
+}
+
+/// Stand-in for the HLO-executing training backend; never constructible
+/// (the `Infallible` field is uninhabited).
+pub struct XlaBackend {
+    _uninhabited: std::convert::Infallible,
+}
+
+impl XlaBackend {
+    pub fn new(_rt: Rc<RuntimeClient>, _cfg: &ExperimentConfig, _algo: Algo) -> Result<Self> {
+        bail!("{FEATURE_HINT}")
+    }
+
+    pub fn open(artifact_dir: &Path, cfg: &ExperimentConfig, algo: Algo) -> Result<Self> {
+        let rt = RuntimeClient::new(artifact_dir)?;
+        Self::new(rt, cfg, algo)
+    }
+
+    pub fn hlo_decode(&self) -> bool {
+        false
+    }
+}
+
+impl TrainBackend for XlaBackend {
+    fn local_train(
+        &self,
+        _params: &mut ModelParams,
+        _batcher: &mut ClientBatcher<'_>,
+        _epochs: usize,
+        _lr: f32,
+    ) -> Result<TrainStats> {
+        bail!("{FEATURE_HINT}")
+    }
+
+    fn predict(&self, _params: &ModelParams, _x: &[f32]) -> Result<Vec<f32>> {
+        bail!("{FEATURE_HINT}")
+    }
+
+    fn decode(
+        &self,
+        _logits: &[f32],
+        _idx: &[i32],
+        _r: usize,
+        _rows: usize,
+        _b: usize,
+        _p: usize,
+    ) -> Result<Vec<f32>> {
+        bail!("{FEATURE_HINT}")
+    }
+
+    fn batch_size(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &str {
+        "xla-unavailable"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL_MANIFEST: &str = r#"{
+      "format": 1,
+      "artifacts": {
+        "tiny.fedavg.train": {
+          "file": "tiny.fedavg.train.hlo.txt",
+          "kind": "train",
+          "preset": "tiny",
+          "inputs": [{"name": "w1", "dtype": "f32", "shape": [32, 16]}],
+          "outputs": [{"name": "loss", "dtype": "f32", "shape": []}]
+        }
+      }
+    }"#;
+
+    // Tests run in parallel: `tag` keeps each test's directory private.
+    fn temp_artifact_dir(tag: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("fedmlh_stub_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), MINIMAL_MANIFEST).unwrap();
+        dir
+    }
+
+    #[test]
+    fn missing_dir_reports_make_artifacts() {
+        let err = RuntimeClient::new(Path::new("/nonexistent/artifacts"))
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn manifest_only_paths_work_without_the_feature() {
+        let dir = temp_artifact_dir("manifest_only");
+        let rt = RuntimeClient::new(&dir).unwrap();
+        assert!(rt.manifest().contains("tiny.fedavg.train"));
+        assert_eq!(rt.compiled_count(), 0);
+        assert!(rt.platform_name().contains("unavailable"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn backend_construction_names_the_feature() {
+        let dir = temp_artifact_dir("backend");
+        let cfg = ExperimentConfig::preset("tiny").unwrap();
+        let rt = RuntimeClient::new(&dir).unwrap();
+        let err = XlaBackend::new(rt, &cfg, Algo::FedAvg)
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("xla"), "{err}");
+        assert!(err.contains("--backend rust"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -173,6 +173,12 @@ impl Parsed {
             .map_err(|e| anyhow!("--{name}: {e}"))
     }
 
+    pub fn get_f32(&self, name: &str) -> Result<f32> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
     pub fn get_bool(&self, name: &str) -> bool {
         self.get(name) == "true"
     }
@@ -193,6 +199,7 @@ mod tests {
     fn parser() -> Args {
         Args::new("t", "test")
             .flag("rounds", "70", "rounds")
+            .flag("frac", "0.25", "a fraction")
             .switch("quick", "quick mode")
             .required("preset", "preset name")
     }
@@ -205,6 +212,8 @@ mod tests {
         assert_eq!(p.get("preset"), "eurlex");
         assert_eq!(p.get_usize("rounds").unwrap(), 70);
         assert!(p.get_bool("quick"));
+        assert_eq!(p.get_f32("frac").unwrap(), 0.25);
+        assert!(p.get_f32("preset").is_err(), "non-numeric must error");
     }
 
     #[test]

@@ -17,7 +17,10 @@ fn artifact_dir() -> PathBuf {
 }
 
 fn available() -> bool {
-    artifact_dir().join("manifest.json").exists()
+    // Needs both the compiled PJRT runtime (`xla` cargo feature — the
+    // default build ships an API stub whose XlaBackend cannot
+    // construct) and the AOT artifacts from `make artifacts`.
+    cfg!(feature = "xla") && artifact_dir().join("manifest.json").exists()
 }
 
 fn quick_cfg(rounds: usize) -> ExperimentConfig {
