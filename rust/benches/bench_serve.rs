@@ -1,0 +1,75 @@
+//! Serving-path benchmarks: checkpoint encode/decode cost and predict
+//! throughput, single-row vs batched — the numbers that justify the
+//! micro-batcher (one [rows, d] forward amortizes the weight-matrix
+//! streaming that dominates a single-row pass) and quantify what q8
+//! checkpoint loading costs relative to dense.
+//!
+//! Weights are untrained (`ModelParams::init`): throughput does not
+//! depend on parameter values.
+
+use std::sync::Arc;
+
+use fedmlh::bench::Bencher;
+use fedmlh::config::{Algo, ExperimentConfig};
+use fedmlh::model::params::ModelParams;
+use fedmlh::serve::{Checkpoint, CheckpointCodec, InferenceEngine, Predictor, ServeMetrics};
+use fedmlh::util::rng::Rng;
+
+fn eurlex_checkpoint() -> Checkpoint {
+    let cfg = ExperimentConfig::preset("eurlex").unwrap();
+    let models: Vec<ModelParams> = (0..cfg.r())
+        .map(|j| ModelParams::init(cfg.preset.d, cfg.preset.hidden, cfg.b(), 1 + j as u64))
+        .collect();
+    Checkpoint::from_run(&cfg, Algo::FedMlh, cfg.preset.d, cfg.preset.p, models).unwrap()
+}
+
+fn main() {
+    let mut bench = Bencher::from_env("serve");
+    let ckpt = eurlex_checkpoint();
+    let d = ckpt.meta.d;
+
+    // -- checkpoint codec cost + achieved sizes
+    let dense_bytes = ckpt.to_bytes(CheckpointCodec::Dense).unwrap();
+    let q8_bytes = ckpt.to_bytes(CheckpointCodec::QuantI8).unwrap();
+    let ratio = dense_bytes.len() as f64 / q8_bytes.len() as f64;
+    bench.bench_val("checkpoint/encode/dense", || {
+        ckpt.to_bytes(CheckpointCodec::Dense).unwrap()
+    });
+    bench.bench_val(&format!("checkpoint/encode/q8 ({ratio:.1}x)"), || {
+        ckpt.to_bytes(CheckpointCodec::QuantI8).unwrap()
+    });
+    bench.bench_val("checkpoint/decode/dense", || {
+        Checkpoint::from_bytes(&dense_bytes).unwrap()
+    });
+    bench.bench_val("checkpoint/decode/q8", || {
+        Checkpoint::from_bytes(&q8_bytes).unwrap()
+    });
+
+    // -- raw engine throughput: single row vs one batched forward
+    let engine = InferenceEngine::new(Checkpoint::from_bytes(&q8_bytes).unwrap()).unwrap();
+    let mut rng = Rng::new(7);
+    let row: Vec<f32> = (0..d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+    bench.bench_val("predict/engine/rows1_top5", || {
+        engine.predict_topk(&row, 1, 5).unwrap()
+    });
+    for rows in [8usize, 32] {
+        let batch: Vec<f32> = (0..rows * d).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        bench.bench_val(&format!("predict/engine/rows{rows}_top5"), || {
+            engine.predict_topk(&batch, rows, 5).unwrap()
+        });
+    }
+
+    // -- through the micro-batching queue (sequential caller: measures
+    // the queue/handoff overhead over the raw single-row forward)
+    let predictor = Predictor::new(
+        InferenceEngine::new(Checkpoint::from_bytes(&q8_bytes).unwrap()).unwrap(),
+        2,
+        32,
+        Arc::new(ServeMetrics::new()),
+    );
+    bench.bench_val("predict/queue/rows1_top5", || {
+        predictor.predict(row.clone(), 5).unwrap()
+    });
+
+    bench.finish();
+}

@@ -38,6 +38,7 @@ fn main() {
                 CodecSpec::Dense,
                 CodecSpec::QuantI8,
                 CodecSpec::TopK { frac: 0.1 },
+                CodecSpec::TopKPacked { frac: 0.1 },
             ] {
                 let enc = encode_update(codec, &global, &local).unwrap();
                 let ratio = dense_bytes as f64 / enc.byte_len() as f64;

@@ -9,8 +9,9 @@
 
 use anyhow::Result;
 
-use fedmlh::config::ExperimentConfig;
+use fedmlh::config::{Algo, ExperimentConfig};
 use fedmlh::harness::{self, report, BackendKind, HarnessOpts};
+use fedmlh::serve::{Checkpoint, CheckpointCodec, InferenceEngine};
 
 fn main() -> Result<()> {
     // 1. Pick a dataset preset and the paper's FL setup (K = 10 clients,
@@ -58,6 +59,29 @@ fn main() -> Result<()> {
         "fedmlh round {}: mean train loss {:.4}",
         last.round + 1,
         last.mean_loss
+    );
+
+    // 6. Persist the trained FedMLH model as a q8 serving checkpoint,
+    //    reload it, and answer one prediction through the inference
+    //    engine — the same path `fedmlh serve` exposes over HTTP.
+    //    `pair.cfg` (not the local `cfg`) carries the seed the run
+    //    actually trained with, so the checkpoint's hash tables match.
+    let ckpt = Checkpoint::from_run(
+        &pair.cfg,
+        Algo::FedMlh,
+        pair.cfg.preset.d,
+        pair.cfg.preset.p,
+        pair.fedmlh.final_globals.clone(),
+    )?;
+    let path = std::env::temp_dir().join("fedmlh_quickstart.fmlh");
+    ckpt.save(&path, CheckpointCodec::QuantI8)?;
+    let engine = InferenceEngine::new(Checkpoint::load(&path)?)?;
+    let world = harness::build_world(&pair.cfg);
+    let top = engine.predict_topk(world.data.test.features_of(0), 1, 5)?.remove(0);
+    println!(
+        "checkpoint {} ({:.2}x smaller than dense f32) → top-5 for test sample 0: {top:?}",
+        path.display(),
+        ckpt.dense_byte_size() as f64 / std::fs::metadata(&path)?.len() as f64
     );
     Ok(())
 }

@@ -17,6 +17,17 @@ use crate::util::rng::derive_seed;
 
 use super::LabelScheme;
 
+/// Seed-derivation stream for the label hash tables. Shared with the
+/// serving checkpoint ([`crate::serve::checkpoint`]) so a reloaded
+/// model reconstructs bit-identical tables from the stored seed.
+pub const LABEL_HASH_STREAM: u64 = 0x3e_747ab1e5;
+
+/// The [`LabelHasher`] seed a run with root seed `root_seed` draws its
+/// tables from (Algorithm 2 line 3's broadcast, as a derived seed).
+pub fn label_hash_seed(root_seed: u64) -> u64 {
+    derive_seed(root_seed, LABEL_HASH_STREAM)
+}
+
 /// R-sub-model scheme with shared hash tables.
 pub struct FedMlhScheme {
     hasher: Arc<LabelHasher>,
@@ -27,12 +38,7 @@ pub struct FedMlhScheme {
 
 impl FedMlhScheme {
     pub fn new(seed: u64, r: usize, p: usize, b: usize) -> Self {
-        let hasher = Arc::new(LabelHasher::new(
-            derive_seed(seed, 0x3e_747ab1e5),
-            r,
-            p,
-            b,
-        ));
+        let hasher = Arc::new(LabelHasher::new(label_hash_seed(seed), r, p, b));
         let idx = hasher.index_matrix_i32();
         FedMlhScheme { hasher, idx, p }
     }

@@ -173,7 +173,7 @@ impl ExperimentConfig {
         if self.workers == 0 {
             bail!("workers must be positive (1 = sequential)");
         }
-        if let CodecSpec::TopK { frac } = self.codec {
+        if let CodecSpec::TopK { frac } | CodecSpec::TopKPacked { frac } = self.codec {
             if !(frac > 0.0 && frac <= 1.0) {
                 bail!("topk codec fraction must be in (0, 1], got {frac}");
             }
@@ -236,6 +236,10 @@ mod tests {
         cfg.codec = CodecSpec::TopK { frac: 0.1 };
         cfg.validate().unwrap();
         cfg.codec = CodecSpec::TopK { frac: 1.5 };
+        assert!(cfg.validate().is_err());
+        cfg.codec = CodecSpec::TopKPacked { frac: 0.1 };
+        cfg.validate().unwrap();
+        cfg.codec = CodecSpec::TopKPacked { frac: 1.5 };
         assert!(cfg.validate().is_err());
     }
 

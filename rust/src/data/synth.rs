@@ -88,6 +88,16 @@ impl Prototypes {
     }
 }
 
+/// Seed-derivation stream for the shared feature-hash function. Shared
+/// with the serving checkpoint ([`crate::serve::checkpoint`]) so a
+/// server can hash raw sparse inputs exactly like the training data.
+pub const FEATURE_HASH_STREAM: u64 = 0x5f_02;
+
+/// The [`FeatureHasher`] seed a world with root seed `root_seed` uses.
+pub fn feature_hash_seed(root_seed: u64) -> u64 {
+    derive_seed(root_seed, FEATURE_HASH_STREAM)
+}
+
 /// Generated train/test pair.
 pub struct SynthData {
     pub train: Dataset,
@@ -143,7 +153,7 @@ fn make_sample(
 pub fn generate(spec: &SynthSpec, seed: u64) -> SynthData {
     let mut proto_rng = Rng::new(derive_seed(seed, 0x5f_01));
     let protos = Prototypes::generate(spec, &mut proto_rng);
-    let hasher = FeatureHasher::new(derive_seed(seed, 0x5f_02), spec.d);
+    let hasher = FeatureHasher::new(feature_hash_seed(seed), spec.d);
     let zipf = Zipf::new(spec.p, spec.zipf_alpha);
 
     let gen_split = |n: usize, stream: u64| {

@@ -44,6 +44,9 @@ use super::wire::{encode_update, EncodedUpdate};
 pub struct ClientUpdate {
     /// Local-training statistics (steps, mean loss, wall-clock).
     pub stats: TrainStats,
+    /// Wall-clock seconds spent wire-encoding the update (the
+    /// client-side cost of the codec; telemetry for `RoundTiming`).
+    pub encode_seconds: f64,
     /// The wire-encoded update the client ships back.
     pub encoded: EncodedUpdate,
 }
@@ -104,8 +107,13 @@ impl RoundEngine {
                 ),
             );
             let stats = be.local_train(&mut local, &mut batcher, cfg.local_epochs, cfg.lr)?;
+            let t_enc = std::time::Instant::now();
             let encoded = encode_update(cfg.codec, &globals[j], &local)?;
-            Ok(ClientUpdate { stats, encoded })
+            Ok(ClientUpdate {
+                stats,
+                encode_seconds: t_enc.elapsed().as_secs_f64(),
+                encoded,
+            })
         };
 
         let pool = self.workers.min(n_items.max(1));

@@ -5,6 +5,21 @@
 use crate::eval::metrics::AccuracyReport;
 use crate::util::json::Json;
 
+/// Where one round's wall-clock went (`fedmlh run` prints the mean
+/// split so slow runs can be attributed to training, encoding or
+/// aggregation without a profiler).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundTiming {
+    /// Local-training seconds summed over the round's `(client,
+    /// sub-model)` items — aggregate compute time, which exceeds the
+    /// wall-clock share when the engine runs with `workers > 1`.
+    pub train_seconds: f64,
+    /// Update-encoding (wire codec) seconds, summed over items.
+    pub encode_seconds: f64,
+    /// Wall-clock seconds of server-side decode + aggregation.
+    pub aggregate_seconds: f64,
+}
+
 /// One evaluated synchronization round.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RoundRecord {
@@ -17,6 +32,8 @@ pub struct RoundRecord {
     pub round_seconds: f64,
     /// Mean local training loss across the round's clients.
     pub mean_loss: f64,
+    /// Train / encode / aggregate split of this round.
+    pub timing: RoundTiming,
 }
 
 /// The full run history.
@@ -60,15 +77,34 @@ impl History {
         self.records.iter().map(|r| r.round_seconds).sum::<f64>() / self.records.len() as f64
     }
 
+    /// Mean per-round train/encode/aggregate split over the evaluated
+    /// rounds (zeros when no round was recorded).
+    pub fn mean_timing(&self) -> RoundTiming {
+        let mut t = RoundTiming::default();
+        if self.records.is_empty() {
+            return t;
+        }
+        for r in &self.records {
+            t.train_seconds += r.timing.train_seconds;
+            t.encode_seconds += r.timing.encode_seconds;
+            t.aggregate_seconds += r.timing.aggregate_seconds;
+        }
+        let n = self.records.len() as f64;
+        t.train_seconds /= n;
+        t.encode_seconds /= n;
+        t.aggregate_seconds /= n;
+        t
+    }
+
     /// CSV with one row per evaluated round (figure regeneration).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,top1,top3,top5,freq1,freq3,freq5,infreq1,infreq3,infreq5,comm_bytes,round_seconds,mean_loss\n",
+            "round,top1,top3,top5,freq1,freq3,freq5,infreq1,infreq3,infreq5,comm_bytes,round_seconds,mean_loss,train_seconds,encode_seconds,aggregate_seconds\n",
         );
         for r in &self.records {
             let a = &r.accuracy;
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.4},{:.6}\n",
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.4},{:.6},{:.4},{:.4},{:.4}\n",
                 r.round,
                 a.top1,
                 a.top3,
@@ -81,7 +117,10 @@ impl History {
                 a.infreq5,
                 r.comm_bytes,
                 r.round_seconds,
-                r.mean_loss
+                r.mean_loss,
+                r.timing.train_seconds,
+                r.timing.encode_seconds,
+                r.timing.aggregate_seconds
             ));
         }
         out
@@ -102,6 +141,9 @@ impl History {
                         ("comm_bytes", Json::num(r.comm_bytes as f64)),
                         ("round_seconds", Json::num(r.round_seconds)),
                         ("mean_loss", Json::num(r.mean_loss)),
+                        ("train_seconds", Json::num(r.timing.train_seconds)),
+                        ("encode_seconds", Json::num(r.timing.encode_seconds)),
+                        ("aggregate_seconds", Json::num(r.timing.aggregate_seconds)),
                     ])
                 })
                 .collect(),
@@ -125,6 +167,11 @@ mod tests {
             comm_bytes: (round as u64 + 1) * 100,
             round_seconds: secs,
             mean_loss: 1.0 / (round + 1) as f64,
+            timing: RoundTiming {
+                train_seconds: secs * 0.6,
+                encode_seconds: secs * 0.1,
+                aggregate_seconds: secs * 0.3,
+            },
         }
     }
 
@@ -145,6 +192,29 @@ mod tests {
         h.push(rec(1, 0.1, 4.0));
         assert!((h.mean_round_seconds() - 3.0).abs() < 1e-12);
         assert_eq!(History::new().mean_round_seconds(), 0.0);
+    }
+
+    #[test]
+    fn mean_timing_averages_the_split() {
+        let mut h = History::new();
+        h.push(rec(0, 0.1, 2.0));
+        h.push(rec(1, 0.1, 4.0));
+        let t = h.mean_timing();
+        assert!((t.train_seconds - 1.8).abs() < 1e-12);
+        assert!((t.encode_seconds - 0.3).abs() < 1e-12);
+        assert!((t.aggregate_seconds - 0.9).abs() < 1e-12);
+        assert_eq!(History::new().mean_timing(), RoundTiming::default());
+    }
+
+    #[test]
+    fn csv_carries_the_timing_split() {
+        let mut h = History::new();
+        h.push(rec(0, 0.25, 1.5));
+        let csv = h.to_csv();
+        assert!(csv.lines().next().unwrap().ends_with(
+            "train_seconds,encode_seconds,aggregate_seconds"
+        ));
+        assert!(csv.lines().nth(1).unwrap().ends_with("0.9000,0.1500,0.4500"));
     }
 
     #[test]

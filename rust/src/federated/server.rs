@@ -35,7 +35,7 @@ use super::backend::TrainBackend;
 use super::comm::CommMeter;
 use super::early_stop::EarlyStopper;
 use super::engine::RoundEngine;
-use super::history::{History, RoundRecord};
+use super::history::{History, RoundRecord, RoundTiming};
 use super::sampler::ClientSampler;
 use super::wire::decode_update;
 
@@ -126,10 +126,13 @@ pub fn run(
         // compression — the dense-equivalent is tracked alongside).
         let mut loss_sum = 0.0f64;
         let mut loss_n = 0usize;
+        let mut timing = RoundTiming::default();
         for per_model in &updates {
             for upd in per_model {
                 comm.download(model_bytes_each);
                 comm.upload_encoded(upd.encoded.byte_len(), model_bytes_each);
+                timing.train_seconds += upd.stats.seconds;
+                timing.encode_seconds += upd.encode_seconds;
                 if upd.stats.steps > 0 {
                     loss_sum += upd.stats.mean_loss;
                     loss_n += 1;
@@ -140,6 +143,7 @@ pub fn run(
         // -- decode + aggregation (line 17), uniform 1/S as in
         // Algorithm 2. Decoding happens against the same global the
         // clients downloaded (pre-aggregation `globals[j]`).
+        let t_agg = std::time::Instant::now();
         for j in 0..n_models {
             let decoded: Vec<ModelParams> = updates
                 .iter()
@@ -152,6 +156,7 @@ pub fn run(
                 .collect();
             globals[j] = aggregate(&refs, Weighting::Uniform)?;
         }
+        timing.aggregate_seconds = t_agg.elapsed().as_secs_f64();
         comm.end_round();
         let round_seconds = t_round.elapsed().as_secs_f64();
         rounds_run = round + 1;
@@ -167,6 +172,7 @@ pub fn run(
                 comm_bytes: comm.total(),
                 round_seconds,
                 mean_loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 },
+                timing,
             });
             if stopper.observe(round, report.mean_topk()) {
                 break 'rounds;
@@ -309,5 +315,21 @@ mod tests {
         let b = tiny_run(Algo::FedMlh, 3);
         assert_eq!(a.best.top1, b.best.top1);
         assert_eq!(a.comm.total(), b.comm.total());
+    }
+
+    #[test]
+    fn round_timing_split_is_recorded() {
+        let out = tiny_run(Algo::FedMlh, 2);
+        for rec in &out.history.records {
+            assert!(rec.timing.train_seconds > 0.0, "round {} trained", rec.round);
+            assert!(rec.timing.encode_seconds >= 0.0);
+            assert!(rec.timing.aggregate_seconds >= 0.0);
+            // The split is a decomposition of (most of) the round: no
+            // component may exceed total round wall-clock by itself
+            // (train/encode are summed over items but workers = 1 here).
+            assert!(rec.timing.train_seconds <= rec.round_seconds);
+        }
+        let mean = out.history.mean_timing();
+        assert!(mean.train_seconds > 0.0);
     }
 }

@@ -28,6 +28,14 @@
 //!   coordinate (not the difference), so `frac = 1.0` reconstructs the
 //!   local model bit-for-bit; unselected coordinates keep the global
 //!   value the server already has.
+//! - [`CodecSpec::TopKPacked`] — the same selection, but the sorted
+//!   index stream is entropy-coded (first index + successive deltas as
+//!   LEB128 varints) instead of raw `u32`s. Sorted top-k indices have
+//!   small gaps, so the 4-byte index typically shrinks to 1–2 bytes —
+//!   roughly 2× on the index stream, ~1.5× on the whole sparse payload.
+//!   The codec *is* the format tag (it is shared setup state, like the
+//!   model shape), so a `topk` server keeps decoding old payloads
+//!   unchanged while `topkv` clients ship the packed layout.
 //!
 //! Error-feedback accumulators and server-side residual folding (the
 //! standard fixes for compounding sparsification error) are ROADMAP
@@ -42,11 +50,14 @@
 //! - `QuantI8`:  `n_tensors × f32` scales, then `num_params × i8`
 //! - `TopKDelta`: `u32` entry count, then per entry `u32` flat index +
 //!   `f32` value
+//! - `TopKPacked`: `u32` entry count, then the sorted index stream as
+//!   varints (first index absolute, the rest as gaps ≥ 1), then the
+//!   `f32` values in index order
 //!
 //! [`EncodedUpdate::byte_len`] is defined as `to_bytes().len()` and is
 //! what the meter charges — pinned by `tests/wire_roundtrip.rs`.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::model::params::ModelParams;
 
@@ -59,21 +70,26 @@ pub enum CodecSpec {
     QuantI8,
     /// Top-`frac` coordinates by |local − global|, `frac ∈ (0, 1]`.
     TopK { frac: f32 },
+    /// Same selection as [`CodecSpec::TopK`], with the sorted index
+    /// stream delta+varint coded.
+    TopKPacked { frac: f32 },
 }
 
 impl CodecSpec {
-    /// Parse a CLI name; `topk_frac` only applies to the `topk` codec.
+    /// Parse a CLI name; `topk_frac` applies to the sparse codecs.
     pub fn parse(name: &str, topk_frac: f32) -> Result<CodecSpec> {
+        let check_frac = || -> Result<f32> {
+            if !(topk_frac > 0.0 && topk_frac <= 1.0) {
+                bail!("topk fraction must be in (0, 1], got {topk_frac}");
+            }
+            Ok(topk_frac)
+        };
         match name {
             "dense" => Ok(CodecSpec::Dense),
             "q8" | "quant" => Ok(CodecSpec::QuantI8),
-            "topk" => {
-                if !(topk_frac > 0.0 && topk_frac <= 1.0) {
-                    bail!("topk fraction must be in (0, 1], got {topk_frac}");
-                }
-                Ok(CodecSpec::TopK { frac: topk_frac })
-            }
-            other => bail!("unknown codec '{other}' (expected dense|q8|topk)"),
+            "topk" => Ok(CodecSpec::TopK { frac: check_frac()? }),
+            "topkv" => Ok(CodecSpec::TopKPacked { frac: check_frac()? }),
+            other => bail!("unknown codec '{other}' (expected dense|q8|topk|topkv)"),
         }
     }
 
@@ -82,8 +98,69 @@ impl CodecSpec {
             CodecSpec::Dense => "dense",
             CodecSpec::QuantI8 => "q8",
             CodecSpec::TopK { .. } => "topk",
+            CodecSpec::TopKPacked { .. } => "topkv",
         }
     }
+}
+
+// -- LEB128 varints for the packed index stream -------------------------
+
+fn varint_len(mut v: u32) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+fn push_varint(out: &mut Vec<u8>, mut v: u32) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    let mut v: u32 = 0;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = bytes.get(*pos) else {
+            bail!("varint runs past the end of the payload");
+        };
+        *pos += 1;
+        if shift == 28 && (b & 0x7f) > 0x0f {
+            bail!("varint overflows u32");
+        }
+        v |= ((b & 0x7f) as u32) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 28 {
+            bail!("varint longer than 5 bytes");
+        }
+    }
+}
+
+/// The delta stream of sorted `entries`: first index absolute, then
+/// successive gaps. The single source of the gap walk — both
+/// [`EncodedUpdate::byte_len`] and the `TopKPacked` serializer consume
+/// it, so the `byte_len() == to_bytes().len()` invariant CommMeter
+/// billing relies on cannot drift.
+fn index_gaps(entries: &[(u32, f32)]) -> impl Iterator<Item = u32> + '_ {
+    let mut prev = 0u32;
+    entries.iter().enumerate().map(move |(slot, &(idx, _))| {
+        let gap = if slot == 0 { idx } else { idx - prev };
+        prev = idx;
+        gap
+    })
+}
+
+/// Encoded size of the delta+varint index stream of sorted `entries`.
+fn packed_index_len(entries: &[(u32, f32)]) -> usize {
+    index_gaps(entries).map(varint_len).sum()
 }
 
 /// One encoded client update, ready to meter and ship.
@@ -95,6 +172,9 @@ pub enum EncodedUpdate {
     QuantI8 { scales: Vec<f32>, values: Vec<i8> },
     /// Sorted `(flat index, replacement value)` pairs.
     TopKDelta { entries: Vec<(u32, f32)> },
+    /// Sorted `(flat index, replacement value)` pairs, index stream
+    /// delta+varint coded on the wire.
+    TopKPacked { entries: Vec<(u32, f32)> },
 }
 
 impl EncodedUpdate {
@@ -105,6 +185,9 @@ impl EncodedUpdate {
             EncodedUpdate::Dense { values } => 4 * values.len(),
             EncodedUpdate::QuantI8 { scales, values } => 4 * scales.len() + values.len(),
             EncodedUpdate::TopKDelta { entries } => 4 + 8 * entries.len(),
+            EncodedUpdate::TopKPacked { entries } => {
+                4 + packed_index_len(entries) + 4 * entries.len()
+            }
         }
     }
 
@@ -113,6 +196,7 @@ impl EncodedUpdate {
             EncodedUpdate::Dense { .. } => "dense",
             EncodedUpdate::QuantI8 { .. } => "q8",
             EncodedUpdate::TopKDelta { .. } => "topk",
+            EncodedUpdate::TopKPacked { .. } => "topkv",
         }
     }
 
@@ -141,6 +225,17 @@ impl EncodedUpdate {
                 out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
                 for &(i, v) in entries {
                     out.extend_from_slice(&i.to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out
+            }
+            EncodedUpdate::TopKPacked { entries } => {
+                let mut out = Vec::with_capacity(self.byte_len());
+                out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+                for gap in index_gaps(entries) {
+                    push_varint(&mut out, gap);
+                }
+                for &(_, v) in entries {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
                 out
@@ -200,6 +295,44 @@ impl EncodedUpdate {
                     .collect();
                 Ok(EncodedUpdate::TopKDelta { entries })
             }
+            CodecSpec::TopKPacked { .. } => {
+                if bytes.len() < 4 {
+                    bail!("topkv payload is {} bytes, expected at least 4", bytes.len());
+                }
+                let k = u32_at(bytes, 0) as usize;
+                let mut pos = 4usize;
+                // Cap the pre-allocation by the payload size: a corrupt
+                // count fails in the varint loop, not in the allocator.
+                let mut indices = Vec::with_capacity(k.min(bytes.len()));
+                let mut prev = 0u32;
+                for slot in 0..k {
+                    let gap = read_varint(bytes, &mut pos)?;
+                    let idx = if slot == 0 {
+                        gap
+                    } else {
+                        if gap == 0 {
+                            bail!("topkv index stream is not strictly increasing");
+                        }
+                        prev.checked_add(gap)
+                            .ok_or_else(|| anyhow!("topkv index overflows u32"))?
+                    };
+                    indices.push(idx);
+                    prev = idx;
+                }
+                if bytes.len() != pos + 4 * k {
+                    bail!(
+                        "topkv payload is {} bytes, header says {}",
+                        bytes.len(),
+                        pos + 4 * k
+                    );
+                }
+                let entries = indices
+                    .into_iter()
+                    .enumerate()
+                    .map(|(e, idx)| (idx, f32_at(bytes, pos + 4 * e)))
+                    .collect();
+                Ok(EncodedUpdate::TopKPacked { entries })
+            }
         }
     }
 }
@@ -254,34 +387,45 @@ pub fn encode_update(
             }
             Ok(EncodedUpdate::QuantI8 { scales, values })
         }
-        CodecSpec::TopK { frac } => {
-            if !(frac > 0.0 && frac <= 1.0) {
-                bail!("topk fraction must be in (0, 1], got {frac}");
-            }
-            let g = global.flat_values();
-            let l = local.flat_values();
-            let n = l.len();
-            let k = ((n as f64 * frac as f64).ceil() as usize).clamp(1, n);
-            // Deterministic selection: largest |delta| first, index as
-            // the tie-break. total_cmp gives a total order, so the kept
-            // set is unique and the parallel engine reproduces the
-            // sequential choice exactly; select_nth keeps this O(n)
-            // instead of a full sort over multi-million-param models.
-            let by_delta_desc = |a: &u32, b: &u32| {
-                let da = (l[*a as usize] - g[*a as usize]).abs();
-                let db = (l[*b as usize] - g[*b as usize]).abs();
-                db.total_cmp(&da).then(a.cmp(b))
-            };
-            let mut order: Vec<u32> = (0..n as u32).collect();
-            if k < n {
-                order.select_nth_unstable_by(k - 1, by_delta_desc);
-            }
-            let mut keep = order[..k].to_vec();
-            keep.sort_unstable();
-            let entries = keep.into_iter().map(|i| (i, l[i as usize])).collect();
-            Ok(EncodedUpdate::TopKDelta { entries })
-        }
+        CodecSpec::TopK { frac } => Ok(EncodedUpdate::TopKDelta {
+            entries: select_topk_entries(global, local, frac)?,
+        }),
+        CodecSpec::TopKPacked { frac } => Ok(EncodedUpdate::TopKPacked {
+            entries: select_topk_entries(global, local, frac)?,
+        }),
     }
+}
+
+/// Deterministic top-k selection shared by the sparse codecs: largest
+/// |local − global| first, index as the tie-break. total_cmp gives a
+/// total order, so the kept set is unique and the parallel engine
+/// reproduces the sequential choice exactly; select_nth keeps this O(n)
+/// instead of a full sort over multi-million-param models. Returned
+/// entries are sorted by index (ascending).
+fn select_topk_entries(
+    global: &ModelParams,
+    local: &ModelParams,
+    frac: f32,
+) -> Result<Vec<(u32, f32)>> {
+    if !(frac > 0.0 && frac <= 1.0) {
+        bail!("topk fraction must be in (0, 1], got {frac}");
+    }
+    let g = global.flat_values();
+    let l = local.flat_values();
+    let n = l.len();
+    let k = ((n as f64 * frac as f64).ceil() as usize).clamp(1, n);
+    let by_delta_desc = |a: &u32, b: &u32| {
+        let da = (l[*a as usize] - g[*a as usize]).abs();
+        let db = (l[*b as usize] - g[*b as usize]).abs();
+        db.total_cmp(&da).then(a.cmp(b))
+    };
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    if k < n {
+        order.select_nth_unstable_by(k - 1, by_delta_desc);
+    }
+    let mut keep = order[..k].to_vec();
+    keep.sort_unstable();
+    Ok(keep.into_iter().map(|i| (i, l[i as usize])).collect())
 }
 
 /// Decode an update back into full parameters, against the same global
@@ -314,7 +458,7 @@ pub fn decode_update(global: &ModelParams, enc: &EncodedUpdate) -> Result<ModelP
                 off += len;
             }
         }
-        EncodedUpdate::TopKDelta { entries } => {
+        EncodedUpdate::TopKDelta { entries } | EncodedUpdate::TopKPacked { entries } => {
             let mut vals = global.flat_values();
             for &(i, v) in entries {
                 let i = i as usize;
@@ -354,9 +498,93 @@ mod tests {
             CodecSpec::parse("topk", 0.25).unwrap(),
             CodecSpec::TopK { frac: 0.25 }
         );
+        assert_eq!(
+            CodecSpec::parse("topkv", 0.25).unwrap(),
+            CodecSpec::TopKPacked { frac: 0.25 }
+        );
         assert!(CodecSpec::parse("topk", 0.0).is_err());
         assert!(CodecSpec::parse("topk", 1.5).is_err());
+        assert!(CodecSpec::parse("topkv", 0.0).is_err());
         assert!(CodecSpec::parse("gzip", 0.1).is_err());
+    }
+
+    #[test]
+    fn varint_roundtrip_and_lengths() {
+        for v in [0u32, 1, 0x7f, 0x80, 0x3fff, 0x4000, 1 << 20, u32::MAX] {
+            let mut buf = Vec::new();
+            push_varint(&mut buf, v);
+            assert_eq!(buf.len(), varint_len(v), "length of {v}");
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+        // truncated stream fails
+        let mut buf = Vec::new();
+        push_varint(&mut buf, u32::MAX);
+        let mut pos = 0;
+        assert!(read_varint(&buf[..buf.len() - 1], &mut pos).is_err());
+        // overlong / overflowing encodings are rejected
+        let mut pos = 0;
+        assert!(read_varint(&[0x80, 0x80, 0x80, 0x80, 0x80, 0x01], &mut pos).is_err());
+        let mut pos = 0;
+        assert!(read_varint(&[0xff, 0xff, 0xff, 0xff, 0x7f], &mut pos).is_err());
+    }
+
+    #[test]
+    fn packed_decodes_like_raw_topk() {
+        let (global, local) = random_pair(6);
+        for frac in [0.05f32, 0.3, 1.0] {
+            let raw = encode_update(CodecSpec::TopK { frac }, &global, &local).unwrap();
+            let packed =
+                encode_update(CodecSpec::TopKPacked { frac }, &global, &local).unwrap();
+            // identical selection...
+            let (re, pe) = match (&raw, &packed) {
+                (
+                    EncodedUpdate::TopKDelta { entries: re },
+                    EncodedUpdate::TopKPacked { entries: pe },
+                ) => (re, pe),
+                other => panic!("wrong variants {other:?}"),
+            };
+            assert_eq!(re, pe, "frac {frac}");
+            // ...identical reconstruction...
+            assert_eq!(
+                decode_update(&global, &raw).unwrap(),
+                decode_update(&global, &packed).unwrap()
+            );
+            // ...smaller wire payload (varint gaps beat raw u32 indices).
+            assert!(
+                packed.byte_len() < raw.byte_len(),
+                "frac {frac}: packed {} >= raw {}",
+                packed.byte_len(),
+                raw.byte_len()
+            );
+        }
+    }
+
+    #[test]
+    fn packed_bytes_roundtrip_and_validate() {
+        let (global, local) = random_pair(7);
+        let spec = CodecSpec::TopKPacked { frac: 0.25 };
+        let enc = encode_update(spec, &global, &local).unwrap();
+        let bytes = enc.to_bytes();
+        assert_eq!(bytes.len(), enc.byte_len());
+        let back =
+            EncodedUpdate::from_bytes(spec, global.tensors.len(), global.num_params(), &bytes)
+                .unwrap();
+        assert_eq!(back, enc);
+        // truncation is rejected
+        assert!(
+            EncodedUpdate::from_bytes(spec, 6, global.num_params(), &bytes[..bytes.len() - 1])
+                .is_err()
+        );
+        // a zero gap after the first index (duplicate index) is rejected
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.push(3); // first index 3
+        bad.push(0); // gap 0 → duplicate
+        bad.extend_from_slice(&1.0f32.to_le_bytes());
+        bad.extend_from_slice(&2.0f32.to_le_bytes());
+        assert!(EncodedUpdate::from_bytes(spec, 6, 100, &bad).is_err());
     }
 
     #[test]
@@ -423,6 +651,7 @@ mod tests {
             CodecSpec::Dense,
             CodecSpec::QuantI8,
             CodecSpec::TopK { frac: 0.3 },
+            CodecSpec::TopKPacked { frac: 0.3 },
         ] {
             let enc = encode_update(spec, &global, &local).unwrap();
             let bytes = enc.to_bytes();

@@ -17,8 +17,9 @@
 //!
 //! - **L3 (this crate)** — the federated coordinator: client sampling,
 //!   local-training orchestration, per-sub-model FedAvg aggregation,
-//!   communication accounting, non-iid partitioning, evaluation, and the
-//!   table/figure harness.
+//!   communication accounting, non-iid partitioning, evaluation, the
+//!   table/figure harness, and the serving subsystem ([`serve`]:
+//!   `.fmlh` checkpoints + a micro-batching HTTP inference server).
 //! - **L2** — the MLP forward/backward + SGD step, written in JAX
 //!   (`python/compile/model.py`) and AOT-lowered to HLO text.
 //! - **L1** — Pallas kernels for the wide output layer, the fused BCE
@@ -52,5 +53,6 @@ pub mod hashing;
 pub mod model;
 pub mod partition;
 pub mod runtime;
+pub mod serve;
 pub mod theory;
 pub mod util;

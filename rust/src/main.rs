@@ -4,6 +4,9 @@
 //!
 //! ```text
 //! fedmlh run     --preset eurlex --algo fedmlh --backend xla
+//! fedmlh run     --preset eurlex --save model.fmlh  # + persist a serving checkpoint
+//! fedmlh serve   --checkpoint model.fmlh --port 8080 --workers 4
+//!                                                   # POST /predict · GET /healthz · GET /metrics
 //! fedmlh tables  --presets eurlex,wiki31            # Tables 3–7
 //! fedmlh table1  --presets all                      # dataset stats
 //! fedmlh table2  --presets all                      # R and B
@@ -13,6 +16,11 @@
 //! fedmlh theory  --preset eurlex                    # Lemma 1/2, Theorem 2
 //! fedmlh artifacts                                  # list compiled artifacts
 //! ```
+//!
+//! The `serve` path is the deployment half of the paper's story: the
+//! hashed model is small enough to ship (q8 checkpoints are ~4× smaller
+//! than dense f32), and the count-sketch decode answers `POST /predict`
+//! with exactly the offline evaluation's top-k.
 
 use std::path::PathBuf;
 
@@ -25,6 +33,7 @@ use fedmlh::harness::{self, figures, report, tables, BackendKind, HarnessOpts, P
 use fedmlh::hashing::label_hash::LabelHasher;
 use fedmlh::partition::divergence;
 use fedmlh::runtime::RuntimeClient;
+use fedmlh::serve::{Checkpoint, CheckpointCodec, ServeOpts, Server};
 use fedmlh::theory;
 use fedmlh::util::cli::{Args, Parsed};
 
@@ -36,7 +45,7 @@ fn main() {
     }
 }
 
-const COMMANDS: &str = "run, tables, table1, table2, fig2, fig3, fig4, fig5, theory, artifacts";
+const COMMANDS: &str = "run, serve, tables, table1, table2, fig2, fig3, fig4, fig5, theory, artifacts";
 
 fn dispatch(argv: &[String]) -> Result<()> {
     let Some(cmd) = argv.first() else {
@@ -45,6 +54,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
         "tables" => cmd_tables(rest),
         "table1" => cmd_table1(rest),
         "table2" => cmd_table2(rest),
@@ -65,8 +75,8 @@ fn common_args(args: Args) -> Args {
         .flag("rounds", "0", "override synchronization rounds (0 = preset default 70)")
         .flag("out", "results", "output directory for CSV/markdown")
         .flag("workers", "1", "round-engine worker threads (1 = sequential; results identical)")
-        .flag("codec", "dense", "update wire codec: dense | q8 | topk")
-        .flag("topk-frac", "0.1", "fraction of coordinates the topk codec ships")
+        .flag("codec", "dense", "update wire codec: dense | q8 | topk | topkv (delta+varint indices)")
+        .flag("topk-frac", "0.1", "fraction of coordinates the topk/topkv codecs ship")
         .switch("fast", "use the *_fast (jnp-lowered) artifact family — same math, ~7x faster on CPU")
         .switch("quiet", "suppress progress logging")
 }
@@ -105,6 +115,8 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         .flag("lr", "0", "learning rate (0 = preset default)")
         .flag("b", "0", "override buckets per table B (fedmlh)")
         .flag("r", "0", "override hash tables R (fedmlh)")
+        .flag("save", "", "write the trained model as a serving checkpoint to this path")
+        .flag("save-codec", "q8", "checkpoint codec: q8 (~4x smaller) | dense")
         .parse(argv)?;
     let opts = opts_from(&p)?;
     let algo = Algo::parse(p.get("algo"))?;
@@ -181,6 +193,11 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         out.comm.upload_compression(),
         cfg.codec.name()
     );
+    let timing = out.history.mean_timing();
+    println!(
+        "round time split: train {:.3}s  encode {:.3}s  aggregate {:.3}s  (mean per evaluated round; train/encode summed over the round's client x sub-model items)",
+        timing.train_seconds, timing.encode_seconds, timing.aggregate_seconds
+    );
     if let Some(dir) = &opts.out_dir {
         let name = format!("run_{}_{}.csv", cfg.preset.name, algo.name());
         report::write_result(dir, &name, &out.history.to_csv())?;
@@ -188,7 +205,74 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             eprintln!("[run] history → {}/{name}", dir.display());
         }
     }
+    let save = p.get("save");
+    if !save.is_empty() {
+        let codec = CheckpointCodec::parse(p.get("save-codec"))?;
+        let ckpt = Checkpoint::from_run(
+            &cfg,
+            algo,
+            world.data.train.d(),
+            world.data.train.p(),
+            out.final_globals,
+        )?;
+        let path = PathBuf::from(save);
+        ckpt.save(&path, codec)?;
+        let size = std::fs::metadata(&path)?.len();
+        println!(
+            "checkpoint → {} ({} bytes, codec={}, {:.2}x vs dense f32; load with `fedmlh serve --checkpoint {}`)",
+            path.display(),
+            size,
+            codec.name(),
+            ckpt.dense_byte_size() as f64 / size as f64,
+            path.display()
+        );
+    }
     Ok(())
+}
+
+/// `fedmlh serve` — load a checkpoint and answer predictions over HTTP.
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let p = Args::new("fedmlh serve", "serve a trained checkpoint over HTTP")
+        .required("checkpoint", "path to a .fmlh checkpoint (from `fedmlh run --save`)")
+        .flag("host", "127.0.0.1", "interface to bind")
+        .flag("port", "8080", "TCP port (0 = ephemeral)")
+        .flag("workers", "2", "inference worker threads (micro-batch pool)")
+        .flag("max-batch", "32", "max requests coalesced into one forward pass")
+        .parse(argv)?;
+    let port = p.get_usize("port")?;
+    if port > u16::MAX as usize {
+        bail!("--port {port} exceeds 65535");
+    }
+    let workers = p.get_usize("workers")?;
+    let max_batch = p.get_usize("max-batch")?;
+    if workers == 0 {
+        bail!("workers must be positive");
+    }
+    if max_batch == 0 {
+        bail!("max-batch must be positive");
+    }
+    let ckpt = Checkpoint::load(&PathBuf::from(p.get("checkpoint")))?;
+    eprintln!(
+        "[serve] {} checkpoint '{}' — {} sub-model(s), d={}, p={}, seed {}",
+        ckpt.meta.algo.name(),
+        ckpt.meta.preset,
+        ckpt.r(),
+        ckpt.meta.d,
+        ckpt.meta.p,
+        ckpt.meta.root_seed
+    );
+    let opts = ServeOpts {
+        host: p.get("host").to_string(),
+        port: port as u16,
+        workers,
+        max_batch,
+    };
+    let server = Server::bind(ckpt, &opts)?;
+    eprintln!(
+        "[serve] listening on http://{} (POST /predict, GET /healthz, GET /metrics)",
+        server.local_addr()?
+    );
+    server.run()
 }
 
 // ----------------------------------------------------------- tables

@@ -1,0 +1,572 @@
+//! The `.fmlh` checkpoint format — a trained run, persisted.
+//!
+//! A checkpoint carries everything `fedmlh serve` needs to answer a
+//! prediction without rerunning training: the R hashed sub-models
+//! ([`ModelParams`]), the seeds that reconstruct the [`LabelHasher`]
+//! tables and the feature-hash function (both are *derived seeds*, so
+//! the tables come back bit-identical — the serving analog of
+//! Algorithm 2's broadcast), and the experiment metadata (`d`, `B`,
+//! `p`, preset) the decoder needs.
+//!
+//! ## Wire layout (little-endian)
+//!
+//! ```text
+//! magic      4 × u8   "FMLH"
+//! version    u16      format version (this build reads VERSION)
+//! codec      u8       0 = dense f32, 1 = q8 (per-tensor int8 + scales)
+//! algo       u8       0 = fedavg, 1 = fedmlh
+//! d,hidden,  4 × u32  model dims (out = p for fedavg, B for fedmlh)
+//! out,p
+//! n_models   u32      R (1 for fedavg)
+//! hash_seed  u64      LabelHasher seed (fedmlh decode tables)
+//! feat_seed  u64      FeatureHasher seed (raw sparse → dense d)
+//! root_seed  u64      experiment root seed (provenance)
+//! preset     u16 len + utf-8 bytes
+//! models     R × (u32 payload len + payload)
+//! checksum   u64      FNV-1a over every preceding byte
+//! ```
+//!
+//! Model payloads reuse the [`crate::federated::wire`] codecs: `q8` is
+//! the same per-tensor symmetric int8 encoding clients upload with, so
+//! a q8 checkpoint is ~4× smaller than dense `f32` (1 byte + amortized
+//! scale per parameter vs 4). Corruption anywhere flips the checksum;
+//! truncation, wrong magic and future versions all fail loudly —
+//! pinned by `tests/serve_roundtrip.rs`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Algo, ExperimentConfig};
+use crate::federated::wire::{decode_update, encode_update, CodecSpec, EncodedUpdate};
+use crate::model::params::ModelParams;
+
+/// File magic: the first four bytes of every checkpoint.
+pub const MAGIC: [u8; 4] = *b"FMLH";
+
+/// Format version this build writes and reads.
+pub const VERSION: u16 = 1;
+
+/// Upper bound on sub-model count (corruption guard, far above any R).
+const MAX_MODELS: usize = 4096;
+
+/// Upper bound on any single model dimension (corruption guard: keeps
+/// a crafted header from driving `ModelParams::zeros` into a huge
+/// allocation before the payload sizes are cross-checked).
+const MAX_DIM: usize = 1 << 24;
+
+/// How model parameters are encoded inside the checkpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CheckpointCodec {
+    /// Raw `f32` parameters — lossless, 4 bytes per parameter.
+    Dense,
+    /// Per-tensor symmetric int8 ([`CodecSpec::QuantI8`]) — ~4× smaller.
+    QuantI8,
+}
+
+impl CheckpointCodec {
+    pub fn parse(name: &str) -> Result<CheckpointCodec> {
+        match name {
+            "dense" | "f32" => Ok(CheckpointCodec::Dense),
+            "q8" | "quant" => Ok(CheckpointCodec::QuantI8),
+            other => bail!("unknown checkpoint codec '{other}' (expected q8|dense)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CheckpointCodec::Dense => "dense",
+            CheckpointCodec::QuantI8 => "q8",
+        }
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            CheckpointCodec::Dense => 0,
+            CheckpointCodec::QuantI8 => 1,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Result<CheckpointCodec> {
+        match tag {
+            0 => Ok(CheckpointCodec::Dense),
+            1 => Ok(CheckpointCodec::QuantI8),
+            other => bail!("unknown checkpoint codec tag {other}"),
+        }
+    }
+
+    /// The wire codec that encodes/decodes the model payloads.
+    fn wire_spec(&self) -> CodecSpec {
+        match self {
+            CheckpointCodec::Dense => CodecSpec::Dense,
+            CheckpointCodec::QuantI8 => CodecSpec::QuantI8,
+        }
+    }
+}
+
+fn algo_tag(algo: Algo) -> u8 {
+    match algo {
+        Algo::FedAvg => 0,
+        Algo::FedMlh => 1,
+    }
+}
+
+fn algo_from_tag(tag: u8) -> Result<Algo> {
+    match tag {
+        0 => Ok(Algo::FedAvg),
+        1 => Ok(Algo::FedMlh),
+        other => bail!("unknown checkpoint algo tag {other}"),
+    }
+}
+
+/// Everything about a checkpoint except the parameters themselves.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    pub algo: Algo,
+    /// Preset name the run trained on (provenance; not load-bearing).
+    pub preset: String,
+    /// Feature-hashed input dimension.
+    pub d: usize,
+    /// Hidden width of the 2-hidden-layer MLP.
+    pub hidden: usize,
+    /// Output width of each sub-model (p for fedavg, B for fedmlh).
+    pub out_dim: usize,
+    /// Number of classes the decode recovers.
+    pub p: usize,
+    /// [`crate::hashing::LabelHasher`] seed (already derived).
+    pub hash_seed: u64,
+    /// [`crate::data::feature_hash::FeatureHasher`] seed (already derived).
+    pub feat_seed: u64,
+    /// Root experiment seed (provenance).
+    pub root_seed: u64,
+}
+
+/// A loaded (or about-to-be-saved) trained model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub meta: CheckpointMeta,
+    /// The R trained global sub-models (1 for fedavg).
+    pub models: Vec<ModelParams>,
+}
+
+impl Checkpoint {
+    /// Build and shape-validate a checkpoint.
+    pub fn new(meta: CheckpointMeta, models: Vec<ModelParams>) -> Result<Checkpoint> {
+        if models.is_empty() {
+            bail!("checkpoint needs at least one model");
+        }
+        if models.len() > MAX_MODELS {
+            bail!("checkpoint has {} models (cap {MAX_MODELS})", models.len());
+        }
+        for (j, m) in models.iter().enumerate() {
+            if (m.d, m.hidden, m.out) != (meta.d, meta.hidden, meta.out_dim) {
+                bail!(
+                    "model {j} shape ({},{},{}) != checkpoint meta ({},{},{})",
+                    m.d,
+                    m.hidden,
+                    m.out,
+                    meta.d,
+                    meta.hidden,
+                    meta.out_dim
+                );
+            }
+        }
+        match meta.algo {
+            Algo::FedAvg => {
+                if models.len() != 1 || meta.out_dim != meta.p {
+                    bail!(
+                        "fedavg checkpoint must have 1 model with out == p (got {} models, out {} vs p {})",
+                        models.len(),
+                        meta.out_dim,
+                        meta.p
+                    );
+                }
+            }
+            Algo::FedMlh => {
+                if meta.out_dim > meta.p {
+                    bail!(
+                        "fedmlh checkpoint has B {} > p {}",
+                        meta.out_dim,
+                        meta.p
+                    );
+                }
+            }
+        }
+        Ok(Checkpoint { meta, models })
+    }
+
+    /// Package a finished training run (`RunOutput::final_globals`).
+    /// `d`/`p` come from the trained dataset; the hash seeds are derived
+    /// from `cfg.seed` through the same streams training used.
+    pub fn from_run(
+        cfg: &ExperimentConfig,
+        algo: Algo,
+        d: usize,
+        p: usize,
+        models: Vec<ModelParams>,
+    ) -> Result<Checkpoint> {
+        let out_dim = models.first().map(|m| m.out).unwrap_or(0);
+        let meta = CheckpointMeta {
+            algo,
+            preset: cfg.preset.name.to_string(),
+            d,
+            hidden: cfg.preset.hidden,
+            out_dim,
+            p,
+            hash_seed: crate::algo::fedmlh::label_hash_seed(cfg.seed),
+            feat_seed: crate::data::synth::feature_hash_seed(cfg.seed),
+            root_seed: cfg.seed,
+        };
+        Checkpoint::new(meta, models)
+    }
+
+    /// Number of sub-models (R for fedmlh, 1 for fedavg).
+    pub fn r(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Bytes all models would occupy as raw dense `f32` (the codec
+    /// compression baseline).
+    pub fn dense_byte_size(&self) -> usize {
+        self.models.iter().map(|m| m.byte_size()).sum()
+    }
+
+    /// Serialize to the checkpoint wire layout (module docs).
+    pub fn to_bytes(&self, codec: CheckpointCodec) -> Result<Vec<u8>> {
+        let m = &self.meta;
+        let mut out = Vec::with_capacity(64 + self.dense_byte_size() / 2);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(codec.tag());
+        out.push(algo_tag(m.algo));
+        for dim in [m.d, m.hidden, m.out_dim, m.p, self.models.len()] {
+            let v = u32::try_from(dim).context("checkpoint dimension exceeds u32")?;
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for seed in [m.hash_seed, m.feat_seed, m.root_seed] {
+            out.extend_from_slice(&seed.to_le_bytes());
+        }
+        let preset = m.preset.as_bytes();
+        let preset_len = u16::try_from(preset.len()).context("preset name too long")?;
+        out.extend_from_slice(&preset_len.to_le_bytes());
+        out.extend_from_slice(preset);
+        for model in &self.models {
+            // Encoding a model "against itself" reuses the uplink codecs
+            // verbatim: dense/q8 never look at the reference values,
+            // only its shape.
+            let payload = encode_update(codec.wire_spec(), model, model)?.to_bytes();
+            let len = u32::try_from(payload.len()).context("model payload exceeds u32")?;
+            out.extend_from_slice(&len.to_le_bytes());
+            out.extend_from_slice(&payload);
+        }
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        Ok(out)
+    }
+
+    /// Parse and validate a serialized checkpoint.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < MAGIC.len() + 2 {
+            bail!("checkpoint truncated: {} bytes", bytes.len());
+        }
+        if bytes[..4] != MAGIC {
+            bail!("not a FedMLH checkpoint (bad magic)");
+        }
+        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version} (this build reads {VERSION})");
+        }
+        if bytes.len() < MAGIC.len() + 2 + 8 {
+            bail!("checkpoint truncated: {} bytes", bytes.len());
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
+        let got = fnv1a64(body);
+        if got != want {
+            bail!("checkpoint checksum mismatch (corrupt or truncated file)");
+        }
+
+        let mut r = Reader {
+            bytes: body,
+            pos: 6, // past magic + version
+        };
+        let codec = CheckpointCodec::from_tag(r.u8()?)?;
+        let algo = algo_from_tag(r.u8()?)?;
+        let d = r.u32_as_usize()?;
+        let hidden = r.u32_as_usize()?;
+        let out_dim = r.u32_as_usize()?;
+        let p = r.u32_as_usize()?;
+        let n_models = r.u32_as_usize()?;
+        for (name, v) in [("d", d), ("hidden", hidden), ("out", out_dim), ("p", p)] {
+            if v == 0 || v > MAX_DIM {
+                bail!("checkpoint dimension {name} = {v} out of range (1..={MAX_DIM})");
+            }
+        }
+        if n_models == 0 || n_models > MAX_MODELS {
+            bail!("checkpoint has {n_models} models (cap {MAX_MODELS})");
+        }
+        let hash_seed = r.u64()?;
+        let feat_seed = r.u64()?;
+        let root_seed = r.u64()?;
+        let preset_len = r.u16()? as usize;
+        let preset = String::from_utf8(r.take(preset_len)?.to_vec())
+            .context("checkpoint preset name is not utf-8")?;
+
+        // Every codec stores ≥ 1 byte per parameter, so a declared model
+        // larger than the file is corrupt — reject it *before* the
+        // template allocation (with dims ≤ MAX_DIM the products below
+        // stay far inside usize, so this arithmetic cannot overflow).
+        let n_values: usize = ModelParams::shapes(d, hidden, out_dim)
+            .iter()
+            .map(|shape| shape.iter().product::<usize>())
+            .sum();
+        if n_values.saturating_mul(n_models) > body.len() {
+            bail!(
+                "checkpoint declares {n_models} × {n_values} parameters but the file has only {} bytes",
+                body.len()
+            );
+        }
+        let template = ModelParams::zeros(d, hidden, out_dim);
+        debug_assert_eq!(template.num_params(), n_values);
+        let mut models = Vec::with_capacity(n_models);
+        for j in 0..n_models {
+            let payload_len = r.u32_as_usize()?;
+            let payload = r.take(payload_len)?;
+            let enc = EncodedUpdate::from_bytes(
+                codec.wire_spec(),
+                template.tensors.len(),
+                n_values,
+                payload,
+            )
+            .with_context(|| format!("decoding checkpoint model {j}"))?;
+            models.push(decode_update(&template, &enc)?);
+        }
+        if r.pos != body.len() {
+            bail!(
+                "checkpoint has {} trailing bytes after the last model",
+                body.len() - r.pos
+            );
+        }
+        Checkpoint::new(
+            CheckpointMeta {
+                algo,
+                preset,
+                d,
+                hidden,
+                out_dim,
+                p,
+                hash_seed,
+                feat_seed,
+                root_seed,
+            },
+            models,
+        )
+    }
+
+    /// Write to `path` (parent directories created on demand).
+    pub fn save(&self, path: &Path, codec: CheckpointCodec) -> Result<()> {
+        let bytes = self.to_bytes(codec)?;
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, &bytes)
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// Read and validate a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("parsing checkpoint {}", path.display()))
+    }
+}
+
+/// FNV-1a 64-bit — a fast corruption check (not cryptographic).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint length overflow"))?;
+        if end > self.bytes.len() {
+            bail!("checkpoint truncated at byte {}", self.pos);
+        }
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32_as_usize(&mut self) -> Result<usize> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]) as usize)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fedmlh_checkpoint(seed: u64) -> Checkpoint {
+        let cfg = ExperimentConfig::preset("tiny").unwrap();
+        let mut rng = Rng::new(seed);
+        let models: Vec<ModelParams> = (0..cfg.r())
+            .map(|j| {
+                let mut m = ModelParams::init(cfg.preset.d, cfg.preset.hidden, cfg.b(), seed + j as u64);
+                for t in m.tensors.iter_mut() {
+                    for v in t.data_mut() {
+                        *v += (rng.next_f32() - 0.5) * 0.1;
+                    }
+                }
+                m
+            })
+            .collect();
+        Checkpoint::from_run(&cfg, Algo::FedMlh, cfg.preset.d, cfg.preset.p, models).unwrap()
+    }
+
+    #[test]
+    fn dense_roundtrip_is_bitwise() {
+        let ckpt = fedmlh_checkpoint(1);
+        let bytes = ckpt.to_bytes(CheckpointCodec::Dense).unwrap();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back, ckpt);
+    }
+
+    #[test]
+    fn q8_roundtrip_is_stable_and_smaller() {
+        let ckpt = fedmlh_checkpoint(2);
+        let dense = ckpt.to_bytes(CheckpointCodec::Dense).unwrap();
+        let q8 = ckpt.to_bytes(CheckpointCodec::QuantI8).unwrap();
+        assert!(
+            (dense.len() as f64) / (q8.len() as f64) >= 3.5,
+            "q8 {} vs dense {}",
+            q8.len(),
+            dense.len()
+        );
+        let back = Checkpoint::from_bytes(&q8).unwrap();
+        assert_eq!(back.meta, ckpt.meta);
+        // Lossy, but within the per-tensor quantization scale bound.
+        for (orig, got) in ckpt.models.iter().zip(back.models.iter()) {
+            for (t_orig, t_got) in orig.tensors.iter().zip(got.tensors.iter()) {
+                let max_abs = t_orig.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let scale = max_abs / 127.0;
+                let err = t_orig.max_abs_diff(t_got).unwrap();
+                assert!(err <= 0.5 * scale + 1e-7, "err {err} vs scale {scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_rejected() {
+        let ckpt = fedmlh_checkpoint(3);
+        let bytes = ckpt.to_bytes(CheckpointCodec::QuantI8).unwrap();
+        // flip one payload byte → checksum mismatch
+        let mut corrupt = bytes.clone();
+        let mid = corrupt.len() / 2;
+        corrupt[mid] ^= 0x40;
+        let err = Checkpoint::from_bytes(&corrupt).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // truncate → checksum (or length) failure
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 9]).is_err());
+        assert!(Checkpoint::from_bytes(&bytes[..3]).is_err());
+        // trailing garbage → checksum failure
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(&[0u8; 7]);
+        assert!(Checkpoint::from_bytes(&padded).is_err());
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_rejected() {
+        let ckpt = fedmlh_checkpoint(4);
+        let bytes = ckpt.to_bytes(CheckpointCodec::Dense).unwrap();
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] = b'X';
+        let err = Checkpoint::from_bytes(&wrong_magic).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        let mut wrong_version = bytes.clone();
+        wrong_version[4] = 99;
+        let err = Checkpoint::from_bytes(&wrong_version).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn save_load_through_the_filesystem() {
+        let ckpt = fedmlh_checkpoint(5);
+        let dir = std::env::temp_dir().join(format!("fedmlh_ckpt_{}", std::process::id()));
+        let path = dir.join("tiny.fmlh");
+        ckpt.save(&path, CheckpointCodec::Dense).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ckpt);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fedavg_checkpoint_shape_rules() {
+        let cfg = ExperimentConfig::preset("tiny").unwrap();
+        let model = ModelParams::init(cfg.preset.d, cfg.preset.hidden, cfg.preset.p, 1);
+        let ckpt = Checkpoint::from_run(
+            &cfg,
+            Algo::FedAvg,
+            cfg.preset.d,
+            cfg.preset.p,
+            vec![model.clone()],
+        )
+        .unwrap();
+        assert_eq!(ckpt.r(), 1);
+        let back = Checkpoint::from_bytes(&ckpt.to_bytes(CheckpointCodec::Dense).unwrap()).unwrap();
+        assert_eq!(back, ckpt);
+        // two models under fedavg is invalid
+        assert!(Checkpoint::from_run(
+            &cfg,
+            Algo::FedAvg,
+            cfg.preset.d,
+            cfg.preset.p,
+            vec![model.clone(), model],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn seeds_match_the_training_streams() {
+        let cfg = ExperimentConfig::preset("tiny").unwrap();
+        let ckpt = fedmlh_checkpoint(6);
+        assert_eq!(ckpt.meta.hash_seed, crate::algo::fedmlh::label_hash_seed(cfg.seed));
+        assert_eq!(ckpt.meta.feat_seed, crate::data::synth::feature_hash_seed(cfg.seed));
+        assert_eq!(ckpt.meta.root_seed, cfg.seed);
+    }
+}

@@ -1,0 +1,449 @@
+//! Dependency-light HTTP/1.1 serving front end over
+//! [`std::net::TcpListener`] (the offline registry has no hyper/axum;
+//! the protocol subset here — request line, headers, Content-Length
+//! body, `Connection: close` responses — is what every load balancer
+//! and `curl` speak).
+//!
+//! Endpoints:
+//!
+//! - `POST /predict` — body `{"dense": [f32; d], "k": 5}` or
+//!   `{"sparse": [[index, value], …], "k": 5}`; responds
+//!   `{"topk": [{"class": c, "score": s}, …], "k": k}`. Raw sparse
+//!   inputs are feature-hashed with the checkpoint's stored seed —
+//!   exactly the training-time map.
+//! - `GET /healthz` — checkpoint identity + pool shape, for probes.
+//! - `GET /metrics` — request count, p50/p99 latency, batch-size
+//!   histogram ([`super::metrics`]).
+//!
+//! One OS thread per connection parses and responds; prediction work
+//! is handed to the shared [`Predictor`] pool, which coalesces
+//! concurrent requests into batched forward passes. JSON number
+//! round-tripping is exact for `f32` scores (shortest-representation
+//! printing), so a served top-k is bitwise the offline decode's.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::checkpoint::Checkpoint;
+use super::infer::{InferenceEngine, Predictor, ScoredClass};
+use super::metrics::ServeMetrics;
+
+/// Server configuration (CLI: `fedmlh serve`).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Interface to bind, e.g. "127.0.0.1" or "0.0.0.0".
+    pub host: String,
+    /// TCP port (0 = ephemeral, reported by [`Server::local_addr`]).
+    pub port: u16,
+    /// Inference worker threads.
+    pub workers: usize,
+    /// Max rows coalesced into one forward pass.
+    pub max_batch: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            host: "127.0.0.1".to_string(),
+            port: 8080,
+            workers: 2,
+            max_batch: 32,
+        }
+    }
+}
+
+/// Default top-k when a predict request does not specify `k`.
+const DEFAULT_K: usize = 5;
+/// Request size guards.
+const MAX_HEADER_BYTES: usize = 64 * 1024;
+const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+/// Whole-request wall-clock budget. The per-read socket timeout resets
+/// on every received byte, so without this a client dripping one byte
+/// per interval would pin its handler thread forever (slow-loris).
+const REQUEST_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Shared per-connection state.
+struct ServeCtx {
+    predictor: Predictor,
+    metrics: Arc<ServeMetrics>,
+    /// Pre-rendered `GET /healthz` body.
+    health: String,
+}
+
+/// The accept loop plus its inference pool.
+pub struct Server {
+    listener: TcpListener,
+    ctx: Arc<ServeCtx>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Remote control for a running [`Server`] (tests, signal handlers).
+#[derive(Clone)]
+pub struct ServerHandle {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl ServerHandle {
+    /// Ask the accept loop to exit (and poke it loose from `accept`).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the blocking accept with one throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Server {
+    /// Load the pool from a checkpoint and bind the listening socket.
+    pub fn bind(ckpt: Checkpoint, opts: &ServeOpts) -> Result<Server> {
+        let metrics = Arc::new(ServeMetrics::new());
+        let engine = InferenceEngine::new(ckpt)?;
+        let meta = engine.meta();
+        let health = Json::obj(vec![
+            ("status", Json::str("ok")),
+            ("algo", Json::str(meta.algo.name())),
+            ("preset", Json::str(meta.preset.clone())),
+            ("models", Json::num(engine.n_models() as f64)),
+            ("p", Json::num(meta.p as f64)),
+            ("d", Json::num(meta.d as f64)),
+            ("out_dim", Json::num(meta.out_dim as f64)),
+            ("workers", Json::num(opts.workers.max(1) as f64)),
+            ("max_batch", Json::num(opts.max_batch.max(1) as f64)),
+        ])
+        .to_string_pretty(0);
+        let predictor = Predictor::new(engine, opts.workers, opts.max_batch, metrics.clone());
+        let listener = TcpListener::bind((opts.host.as_str(), opts.port))
+            .with_context(|| format!("binding {}:{}", opts.host, opts.port))?;
+        Ok(Server {
+            listener,
+            ctx: Arc::new(ServeCtx {
+                predictor,
+                metrics,
+                health,
+            }),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn handle(&self) -> Result<ServerHandle> {
+        Ok(ServerHandle {
+            stop: self.stop.clone(),
+            addr: self.local_addr()?,
+        })
+    }
+
+    /// Serve until [`ServerHandle::stop`] is called. Each accepted
+    /// connection gets its own detached handler thread.
+    pub fn run(self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(mut conn) => {
+                    let ctx = self.ctx.clone();
+                    std::thread::spawn(move || handle_connection(&mut conn, &ctx));
+                }
+                Err(e) => {
+                    // Persistent accept errors (e.g. fd exhaustion under
+                    // a connection flood) would otherwise busy-spin this
+                    // loop at 100% CPU; back off briefly before retrying.
+                    eprintln!("[serve] accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(conn: &mut TcpStream, ctx: &ServeCtx) {
+    let _ = conn.set_read_timeout(Some(Duration::from_secs(30)));
+    // A client that stops *reading* would otherwise block write_all in
+    // respond() forever once the response outgrows the send buffer.
+    let _ = conn.set_write_timeout(Some(REQUEST_DEADLINE));
+    let (method, path, body) = match read_request(conn) {
+        Ok(parts) => parts,
+        Err(e) => {
+            let _ = respond(conn, 400, "Bad Request", &error_body(&format!("{e:#}")));
+            return;
+        }
+    };
+    let t0 = Instant::now();
+    let (status, reason, body) = route(ctx, &method, &path, &body);
+    if method == "POST" && path == "/predict" {
+        ctx.metrics.record_request(t0.elapsed(), status == 200);
+    }
+    let _ = respond(conn, status, reason, &body);
+}
+
+fn route(ctx: &ServeCtx, method: &str, path: &str, body: &[u8]) -> (u16, &'static str, String) {
+    match (method, path) {
+        ("GET", "/healthz") => (200, "OK", ctx.health.clone()),
+        ("GET", "/metrics") => (
+            200,
+            "OK",
+            ctx.metrics.snapshot().to_json().to_string_pretty(2),
+        ),
+        // Parse failures are the client's fault (400); a predictor that
+        // cannot answer a well-formed request is ours (500), so load
+        // balancers and alerting see a server fault, not a bad request.
+        ("POST", "/predict") => match parse_predict(ctx, body) {
+            Err(e) => (400, "Bad Request", error_body(&format!("{e:#}"))),
+            Ok((x, k)) => match ctx.predictor.predict(x, k) {
+                // Non-finite scores (diverged dense checkpoint, or
+                // finite-but-extreme inputs overflowing the forward
+                // pass) would serialize as the illegal JSON tokens
+                // NaN/inf — report a server fault instead.
+                Ok(topk) if topk.iter().all(|&(_, s)| s.is_finite()) => {
+                    (200, "OK", predict_body(&topk, k))
+                }
+                Ok(_) => (
+                    500,
+                    "Internal Server Error",
+                    error_body("model produced non-finite scores"),
+                ),
+                Err(e) => (
+                    500,
+                    "Internal Server Error",
+                    error_body(&format!("{e:#}")),
+                ),
+            },
+        },
+        (_, "/predict") | (_, "/healthz") | (_, "/metrics") => (
+            405,
+            "Method Not Allowed",
+            error_body("use POST /predict, GET /healthz, GET /metrics"),
+        ),
+        _ => (
+            404,
+            "Not Found",
+            error_body("unknown path (endpoints: /predict, /healthz, /metrics)"),
+        ),
+    }
+}
+
+/// Parse a predict request body into a dense feature row and a `k`.
+fn parse_predict(ctx: &ServeCtx, body: &[u8]) -> Result<(Vec<f32>, usize)> {
+    let text = std::str::from_utf8(body).context("request body is not utf-8")?;
+    let req = Json::parse(text).context("request body is not valid JSON")?;
+    let k = match req.get("k") {
+        Some(j) => {
+            let k = j.as_usize().context("'k' must be a non-negative integer")?;
+            if k == 0 || k > ctx.predictor.engine().p() {
+                bail!("'k' must be in 1..={}", ctx.predictor.engine().p());
+            }
+            k
+        }
+        None => DEFAULT_K.min(ctx.predictor.engine().p()),
+    };
+    let x = parse_features(ctx.predictor.engine(), &req)?;
+    Ok((x, k))
+}
+
+/// Extract the dense feature row from `{"dense": …}` or `{"sparse": …}`.
+fn parse_features(engine: &InferenceEngine, req: &Json) -> Result<Vec<f32>> {
+    if let Some(dense) = req.get("dense") {
+        let arr = dense.as_arr().context("'dense' must be an array")?;
+        if arr.len() != engine.d() {
+            bail!("'dense' has {} values, model expects d = {}", arr.len(), engine.d());
+        }
+        return arr
+            .iter()
+            .map(|j| {
+                let v = j.as_f64().context("'dense' entries must be numbers")? as f32;
+                if !v.is_finite() {
+                    // Non-finite inputs would flow through to NaN/inf
+                    // scores, which serialize as invalid JSON.
+                    bail!("'dense' entries must be finite");
+                }
+                Ok(v)
+            })
+            .collect();
+    }
+    if let Some(sparse) = req.get("sparse") {
+        let pairs = sparse.as_arr().context("'sparse' must be an array of [index, value]")?;
+        let mut out = Vec::with_capacity(pairs.len());
+        for pair in pairs {
+            let pair = pair.as_arr().context("'sparse' entries must be [index, value]")?;
+            if pair.len() != 2 {
+                bail!("'sparse' entries must be [index, value] pairs");
+            }
+            let idx = pair[0].as_usize().context("sparse index must be a non-negative integer")?;
+            let idx = u32::try_from(idx).context("sparse index exceeds u32")?;
+            let val = pair[1].as_f64().context("sparse value must be a number")? as f32;
+            if !val.is_finite() {
+                bail!("sparse values must be finite");
+            }
+            out.push((idx, val));
+        }
+        return Ok(engine.hash_features(&out));
+    }
+    bail!("request must contain 'dense' ([f32; d]) or 'sparse' ([[index, value], …])")
+}
+
+fn predict_body(topk: &[ScoredClass], k: usize) -> String {
+    let arr = Json::Arr(
+        topk.iter()
+            .map(|&(class, score)| {
+                Json::obj(vec![
+                    ("class", Json::num(class as f64)),
+                    ("score", Json::num(score as f64)),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj(vec![("k", Json::num(k as f64)), ("topk", arr)]).to_string_pretty(0)
+}
+
+fn error_body(message: &str) -> String {
+    Json::obj(vec![("error", Json::str(message))]).to_string_pretty(0)
+}
+
+/// Read one HTTP/1.1 request: returns (method, path, body).
+fn read_request(conn: &mut TcpStream) -> Result<(String, String, Vec<u8>)> {
+    let deadline = Instant::now() + REQUEST_DEADLINE;
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            bail!("request headers exceed {MAX_HEADER_BYTES} bytes");
+        }
+        cap_read_timeout(conn, deadline)?;
+        let n = conn.read(&mut chunk).context("reading request")?;
+        if n == 0 {
+            bail!("connection closed before the request was complete");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..header_end]).context("request head is not utf-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .context("empty request line")?
+        .to_ascii_uppercase();
+    let path = parts.next().context("request line has no path")?.to_string();
+    // Strip any query string: routing is path-only.
+    let path = path.split('?').next().unwrap_or("").to_string();
+
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .context("invalid Content-Length header")?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        bail!("request body exceeds {MAX_BODY_BYTES} bytes");
+    }
+
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        cap_read_timeout(conn, deadline)?;
+        let n = conn.read(&mut chunk).context("reading request body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok((method, path, body))
+}
+
+fn respond(conn: &mut TcpStream, status: u16, reason: &str, body: &str) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    conn.write_all(head.as_bytes())?;
+    conn.write_all(body.as_bytes())?;
+    conn.flush()
+}
+
+/// Shrink the socket read timeout to the time left before `deadline`,
+/// so a blocking read cannot overshoot the whole-request budget (a
+/// fixed per-read timeout would let a byte-dripping client hold the
+/// thread for deadline + timeout).
+fn cap_read_timeout(conn: &TcpStream, deadline: Instant) -> Result<()> {
+    let remaining = deadline.saturating_duration_since(Instant::now());
+    if remaining.is_zero() {
+        bail!("request did not complete within {REQUEST_DEADLINE:?}");
+    }
+    let _ = conn.set_read_timeout(Some(remaining));
+    Ok(())
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subslice_search() {
+        assert_eq!(find_subslice(b"abcd\r\n\r\nrest", b"\r\n\r\n"), Some(4));
+        assert_eq!(find_subslice(b"abc", b"\r\n\r\n"), None);
+        assert_eq!(find_subslice(b"", b"\r\n\r\n"), None);
+    }
+
+    #[test]
+    fn bodies_are_valid_json() {
+        let err = error_body("boom \"quoted\"");
+        assert_eq!(
+            Json::parse(&err).unwrap().expect("error").unwrap().as_str().unwrap(),
+            "boom \"quoted\""
+        );
+        let body = predict_body(&[(3, 1.5), (0, -0.25)], 2);
+        let parsed = Json::parse(&body).unwrap();
+        assert_eq!(parsed.expect("k").unwrap().as_usize().unwrap(), 2);
+        let arr = parsed.expect("topk").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].expect("class").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(arr[0].expect("score").unwrap().as_f64().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn scores_roundtrip_json_bitwise() {
+        // Shortest-representation f64 printing makes f32 scores exact
+        // across serialize → parse — the property the bitwise serve
+        // acceptance rests on.
+        let values = [1.0f32, -0.1, 3.14159265, f32::MIN_POSITIVE, 1e30, -7.25e-12];
+        let body = predict_body(
+            &values.iter().enumerate().map(|(i, &v)| (i as u32, v)).collect::<Vec<_>>(),
+            values.len(),
+        );
+        let parsed = Json::parse(&body).unwrap();
+        let arr = parsed.expect("topk").unwrap().as_arr().unwrap();
+        for (i, &want) in values.iter().enumerate() {
+            let got = arr[i].expect("score").unwrap().as_f64().unwrap() as f32;
+            assert_eq!(got.to_bits(), want.to_bits(), "value {want}");
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Serving telemetry behind `GET /metrics`: request count, p50/p99
+//! prediction latency, and the micro-batcher's batch-size histogram
+//! (the direct evidence that request coalescing is happening).
+//!
+//! Latencies are kept in a fixed-size ring (the most recent
+//! [`LATENCY_WINDOW`] predictions) so the percentiles track current
+//! behavior and memory stays bounded under sustained traffic. The
+//! batch histogram uses power-of-two buckets: bucket 0 counts
+//! single-row forwards, bucket i counts batch sizes in (2^(i−1), 2^i].
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Ring size for latency percentiles.
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// Shared, thread-safe serving counters.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    errors: u64,
+    /// Most recent prediction latencies (µs), ring-written.
+    latencies_us: Vec<u64>,
+    next_slot: usize,
+    /// Power-of-two batch-size buckets (index = ceil(log2(size))).
+    batch_buckets: Vec<u64>,
+    batches: u64,
+    batched_rows: u64,
+}
+
+/// A point-in-time copy of the counters, ready to serialize.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub errors: u64,
+    /// Median prediction latency over the ring window (µs).
+    pub p50_us: u64,
+    /// 99th-percentile prediction latency over the ring window (µs).
+    pub p99_us: u64,
+    /// Forward passes executed by the micro-batcher.
+    pub batches: u64,
+    /// Total rows across those forward passes.
+    pub batched_rows: u64,
+    /// `(bucket upper bound, count)` pairs, smallest bucket first.
+    pub batch_hist: Vec<(usize, u64)>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one `/predict` request. Latency enters the percentile
+    /// ring only for successful predictions — rejected requests fail in
+    /// microseconds and would drag p50/p99 far below what real
+    /// inference costs, misleading anything alerting on them.
+    pub fn record_request(&self, latency: Duration, ok: bool) {
+        let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        let mut inner = self.inner.lock().unwrap();
+        inner.requests += 1;
+        if !ok {
+            inner.errors += 1;
+            return;
+        }
+        if inner.latencies_us.len() < LATENCY_WINDOW {
+            inner.latencies_us.push(us);
+        } else {
+            let slot = inner.next_slot;
+            inner.latencies_us[slot] = us;
+            inner.next_slot = (slot + 1) % LATENCY_WINDOW;
+        }
+    }
+
+    /// Record one coalesced forward pass of `rows` rows.
+    pub fn record_batch(&self, rows: usize) {
+        if rows == 0 {
+            return;
+        }
+        let bucket = (usize::BITS - (rows - 1).leading_zeros()) as usize;
+        let mut inner = self.inner.lock().unwrap();
+        if inner.batch_buckets.len() <= bucket {
+            inner.batch_buckets.resize(bucket + 1, 0);
+        }
+        inner.batch_buckets[bucket] += 1;
+        inner.batches += 1;
+        inner.batched_rows += rows as u64;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        let mut sorted = inner.latencies_us.clone();
+        sorted.sort_unstable();
+        let pick = |q: f64| -> u64 {
+            if sorted.is_empty() {
+                0
+            } else {
+                sorted[((sorted.len() as f64 - 1.0) * q).round() as usize]
+            }
+        };
+        MetricsSnapshot {
+            requests: inner.requests,
+            errors: inner.errors,
+            p50_us: pick(0.50),
+            p99_us: pick(0.99),
+            batches: inner.batches,
+            batched_rows: inner.batched_rows,
+            batch_hist: inner
+                .batch_buckets
+                .iter()
+                .enumerate()
+                .map(|(i, &count)| (1usize << i, count))
+                .collect(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// The `GET /metrics` response body.
+    pub fn to_json(&self) -> Json {
+        let hist = Json::Arr(
+            self.batch_hist
+                .iter()
+                .map(|&(le, count)| {
+                    Json::obj(vec![
+                        ("batch_le", Json::num(le as f64)),
+                        ("count", Json::num(count as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("latency_p50_us", Json::num(self.p50_us as f64)),
+            ("latency_p99_us", Json::num(self.p99_us as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("batched_rows", Json::num(self.batched_rows as f64)),
+            ("batch_size_hist", hist),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_percentiles() {
+        let m = ServeMetrics::new();
+        for us in 1..=100u64 {
+            m.record_request(Duration::from_micros(us), us != 7);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.errors, 1);
+        // 99 successful samples (the failed us=7 request is excluded
+        // from the ring): pick(0.5) → sorted[49] = 51, pick(0.99) →
+        // sorted[97] = 99.
+        assert_eq!(s.p50_us, 51);
+        assert_eq!(s.p99_us, 99);
+    }
+
+    #[test]
+    fn ring_keeps_only_the_window() {
+        let m = ServeMetrics::new();
+        for _ in 0..LATENCY_WINDOW {
+            m.record_request(Duration::from_micros(1_000_000), true);
+        }
+        // overwrite the whole window with fast requests
+        for _ in 0..LATENCY_WINDOW {
+            m.record_request(Duration::from_micros(10), true);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2 * LATENCY_WINDOW as u64);
+        assert_eq!(s.p99_us, 10, "old slow samples must have been evicted");
+    }
+
+    #[test]
+    fn batch_buckets_are_powers_of_two() {
+        let m = ServeMetrics::new();
+        for rows in [1usize, 1, 2, 3, 4, 5, 8, 9, 16] {
+            m.record_batch(rows);
+        }
+        m.record_batch(0); // ignored
+        let s = m.snapshot();
+        assert_eq!(s.batches, 9);
+        assert_eq!(s.batched_rows, 1 + 1 + 2 + 3 + 4 + 5 + 8 + 9 + 16);
+        let hist: std::collections::BTreeMap<usize, u64> =
+            s.batch_hist.into_iter().collect();
+        assert_eq!(hist[&1], 2); // two single-row batches
+        assert_eq!(hist[&2], 1); // size 2
+        assert_eq!(hist[&4], 2); // sizes 3, 4
+        assert_eq!(hist[&8], 2); // sizes 5, 8
+        assert_eq!(hist[&16], 2); // sizes 9, 16
+    }
+
+    #[test]
+    fn metrics_json_shape() {
+        let m = ServeMetrics::new();
+        m.record_request(Duration::from_micros(42), true);
+        m.record_batch(3);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.expect("requests").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.expect("latency_p50_us").unwrap().as_f64().unwrap(), 42.0);
+        let hist = j.expect("batch_size_hist").unwrap().as_arr().unwrap();
+        assert!(!hist.is_empty());
+    }
+}

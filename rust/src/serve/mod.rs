@@ -1,0 +1,32 @@
+//! The serving subsystem: persist a trained run, answer predictions.
+//!
+//! Training compresses the label space so the model is small enough to
+//! ship and run everywhere; this module is where that pays off
+//! (deployment cost, not just training cost — the communication-
+//! efficiency surveys' point). Three layers:
+//!
+//! - [`checkpoint`] — the versioned `.fmlh` binary format: R trained
+//!   sub-models (dense `f32` or wire-codec q8, ~4× smaller), the
+//!   derived hash seeds that reconstruct the [`crate::hashing`] tables
+//!   bit-identically, and the experiment metadata. Written by
+//!   `fedmlh run --save`, checksummed, corruption-rejecting.
+//! - [`infer`] — [`infer::InferenceEngine`] (feature-hash → R-model
+//!   forward → count-sketch decode → top-k; batching-invariant) and
+//!   [`infer::Predictor`], a worker pool that coalesces concurrent
+//!   requests into one forward pass (micro-batching).
+//! - [`http`] — `fedmlh serve`: a `std::net` HTTP front end exposing
+//!   `POST /predict`, `GET /healthz` and `GET /metrics`
+//!   ([`metrics`]: request count, p50/p99 latency, batch histogram).
+//!
+//! End to end: `fedmlh run --preset eurlex --save m.fmlh` then
+//! `fedmlh serve --checkpoint m.fmlh --port 8080 --workers 4`.
+
+pub mod checkpoint;
+pub mod http;
+pub mod infer;
+pub mod metrics;
+
+pub use checkpoint::{Checkpoint, CheckpointCodec, CheckpointMeta};
+pub use http::{Server, ServeOpts, ServerHandle};
+pub use infer::{InferenceEngine, Predictor};
+pub use metrics::{MetricsSnapshot, ServeMetrics};

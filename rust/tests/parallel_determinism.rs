@@ -76,6 +76,7 @@ fn four_workers_match_sequential_for_every_codec() {
         CodecSpec::Dense,
         CodecSpec::QuantI8,
         CodecSpec::TopK { frac: 0.2 },
+        CodecSpec::TopKPacked { frac: 0.2 },
     ] {
         let seq = run(1, codec, Algo::FedMlh);
         let par = run(4, codec, Algo::FedMlh);

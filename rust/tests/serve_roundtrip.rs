@@ -1,0 +1,316 @@
+//! The serving subsystem's end-to-end contract:
+//!
+//! 1. `train → save → load → predict` returns **bitwise** the same
+//!    top-k (classes and scores) as the offline evaluation decode on
+//!    the same inputs — for the lossless dense checkpoint codec;
+//! 2. the q8 checkpoint is ≥ 3.5× smaller than dense `f32` and still
+//!    predicts sane labels;
+//! 3. corrupt / truncated / wrong-version checkpoint files are
+//!    rejected loudly;
+//! 4. `fedmlh serve`'s HTTP front end answers `POST /predict` over a
+//!    real TCP socket with exactly the engine's top-k, plus working
+//!    `/healthz`, `/metrics`, and error paths.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use fedmlh::algo::scheme_for;
+use fedmlh::config::{Algo, ExperimentConfig};
+use fedmlh::eval::topk::top_k;
+use fedmlh::federated::backend::RustBackend;
+use fedmlh::federated::server;
+use fedmlh::harness;
+use fedmlh::serve::{
+    Checkpoint, CheckpointCodec, InferenceEngine, Predictor, ServeMetrics, ServeOpts, Server,
+};
+use fedmlh::util::json::Json;
+
+/// Train a quick tiny run and package it with the shared world.
+fn trained_checkpoint(algo: Algo) -> (ExperimentConfig, harness::World, Checkpoint) {
+    let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+    cfg.rounds = 3;
+    cfg.patience = 0;
+    cfg.clients = 4;
+    cfg.clients_per_round = 2;
+    cfg.local_epochs = 1;
+    let world = harness::build_world(&cfg);
+    let scheme = scheme_for(&cfg, algo, &world.data.train);
+    let backend = RustBackend::new();
+    let out = server::run(
+        &cfg,
+        scheme.as_ref(),
+        &backend,
+        &world.data.train,
+        &world.data.test,
+        &world.partition,
+    )
+    .unwrap();
+    let ckpt = Checkpoint::from_run(
+        &cfg,
+        algo,
+        world.data.train.d(),
+        world.data.train.p(),
+        out.final_globals,
+    )
+    .unwrap();
+    (cfg, world, ckpt)
+}
+
+/// The offline evaluation's score path for a batch of test samples:
+/// backend predict per sub-model → scheme decode (identical code path
+/// to `federated::server::evaluate`).
+fn offline_scores(
+    cfg: &ExperimentConfig,
+    world: &harness::World,
+    algo: Algo,
+    models: &[fedmlh::model::ModelParams],
+    idx: &[usize],
+) -> Vec<f32> {
+    let scheme = scheme_for(cfg, algo, &world.data.train);
+    let backend = RustBackend::new();
+    let (x, rows) = world.data.test.feature_batch(idx, idx.len());
+    let logits: Vec<Vec<f32>> = models
+        .iter()
+        .map(|m| fedmlh::model::mlp::forward(m, &x, rows))
+        .collect();
+    scheme.scores(&logits, rows, &backend).unwrap()
+}
+
+fn temp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("fedmlh_serve_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn dense_checkpoint_predicts_bitwise_like_offline_eval() {
+    let (cfg, world, ckpt) = trained_checkpoint(Algo::FedMlh);
+    let p = world.data.train.p();
+    let idx: Vec<usize> = (0..8).collect();
+    let want = offline_scores(&cfg, &world, Algo::FedMlh, &ckpt.models, &idx);
+
+    let path = temp_path("dense.fmlh");
+    ckpt.save(&path, CheckpointCodec::Dense).unwrap();
+    let engine = InferenceEngine::new(Checkpoint::load(&path).unwrap()).unwrap();
+    let (x, rows) = world.data.test.feature_batch(&idx, idx.len());
+    let got = engine.scores(&x, rows).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(want.iter()) {
+        assert_eq!(g.to_bits(), w.to_bits(), "scores must be bitwise identical");
+    }
+    // ... and therefore so is every top-k selection.
+    for row in 0..rows {
+        let served = engine.predict_topk(&x[row * engine.d()..(row + 1) * engine.d()], 1, 5)
+            .unwrap()
+            .remove(0);
+        let offline: Vec<usize> = top_k(&want[row * p..(row + 1) * p], 5);
+        let served_classes: Vec<usize> = served.iter().map(|&(c, _)| c as usize).collect();
+        assert_eq!(served_classes, offline, "row {row}");
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn fedavg_checkpoint_roundtrips_too() {
+    let (cfg, world, ckpt) = trained_checkpoint(Algo::FedAvg);
+    let idx: Vec<usize> = (0..4).collect();
+    let want = offline_scores(&cfg, &world, Algo::FedAvg, &ckpt.models, &idx);
+    let engine =
+        InferenceEngine::new(Checkpoint::from_bytes(&ckpt.to_bytes(CheckpointCodec::Dense).unwrap()).unwrap())
+            .unwrap();
+    let (x, rows) = world.data.test.feature_batch(&idx, idx.len());
+    let got = engine.scores(&x, rows).unwrap();
+    for (g, w) in got.iter().zip(want.iter()) {
+        assert_eq!(g.to_bits(), w.to_bits());
+    }
+}
+
+#[test]
+fn q8_checkpoint_is_much_smaller_and_still_predicts() {
+    let (_, world, ckpt) = trained_checkpoint(Algo::FedMlh);
+    let dense = ckpt.to_bytes(CheckpointCodec::Dense).unwrap();
+    let q8 = ckpt.to_bytes(CheckpointCodec::QuantI8).unwrap();
+    let ratio = dense.len() as f64 / q8.len() as f64;
+    assert!(ratio >= 3.5, "q8 ratio {ratio:.2} below 3.5x ({} vs {})", q8.len(), dense.len());
+
+    let engine = InferenceEngine::new(Checkpoint::from_bytes(&q8).unwrap()).unwrap();
+    let (x, rows) = world.data.test.feature_batch(&[0, 1, 2], 3);
+    let topk = engine.predict_topk(&x, rows, 5).unwrap();
+    assert_eq!(topk.len(), 3);
+    for row in &topk {
+        assert_eq!(row.len(), 5);
+        for &(c, s) in row {
+            assert!((c as usize) < world.data.train.p());
+            assert!(s.is_finite());
+        }
+    }
+}
+
+#[test]
+fn damaged_checkpoints_are_rejected() {
+    let (_, _, ckpt) = trained_checkpoint(Algo::FedMlh);
+    let bytes = ckpt.to_bytes(CheckpointCodec::QuantI8).unwrap();
+
+    // corrupt one parameter byte
+    let mut corrupt = bytes.clone();
+    let mid = corrupt.len() / 2;
+    corrupt[mid] ^= 0x10;
+    let err = Checkpoint::from_bytes(&corrupt).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err}");
+
+    // truncation at any depth
+    for cut in [3usize, 10, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            Checkpoint::from_bytes(&bytes[..cut]).is_err(),
+            "truncation at {cut} must fail"
+        );
+    }
+
+    // future format version
+    let mut future = bytes.clone();
+    future[4] = 7;
+    future[5] = 0;
+    let err = Checkpoint::from_bytes(&future).unwrap_err();
+    assert!(err.to_string().contains("version 7"), "{err}");
+
+    // wrong magic
+    let mut magic = bytes.clone();
+    magic[0] = b'Z';
+    let err = Checkpoint::from_bytes(&magic).unwrap_err();
+    assert!(err.to_string().contains("magic"), "{err}");
+
+    // a file that is valid except for extra appended bytes
+    let mut padded = bytes;
+    padded.extend_from_slice(b"extra");
+    assert!(Checkpoint::from_bytes(&padded).is_err());
+}
+
+#[test]
+fn micro_batched_predictions_match_unbatched() {
+    let (_, world, ckpt) = trained_checkpoint(Algo::FedMlh);
+    let engine = InferenceEngine::new(ckpt.clone()).unwrap();
+    let d = engine.d();
+    let (x, _) = world.data.test.feature_batch(&(0..16).collect::<Vec<_>>(), 16);
+    let expected: Vec<Vec<(u32, f32)>> = (0..16)
+        .map(|row| engine.predict_topk(&x[row * d..(row + 1) * d], 1, 3).unwrap().remove(0))
+        .collect();
+
+    let predictor = Arc::new(Predictor::new(
+        InferenceEngine::new(ckpt).unwrap(),
+        2,
+        8,
+        Arc::new(ServeMetrics::new()),
+    ));
+    let mut threads = Vec::new();
+    for row in 0..16usize {
+        let predictor = predictor.clone();
+        let input = x[row * d..(row + 1) * d].to_vec();
+        threads.push(std::thread::spawn(move || {
+            (row, predictor.predict(input, 3).unwrap())
+        }));
+    }
+    for t in threads {
+        let (row, got) = t.join().unwrap();
+        assert_eq!(got, expected[row], "row {row}");
+    }
+}
+
+// ---------------------------------------------------------------- HTTP
+
+/// Minimal HTTP/1.1 client: send one request, read the full response.
+fn http_request(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let request = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    conn.write_all(request.as_bytes()).unwrap();
+    let mut response = String::new();
+    conn.read_to_string(&mut response).unwrap();
+    let status: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let body_start = response.find("\r\n\r\n").expect("header terminator") + 4;
+    (status, response[body_start..].to_string())
+}
+
+#[test]
+fn http_server_smoke_test_over_a_real_socket() {
+    let (_, world, ckpt) = trained_checkpoint(Algo::FedMlh);
+    let engine = InferenceEngine::new(ckpt.clone()).unwrap();
+    let opts = ServeOpts {
+        host: "127.0.0.1".to_string(),
+        port: 0, // ephemeral
+        workers: 2,
+        max_batch: 8,
+    };
+    let server = Server::bind(ckpt, &opts).unwrap();
+    let handle = server.handle().unwrap();
+    let addr = handle.addr();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    // healthz reports the checkpoint identity
+    let (status, body) = http_request(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "{body}");
+    let health = Json::parse(&body).unwrap();
+    assert_eq!(health.expect("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(health.expect("algo").unwrap().as_str().unwrap(), "fedmlh");
+    assert_eq!(health.expect("models").unwrap().as_usize().unwrap(), 2);
+
+    // predict with dense features: bitwise the engine's answer
+    let x = world.data.test.features_of(0);
+    let dense_json: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    let request = format!("{{\"dense\": [{}], \"k\": 5}}", dense_json.join(","));
+    let (status, body) = http_request(addr, "POST", "/predict", &request);
+    assert_eq!(status, 200, "{body}");
+    let parsed = Json::parse(&body).unwrap();
+    let want = engine.predict_topk(x, 1, 5).unwrap().remove(0);
+    let got = parsed.expect("topk").unwrap().as_arr().unwrap();
+    assert_eq!(got.len(), want.len());
+    for (j, &(class, score)) in got.iter().zip(want.iter()) {
+        assert_eq!(j.expect("class").unwrap().as_usize().unwrap(), class as usize);
+        let served = j.expect("score").unwrap().as_f64().unwrap() as f32;
+        assert_eq!(served.to_bits(), score.to_bits(), "score bitwise");
+    }
+
+    // predict with a raw sparse input (feature-hashed server-side)
+    let (status, body) = http_request(
+        addr,
+        "POST",
+        "/predict",
+        "{\"sparse\": [[3, 1.5], [700, -0.25]], \"k\": 3}",
+    );
+    assert_eq!(status, 200, "{body}");
+    let sparse_topk = Json::parse(&body).unwrap();
+    assert_eq!(sparse_topk.expect("topk").unwrap().as_arr().unwrap().len(), 3);
+    let hashed = engine.hash_features(&[(3, 1.5), (700, -0.25)]);
+    let want_sparse = engine.predict_topk(&hashed, 1, 3).unwrap().remove(0);
+    let got_sparse = sparse_topk.expect("topk").unwrap().as_arr().unwrap();
+    for (j, &(class, _)) in got_sparse.iter().zip(want_sparse.iter()) {
+        assert_eq!(j.expect("class").unwrap().as_usize().unwrap(), class as usize);
+    }
+
+    // error paths: bad body, wrong dimension, wrong method, unknown path
+    let (status, body) = http_request(addr, "POST", "/predict", "not json");
+    assert_eq!(status, 400, "{body}");
+    let (status, body) = http_request(addr, "POST", "/predict", "{\"dense\": [1.0]}");
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("expects d"), "{body}");
+    let (status, _) = http_request(addr, "GET", "/predict", "");
+    assert_eq!(status, 405);
+    let (status, _) = http_request(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+
+    // metrics counted the predict requests (2 ok + 2 bad)
+    let (status, body) = http_request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let metrics = Json::parse(&body).unwrap();
+    assert_eq!(metrics.expect("requests").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(metrics.expect("errors").unwrap().as_usize().unwrap(), 2);
+    assert!(metrics.expect("batches").unwrap().as_usize().unwrap() >= 2);
+
+    handle.stop();
+    server_thread.join().unwrap();
+}

@@ -87,6 +87,7 @@ fn byte_len_always_equals_encoded_buffer_length() {
             CodecSpec::Dense,
             CodecSpec::QuantI8,
             CodecSpec::TopK { frac },
+            CodecSpec::TopKPacked { frac },
         ] {
             let enc = encode_update(spec, &global, &local).unwrap();
             let bytes = enc.to_bytes();
@@ -167,8 +168,49 @@ fn real_round_metered_bytes_match_codec_payloads() {
 }
 
 #[test]
+fn packed_topk_reconstructs_identically_and_ships_fewer_bytes() {
+    // The entropy-coded index stream must change the wire size only:
+    // same selection, same decoded parameters, strictly smaller payload.
+    check("topkv == topk semantics", 25, |g: &mut Gen| {
+        let (global, local) = random_pair(g);
+        let frac = g.f32_in(0.05, 0.9);
+        let raw = encode_update(CodecSpec::TopK { frac }, &global, &local).unwrap();
+        let packed = encode_update(CodecSpec::TopKPacked { frac }, &global, &local).unwrap();
+        assert_eq!(
+            decode_update(&global, &raw).unwrap(),
+            decode_update(&global, &packed).unwrap(),
+            "decode must not depend on the index-stream encoding"
+        );
+        assert!(
+            packed.byte_len() < raw.byte_len(),
+            "packed {} >= raw {}",
+            packed.byte_len(),
+            raw.byte_len()
+        );
+    });
+}
+
+#[test]
+fn packed_topk_real_round_compresses_beyond_raw_topk() {
+    let frac = 0.1f32;
+    let (_, raw) = real_round(CodecSpec::TopK { frac });
+    let (_, packed) = real_round(CodecSpec::TopKPacked { frac });
+    assert!(
+        packed.comm.uploaded() < raw.comm.uploaded(),
+        "topkv uplink {} >= topk uplink {}",
+        packed.comm.uploaded(),
+        raw.comm.uploaded()
+    );
+    assert!(packed.comm.upload_compression() > raw.comm.upload_compression());
+}
+
+#[test]
 fn compressed_runs_still_learn() {
-    for codec in [CodecSpec::QuantI8, CodecSpec::TopK { frac: 0.25 }] {
+    for codec in [
+        CodecSpec::QuantI8,
+        CodecSpec::TopK { frac: 0.25 },
+        CodecSpec::TopKPacked { frac: 0.25 },
+    ] {
         let (_, out) = real_round(codec);
         assert_eq!(out.rounds_run, 2);
         for rec in &out.history.records {
