@@ -6,6 +6,7 @@ pub mod presets;
 
 use anyhow::{bail, Result};
 
+use crate::federated::transport::DownCodec;
 use crate::federated::wire::CodecSpec;
 
 pub use presets::{DatasetPreset, PRESETS};
@@ -76,6 +77,15 @@ pub struct ExperimentConfig {
     /// Wire codec for client→server updates (Table 4 accounting charges
     /// the encoded bytes). `Dense` reproduces the seed accounting.
     pub codec: CodecSpec,
+    /// Broadcast (server→client) codec (CLI: `--down-codec`). `Dense`
+    /// reproduces the seed's raw-`f32` downlink bit-for-bit.
+    pub down_codec: DownCodec,
+    /// Carry compression state across rounds on both links (CLI:
+    /// `--error-feedback`): client-side error-feedback accumulators add
+    /// the un-shipped uplink residual into the next round's update, and
+    /// the server folds the broadcast's quantization error into the
+    /// next broadcast. Off = the stateless seed pipeline.
+    pub error_feedback: bool,
 }
 
 impl ExperimentConfig {
@@ -96,6 +106,8 @@ impl ExperimentConfig {
             fast_artifacts: false,
             workers: 1,
             codec: CodecSpec::Dense,
+            down_codec: DownCodec::Dense,
+            error_feedback: false,
         }
     }
 
@@ -230,6 +242,12 @@ mod tests {
         let mut cfg = ExperimentConfig::preset("tiny").unwrap();
         assert_eq!(cfg.workers, 1);
         assert_eq!(cfg.codec, CodecSpec::Dense);
+        // Transport defaults are the stateless seed pipeline.
+        assert_eq!(cfg.down_codec, DownCodec::Dense);
+        assert!(!cfg.error_feedback);
+        cfg.down_codec = DownCodec::QuantI8;
+        cfg.error_feedback = true;
+        cfg.validate().unwrap();
         cfg.workers = 0;
         assert!(cfg.validate().is_err());
         cfg.workers = 8;

@@ -10,10 +10,12 @@
 
 /// Byte meter for one training run.
 ///
-/// Since the wire-format layer ([`super::wire`]) landed, uploads are
-/// charged the *encoded* payload size; the dense `f32` equivalent is
-/// tracked alongside so compression wins are reportable
-/// ([`Self::upload_compression`]) without guessing.
+/// Both links are charged the *encoded* payload size — uploads since
+/// the wire-format layer ([`super::wire`]) landed, downloads since the
+/// transport pipeline ([`super::transport`]) made the broadcast
+/// compressible too. The dense `f32` equivalent is tracked per link so
+/// compression wins are reportable ([`Self::upload_compression`],
+/// [`Self::download_compression`]) without guessing.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommMeter {
     download_bytes: u64,
@@ -21,6 +23,8 @@ pub struct CommMeter {
     /// What the uploads would have cost as dense `f32` (the seed's
     /// `model_bytes_each` flat accounting).
     dense_upload_bytes: u64,
+    /// What the downloads would have cost as dense `f32`.
+    dense_download_bytes: u64,
     /// Cumulative total at the end of each completed round (Fig 4 x-axis).
     per_round_totals: Vec<u64>,
 }
@@ -30,9 +34,17 @@ impl CommMeter {
         Self::default()
     }
 
-    /// Record one client downloading `bytes` of global parameters.
+    /// Record one client downloading `bytes` of global parameters
+    /// (uncompressed — dense equivalent equals the actual bytes).
     pub fn download(&mut self, bytes: usize) {
-        self.download_bytes += bytes as u64;
+        self.download_encoded(bytes, bytes);
+    }
+
+    /// Record one client downloading an encoded broadcast: `actual`
+    /// bytes on the wire, `dense_equiv` bytes had it shipped raw `f32`.
+    pub fn download_encoded(&mut self, actual: usize, dense_equiv: usize) {
+        self.download_bytes += actual as u64;
+        self.dense_download_bytes += dense_equiv as u64;
     }
 
     /// Record one client uploading `bytes` of updated parameters
@@ -77,6 +89,21 @@ impl CommMeter {
             1.0
         } else {
             self.dense_upload_bytes as f64 / self.upload_bytes as f64
+        }
+    }
+
+    /// Dense-`f32` equivalent of everything downloaded.
+    pub fn downloaded_dense_equiv(&self) -> u64 {
+        self.dense_download_bytes
+    }
+
+    /// Downlink compression ratio (dense / actual; 1.0 when
+    /// uncompressed or nothing was downloaded yet).
+    pub fn download_compression(&self) -> f64 {
+        if self.download_bytes == 0 {
+            1.0
+        } else {
+            self.dense_download_bytes as f64 / self.download_bytes as f64
         }
     }
 
@@ -133,6 +160,27 @@ mod tests {
         assert_eq!(m.total_at_round(0), 150);
         assert_eq!(m.total_at_round(1), 300);
         assert_eq!(m.rounds(), 2);
+    }
+
+    #[test]
+    fn encoded_downloads_track_dense_equivalent() {
+        // Two-sided accounting: each link carries its own actual vs
+        // dense-equivalent pair and reports its own ratio.
+        let mut m = CommMeter::new();
+        m.download_encoded(30, 120); // 4x compressed broadcast
+        m.download_encoded(30, 120);
+        m.upload_encoded(10, 120); // 12x compressed upload
+        assert_eq!(m.downloaded(), 60);
+        assert_eq!(m.downloaded_dense_equiv(), 240);
+        assert!((m.download_compression() - 4.0).abs() < 1e-12);
+        assert!((m.upload_compression() - 12.0).abs() < 1e-12);
+        assert_eq!(m.total(), 70);
+        // plain downloads stay 1:1 (the seed accounting)
+        let mut plain = CommMeter::new();
+        plain.download(80);
+        assert_eq!(plain.downloaded_dense_equiv(), 80);
+        assert_eq!(plain.download_compression(), 1.0);
+        assert_eq!(CommMeter::new().download_compression(), 1.0);
     }
 
     #[test]

@@ -1,12 +1,14 @@
 //! The parallel round engine — fans one synchronization round's
 //! `(selected client, sub-model)` work items across a worker pool.
 //!
-//! Each work item is a pure function of `(round, client, sub-model)`:
-//! clone the global sub-model, run E local epochs with the item's
-//! [`derive_seed`]-derived batch stream, and encode the update with the
-//! configured [`super::wire`] codec. Items never share mutable state,
-//! so executing them on N threads instead of one changes *nothing*
-//! about the numbers:
+//! Each work item is keyed by `(round, client, sub-model)`: clone the
+//! broadcast sub-model, run E local epochs with the item's
+//! [`derive_seed`]-derived batch stream, and encode the update through
+//! the run's shared [`super::transport::UplinkCompressor`]. Items never
+//! share mutable state — a stateful (error-feedback) compressor keeps
+//! one slot per `(client, sub-model)` and a round touches each slot
+//! from exactly one item — so executing them on N threads instead of
+//! one changes *nothing* about the numbers:
 //!
 //! - the per-item RNG seed depends only on `(round, client, sub-model)`
 //!   — the seed scheme the sequential loop always used;
@@ -37,7 +39,8 @@ use crate::util::rng::derive_seed;
 
 use super::backend::{TrainBackend, TrainStats};
 use super::batcher::ClientBatcher;
-use super::wire::{encode_update, EncodedUpdate};
+use super::transport::UplinkCompressor;
+use super::wire::EncodedUpdate;
 
 /// What one `(client, sub-model)` work item produces.
 #[derive(Clone, Debug)]
@@ -73,6 +76,10 @@ impl RoundEngine {
 
     /// Train every `(selected client, sub-model)` pair of one round.
     ///
+    /// `globals` is the *decoded broadcast* — the model state the
+    /// clients actually received this round — and `uplink` is the run's
+    /// shared (possibly stateful) update compressor.
+    ///
     /// Returns updates indexed `[slot][sub-model]` where `slot` follows
     /// `selected`'s order — independent of worker count or scheduling.
     #[allow(clippy::too_many_arguments)]
@@ -81,6 +88,7 @@ impl RoundEngine {
         cfg: &ExperimentConfig,
         scheme: &dyn LabelScheme,
         backend: &dyn TrainBackend,
+        uplink: &dyn UplinkCompressor,
         train: &Dataset,
         partition: &Partition,
         globals: &[ModelParams],
@@ -108,7 +116,7 @@ impl RoundEngine {
             );
             let stats = be.local_train(&mut local, &mut batcher, cfg.local_epochs, cfg.lr)?;
             let t_enc = std::time::Instant::now();
-            let encoded = encode_update(cfg.codec, &globals[j], &local)?;
+            let encoded = uplink.compress(client, j, &globals[j], &local)?;
             Ok(ClientUpdate {
                 stats,
                 encode_seconds: t_enc.elapsed().as_secs_f64(),
@@ -175,6 +183,8 @@ mod tests {
     use crate::config::Algo;
     use crate::data::synth::generate_preset;
     use crate::federated::backend::RustBackend;
+    use crate::federated::transport::{FeedbackUplink, StatelessUplink};
+    use crate::federated::wire::CodecSpec;
     use crate::partition::noniid::{partition as noniid, NonIidOptions};
 
     fn setup() -> (ExperimentConfig, crate::data::synth::SynthData, Partition) {
@@ -187,7 +197,7 @@ mod tests {
         (cfg, data, part)
     }
 
-    fn run_with(workers: usize) -> Vec<Vec<ClientUpdate>> {
+    fn run_with(workers: usize, uplink: &dyn UplinkCompressor) -> Vec<Vec<ClientUpdate>> {
         let (cfg, data, part) = setup();
         let scheme = scheme_for(&cfg, Algo::FedMlh, &data.train);
         let backend = RustBackend::new();
@@ -207,6 +217,7 @@ mod tests {
                 &cfg,
                 scheme.as_ref(),
                 &backend,
+                uplink,
                 &data.train,
                 &part,
                 &globals,
@@ -218,7 +229,8 @@ mod tests {
 
     #[test]
     fn groups_by_client_then_model() {
-        let out = run_with(1);
+        let uplink = StatelessUplink::new(CodecSpec::Dense);
+        let out = run_with(1, &uplink);
         assert_eq!(out.len(), 3);
         for per_model in &out {
             assert_eq!(per_model.len(), 2); // tiny preset R=2
@@ -227,15 +239,45 @@ mod tests {
 
     #[test]
     fn worker_count_does_not_change_results() {
-        let seq = run_with(1);
+        let uplink = StatelessUplink::new(CodecSpec::Dense);
+        let seq = run_with(1, &uplink);
         for workers in [2usize, 4, 7] {
-            let par = run_with(workers);
+            let par = run_with(workers, &uplink);
             assert_eq!(seq.len(), par.len());
             for (a, b) in seq.iter().zip(par.iter()) {
                 for (x, y) in a.iter().zip(b.iter()) {
                     assert_eq!(x.encoded, y.encoded, "workers={workers}");
                     assert_eq!(x.stats.steps, y.stats.steps);
                     assert_eq!(x.stats.mean_loss, y.stats.mean_loss);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stateful_uplink_is_worker_count_invariant_too() {
+        // Fresh compressor state per engine run: the residual written by
+        // round 1 must come out identical no matter how many workers
+        // raced through the items.
+        let (cfg, ..) = setup();
+        let spec = CodecSpec::TopK { frac: 0.1 };
+        let seq_up = FeedbackUplink::new(spec, cfg.clients, 2);
+        let seq = run_with(1, &seq_up);
+        for workers in [2usize, 4] {
+            let par_up = FeedbackUplink::new(spec, cfg.clients, 2);
+            let par = run_with(workers, &par_up);
+            for (a, b) in seq.iter().zip(par.iter()) {
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.encoded, y.encoded, "workers={workers}");
+                }
+            }
+            for &client in &[0usize, 2, 3] {
+                for j in 0..2 {
+                    assert_eq!(
+                        seq_up.residual(client, j),
+                        par_up.residual(client, j),
+                        "residual slot ({client},{j}) with workers={workers}"
+                    );
                 }
             }
         }

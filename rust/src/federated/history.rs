@@ -28,6 +28,12 @@ pub struct RoundRecord {
     pub accuracy: AccuracyReport,
     /// Cumulative communication bytes after this round.
     pub comm_bytes: u64,
+    /// This round's *encoded* downlink (broadcast) bytes across all
+    /// selected clients × sub-models.
+    pub down_bytes: u64,
+    /// This round's *encoded* uplink (update) bytes across all selected
+    /// clients × sub-models.
+    pub up_bytes: u64,
     /// Wall-clock seconds of this round's local training + aggregation.
     pub round_seconds: f64,
     /// Mean local training loss across the round's clients.
@@ -99,12 +105,12 @@ impl History {
     /// CSV with one row per evaluated round (figure regeneration).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,top1,top3,top5,freq1,freq3,freq5,infreq1,infreq3,infreq5,comm_bytes,round_seconds,mean_loss,train_seconds,encode_seconds,aggregate_seconds\n",
+            "round,top1,top3,top5,freq1,freq3,freq5,infreq1,infreq3,infreq5,comm_bytes,down_bytes,up_bytes,round_seconds,mean_loss,train_seconds,encode_seconds,aggregate_seconds\n",
         );
         for r in &self.records {
             let a = &r.accuracy;
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.4},{:.6},{:.4},{:.4},{:.4}\n",
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{:.4},{:.6},{:.4},{:.4},{:.4}\n",
                 r.round,
                 a.top1,
                 a.top3,
@@ -116,6 +122,8 @@ impl History {
                 a.infreq3,
                 a.infreq5,
                 r.comm_bytes,
+                r.down_bytes,
+                r.up_bytes,
                 r.round_seconds,
                 r.mean_loss,
                 r.timing.train_seconds,
@@ -139,6 +147,8 @@ impl History {
                         ("top5", Json::num(r.accuracy.top5)),
                         ("infreq1", Json::num(r.accuracy.infreq1)),
                         ("comm_bytes", Json::num(r.comm_bytes as f64)),
+                        ("down_bytes", Json::num(r.down_bytes as f64)),
+                        ("up_bytes", Json::num(r.up_bytes as f64)),
                         ("round_seconds", Json::num(r.round_seconds)),
                         ("mean_loss", Json::num(r.mean_loss)),
                         ("train_seconds", Json::num(r.timing.train_seconds)),
@@ -165,6 +175,8 @@ mod tests {
                 ..Default::default()
             },
             comm_bytes: (round as u64 + 1) * 100,
+            down_bytes: 60,
+            up_bytes: 40,
             round_seconds: secs,
             mean_loss: 1.0 / (round + 1) as f64,
             timing: RoundTiming {
@@ -215,6 +227,24 @@ mod tests {
             "train_seconds,encode_seconds,aggregate_seconds"
         ));
         assert!(csv.lines().nth(1).unwrap().ends_with("0.9000,0.1500,0.4500"));
+    }
+
+    #[test]
+    fn csv_carries_per_link_bytes() {
+        let mut h = History::new();
+        h.push(rec(0, 0.25, 1.5));
+        let csv = h.to_csv();
+        assert!(
+            csv.lines().next().unwrap().contains(",comm_bytes,down_bytes,up_bytes,"),
+            "header must carry the per-link byte columns"
+        );
+        // rec(): comm 100 cumulative, 60 down + 40 up this round.
+        assert!(csv.lines().nth(1).unwrap().contains(",100,60,40,"));
+        let j = h.to_json().to_string_pretty(0);
+        let parsed = Json::parse(&j).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.expect("down_bytes").unwrap().as_f64().unwrap(), 60.0);
+        assert_eq!(row.expect("up_bytes").unwrap().as_f64().unwrap(), 40.0);
     }
 
     #[test]

@@ -1,12 +1,37 @@
 //! The federated coordinator — the paper's Algorithm 2 as a system.
 //!
-//! [`server`] owns the synchronization-round loop: sample S of K
-//! clients, fan their local training out through the [`engine`] worker
-//! pool (through a [`backend`] that is either the PJRT runtime
-//! executing AOT artifacts or the pure-rust reference trainer), decode
-//! the [`wire`]-encoded updates, aggregate per sub-model, account
-//! communication bytes, evaluate, early-stop. FedAvg is the degenerate
-//! case with one sub-model trained on raw class labels.
+//! [`server`] owns the synchronization-round loop; communication flows
+//! through the stateful transport pipeline ([`transport`]), which
+//! drives the stateless wire codecs ([`wire`]) as pluggable backends:
+//!
+//! ```text
+//!   globals ──▶ DownlinkCompressor ──payload──▶ clients decode
+//!      ▲        (dense/q8 + server     │        and locally train
+//!      │         residual folding)     ▼        (engine fan-out)
+//!   aggregate ◀──decode◀──payload◀── UplinkCompressor
+//!                                    (dense/q8/topk/topkv + per-
+//!                                     (client, sub-model) error-
+//!                                     feedback accumulators)
+//! ```
+//!
+//! Per round: sample S of K clients ([`sampler`]), compress and
+//! broadcast each global sub-model down ([`transport::Transport::broadcast`]),
+//! fan local training out through the [`engine`] worker pool (through a
+//! [`backend`] that is either the PJRT runtime executing AOT artifacts
+//! or the pure-rust reference trainer), encode each update through the
+//! shared [`transport::UplinkCompressor`], decode and aggregate per
+//! sub-model ([`aggregate`]), charge both links' *encoded* bytes to the
+//! [`comm::CommMeter`] (dense-equivalent tracked alongside), evaluate,
+//! early-stop. With `dense` on both links and `--error-feedback off`
+//! this is bit-identical to the historical stateless pipeline; FedAvg
+//! is the degenerate case with one sub-model trained on raw class
+//! labels.
+//!
+//! Compression *state* — the error-feedback residuals on the client
+//! side, the broadcast quantization residual on the server side — lives
+//! across rounds inside the [`transport::Transport`] owned by one run,
+//! which is what lets aggressive `topk`/`q8` settings keep the signal
+//! they would otherwise discard every round.
 
 pub mod aggregate;
 pub mod backend;
@@ -17,9 +42,14 @@ pub mod engine;
 pub mod history;
 pub mod sampler;
 pub mod server;
+pub mod transport;
 pub mod wire;
 
 pub use backend::{RustBackend, TrainBackend};
 pub use engine::RoundEngine;
 pub use server::{run, RunOutput};
+pub use transport::{
+    BroadcastPayload, DownCodec, DownlinkCompressor, FeedbackUplink, FoldingDownlink,
+    StatelessDownlink, StatelessUplink, Transport, UplinkCompressor,
+};
 pub use wire::{CodecSpec, EncodedUpdate};

@@ -2,22 +2,30 @@
 //!
 //! Per round `t`:
 //! 1. sample S of K clients ([`super::sampler`]),
-//! 2. hand the `(client, sub-model)` work items to the
+//! 2. compress each sub-model's global through the
+//!    [`Transport`](super::transport::Transport) downlink (dense or q8,
+//!    with server-side residual folding when `--error-feedback` is on);
+//!    every selected client trains from the *decoded* broadcast,
+//! 3. hand the `(client, sub-model)` work items to the
 //!    [`RoundEngine`](super::engine::RoundEngine), which runs E local
 //!    epochs per item through the [`TrainBackend`] (`DeviceTrain`) —
 //!    across `cfg.workers` threads when the backend allows — and
-//!    returns each client's [`super::wire`]-encoded update,
-//! 3. meter the downlink (dense global broadcast) and the uplink
-//!    (*encoded* bytes) in deterministic item order,
-//! 4. decode the updates and aggregate each sub-model uniformly over
-//!    the S clients ([`super::aggregate`], line 17),
-//! 5. evaluate on the test set (predict per sub-model → scheme decode →
+//!    encodes each update through the transport's shared
+//!    [`UplinkCompressor`](super::transport::UplinkCompressor) (with
+//!    per-`(client, sub-model)` error-feedback accumulators when on),
+//! 4. meter both links' *encoded* bytes (dense-equivalent tracked
+//!    alongside) in deterministic item order,
+//! 5. decode the updates against the broadcast the clients actually
+//!    received and aggregate each sub-model uniformly over the S
+//!    clients ([`super::aggregate`], line 17),
+//! 6. evaluate on the test set (predict per sub-model → scheme decode →
 //!    top-k metrics) and early-stop on the mean top-k accuracy.
 //!
 //! The loop is algorithm-agnostic: FedAvg is a [`LabelScheme`] with one
 //! sub-model over class labels, FedMLH has R sub-models over bucket
-//! labels (see [`crate::algo`]). With the default `dense` codec and
-//! `workers = 1` this is bit-identical to the historical inline loop.
+//! labels (see [`crate::algo`]). With `dense` on both links,
+//! `--error-feedback off` and `workers = 1` this is bit-identical to
+//! the historical inline loop.
 
 use anyhow::Result;
 
@@ -37,7 +45,7 @@ use super::early_stop::EarlyStopper;
 use super::engine::RoundEngine;
 use super::history::{History, RoundRecord, RoundTiming};
 use super::sampler::ClientSampler;
-use super::wire::decode_update;
+use super::transport::Transport;
 
 /// Everything a finished run reports (inputs to Tables 3–7, Figs 3–5).
 #[derive(Debug)]
@@ -90,6 +98,9 @@ pub fn run(
     let model_bytes_each = globals[0].byte_size();
 
     let sampler = ClientSampler::new(cfg.clients, cfg.clients_per_round, cfg.seed);
+    // Compression state for both links lives here for the whole run
+    // (error-feedback accumulators, broadcast residual folding).
+    let mut transport = Transport::new(cfg, n_models);
     let mut comm = CommMeter::new();
     let mut history = History::new();
     let mut stopper = EarlyStopper::new(cfg.patience);
@@ -113,23 +124,39 @@ pub fn run(
         let t_round = std::time::Instant::now();
         let selected = sampler.sample(round);
 
+        // -- downlink (Algorithm 2 line 10): compress each sub-model's
+        // global once; every selected client downloads the same payload
+        // and trains from its *decoded* form, so a lossy broadcast
+        // codec affects training exactly as it would in deployment.
+        let bcast = transport.broadcast(&globals)?;
+
         // -- local training (Algorithm 2 lines 11–15), fanned out over
         // the engine's worker pool; results come back in deterministic
         // (selected order, sub-model) order regardless of worker count.
         let updates = engine.run_round(
-            cfg, scheme, backend, train, partition, &globals, round, &selected,
+            cfg,
+            scheme,
+            backend,
+            transport.uplink(),
+            train,
+            partition,
+            &bcast.client_globals,
+            round,
+            &selected,
         )?;
 
         // -- communication accounting + loss averaging, in item order.
-        // Downlink is the dense global broadcast; uplink is charged the
-        // codec's actual encoded bytes (Table 4 honesty under
-        // compression — the dense-equivalent is tracked alongside).
+        // Both links are charged their actual *encoded* bytes (Table 4
+        // honesty under compression — the dense-equivalent is tracked
+        // alongside on each link).
+        let down_before = comm.downloaded();
+        let up_before = comm.uploaded();
         let mut loss_sum = 0.0f64;
         let mut loss_n = 0usize;
         let mut timing = RoundTiming::default();
         for per_model in &updates {
-            for upd in per_model {
-                comm.download(model_bytes_each);
+            for (j, upd) in per_model.iter().enumerate() {
+                comm.download_encoded(bcast.payloads[j].byte_len(), model_bytes_each);
                 comm.upload_encoded(upd.encoded.byte_len(), model_bytes_each);
                 timing.train_seconds += upd.stats.seconds;
                 timing.encode_seconds += upd.encode_seconds;
@@ -139,15 +166,20 @@ pub fn run(
                 }
             }
         }
+        let down_bytes = comm.downloaded() - down_before;
+        let up_bytes = comm.uploaded() - up_before;
 
         // -- decode + aggregation (line 17), uniform 1/S as in
-        // Algorithm 2. Decoding happens against the same global the
-        // clients downloaded (pre-aggregation `globals[j]`).
+        // Algorithm 2. Decoding happens against the broadcast the
+        // clients actually received (`bcast.client_globals[j]`, which
+        // differs from `globals[j]` when the downlink codec is lossy).
         let t_agg = std::time::Instant::now();
         for j in 0..n_models {
             let decoded: Vec<ModelParams> = updates
                 .iter()
-                .map(|per_model| decode_update(&globals[j], &per_model[j].encoded))
+                .map(|per_model| {
+                    transport.decode(&bcast.client_globals[j], &per_model[j].encoded)
+                })
                 .collect::<Result<_>>()?;
             let refs: Vec<(&ModelParams, usize)> = decoded
                 .iter()
@@ -170,6 +202,8 @@ pub fn run(
                 round,
                 accuracy: report,
                 comm_bytes: comm.total(),
+                down_bytes,
+                up_bytes,
                 round_seconds,
                 mean_loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 },
                 timing,
@@ -230,6 +264,7 @@ mod tests {
     use crate::config::{Algo, ExperimentConfig};
     use crate::data::synth::generate_preset;
     use crate::federated::backend::RustBackend;
+    use crate::federated::transport::DownCodec;
     use crate::partition::noniid::{partition as noniid, NonIidOptions};
 
     fn tiny_run(algo: Algo, rounds: usize) -> RunOutput {
@@ -307,6 +342,40 @@ mod tests {
         cfg.lr = 1e-12;
         let out = run(&cfg, scheme.as_ref(), &backend, &data.train, &data.test, &part).unwrap();
         assert!(out.rounds_run <= 4, "ran {} rounds", out.rounds_run);
+    }
+
+    #[test]
+    fn q8_downlink_is_metered_and_decomposed_per_round() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.rounds = 3;
+        cfg.patience = 0;
+        cfg.clients = 4;
+        cfg.clients_per_round = 2;
+        cfg.local_epochs = 1;
+        cfg.down_codec = DownCodec::QuantI8;
+        let data = generate_preset(&cfg.preset, cfg.seed);
+        let part = noniid(&data.train, &NonIidOptions::new(cfg.clients), cfg.seed);
+        let scheme = scheme_for(&cfg, Algo::FedMlh, &data.train);
+        let backend = RustBackend::new();
+        let out =
+            run(&cfg, scheme.as_ref(), &backend, &data.train, &data.test, &part).unwrap();
+        // The broadcast is charged its encoded size; dense-equivalent is
+        // tracked alongside, so the downlink ratio is reported not guessed.
+        assert!(out.comm.downloaded() < out.comm.downloaded_dense_equiv());
+        assert!(
+            out.comm.download_compression() > 3.5,
+            "q8 downlink ratio {}",
+            out.comm.download_compression()
+        );
+        // Per-round columns decompose the cumulative meter exactly.
+        let mut cumulative = 0u64;
+        for (r, rec) in out.history.records.iter().enumerate() {
+            assert!(rec.down_bytes > 0 && rec.up_bytes > 0, "round {r}");
+            cumulative += rec.down_bytes + rec.up_bytes;
+            assert_eq!(cumulative, out.comm.total_at_round(r), "round {r}");
+        }
+        // …and a lossy broadcast still learns.
+        assert!(out.best.top1 > 0.02, "top1 {}", out.best.top1);
     }
 
     #[test]

@@ -1,0 +1,751 @@
+//! The stateful transport pipeline — compression state that lives
+//! *across* synchronization rounds, on both ends of the wire.
+//!
+//! PR 1's wire layer ([`super::wire`]) is deliberately stateless: a
+//! codec sees one `(global, local)` pair, encodes, and forgets. That is
+//! exactly what the communication-efficiency literature says you must
+//! not do under aggressive compression — the un-shipped part of every
+//! update (the top-k residual, the quantization error) is discarded
+//! each round and the error compounds (arXiv 2107.10996 §IV; CatFedAvg,
+//! arXiv 2011.07229). This module inverts the ownership: compressors
+//! are *objects* that carry state round to round, and the round loop
+//! drives them through a [`Transport`] facade.
+//!
+//! ## The three pieces
+//!
+//! - [`UplinkCompressor`] — client→server. The error-feedback
+//!   implementation ([`FeedbackUplink`]) keeps one residual accumulator
+//!   per `(client, sub-model)` slot: before encoding, the previous
+//!   rounds' un-shipped delta is added back into the local model
+//!   (`virtual = local + residual`), and after encoding the new
+//!   residual is `virtual − decode(encoded)`. Top-k then re-surfaces
+//!   coordinates it dropped (their accumulated delta doubles until
+//!   selected), and q8 cancels its quantization bias over time.
+//!   [`StatelessUplink`] reproduces the PR 1 behavior bit-for-bit.
+//! - [`DownlinkCompressor`] — server→client. Produces a codec-tagged
+//!   [`BroadcastPayload`] (dense or q8, reusing the [`super::wire`]
+//!   codecs as backends) and reports the *decoded* model — the state
+//!   every client actually trains from, so a lossy broadcast affects
+//!   training exactly as it would in deployment. [`FoldingDownlink`]
+//!   folds the broadcast's own quantization error into the next
+//!   round's broadcast (server-side residual feedback), so the mean of
+//!   the broadcasts converges to the true aggregate.
+//! - [`Transport`] — the facade the round loop owns: `broadcast()`
+//!   compresses every sub-model's global down, `uplink()` hands the
+//!   engine the shared (Sync) uplink compressor, `decode()` brings an
+//!   encoded update back for aggregation.
+//!
+//! ## Invariants
+//!
+//! - `dense` on both links with feedback off is **bitwise identical**
+//!   to the stateless PR 1 pipeline (`tests/parallel_determinism.rs`);
+//!   dense is lossless, so even feedback *on* cannot change it — both
+//!   stateful impls short-circuit to the stateless path for `dense`.
+//! - Per-slot state makes the parallel engine safe: one round touches
+//!   each `(client, sub-model)` slot from exactly one work item, so
+//!   worker count and scheduling cannot reorder state updates.
+//! - Every pre-existing wire tag (`dense`/`q8`/`topk`/`topkv`) still
+//!   decodes unchanged — the codecs are backends, not replaced.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::model::params::ModelParams;
+
+use super::wire::{decode_update, encode_update, CodecSpec, EncodedUpdate};
+
+/// Which codec compresses the server→client broadcast (CLI:
+/// `--down-codec`). Top-k makes no sense here — the broadcast is a
+/// full model state, not a sparse delta against something the client
+/// already holds — so the downlink menu is dense / q8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DownCodec {
+    /// Raw `f32` broadcast — the seed behavior, lossless.
+    Dense,
+    /// Per-tensor symmetric int8 (~4× smaller), decoded client-side.
+    QuantI8,
+}
+
+impl DownCodec {
+    /// Parse a CLI name (`name()` output always re-parses).
+    pub fn parse(name: &str) -> Result<DownCodec> {
+        match name {
+            "dense" => Ok(DownCodec::Dense),
+            "q8" | "quant" => Ok(DownCodec::QuantI8),
+            other => bail!("unknown downlink codec '{other}' (expected dense|q8)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DownCodec::Dense => "dense",
+            DownCodec::QuantI8 => "q8",
+        }
+    }
+
+    /// The wire codec that serializes this broadcast.
+    fn wire_spec(&self) -> CodecSpec {
+        match self {
+            DownCodec::Dense => CodecSpec::Dense,
+            DownCodec::QuantI8 => CodecSpec::QuantI8,
+        }
+    }
+}
+
+/// One sub-model's compressed broadcast: the codec tag plus the
+/// [`super::wire`]-encoded payload. The tag is shared setup state (like
+/// the model shape), so old dense receivers and new q8 receivers can
+/// coexist as long as both ends agree on it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BroadcastPayload {
+    codec: DownCodec,
+    enc: EncodedUpdate,
+}
+
+impl BroadcastPayload {
+    pub fn codec(&self) -> DownCodec {
+        self.codec
+    }
+
+    /// Exact wire size in bytes — what [`super::comm::CommMeter`] is
+    /// charged per client download.
+    pub fn byte_len(&self) -> usize {
+        self.enc.byte_len()
+    }
+
+    /// Serialize to the little-endian wire layout (see [`super::wire`]).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.enc.to_bytes()
+    }
+
+    /// Parse a broadcast back; shape metadata comes from the shared
+    /// model setup, exactly like update payloads.
+    pub fn from_bytes(
+        codec: DownCodec,
+        n_tensors: usize,
+        n_values: usize,
+        bytes: &[u8],
+    ) -> Result<BroadcastPayload> {
+        let enc = EncodedUpdate::from_bytes(codec.wire_spec(), n_tensors, n_values, bytes)?;
+        Ok(BroadcastPayload { codec, enc })
+    }
+
+    /// Reconstruct the model a client sees. `shape` only supplies the
+    /// tensor layout (dense and q8 decoding never read its values).
+    pub fn decode(&self, shape: &ModelParams) -> Result<ModelParams> {
+        decode_update(shape, &self.enc)
+    }
+}
+
+/// The shared error-feedback fold both stateful compressors are built
+/// on: add the carried `residual` into `vals` (the model the sender
+/// *wishes* it could ship), encode that against `reference` with
+/// `spec`, then store the new residual — everything the receiver will
+/// NOT see after decoding (`vals − decoded`) — back into `residual`.
+/// Returns the encoded payload and its decoded form.
+fn fold_encode(
+    spec: CodecSpec,
+    reference: &ModelParams,
+    mut vals: Vec<f32>,
+    residual: &mut Vec<f32>,
+) -> Result<(EncodedUpdate, ModelParams)> {
+    if !residual.is_empty() {
+        if residual.len() != vals.len() {
+            bail!(
+                "transport residual has {} values, model has {} — \
+                 model shape changed mid-run?",
+                residual.len(),
+                vals.len()
+            );
+        }
+        for (v, r) in vals.iter_mut().zip(residual.iter()) {
+            *v += *r;
+        }
+    }
+    let mut virt = ModelParams::zeros(reference.d, reference.hidden, reference.out);
+    virt.set_from_flat(&vals)?;
+    let enc = encode_update(spec, reference, &virt)?;
+    let decoded = decode_update(reference, &enc)?;
+    let decoded_vals = decoded.flat_values();
+    residual.clear();
+    residual.extend(vals.iter().zip(decoded_vals.iter()).map(|(v, d)| *v - *d));
+    Ok((enc, decoded))
+}
+
+// ------------------------------------------------------------- uplink
+
+/// Client→server compressor. Implementations may carry per-
+/// `(client, sub-model)` state across rounds; the engine calls
+/// [`UplinkCompressor::compress`] from its worker threads, so the
+/// trait requires `Send + Sync` and state must be interior-mutable.
+/// Within one round each `(client, sub-model)` slot is touched by
+/// exactly one work item, which is what keeps the parallel engine's
+/// bitwise-determinism guarantee intact.
+pub trait UplinkCompressor: Send + Sync {
+    /// The wire codec this compressor encodes with.
+    fn spec(&self) -> CodecSpec;
+
+    /// Whether state is carried across rounds (reporting only).
+    fn stateful(&self) -> bool;
+
+    /// Encode `client`'s locally trained sub-model `j` against the
+    /// broadcast `global` it started from.
+    fn compress(
+        &self,
+        client: usize,
+        j: usize,
+        global: &ModelParams,
+        local: &ModelParams,
+    ) -> Result<EncodedUpdate>;
+}
+
+/// The PR 1 behavior: encode each round independently, remember
+/// nothing. `dense` through this path is the seed pipeline bit-for-bit.
+#[derive(Clone, Copy, Debug)]
+pub struct StatelessUplink {
+    spec: CodecSpec,
+}
+
+impl StatelessUplink {
+    pub fn new(spec: CodecSpec) -> Self {
+        StatelessUplink { spec }
+    }
+}
+
+impl UplinkCompressor for StatelessUplink {
+    fn spec(&self) -> CodecSpec {
+        self.spec
+    }
+
+    fn stateful(&self) -> bool {
+        false
+    }
+
+    fn compress(
+        &self,
+        _client: usize,
+        _j: usize,
+        global: &ModelParams,
+        local: &ModelParams,
+    ) -> Result<EncodedUpdate> {
+        encode_update(self.spec, global, local)
+    }
+}
+
+/// Error-feedback uplink (EF-SGD style): each `(client, sub-model)`
+/// slot accumulates the part of the update the codec did not ship, and
+/// adds it back into the next round's encode. An empty slot means "no
+/// residual yet" — the first compress of a slot starts from the plain
+/// local model.
+pub struct FeedbackUplink {
+    spec: CodecSpec,
+    n_models: usize,
+    /// `clients × n_models` residual slots, flat-indexed
+    /// `client * n_models + j`. Mutex per slot: items never contend
+    /// within a round (one item per slot), the lock is for `Sync`.
+    slots: Vec<Mutex<Vec<f32>>>,
+}
+
+impl FeedbackUplink {
+    pub fn new(spec: CodecSpec, clients: usize, n_models: usize) -> Self {
+        FeedbackUplink {
+            spec,
+            n_models,
+            slots: (0..clients * n_models).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    /// A slot's current residual (empty until its first lossy encode) —
+    /// test/diagnostic hook.
+    pub fn residual(&self, client: usize, j: usize) -> Vec<f32> {
+        self.slots[client * self.n_models + j]
+            .lock()
+            .expect("uplink residual lock poisoned")
+            .clone()
+    }
+}
+
+impl UplinkCompressor for FeedbackUplink {
+    fn spec(&self) -> CodecSpec {
+        self.spec
+    }
+
+    fn stateful(&self) -> bool {
+        true
+    }
+
+    fn compress(
+        &self,
+        client: usize,
+        j: usize,
+        global: &ModelParams,
+        local: &ModelParams,
+    ) -> Result<EncodedUpdate> {
+        // Dense is lossless: the residual is identically zero, so skip
+        // the bookkeeping entirely. This is what makes `dense` +
+        // feedback *on* still bitwise-identical to the seed pipeline.
+        if self.spec == CodecSpec::Dense {
+            return encode_update(self.spec, global, local);
+        }
+        let Some(slot) = self.slots.get(client * self.n_models + j) else {
+            bail!(
+                "uplink state has no slot for client {client}, sub-model {j} \
+                 ({} slots, {} sub-models)",
+                self.slots.len(),
+                self.n_models
+            );
+        };
+        let mut residual = slot.lock().expect("uplink residual lock poisoned");
+        let (enc, _) = fold_encode(self.spec, global, local.flat_values(), &mut residual)?;
+        Ok(enc)
+    }
+}
+
+// ----------------------------------------------------------- downlink
+
+/// Server→client compressor for the per-round global broadcast.
+/// `compress` returns both the tagged payload (what crosses the wire,
+/// what the meter charges) and its decoded form (what every client
+/// trains from this round).
+pub trait DownlinkCompressor: Send {
+    fn codec(&self) -> DownCodec;
+
+    /// Whether broadcast residual is folded across rounds (reporting).
+    fn stateful(&self) -> bool;
+
+    /// Compress sub-model `j`'s current aggregate for broadcast.
+    fn compress(&mut self, j: usize, global: &ModelParams)
+        -> Result<(BroadcastPayload, ModelParams)>;
+}
+
+/// Broadcast each round independently (no residual folding).
+#[derive(Clone, Copy, Debug)]
+pub struct StatelessDownlink {
+    codec: DownCodec,
+}
+
+impl StatelessDownlink {
+    pub fn new(codec: DownCodec) -> Self {
+        StatelessDownlink { codec }
+    }
+}
+
+fn broadcast_model(
+    codec: DownCodec,
+    model: &ModelParams,
+) -> Result<(BroadcastPayload, ModelParams)> {
+    // Dense and q8 both encode the model's own values (the `global`
+    // argument of `encode_update` is only a shape witness for them).
+    let enc = encode_update(codec.wire_spec(), model, model)?;
+    let payload = BroadcastPayload { codec, enc };
+    // A dense decode is a bitwise copy — skip the second full pass on
+    // the default path.
+    let decoded = match codec {
+        DownCodec::Dense => model.clone(),
+        DownCodec::QuantI8 => payload.decode(model)?,
+    };
+    Ok((payload, decoded))
+}
+
+impl DownlinkCompressor for StatelessDownlink {
+    fn codec(&self) -> DownCodec {
+        self.codec
+    }
+
+    fn stateful(&self) -> bool {
+        false
+    }
+
+    fn compress(
+        &mut self,
+        _j: usize,
+        global: &ModelParams,
+    ) -> Result<(BroadcastPayload, ModelParams)> {
+        broadcast_model(self.codec, global)
+    }
+}
+
+/// Server-side residual folding: the quantization error of round `t`'s
+/// decoded broadcast is added into round `t+1`'s pre-quantization
+/// state, so the running mean of what clients receive converges to the
+/// true aggregate instead of carrying a persistent rounding bias.
+pub struct FoldingDownlink {
+    codec: DownCodec,
+    /// One residual per sub-model (empty = none yet).
+    residuals: Vec<Vec<f32>>,
+}
+
+impl FoldingDownlink {
+    pub fn new(codec: DownCodec, n_models: usize) -> Self {
+        FoldingDownlink {
+            codec,
+            residuals: vec![Vec::new(); n_models],
+        }
+    }
+}
+
+impl DownlinkCompressor for FoldingDownlink {
+    fn codec(&self) -> DownCodec {
+        self.codec
+    }
+
+    fn stateful(&self) -> bool {
+        true
+    }
+
+    fn compress(
+        &mut self,
+        j: usize,
+        global: &ModelParams,
+    ) -> Result<(BroadcastPayload, ModelParams)> {
+        // Dense broadcasts are lossless → residual identically zero.
+        if self.codec == DownCodec::Dense {
+            return broadcast_model(self.codec, global);
+        }
+        let Some(slot) = self.residuals.get_mut(j) else {
+            bail!(
+                "downlink state has no slot for sub-model {j} ({} slots)",
+                self.residuals.len()
+            );
+        };
+        let (enc, decoded) =
+            fold_encode(self.codec.wire_spec(), global, global.flat_values(), slot)?;
+        let payload = BroadcastPayload {
+            codec: self.codec,
+            enc,
+        };
+        Ok((payload, decoded))
+    }
+}
+
+// ------------------------------------------------------------- facade
+
+/// What one round's downlink produced: the payloads that crossed the
+/// wire (for metering) and the decoded sub-models every selected
+/// client trains from.
+#[derive(Debug)]
+pub struct RoundBroadcast {
+    pub payloads: Vec<BroadcastPayload>,
+    pub client_globals: Vec<ModelParams>,
+}
+
+/// The transport facade the round loop drives: owns both compressors
+/// and their cross-round state for the lifetime of one training run.
+pub struct Transport {
+    uplink: Box<dyn UplinkCompressor>,
+    downlink: Box<dyn DownlinkCompressor>,
+}
+
+impl Transport {
+    /// Wire the pipeline for a run: `cfg.codec`/`cfg.down_codec` select
+    /// the codecs, `cfg.error_feedback` selects the stateful (error-
+    /// feedback + residual-folding) implementations on both links.
+    pub fn new(cfg: &ExperimentConfig, n_models: usize) -> Transport {
+        let uplink: Box<dyn UplinkCompressor> = if cfg.error_feedback {
+            Box::new(FeedbackUplink::new(cfg.codec, cfg.clients, n_models))
+        } else {
+            Box::new(StatelessUplink::new(cfg.codec))
+        };
+        let downlink: Box<dyn DownlinkCompressor> = if cfg.error_feedback {
+            Box::new(FoldingDownlink::new(cfg.down_codec, n_models))
+        } else {
+            Box::new(StatelessDownlink::new(cfg.down_codec))
+        };
+        Transport { uplink, downlink }
+    }
+
+    /// Assemble from explicit parts (tests, custom pipelines).
+    pub fn from_parts(
+        uplink: Box<dyn UplinkCompressor>,
+        downlink: Box<dyn DownlinkCompressor>,
+    ) -> Transport {
+        Transport { uplink, downlink }
+    }
+
+    /// The shared uplink compressor the engine's workers encode through.
+    pub fn uplink(&self) -> &dyn UplinkCompressor {
+        self.uplink.as_ref()
+    }
+
+    /// Compress every sub-model's current global for this round's
+    /// broadcast (downlink residual folding happens here).
+    pub fn broadcast(&mut self, globals: &[ModelParams]) -> Result<RoundBroadcast> {
+        let mut payloads = Vec::with_capacity(globals.len());
+        let mut client_globals = Vec::with_capacity(globals.len());
+        for (j, g) in globals.iter().enumerate() {
+            let (payload, decoded) = self.downlink.compress(j, g)?;
+            payloads.push(payload);
+            client_globals.push(decoded);
+        }
+        Ok(RoundBroadcast {
+            payloads,
+            client_globals,
+        })
+    }
+
+    /// Decode one client update for aggregation. `reference` must be
+    /// the broadcast model the client encoded against
+    /// ([`RoundBroadcast::client_globals`]`[j]`).
+    pub fn decode(&self, reference: &ModelParams, enc: &EncodedUpdate) -> Result<ModelParams> {
+        decode_update(reference, enc)
+    }
+
+    /// `true` when either link carries state across rounds.
+    pub fn stateful(&self) -> bool {
+        self.uplink.stateful() || self.downlink.stateful()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_pair(seed: u64) -> (ModelParams, ModelParams) {
+        let global = ModelParams::init(6, 4, 9, seed);
+        let mut local = global.clone();
+        let mut rng = Rng::new(seed ^ 0x5a5a);
+        for t in local.tensors.iter_mut() {
+            for v in t.data_mut() {
+                *v += (rng.next_f32() - 0.5) * 0.2;
+            }
+        }
+        (global, local)
+    }
+
+    fn entry_indices(enc: &EncodedUpdate) -> Vec<u32> {
+        match enc {
+            EncodedUpdate::TopKDelta { entries } | EncodedUpdate::TopKPacked { entries } => {
+                entries.iter().map(|&(i, _)| i).collect()
+            }
+            other => panic!("expected a sparse update, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn down_codec_names_roundtrip() {
+        for codec in [DownCodec::Dense, DownCodec::QuantI8] {
+            assert_eq!(DownCodec::parse(codec.name()).unwrap(), codec);
+        }
+        assert_eq!(DownCodec::parse("quant").unwrap(), DownCodec::QuantI8);
+        assert!(DownCodec::parse("topk").is_err());
+    }
+
+    #[test]
+    fn stateless_uplink_matches_free_function() {
+        let (global, local) = random_pair(1);
+        for spec in [
+            CodecSpec::Dense,
+            CodecSpec::QuantI8,
+            CodecSpec::TopK { frac: 0.2 },
+            CodecSpec::TopKPacked { frac: 0.2 },
+        ] {
+            let up = StatelessUplink::new(spec);
+            assert!(!up.stateful());
+            let a = up.compress(0, 0, &global, &local).unwrap();
+            let b = up.compress(3, 1, &global, &local).unwrap();
+            let free = encode_update(spec, &global, &local).unwrap();
+            assert_eq!(a, free, "stateless must equal the free function");
+            assert_eq!(b, free, "…for every (client, sub-model) key");
+        }
+    }
+
+    #[test]
+    fn feedback_dense_is_a_no_op() {
+        let (global, local) = random_pair(2);
+        let up = FeedbackUplink::new(CodecSpec::Dense, 2, 1);
+        let enc = up.compress(1, 0, &global, &local).unwrap();
+        assert_eq!(enc, encode_update(CodecSpec::Dense, &global, &local).unwrap());
+        assert!(up.residual(1, 0).is_empty(), "dense must never store residual");
+    }
+
+    #[test]
+    fn feedback_topk_resurfaces_dropped_coordinates() {
+        let (global, local) = random_pair(3);
+        let spec = CodecSpec::TopK { frac: 0.1 };
+        let up = FeedbackUplink::new(spec, 1, 1);
+
+        // Round 1: no residual yet — identical to the stateless encode.
+        let r1 = up.compress(0, 0, &global, &local).unwrap();
+        assert_eq!(r1, encode_update(spec, &global, &local).unwrap());
+        let kept1 = entry_indices(&r1);
+        // Residual is exactly the un-shipped delta.
+        let res = up.residual(0, 0);
+        assert_eq!(res.len(), global.num_params());
+        let (gf, lf) = (global.flat_values(), local.flat_values());
+        for (i, r) in res.iter().enumerate() {
+            if kept1.contains(&(i as u32)) {
+                assert_eq!(*r, 0.0, "shipped coordinate {i} keeps no residual");
+            } else {
+                assert_eq!(*r, lf[i] - gf[i], "dropped coordinate {i}");
+            }
+        }
+
+        // Round 2 with the *same* local: dropped coordinates now carry a
+        // doubled accumulated delta, so the selection must move off the
+        // round-1 set — feedback re-surfaces what was dropped.
+        let r2 = up.compress(0, 0, &global, &local).unwrap();
+        let kept2 = entry_indices(&r2);
+        assert_ne!(kept1, kept2, "feedback must change the top-k selection");
+        let fresh: usize = kept2.iter().filter(|&i| !kept1.contains(i)).count();
+        assert!(fresh > 0, "round 2 must ship previously dropped coordinates");
+
+        // A stateless uplink keeps shipping the identical set forever.
+        let stateless = StatelessUplink::new(spec);
+        assert_eq!(
+            stateless.compress(0, 0, &global, &local).unwrap(),
+            stateless.compress(0, 0, &global, &local).unwrap()
+        );
+    }
+
+    #[test]
+    fn feedback_q8_residual_is_quantization_bounded() {
+        let (global, local) = random_pair(4);
+        let up = FeedbackUplink::new(CodecSpec::QuantI8, 1, 1);
+        up.compress(0, 0, &global, &local).unwrap();
+        let res = up.residual(0, 0);
+        assert_eq!(res.len(), local.num_params());
+        // Per-tensor bound: |residual| ≤ scale/2 (+ float slack).
+        let mut off = 0usize;
+        for t in local.tensors.iter() {
+            let max_abs = t.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = max_abs / 127.0;
+            for &r in &res[off..off + t.len()] {
+                assert!(r.abs() <= scale * 0.5 + 1e-6, "residual {r} vs scale {scale}");
+            }
+            off += t.len();
+        }
+    }
+
+    #[test]
+    fn feedback_slots_are_independent() {
+        let (global, la) = random_pair(5);
+        let (_, lb) = random_pair(6);
+        let spec = CodecSpec::TopK { frac: 0.1 };
+        let up = FeedbackUplink::new(spec, 2, 2);
+        up.compress(0, 0, &global, &la).unwrap();
+        // A different slot has no residual yet: its first compress is
+        // exactly the stateless encode, regardless of slot (0,0) state.
+        let other = up.compress(1, 1, &global, &lb).unwrap();
+        assert_eq!(other, encode_update(spec, &global, &lb).unwrap());
+        assert!(up.residual(0, 1).is_empty());
+    }
+
+    #[test]
+    fn feedback_rejects_out_of_range_slot() {
+        let (global, local) = random_pair(7);
+        let up = FeedbackUplink::new(CodecSpec::QuantI8, 2, 2);
+        assert!(up.compress(2, 0, &global, &local).is_err());
+    }
+
+    #[test]
+    fn dense_downlink_is_bitwise_lossless() {
+        let (global, _) = random_pair(8);
+        for stateful in [false, true] {
+            let (payload, decoded) = if stateful {
+                FoldingDownlink::new(DownCodec::Dense, 1).compress(0, &global).unwrap()
+            } else {
+                StatelessDownlink::new(DownCodec::Dense).compress(0, &global).unwrap()
+            };
+            assert_eq!(decoded, global, "dense broadcast must be exact");
+            assert_eq!(payload.byte_len(), global.byte_size());
+            assert_eq!(payload.codec(), DownCodec::Dense);
+        }
+    }
+
+    #[test]
+    fn q8_downlink_folding_cancels_quantization_bias() {
+        let (global, _) = random_pair(9);
+        let gf = global.flat_values();
+        let mut folding = FoldingDownlink::new(DownCodec::QuantI8, 1);
+
+        let (_, first) = folding.compress(0, &global).unwrap();
+        let first_err: f64 = first
+            .flat_values()
+            .iter()
+            .zip(gf.iter())
+            .map(|(a, b)| (*a as f64 - *b as f64).abs())
+            .sum();
+        assert!(first_err > 0.0, "q8 of a random model must be lossy");
+
+        // Re-broadcasting the same global T times: the mean of the
+        // decoded broadcasts converges to the true global (the folded
+        // residual is bounded, so bias ~ residual/T), while the
+        // stateless downlink repeats the same biased decode forever.
+        let t = 8usize;
+        let mut mean = vec![0.0f64; gf.len()];
+        let mut folding = FoldingDownlink::new(DownCodec::QuantI8, 1);
+        for _ in 0..t {
+            let (_, decoded) = folding.compress(0, &global).unwrap();
+            for (m, v) in mean.iter_mut().zip(decoded.flat_values()) {
+                *m += v as f64 / t as f64;
+            }
+        }
+        let mean_err: f64 = mean
+            .iter()
+            .zip(gf.iter())
+            .map(|(a, b)| (a - *b as f64).abs())
+            .sum();
+        assert!(
+            mean_err < first_err * 0.5,
+            "folding must shrink the broadcast bias: mean {mean_err} vs single {first_err}"
+        );
+    }
+
+    #[test]
+    fn broadcast_payload_bytes_roundtrip() {
+        let (global, _) = random_pair(10);
+        for codec in [DownCodec::Dense, DownCodec::QuantI8] {
+            let (payload, _) = StatelessDownlink::new(codec).compress(0, &global).unwrap();
+            let bytes = payload.to_bytes();
+            assert_eq!(bytes.len(), payload.byte_len(), "{}", codec.name());
+            let back = BroadcastPayload::from_bytes(
+                codec,
+                global.tensors.len(),
+                global.num_params(),
+                &bytes,
+            )
+            .unwrap();
+            assert_eq!(back, payload);
+            assert_eq!(back.decode(&global).unwrap(), payload.decode(&global).unwrap());
+        }
+    }
+
+    #[test]
+    fn facade_selects_impls_from_config() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.codec = CodecSpec::TopK { frac: 0.1 };
+        let t = Transport::new(&cfg, 2);
+        assert!(!t.stateful(), "feedback off → stateless pipeline");
+        cfg.error_feedback = true;
+        let t = Transport::new(&cfg, 2);
+        assert!(t.stateful());
+        assert_eq!(t.uplink().spec(), CodecSpec::TopK { frac: 0.1 });
+    }
+
+    #[test]
+    fn facade_broadcast_and_decode_close_the_loop() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.codec = CodecSpec::QuantI8;
+        cfg.down_codec = DownCodec::QuantI8;
+        cfg.error_feedback = true;
+        let (global, local) = random_pair(11);
+        let globals = vec![global.clone()];
+        let mut transport = Transport::new(&cfg, 1);
+        let bcast = transport.broadcast(&globals).unwrap();
+        assert_eq!(bcast.payloads.len(), 1);
+        assert_eq!(bcast.client_globals.len(), 1);
+        // q8 broadcast is smaller than dense and decodes near the global.
+        assert!(bcast.payloads[0].byte_len() < global.byte_size());
+        // Close the loop: client encodes against the *decoded* broadcast,
+        // server decodes against the same reference.
+        let enc = transport
+            .uplink()
+            .compress(0, 0, &bcast.client_globals[0], &local)
+            .unwrap();
+        let back = transport.decode(&bcast.client_globals[0], &enc).unwrap();
+        assert_eq!(back.num_params(), local.num_params());
+    }
+}

@@ -37,9 +37,12 @@
 //!   model shape), so a `topk` server keeps decoding old payloads
 //!   unchanged while `topkv` clients ship the packed layout.
 //!
-//! Error-feedback accumulators and server-side residual folding (the
-//! standard fixes for compounding sparsification error) are ROADMAP
-//! follow-ons; this layer deliberately stays stateless per round.
+//! These codecs are deliberately *stateless* — one `(global, local)`
+//! pair in, bytes out. The cross-round state that fixes compounding
+//! sparsification error (client error-feedback accumulators, server
+//! residual folding, the compressed downlink broadcast) lives in
+//! [`super::transport`], which drives these codecs as pluggable
+//! backends.
 //!
 //! ## Wire layout (little-endian)
 //!
@@ -76,29 +79,50 @@ pub enum CodecSpec {
 }
 
 impl CodecSpec {
-    /// Parse a CLI name; `topk_frac` applies to the sparse codecs.
+    /// Parse a CLI name. The sparse codecs take their fraction either
+    /// embedded in the name (`topk:0.05`, the [`Self::name`] echo
+    /// format) or, for a bare `topk`/`topkv`, from `topk_frac` (the
+    /// `--topk-frac` flag).
     pub fn parse(name: &str, topk_frac: f32) -> Result<CodecSpec> {
-        let check_frac = || -> Result<f32> {
-            if !(topk_frac > 0.0 && topk_frac <= 1.0) {
-                bail!("topk fraction must be in (0, 1], got {topk_frac}");
+        let (family, embedded) = match name.split_once(':') {
+            Some((family, frac)) => {
+                let frac: f32 = frac
+                    .parse()
+                    .map_err(|e| anyhow!("bad codec fraction '{frac}': {e}"))?;
+                (family, Some(frac))
             }
-            Ok(topk_frac)
+            None => (name, None),
         };
-        match name {
+        let check_frac = |frac: f32| -> Result<f32> {
+            if !(frac > 0.0 && frac <= 1.0) {
+                bail!("topk fraction must be in (0, 1], got {frac}");
+            }
+            Ok(frac)
+        };
+        let frac = embedded.unwrap_or(topk_frac);
+        match family {
+            "dense" | "q8" | "quant" if embedded.is_some() => {
+                bail!("codec '{family}' does not take a fraction")
+            }
             "dense" => Ok(CodecSpec::Dense),
             "q8" | "quant" => Ok(CodecSpec::QuantI8),
-            "topk" => Ok(CodecSpec::TopK { frac: check_frac()? }),
-            "topkv" => Ok(CodecSpec::TopKPacked { frac: check_frac()? }),
-            other => bail!("unknown codec '{other}' (expected dense|q8|topk|topkv)"),
+            "topk" => Ok(CodecSpec::TopK { frac: check_frac(frac)? }),
+            "topkv" => Ok(CodecSpec::TopKPacked { frac: check_frac(frac)? }),
+            other => bail!("unknown codec '{other}' (expected dense|q8|topk[:frac]|topkv[:frac])"),
         }
     }
 
-    pub fn name(&self) -> &'static str {
+    /// Canonical spec string: `dense`, `q8`, `topk:<frac>`,
+    /// `topkv:<frac>`. Every output re-parses to an equal spec through
+    /// [`Self::parse`] (regardless of the `topk_frac` argument), so
+    /// config echoes round-trip losslessly — pinned by
+    /// `spec_string_roundtrips_every_variant`.
+    pub fn name(&self) -> String {
         match self {
-            CodecSpec::Dense => "dense",
-            CodecSpec::QuantI8 => "q8",
-            CodecSpec::TopK { .. } => "topk",
-            CodecSpec::TopKPacked { .. } => "topkv",
+            CodecSpec::Dense => "dense".to_string(),
+            CodecSpec::QuantI8 => "q8".to_string(),
+            CodecSpec::TopK { frac } => format!("topk:{frac}"),
+            CodecSpec::TopKPacked { frac } => format!("topkv:{frac}"),
         }
     }
 }
@@ -506,6 +530,39 @@ mod tests {
         assert!(CodecSpec::parse("topk", 1.5).is_err());
         assert!(CodecSpec::parse("topkv", 0.0).is_err());
         assert!(CodecSpec::parse("gzip", 0.1).is_err());
+    }
+
+    #[test]
+    fn spec_string_roundtrips_every_variant() {
+        for spec in [
+            CodecSpec::Dense,
+            CodecSpec::QuantI8,
+            CodecSpec::TopK { frac: 0.05 },
+            CodecSpec::TopK { frac: 1.0 },
+            CodecSpec::TopKPacked { frac: 0.37 },
+        ] {
+            // name() embeds everything the spec carries: re-parsing with
+            // a *different* --topk-frac must reproduce it exactly.
+            assert_eq!(
+                CodecSpec::parse(&spec.name(), 0.99).unwrap(),
+                spec,
+                "{} must round-trip",
+                spec.name()
+            );
+        }
+        // An embedded fraction overrides the flag value…
+        assert_eq!(
+            CodecSpec::parse("topk:0.25", 0.9).unwrap(),
+            CodecSpec::TopK { frac: 0.25 }
+        );
+        // …the historical 'quant' alias parses but normalizes to 'q8'…
+        assert_eq!(CodecSpec::parse("quant", 0.1).unwrap().name(), "q8");
+        // …and malformed spec strings are rejected, not ignored.
+        assert!(CodecSpec::parse("dense:0.5", 0.1).is_err());
+        assert!(CodecSpec::parse("q8:0.5", 0.1).is_err());
+        assert!(CodecSpec::parse("topk:zero", 0.1).is_err());
+        assert!(CodecSpec::parse("topk:0", 0.1).is_err());
+        assert!(CodecSpec::parse("topk:nan", 0.1).is_err());
     }
 
     #[test]

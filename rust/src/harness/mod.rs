@@ -23,6 +23,7 @@ use crate::config::{Algo, ExperimentConfig};
 use crate::data::synth::{generate_preset, SynthData};
 use crate::federated::backend::{RustBackend, TrainBackend};
 use crate::federated::server::{self, RunOutput};
+use crate::federated::transport::DownCodec;
 use crate::federated::wire::CodecSpec;
 use crate::partition::noniid::{partition as noniid_partition, NonIidOptions};
 use crate::partition::Partition;
@@ -72,6 +73,11 @@ pub struct HarnessOpts {
     pub workers: usize,
     /// Update wire codec (`ExperimentConfig::codec`).
     pub codec: CodecSpec,
+    /// Broadcast codec (`ExperimentConfig::down_codec`).
+    pub down_codec: DownCodec,
+    /// Stateful transport: error-feedback accumulators + broadcast
+    /// residual folding (`ExperimentConfig::error_feedback`).
+    pub error_feedback: bool,
 }
 
 impl Default for HarnessOpts {
@@ -86,6 +92,8 @@ impl Default for HarnessOpts {
             verbose: false,
             workers: 1,
             codec: CodecSpec::Dense,
+            down_codec: DownCodec::Dense,
+            error_feedback: false,
         }
     }
 }
@@ -103,6 +111,8 @@ impl HarnessOpts {
         }
         cfg.workers = self.workers;
         cfg.codec = self.codec;
+        cfg.down_codec = self.down_codec;
+        cfg.error_feedback = self.error_feedback;
     }
 }
 

@@ -4,6 +4,10 @@
 //!
 //! ```text
 //! fedmlh run     --preset eurlex --algo fedmlh --backend xla
+//! fedmlh run     --preset eurlex --codec topk --topk-frac 0.05 \
+//!                --down-codec q8 --error-feedback on
+//!                                # compress both links; error-feedback
+//!                                # accumulators keep the dropped signal
 //! fedmlh run     --preset eurlex --save model.fmlh  # + persist a serving checkpoint
 //! fedmlh serve   --checkpoint model.fmlh --port 8080 --workers 4
 //!                                                   # POST /predict · GET /healthz · GET /metrics
@@ -28,6 +32,7 @@ use anyhow::{bail, Context, Result};
 
 use fedmlh::config::presets::{by_name, paper_presets};
 use fedmlh::config::{Algo, DatasetPreset, ExperimentConfig};
+use fedmlh::federated::transport::DownCodec;
 use fedmlh::federated::wire::CodecSpec;
 use fedmlh::harness::{self, figures, report, tables, BackendKind, HarnessOpts, PairResult};
 use fedmlh::hashing::label_hash::LabelHasher;
@@ -75,10 +80,20 @@ fn common_args(args: Args) -> Args {
         .flag("rounds", "0", "override synchronization rounds (0 = preset default 70)")
         .flag("out", "results", "output directory for CSV/markdown")
         .flag("workers", "1", "round-engine worker threads (1 = sequential; results identical)")
-        .flag("codec", "dense", "update wire codec: dense | q8 | topk | topkv (delta+varint indices)")
+        .flag("codec", "dense", "update (client->server) codec: dense | q8 | topk[:frac] | topkv[:frac]")
         .flag("topk-frac", "0.1", "fraction of coordinates the topk/topkv codecs ship")
+        .flag("down-codec", "dense", "broadcast (server->client) codec: dense | q8")
+        .flag("error-feedback", "off", "stateful transport (on|off): client error-feedback accumulators + server broadcast-residual folding")
         .switch("fast", "use the *_fast (jnp-lowered) artifact family — same math, ~7x faster on CPU")
         .switch("quiet", "suppress progress logging")
+}
+
+fn parse_on_off(flag: &str, value: &str) -> Result<bool> {
+    match value {
+        "on" | "true" => Ok(true),
+        "off" | "false" => Ok(false),
+        other => bail!("--{flag} must be 'on' or 'off', got '{other}'"),
+    }
 }
 
 fn opts_from(p: &Parsed) -> Result<HarnessOpts> {
@@ -93,6 +108,8 @@ fn opts_from(p: &Parsed) -> Result<HarnessOpts> {
         verbose: !p.get_bool("quiet"),
         workers: p.get_usize("workers")?,
         codec: CodecSpec::parse(p.get("codec"), p.get_f32("topk-frac")?)?,
+        down_codec: DownCodec::parse(p.get("down-codec"))?,
+        error_feedback: parse_on_off("error-feedback", p.get("error-feedback"))?,
     })
 }
 
@@ -143,7 +160,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let scheme = fedmlh::algo::scheme_for(&cfg, algo, &world.data.train);
     if opts.verbose {
         eprintln!(
-            "[run] {} on '{}' ({}), K={} S={} E={} rounds≤{} backend={} workers={} codec={}",
+            "[run] {} on '{}' ({}), K={} S={} E={} rounds≤{} backend={} workers={} codec={} down={} feedback={}",
             algo.name(),
             cfg.preset.name,
             cfg.preset.paper_analog,
@@ -153,7 +170,9 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             cfg.rounds,
             backend.name(),
             cfg.workers,
-            cfg.codec.name()
+            cfg.codec.name(),
+            cfg.down_codec.name(),
+            if cfg.error_feedback { "on" } else { "off" }
         );
     }
     let out = fedmlh::federated::server::run(
@@ -187,11 +206,19 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         out.total_seconds
     );
     println!(
-        "uplink: {} actual vs {} dense-equivalent ({:.2}x compression, codec={})",
+        "uplink: {} actual vs {} dense-equivalent ({:.2}x compression, codec={}, feedback={})",
         report::mb(out.comm.uploaded()),
         report::mb(out.comm.uploaded_dense_equiv()),
         out.comm.upload_compression(),
-        cfg.codec.name()
+        cfg.codec.name(),
+        if cfg.error_feedback { "on" } else { "off" }
+    );
+    println!(
+        "downlink: {} actual vs {} dense-equivalent ({:.2}x compression, codec={})",
+        report::mb(out.comm.downloaded()),
+        report::mb(out.comm.downloaded_dense_equiv()),
+        out.comm.download_compression(),
+        cfg.down_codec.name()
     );
     let timing = out.history.mean_timing();
     println!(

@@ -1,8 +1,20 @@
 //! Dependency-light HTTP/1.1 serving front end over
 //! [`std::net::TcpListener`] (the offline registry has no hyper/axum;
 //! the protocol subset here — request line, headers, Content-Length
-//! body, `Connection: close` responses — is what every load balancer
-//! and `curl` speak).
+//! body, opt-in keep-alive — is what every load balancer and `curl`
+//! speak).
+//!
+//! Connection reuse: a client that sends `Connection: keep-alive` gets
+//! the connection held open and can issue further requests on it (each
+//! request under the same `REQUEST_DEADLINE` as before), up to
+//! `MAX_REQUESTS_PER_CONN` per connection — the final allowed
+//! response answers `Connection: close` so well-behaved clients
+//! re-connect instead of stalling. Requests without the header keep the
+//! historical close-after-response behavior (clients written against
+//! it frame responses by EOF), and malformed requests always close.
+//! Back-to-back (pipelined) requests are buffered and served strictly
+//! in sequence — bytes read past one request's body seed the next
+//! request's parse instead of being dropped.
 //!
 //! Endpoints:
 //!
@@ -66,8 +78,13 @@ const MAX_HEADER_BYTES: usize = 64 * 1024;
 const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
 /// Whole-request wall-clock budget. The per-read socket timeout resets
 /// on every received byte, so without this a client dripping one byte
-/// per interval would pin its handler thread forever (slow-loris).
+/// per interval would pin its handler thread forever (slow-loris). On a
+/// kept-alive connection the budget restarts per request, so it also
+/// bounds idle time between requests.
 const REQUEST_DEADLINE: Duration = Duration::from_secs(30);
+/// Upper bound on requests served over one kept-alive connection — a
+/// single client cannot pin its handler thread forever.
+const MAX_REQUESTS_PER_CONN: usize = 100;
 
 /// Shared per-connection state.
 struct ServeCtx {
@@ -173,23 +190,40 @@ impl Server {
 }
 
 fn handle_connection(conn: &mut TcpStream, ctx: &ServeCtx) {
-    let _ = conn.set_read_timeout(Some(Duration::from_secs(30)));
     // A client that stops *reading* would otherwise block write_all in
     // respond() forever once the response outgrows the send buffer.
     let _ = conn.set_write_timeout(Some(REQUEST_DEADLINE));
-    let (method, path, body) = match read_request(conn) {
-        Ok(parts) => parts,
-        Err(e) => {
-            let _ = respond(conn, 400, "Bad Request", &error_body(&format!("{e:#}")));
+    // Bytes read past the end of one request (a client is allowed to
+    // send the next request without waiting for the response) are
+    // carried into the next read_request call instead of dropped.
+    let mut carry = Vec::new();
+    for served in 1..=MAX_REQUESTS_PER_CONN {
+        let req = match read_request(conn, &mut carry) {
+            Ok(Some(parts)) => parts,
+            // Clean close (or idle timeout) between keep-alive requests.
+            Ok(None) => return,
+            Err(e) => {
+                let _ =
+                    respond(conn, 400, "Bad Request", &error_body(&format!("{e:#}")), false);
+                return;
+            }
+        };
+        let Request {
+            method,
+            path,
+            body,
+            keep_alive: client_keep_alive,
+        } = req;
+        let keep_alive = client_keep_alive && served < MAX_REQUESTS_PER_CONN;
+        let t0 = Instant::now();
+        let (status, reason, body) = route(ctx, &method, &path, &body);
+        if method == "POST" && path == "/predict" {
+            ctx.metrics.record_request(t0.elapsed(), status == 200);
+        }
+        if respond(conn, status, reason, &body, keep_alive).is_err() || !keep_alive {
             return;
         }
-    };
-    let t0 = Instant::now();
-    let (status, reason, body) = route(ctx, &method, &path, &body);
-    if method == "POST" && path == "/predict" {
-        ctx.metrics.record_request(t0.elapsed(), status == 200);
     }
-    let _ = respond(conn, status, reason, &body);
 }
 
 fn route(ctx: &ServeCtx, method: &str, path: &str, body: &[u8]) -> (u16, &'static str, String) {
@@ -315,12 +349,32 @@ fn error_body(message: &str) -> String {
     Json::obj(vec![("error", Json::str(message))]).to_string_pretty(0)
 }
 
-/// Read one HTTP/1.1 request: returns (method, path, body).
-fn read_request(conn: &mut TcpStream) -> Result<(String, String, Vec<u8>)> {
+/// One parsed HTTP request plus its connection-reuse intent.
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    /// The client asked for `Connection: keep-alive` (reuse is opt-in:
+    /// absent or any other value means close after this response).
+    keep_alive: bool,
+}
+
+/// Read one HTTP/1.1 request. `carry` holds bytes already read past
+/// the previous request on this connection (in) and receives any bytes
+/// read past this one (out), so back-to-back requests in one TCP
+/// segment are served in sequence rather than dropped. `Ok(None)` is a
+/// clean end of connection: the peer closed (or idled past the read
+/// deadline) without sending a single byte of a next request.
+fn read_request(conn: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Request>> {
     let deadline = Instant::now() + REQUEST_DEADLINE;
-    let mut buf = Vec::new();
+    let mut buf = std::mem::take(carry);
     let mut chunk = [0u8; 4096];
     let header_end = loop {
+        // RFC 7230 §3.5: ignore empty line(s) before the request-line —
+        // clients may send a stray CRLF after a previous request's body.
+        while buf.starts_with(b"\r\n") {
+            buf.drain(..2);
+        }
         if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
             break pos;
         }
@@ -328,8 +382,25 @@ fn read_request(conn: &mut TcpStream) -> Result<(String, String, Vec<u8>)> {
             bail!("request headers exceed {MAX_HEADER_BYTES} bytes");
         }
         cap_read_timeout(conn, deadline)?;
-        let n = conn.read(&mut chunk).context("reading request")?;
+        let n = match conn.read(&mut chunk) {
+            Ok(n) => n,
+            // An idle kept-alive connection timing out before the next
+            // request starts is a clean close, not a bad request.
+            Err(e)
+                if buf.is_empty()
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+            {
+                return Ok(None);
+            }
+            Err(e) => return Err(e).context("reading request"),
+        };
         if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
             bail!("connection closed before the request was complete");
         }
         buf.extend_from_slice(&chunk[..n]);
@@ -348,13 +419,17 @@ fn read_request(conn: &mut TcpStream) -> Result<(String, String, Vec<u8>)> {
     let path = path.split('?').next().unwrap_or("").to_string();
 
     let mut content_length = 0usize;
+    let mut keep_alive = false;
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
+            let name = name.trim();
+            if name.eq_ignore_ascii_case("content-length") {
                 content_length = value
                     .trim()
                     .parse()
                     .context("invalid Content-Length header")?;
+            } else if name.eq_ignore_ascii_case("connection") {
+                keep_alive = value.trim().eq_ignore_ascii_case("keep-alive");
             }
         }
     }
@@ -371,13 +446,25 @@ fn read_request(conn: &mut TcpStream) -> Result<(String, String, Vec<u8>)> {
         }
         body.extend_from_slice(&chunk[..n]);
     }
-    body.truncate(content_length);
-    Ok((method, path, body))
+    *carry = body.split_off(content_length);
+    Ok(Some(Request {
+        method,
+        path,
+        body,
+        keep_alive,
+    }))
 }
 
-fn respond(conn: &mut TcpStream, status: u16, reason: &str, body: &str) -> std::io::Result<()> {
+fn respond(
+    conn: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let connection = if keep_alive { "keep-alive" } else { "close" };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {connection}\r\n\r\n",
         body.len()
     );
     conn.write_all(head.as_bytes())?;

@@ -1,8 +1,16 @@
 //! The parallel round engine's contract: `workers = N` is **bitwise
 //! identical** to `workers = 1` — same `History` (modulo wall-clock
 //! fields), same `CommMeter`, same final global parameters — for every
-//! wire codec. A small synthetic FedMLH run (R = 3 sub-models, 8
-//! clients) exercises the full server loop on the pure-rust backend.
+//! wire codec, with the stateful (error-feedback) transport included:
+//! per-`(client, sub-model)` residual slots are touched by exactly one
+//! work item per round, so worker scheduling cannot reorder state. A
+//! small synthetic FedMLH run (R = 3 sub-models, 8 clients) exercises
+//! the full server loop on the pure-rust backend.
+//!
+//! This file also pins the seed trajectory: `dense` + `--error-feedback
+//! off` must stay bitwise identical to the stateless PR 1 pipeline —
+//! and because `dense` is lossless, feedback *on* cannot change it
+//! either.
 
 use fedmlh::algo::scheme_for;
 use fedmlh::config::{Algo, ExperimentConfig};
@@ -13,7 +21,7 @@ use fedmlh::federated::server::{self, RunOutput};
 use fedmlh::federated::wire::CodecSpec;
 use fedmlh::partition::noniid::{partition as noniid, NonIidOptions};
 
-fn run(workers: usize, codec: CodecSpec, algo: Algo) -> RunOutput {
+fn run_fb(workers: usize, codec: CodecSpec, algo: Algo, error_feedback: bool) -> RunOutput {
     let mut cfg = ExperimentConfig::preset("tiny").unwrap();
     cfg.rounds = 3;
     cfg.patience = 0;
@@ -23,6 +31,7 @@ fn run(workers: usize, codec: CodecSpec, algo: Algo) -> RunOutput {
     cfg.override_r = 3;
     cfg.workers = workers;
     cfg.codec = codec;
+    cfg.error_feedback = error_feedback;
     let data = generate_preset(&cfg.preset, cfg.seed);
     let part = noniid(&data.train, &NonIidOptions::new(cfg.clients), cfg.seed);
     let scheme = scheme_for(&cfg, algo, &data.train);
@@ -36,6 +45,10 @@ fn run(workers: usize, codec: CodecSpec, algo: Algo) -> RunOutput {
         &part,
     )
     .unwrap()
+}
+
+fn run(workers: usize, codec: CodecSpec, algo: Algo) -> RunOutput {
+    run_fb(workers, codec, algo, false)
 }
 
 /// Everything except wall-clock fields must match exactly.
@@ -81,8 +94,34 @@ fn four_workers_match_sequential_for_every_codec() {
         let seq = run(1, codec, Algo::FedMlh);
         let par = run(4, codec, Algo::FedMlh);
         assert_eq!(seq.n_models, 3);
-        assert_bitwise_equal(&seq, &par, codec.name());
+        assert_bitwise_equal(&seq, &par, &codec.name());
     }
+}
+
+#[test]
+fn four_workers_match_sequential_with_error_feedback() {
+    // The stateful transport must not break worker-count invariance:
+    // residual slots are per-(client, sub-model), one item per slot per
+    // round, so scheduling cannot reorder state updates.
+    for codec in [
+        CodecSpec::QuantI8,
+        CodecSpec::TopK { frac: 0.1 },
+        CodecSpec::TopKPacked { frac: 0.1 },
+    ] {
+        let seq = run_fb(1, codec, Algo::FedMlh, true);
+        let par = run_fb(4, codec, Algo::FedMlh, true);
+        assert_bitwise_equal(&seq, &par, &format!("{}+feedback", codec.name()));
+    }
+}
+
+#[test]
+fn dense_feedback_on_is_bitwise_identical_to_off() {
+    // dense is lossless → the residual is identically zero → the
+    // stateful pipeline must reduce to the stateless seed pipeline
+    // bit for bit. This pins the PR 1 trajectory on both settings.
+    let off = run_fb(1, CodecSpec::Dense, Algo::FedMlh, false);
+    let on = run_fb(1, CodecSpec::Dense, Algo::FedMlh, true);
+    assert_bitwise_equal(&off, &on, "dense feedback on/off");
 }
 
 #[test]

@@ -9,7 +9,10 @@
 //!    rejected loudly;
 //! 4. `fedmlh serve`'s HTTP front end answers `POST /predict` over a
 //!    real TCP socket with exactly the engine's top-k, plus working
-//!    `/healthz`, `/metrics`, and error paths.
+//!    `/healthz`, `/metrics`, and error paths;
+//! 5. `Connection: keep-alive` reuses one TCP connection across
+//!    requests (opt-in; requests without the header keep the
+//!    close-after-response framing).
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -234,6 +237,126 @@ fn http_request(addr: std::net::SocketAddr, method: &str, path: &str, body: &str
         .expect("numeric status");
     let body_start = response.find("\r\n\r\n").expect("header terminator") + 4;
     (status, response[body_start..].to_string())
+}
+
+/// Read exactly one HTTP response from an open connection: headers,
+/// then exactly `Content-Length` body bytes — no EOF framing, so the
+/// connection stays usable afterwards. Bytes of a *following* response
+/// that arrive in the same read (pipelined replies) land in `carry`
+/// and seed the next call. Returns (status, the `Connection` header
+/// value, body).
+fn read_one_response(conn: &mut TcpStream, carry: &mut Vec<u8>) -> (u16, String, String) {
+    let mut buf = std::mem::take(carry);
+    let mut chunk = [0u8; 1024];
+    let terminator: &[u8] = b"\r\n\r\n";
+    let header_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == terminator) {
+            break pos;
+        }
+        let n = conn.read(&mut chunk).unwrap();
+        assert!(n > 0, "connection closed mid-response");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8(buf[..header_end].to_vec()).unwrap();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let mut content_length = 0usize;
+    let mut connection = String::new();
+    for line in head.split("\r\n").skip(1) {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap();
+            } else if name.trim().eq_ignore_ascii_case("connection") {
+                connection = value.trim().to_string();
+            }
+        }
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = conn.read(&mut chunk).unwrap();
+        assert!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&chunk[..n]);
+    }
+    *carry = body.split_off(content_length);
+    (status, connection, String::from_utf8(body).unwrap())
+}
+
+#[test]
+fn http_keep_alive_reuses_one_connection() {
+    let (_, world, ckpt) = trained_checkpoint(Algo::FedMlh);
+    let server = Server::bind(ckpt, &ServeOpts {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        workers: 1,
+        max_batch: 4,
+    })
+    .unwrap();
+    let handle = server.handle().unwrap();
+    let addr = handle.addr();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut carry = Vec::new();
+
+    // Several requests over the same connection, mixing endpoints.
+    let x = world.data.test.features_of(0);
+    let dense_json: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    let predict = format!("{{\"dense\": [{}], \"k\": 3}}", dense_json.join(","));
+    for i in 0..3 {
+        conn.write_all(
+            b"GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n",
+        )
+        .unwrap();
+        let (status, connection, body) = read_one_response(&mut conn, &mut carry);
+        assert_eq!(status, 200, "request {i}: {body}");
+        assert_eq!(connection, "keep-alive", "request {i}");
+        assert!(body.contains("\"ok\""), "request {i}: {body}");
+
+        let request = format!(
+            "POST /predict HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{predict}",
+            predict.len()
+        );
+        conn.write_all(request.as_bytes()).unwrap();
+        let (status, connection, body) = read_one_response(&mut conn, &mut carry);
+        assert_eq!(status, 200, "predict {i}: {body}");
+        assert_eq!(connection, "keep-alive");
+        let parsed = Json::parse(&body).unwrap();
+        assert_eq!(parsed.expect("topk").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    // Two requests written back-to-back in one segment (legal HTTP/1.1
+    // pipelining): bytes over-read past the first request must seed the
+    // second request's parse, not be dropped.
+    conn.write_all(
+        b"GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n\
+          GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n",
+    )
+    .unwrap();
+    for i in 0..2 {
+        let (status, connection, body) = read_one_response(&mut conn, &mut carry);
+        assert_eq!(status, 200, "pipelined {i}: {body}");
+        assert_eq!(connection, "keep-alive", "pipelined {i}");
+    }
+
+    // A request *without* the header keeps the historical behavior:
+    // answered on the same connection, then the server closes it.
+    conn.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let (status, connection, _) = read_one_response(&mut conn, &mut carry);
+    assert_eq!(status, 200);
+    assert_eq!(connection, "close");
+    let mut rest = Vec::new();
+    conn.read_to_end(&mut rest).unwrap();
+    assert!(
+        carry.is_empty() && rest.is_empty(),
+        "server must close after a non-keep-alive request without extra bytes"
+    );
+
+    handle.stop();
+    server_thread.join().unwrap();
 }
 
 #[test]

@@ -1,0 +1,156 @@
+//! The stateful transport pipeline's end-to-end contract:
+//!
+//! 1. with an aggressive sparse uplink (`topk`, frac = 0.05), turning
+//!    error feedback **on** measurably improves best-round accuracy
+//!    over the stateless pipeline — the whole point of carrying the
+//!    un-shipped residual across rounds;
+//! 2. `dense` on both links with feedback **off** reproduces the seed's
+//!    byte accounting exactly (the closed-form Table 4 formula);
+//! 3. both links are metered with actual vs dense-equivalent bytes and
+//!    per-round down/up columns that decompose the cumulative meter;
+//! 4. a compressed downlink (q8 broadcast + server residual folding)
+//!    still learns.
+
+use fedmlh::algo::scheme_for;
+use fedmlh::config::{Algo, ExperimentConfig};
+use fedmlh::data::synth::generate_preset;
+use fedmlh::federated::backend::RustBackend;
+use fedmlh::federated::comm::expected_round_bytes;
+use fedmlh::federated::server::{self, RunOutput};
+use fedmlh::federated::transport::DownCodec;
+use fedmlh::federated::wire::CodecSpec;
+use fedmlh::partition::noniid::{partition as noniid, NonIidOptions};
+
+fn run(
+    codec: CodecSpec,
+    down_codec: DownCodec,
+    error_feedback: bool,
+    rounds: usize,
+) -> RunOutput {
+    let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+    cfg.rounds = rounds;
+    cfg.patience = 0;
+    cfg.clients = 6;
+    cfg.clients_per_round = 3;
+    cfg.local_epochs = 1;
+    cfg.codec = codec;
+    cfg.down_codec = down_codec;
+    cfg.error_feedback = error_feedback;
+    let data = generate_preset(&cfg.preset, cfg.seed);
+    let part = noniid(&data.train, &NonIidOptions::new(cfg.clients), cfg.seed);
+    let scheme = scheme_for(&cfg, Algo::FedMlh, &data.train);
+    let backend = RustBackend::new();
+    server::run(
+        &cfg,
+        scheme.as_ref(),
+        &backend,
+        &data.train,
+        &data.test,
+        &part,
+    )
+    .unwrap()
+}
+
+/// Acceptance criterion: at frac = 0.05 the stateless pipeline throws
+/// away 95% of every update's coordinates each round, forever; error
+/// feedback accumulates them until they ship. Best-round accuracy must
+/// reflect that (both runs are fully deterministic — same seed, same
+/// data, same sampling — so this is a pinned comparison, not a flaky
+/// statistical one).
+#[test]
+fn error_feedback_improves_aggressive_topk_accuracy() {
+    let codec = CodecSpec::TopK { frac: 0.05 };
+    let rounds = 12;
+    let off = run(codec, DownCodec::Dense, false, rounds);
+    let on = run(codec, DownCodec::Dense, true, rounds);
+    assert!(
+        on.best.mean_topk() > off.best.mean_topk(),
+        "feedback must improve best-round accuracy: on {} vs off {}",
+        on.best.mean_topk(),
+        off.best.mean_topk()
+    );
+    // The trajectories genuinely diverge (round 1 is identical by
+    // construction — the first compress of every slot has no residual).
+    assert_ne!(
+        on.final_globals, off.final_globals,
+        "feedback must change the trained model"
+    );
+    // Feedback changes *what* is shipped, never *how much*: both runs
+    // pay the identical topk wire bill.
+    assert_eq!(on.comm.uploaded(), off.comm.uploaded());
+    assert_eq!(on.comm.downloaded(), off.comm.downloaded());
+}
+
+/// Seed-accounting pin: dense both ways + feedback off is the PR 1 /
+/// seed meter, byte for byte (closed-form cross-check).
+#[test]
+fn dense_no_feedback_reproduces_seed_byte_counts() {
+    let rounds = 3;
+    let out = run(CodecSpec::Dense, DownCodec::Dense, false, rounds);
+    let per_round = expected_round_bytes(3, out.model_bytes / out.n_models, out.n_models);
+    assert_eq!(out.comm.total(), per_round * rounds as u64);
+    assert_eq!(out.comm.upload_compression(), 1.0);
+    assert_eq!(out.comm.download_compression(), 1.0);
+    assert_eq!(out.comm.uploaded(), out.comm.uploaded_dense_equiv());
+    assert_eq!(out.comm.downloaded(), out.comm.downloaded_dense_equiv());
+    // Per-round columns: S clients × R sub-models × model bytes, each way.
+    let link = (3 * out.model_bytes) as u64;
+    for rec in &out.history.records {
+        assert_eq!(rec.down_bytes, link, "round {}", rec.round);
+        assert_eq!(rec.up_bytes, link, "round {}", rec.round);
+    }
+}
+
+/// Two-sided metering under asymmetric compression: sparse uplink,
+/// quantized downlink, each link reporting its own ratio.
+#[test]
+fn per_link_accounting_under_asymmetric_compression() {
+    let rounds = 3;
+    let out = run(
+        CodecSpec::TopK { frac: 0.1 },
+        DownCodec::QuantI8,
+        true,
+        rounds,
+    );
+    // Uplink: topk ships 4 + 8k bytes per item vs 4n dense.
+    assert!(out.comm.uploaded() < out.comm.uploaded_dense_equiv());
+    assert!(
+        out.comm.upload_compression() > 3.0,
+        "topk 10% uplink ratio {}",
+        out.comm.upload_compression()
+    );
+    // Downlink: q8 ships n + 4·n_tensors bytes per item vs 4n dense.
+    assert!(out.comm.downloaded() < out.comm.downloaded_dense_equiv());
+    assert!(
+        out.comm.download_compression() > 3.5,
+        "q8 downlink ratio {}",
+        out.comm.download_compression()
+    );
+    // The per-round columns decompose the cumulative meter exactly.
+    let mut cumulative = 0u64;
+    for rec in &out.history.records {
+        assert!(rec.down_bytes > 0 && rec.up_bytes > 0);
+        assert!(rec.up_bytes < rec.down_bytes, "topk uplink beats q8 downlink");
+        cumulative += rec.down_bytes + rec.up_bytes;
+        assert_eq!(cumulative, out.comm.total_at_round(rec.round));
+    }
+}
+
+/// A lossy broadcast with server-side residual folding must still
+/// train: the clients see a quantized global, but the quantization
+/// error is folded forward rather than compounding.
+#[test]
+fn q8_downlink_with_folding_still_learns() {
+    let out = run(CodecSpec::Dense, DownCodec::QuantI8, true, 6);
+    let first = out.history.records.first().unwrap().accuracy.top1;
+    assert!(
+        out.best.top1 >= first,
+        "no improvement under q8 broadcast: {first} -> {}",
+        out.best.top1
+    );
+    assert!(out.best.top1 > 0.02, "top1 {} not above chance", out.best.top1);
+    for rec in &out.history.records {
+        assert!(rec.accuracy.top1.is_finite());
+        assert!(rec.mean_loss.is_finite());
+    }
+}
