@@ -1,0 +1,181 @@
+//! Training-step and forward-pass benchmarks at representative FedMLH
+//! shapes (feature-hashed sparse inputs, hashed out-dim ≫ hidden),
+//! run side by side on the tiled kernel path (`fedmlh::kernels` via
+//! `model::mlp`) and the frozen naive baseline
+//! (`fedmlh::kernels::naive`) so the speedup is measured, not assumed.
+//!
+//! Besides the usual `Bencher` table/CSV, this bench writes
+//! `BENCH_train.json` (override the path with `FEDMLH_BENCH_JSON`):
+//!
+//! ```json
+//! {
+//!   "suite": "train",
+//!   "fast": false,
+//!   "shapes": [
+//!     {
+//!       "shape": "xc_sub", "batch": 32, "d": 4096, "nnz_per_row": 32,
+//!       "hidden": 256, "out": 8192,
+//!       "naive_train_s": 0.0, "tiled_train_s": 0.0, "train_speedup": 0.0,
+//!       "naive_forward_s": 0.0, "tiled_forward_s": 0.0, "forward_speedup": 0.0
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! (times are median seconds per call; speedup = naive / tiled.)
+
+use std::collections::BTreeMap;
+
+use fedmlh::bench::Bencher;
+use fedmlh::kernels::naive;
+use fedmlh::model::mlp;
+use fedmlh::model::params::ModelParams;
+use fedmlh::util::json::Json;
+use fedmlh::util::rng::Rng;
+
+#[derive(Clone, Copy)]
+struct Shape {
+    name: &'static str,
+    batch: usize,
+    d: usize,
+    /// Nonzero features per row (= d for a dense batch).
+    nnz_per_row: usize,
+    hidden: usize,
+    out: usize,
+}
+
+const SHAPES: &[Shape] = &[
+    // eurlex-ish sub-model: modest hash dims, sparse rows.
+    Shape {
+        name: "eurlex_sub",
+        batch: 32,
+        d: 1024,
+        nnz_per_row: 32,
+        hidden: 128,
+        out: 1024,
+    },
+    // the acceptance shape: extreme hashed out-dim, sparse input.
+    Shape {
+        name: "xc_sub",
+        batch: 32,
+        d: 4096,
+        nnz_per_row: 32,
+        hidden: 256,
+        out: 8192,
+    },
+    // fully dense input: exercises the dense blocked path end to end.
+    Shape {
+        name: "dense_small",
+        batch: 16,
+        d: 256,
+        nnz_per_row: 256,
+        hidden: 64,
+        out: 512,
+    },
+];
+
+fn input_batch(rng: &mut Rng, s: &Shape) -> Vec<f32> {
+    let mut x = vec![0.0f32; s.batch * s.d];
+    if s.nnz_per_row >= s.d {
+        for v in x.iter_mut() {
+            *v = rng.gaussian_f32(0.0, 1.0);
+        }
+    } else {
+        for r in 0..s.batch {
+            for _ in 0..s.nnz_per_row {
+                let c = rng.below(s.d);
+                x[r * s.d + c] = rng.gaussian_f32(0.0, 1.0);
+            }
+        }
+    }
+    x
+}
+
+fn label_batch(rng: &mut Rng, s: &Shape) -> Vec<f32> {
+    (0..s.batch * s.out)
+        .map(|_| if rng.bernoulli(0.01) { 1.0 } else { 0.0 })
+        .collect()
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn main() {
+    let mut bench = Bencher::from_env("train");
+    let fast = std::env::var("FEDMLH_BENCH_FAST").ok().as_deref() == Some("1");
+    let lr = 0.05f32;
+    let mut rows: Vec<Json> = Vec::new();
+
+    for s in SHAPES {
+        let mut rng = Rng::new(0x7a41);
+        let x = input_batch(&mut rng, s);
+        let y = label_batch(&mut rng, s);
+
+        // -- forward
+        let params = ModelParams::init(s.d, s.hidden, s.out, 1);
+        let naive_fwd = bench
+            .bench_val(&format!("{}/forward/naive", s.name), || {
+                naive::forward(&params, &x, s.batch)
+            })
+            .median;
+        let mut scratch = mlp::InferScratch::new();
+        let mut z = vec![0.0f32; s.batch * s.out];
+        let tiled_fwd = bench
+            .bench(&format!("{}/forward/tiled", s.name), || {
+                mlp::forward_into(&params, &x, s.batch, &mut scratch, &mut z);
+                std::hint::black_box(&z);
+            })
+            .median;
+
+        // -- full SGD step (params drift across iterations; both
+        // variants drift the same way, timing is shape-bound)
+        let mut p_naive = ModelParams::init(s.d, s.hidden, s.out, 2);
+        let mut ws_naive = naive::NaiveWorkspace::new(&p_naive, s.batch);
+        let naive_train = bench
+            .bench_val(&format!("{}/train_step/naive", s.name), || {
+                naive::train_step(&mut p_naive, &mut ws_naive, &x, &y, lr)
+            })
+            .median;
+        let mut p_tiled = ModelParams::init(s.d, s.hidden, s.out, 2);
+        let mut ws_tiled = mlp::Workspace::new(&p_tiled, s.batch);
+        let tiled_train = bench
+            .bench_val(&format!("{}/train_step/tiled", s.name), || {
+                mlp::train_step(&mut p_tiled, &mut ws_tiled, &x, &y, lr)
+            })
+            .median;
+
+        let train_speedup = naive_train / tiled_train;
+        let forward_speedup = naive_fwd / tiled_fwd;
+        eprintln!(
+            "# {}: train {:.2}x, forward {:.2}x vs naive",
+            s.name, train_speedup, forward_speedup
+        );
+
+        let mut o = BTreeMap::new();
+        o.insert("shape".to_string(), Json::Str(s.name.to_string()));
+        o.insert("batch".to_string(), num(s.batch as f64));
+        o.insert("d".to_string(), num(s.d as f64));
+        o.insert("nnz_per_row".to_string(), num(s.nnz_per_row as f64));
+        o.insert("hidden".to_string(), num(s.hidden as f64));
+        o.insert("out".to_string(), num(s.out as f64));
+        o.insert("naive_train_s".to_string(), num(naive_train));
+        o.insert("tiled_train_s".to_string(), num(tiled_train));
+        o.insert("train_speedup".to_string(), num(train_speedup));
+        o.insert("naive_forward_s".to_string(), num(naive_fwd));
+        o.insert("tiled_forward_s".to_string(), num(tiled_fwd));
+        o.insert("forward_speedup".to_string(), num(forward_speedup));
+        rows.push(Json::Obj(o));
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("suite".to_string(), Json::Str("train".to_string()));
+    top.insert("fast".to_string(), Json::Bool(fast));
+    top.insert("shapes".to_string(), Json::Arr(rows));
+    let path = std::env::var("FEDMLH_BENCH_JSON").unwrap_or_else(|_| "BENCH_train.json".into());
+    match std::fs::write(&path, Json::Obj(top).to_string_pretty(2)) {
+        Ok(()) => eprintln!("# wrote {path}"),
+        Err(e) => eprintln!("# could not write {path}: {e}"),
+    }
+    bench.finish();
+}

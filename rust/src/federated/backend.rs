@@ -44,6 +44,52 @@ pub trait TrainBackend {
     /// `[batch, out]`. `batch` must equal the backend's fixed batch size.
     fn predict(&self, params: &ModelParams, x: &[f32]) -> Result<Vec<f32>>;
 
+    /// Inference logits written into `out` (flat `[rows, out]`), using
+    /// the caller's persistent [`mlp::InferScratch`] so repeated
+    /// evaluation batches allocate nothing. The default delegates to
+    /// [`Self::predict`] (one allocation per call) for backends whose
+    /// compute lives off-host; the pure-rust backend overrides it with
+    /// the zero-allocation kernel path.
+    fn predict_into(
+        &self,
+        params: &ModelParams,
+        x: &[f32],
+        rows: usize,
+        scratch: &mut mlp::InferScratch,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let _ = (rows, scratch);
+        let z = self.predict(params, x)?;
+        anyhow::ensure!(
+            z.len() == out.len(),
+            "predict returned {} logits, caller expected {}",
+            z.len(),
+            out.len()
+        );
+        out.copy_from_slice(&z);
+        Ok(())
+    }
+
+    /// Forward one padded batch through every sub-model (the evaluation
+    /// sweep's shape): fills `outs[j]` with model `j`'s flat
+    /// `[rows, out]` logits. The default loops [`Self::predict_into`];
+    /// the pure-rust backend overrides it to convert the input batch
+    /// once instead of once per sub-model.
+    fn predict_models_into(
+        &self,
+        models: &[ModelParams],
+        x: &[f32],
+        rows: usize,
+        scratch: &mut mlp::InferScratch,
+        outs: &mut [Vec<f32>],
+    ) -> Result<()> {
+        debug_assert_eq!(models.len(), outs.len());
+        for (m, buf) in models.iter().zip(outs.iter_mut()) {
+            self.predict_into(m, x, rows, scratch, buf)?;
+        }
+        Ok(())
+    }
+
     /// Count-sketch mean decode: `logits` flat `[r, batch, b]`, `idx`
     /// flat `[r, p]` → scores flat `[batch, p]`.
     fn decode(
@@ -122,6 +168,38 @@ impl TrainBackend for RustBackend {
         Ok(mlp::forward(params, x, rows))
     }
 
+    fn predict_into(
+        &self,
+        params: &ModelParams,
+        x: &[f32],
+        rows: usize,
+        scratch: &mut mlp::InferScratch,
+        out: &mut [f32],
+    ) -> Result<()> {
+        mlp::forward_into(params, x, rows, scratch, out);
+        Ok(())
+    }
+
+    fn predict_models_into(
+        &self,
+        models: &[ModelParams],
+        x: &[f32],
+        rows: usize,
+        scratch: &mut mlp::InferScratch,
+        outs: &mut [Vec<f32>],
+    ) -> Result<()> {
+        debug_assert_eq!(models.len(), outs.len());
+        // One dense→CSR conversion shared by all R sub-model forwards.
+        mlp::forward_models_into(
+            models,
+            x,
+            rows,
+            scratch,
+            outs.iter_mut().map(|v| v.as_mut_slice()),
+        );
+        Ok(())
+    }
+
     fn decode(
         &self,
         logits: &[f32],
@@ -184,6 +262,38 @@ mod tests {
         let x = vec![0.1f32; 3 * 8];
         let z = backend.predict(&params, &x).unwrap();
         assert_eq!(z.len(), 3 * 10);
+    }
+
+    #[test]
+    fn predict_into_matches_predict() {
+        let params = ModelParams::init(8, 4, 10, 0);
+        let backend = RustBackend::new();
+        let x: Vec<f32> = (0..3 * 8).map(|i| ((i * 7 % 5) as f32 - 2.0) * 0.3).collect();
+        let want = backend.predict(&params, &x).unwrap();
+        let mut scratch = crate::model::mlp::InferScratch::new();
+        let mut out = vec![f32::NAN; 3 * 10];
+        backend
+            .predict_into(&params, &x, 3, &mut scratch, &mut out)
+            .unwrap();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn predict_models_into_matches_per_model_predict() {
+        // The hoisted one-conversion-per-batch path must be bitwise
+        // identical to forwarding each sub-model independently.
+        let backend = RustBackend::new();
+        let models: Vec<ModelParams> =
+            (0..3).map(|j| ModelParams::init(6, 4, 5, j as u64)).collect();
+        let x: Vec<f32> = (0..2 * 6).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut scratch = crate::model::mlp::InferScratch::new();
+        let mut outs: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0f32; 2 * 5]).collect();
+        backend
+            .predict_models_into(&models, &x, 2, &mut scratch, &mut outs)
+            .unwrap();
+        for (m, out) in models.iter().zip(&outs) {
+            assert_eq!(out, &backend.predict(m, &x).unwrap());
+        }
     }
 
     #[test]

@@ -16,6 +16,10 @@
 //!   deterministic `(selected order, sub-model)` order, so aggregation
 //!   and loss averaging see the identical operand order;
 //! - communication metering happens after the fan-in, in item order.
+//! - the compute itself is deterministic: the tiled kernels under
+//!   [`crate::kernels`] keep a fixed, tiling-independent summation
+//!   order, so an item's numbers do not depend on which worker ran it
+//!   or on what ran before it on that worker.
 //!
 //! `tests/parallel_determinism.rs` pins `workers = 4` to be
 //! bit-identical to `workers = 1`.

@@ -244,13 +244,14 @@ fn evaluate(
     test_batches: &[(usize, usize)],
 ) -> Result<AccuracyReport> {
     let mut evaluator = Evaluator::new(train_stats, frequent_k);
+    // Persistent forward scratch + logit buffers: every test batch is
+    // padded to `batch` rows, so one allocation serves the whole sweep.
+    let mut scratch = crate::model::mlp::InferScratch::new();
+    let mut logits: Vec<Vec<f32>> = globals.iter().map(|g| vec![0.0f32; batch * g.out]).collect();
     for &(start, end) in test_batches {
         let idx: Vec<usize> = (start..end).collect();
         let (x, rows) = test.feature_batch(&idx, batch);
-        let logits: Vec<Vec<f32>> = globals
-            .iter()
-            .map(|g| backend.predict(g, &x))
-            .collect::<Result<_>>()?;
+        backend.predict_models_into(globals, &x, batch, &mut scratch, &mut logits)?;
         let scores = scheme.scores(&logits, rows, backend)?;
         evaluate_scores(test, &idx, &scores, &mut evaluator);
     }

@@ -1,0 +1,239 @@
+//! Epilogue-fused kernels: whole passes over `[batch, out]`-sized
+//! tiles eliminated by doing the adjacent elementwise work inside the
+//! matmul sweep (bias + ReLU), inside one shared read of the logits
+//! (BCE loss + its gradient), or column-block-wise while the gradient
+//! tile is still cache-hot (SGD update, never materializing the full
+//! gradient matrix).
+//!
+//! Same conventions as the rest of [`super`]: outputs are fully
+//! overwritten (the `*_sgd` kernels update parameters in place), and
+//! summation order is fixed and tiling-independent.
+
+#![allow(clippy::too_many_arguments)]
+
+use super::gemm;
+
+/// Column-block width of the fused transpose-matmul + SGD kernel: the
+/// gradient is computed `[m, SGD_COL_BLOCK]` columns at a time into a
+/// caller scratch and applied to the parameters before moving on.
+pub const SGD_COL_BLOCK: usize = 512;
+
+/// Scratch length [`gemm_tn_sgd`] needs for a `[rows, cols]` parameter
+/// tile (pass the maxima over every layer to size one shared buffer).
+pub fn sgd_scratch_len(rows: usize, cols: usize) -> usize {
+    rows * SGD_COL_BLOCK.min(cols)
+}
+
+/// `out[m,n] = a[m,k] @ b[k,n] + bias` (bias broadcast over rows).
+///
+/// The bias seeds the accumulator, so the separate bias pass of the
+/// naive pipeline disappears.
+pub fn gemm_bias(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm::nn_core(a, b, Some(bias), out, m, k, n, false);
+}
+
+/// `out[m,n] = relu(a[m,k] @ b[k,n] + bias)` — the fused hidden-layer
+/// forward. ReLU is applied to each 4-row block right after its
+/// reduction completes, while the block is still cache-hot.
+pub fn gemm_bias_relu(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm::nn_core(a, b, Some(bias), out, m, k, n, true);
+}
+
+#[inline]
+pub(crate) fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Fused BCE-with-logits loss + gradient: one read of `z`/`y` produces
+/// both the numerically-stable mean loss (f64 accumulation in element
+/// order — bitwise identical to [`crate::model::mlp::bce_loss`]) and
+/// `dz = (sigmoid(z) − y) · scale`.
+pub fn bce_loss_dz(z: &[f32], y: &[f32], scale: f32, dz: &mut [f32]) -> f32 {
+    debug_assert_eq!(z.len(), y.len());
+    debug_assert_eq!(z.len(), dz.len());
+    let mut total = 0.0f64;
+    for ((d, &zv), &yv) in dz.iter_mut().zip(z.iter()).zip(y.iter()) {
+        total += (zv.max(0.0) - zv * yv + (-zv.abs()).exp().ln_1p()) as f64;
+        *d = (sigmoid(zv) - yv) * scale;
+    }
+    (total / z.len() as f64) as f32
+}
+
+/// Zero `grad` wherever the forward activation was clamped. `h` is the
+/// **post**-ReLU activation: `h[i] == 0` exactly when the
+/// pre-activation was `≤ 0`, so no pre-activation copy needs to exist.
+pub fn relu_backward_mask(grad: &mut [f32], h: &[f32]) {
+    debug_assert_eq!(grad.len(), h.len());
+    for (g, &hv) in grad.iter_mut().zip(h.iter()) {
+        if hv <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Fused weight gradient + SGD update:
+/// `param[m,n] -= lr · (a[k,m]ᵀ @ b[k,n])`.
+///
+/// Works one [`SGD_COL_BLOCK`]-wide column block at a time: the
+/// gradient block is accumulated into `scratch` (k-blocked, ascending-k
+/// order per element) and immediately applied to the parameter block —
+/// the full `[m, n]` gradient never exists, and the update touches each
+/// parameter exactly once. Numerically identical to materializing the
+/// gradient and then subtracting `lr · g`.
+pub fn gemm_tn_sgd(
+    a: &[f32],
+    b: &[f32],
+    param: &mut [f32],
+    lr: f32,
+    k: usize,
+    m: usize,
+    n: usize,
+    scratch: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(param.len(), m * n);
+    let nb_max = SGD_COL_BLOCK.min(n);
+    debug_assert!(
+        scratch.len() >= m * nb_max,
+        "sgd scratch has {} floats, tile [{m},{n}] needs {}",
+        scratch.len(),
+        m * nb_max
+    );
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = nb_max.min(n - j0);
+        let g = &mut scratch[..m * nb];
+        g.fill(0.0);
+        gemm::tn_accumulate_window(a, b, g, k, m, n, j0, nb);
+        for i in 0..m {
+            let prow = &mut param[i * n + j0..i * n + j0 + nb];
+            let grow = &g[i * nb..(i + 1) * nb];
+            for (p, &gv) in prow.iter_mut().zip(grow.iter()) {
+                *p -= lr * gv;
+            }
+        }
+        j0 += nb;
+    }
+}
+
+/// Fused column-sum + SGD bias update:
+/// `bias[n] -= lr · column_sum(grad[m,n])`, applied row by row in batch
+/// order (the bias sees `m` sequential updates — the same float
+/// operations as the naive two-pass pipeline).
+pub fn sgd_bias_colsum(bias: &mut [f32], grad: &[f32], m: usize, n: usize, lr: f32) {
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(grad.len(), m * n);
+    for row in grad.chunks_exact(n) {
+        for (b, &g) in bias.iter_mut().zip(row.iter()) {
+            *b -= lr * g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_relu_fusion_matches_separate_passes() {
+        let (m, k, n) = (3, 5, 4);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.7).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 1.3).cos()).collect();
+        let bias: Vec<f32> = (0..n).map(|i| i as f32 * 0.1 - 0.15).collect();
+        let mut want = vec![0.0f32; m * n];
+        gemm::gemm_nn(&a, &b, &mut want, m, k, n);
+        for row in want.chunks_exact_mut(n) {
+            for (v, &bv) in row.iter_mut().zip(bias.iter()) {
+                *v += bv;
+            }
+        }
+        let mut plain = vec![0.0f32; m * n];
+        gemm_bias(&a, &b, &bias, &mut plain, m, k, n);
+        for (g, w) in plain.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        }
+        for v in want.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let mut fused = vec![0.0f32; m * n];
+        gemm_bias_relu(&a, &b, &bias, &mut fused, m, k, n);
+        for (g, w) in fused.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn loss_dz_matches_definitions() {
+        let z = [0.0f32, 2.0, -3.0, 0.5];
+        let y = [0.0f32, 1.0, 0.0, 1.0];
+        let mut dz = [0.0f32; 4];
+        let scale = 0.25;
+        let loss = bce_loss_dz(&z, &y, scale, &mut dz);
+        let want_loss: f32 = z
+            .iter()
+            .zip(y.iter())
+            .map(|(&zv, &yv)| zv.max(0.0) - zv * yv + (-zv.abs()).exp().ln_1p())
+            .sum::<f32>()
+            / 4.0;
+        assert!((loss - want_loss).abs() < 1e-6);
+        for i in 0..4 {
+            let want = (sigmoid(z[i]) - y[i]) * scale;
+            assert!((dz[i] - want).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn tn_sgd_crosses_column_blocks() {
+        // n > SGD_COL_BLOCK forces at least two column blocks, with a
+        // ragged final block; compare against materialize-then-update.
+        let (k, m, n) = (3, 2, SGD_COL_BLOCK + 37);
+        let a: Vec<f32> = (0..k * m).map(|i| (i as f32 * 0.31).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.17).cos()).collect();
+        let lr = 0.3;
+        let mut want = vec![0.1f32; m * n];
+        let mut g = vec![0.0f32; m * n];
+        gemm::gemm_tn(&a, &b, &mut g, k, m, n);
+        for (p, &gv) in want.iter_mut().zip(g.iter()) {
+            *p -= lr * gv;
+        }
+        let mut got = vec![0.1f32; m * n];
+        let mut scratch = vec![0.0f32; sgd_scratch_len(m, n)];
+        gemm_tn_sgd(&a, &b, &mut got, lr, k, m, n, &mut scratch);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn relu_mask_uses_post_activation() {
+        let h = [0.0f32, 1.5, 0.0, 2.0];
+        let mut g = [1.0f32, 2.0, 3.0, 4.0];
+        relu_backward_mask(&mut g, &h);
+        assert_eq!(g, [0.0, 2.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn bias_colsum_matches_naive_order() {
+        let grad = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // [3, 2]
+        let mut bias = [10.0f32, 20.0];
+        sgd_bias_colsum(&mut bias, &grad, 3, 2, 0.5);
+        assert_eq!(bias, [10.0 - 0.5 * 9.0, 20.0 - 0.5 * 12.0]);
+    }
+}

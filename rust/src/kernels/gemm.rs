@@ -1,0 +1,326 @@
+//! Cache-blocked, register-tiled GEMM micro-kernels.
+//!
+//! Three transpose variants cover every matmul the MLP needs. All of
+//! them fully overwrite `out` and keep each output element's reduction
+//! in a fixed order (see the module docs in [`super`]), so results are
+//! independent of batch position and bitwise reproducible run to run.
+
+#![allow(clippy::too_many_arguments)]
+
+/// Rows of A processed together by the `nn` kernel (B-row reuse).
+pub const MR: usize = 4;
+/// Reduction rows processed together by the `tn` kernel.
+pub const KB: usize = 4;
+/// Independent partial sums per dot product in the `nt` kernel.
+pub const LANES: usize = 8;
+
+// The kernel bodies below are hand-unrolled for exactly these block
+// widths (a0..a3 / b0..b3, split_at_mut(2 * n)); the constants are
+// documentation, not tuning knobs. Retuning requires rewriting the
+// unrolled bodies — this assertion makes a lone constant edit fail to
+// compile instead of silently mis-computing edge rows.
+const _: () = assert!(MR == 4 && KB == 4, "gemm bodies are unrolled for 4-wide blocks");
+
+/// `out[m,n] = a[m,k] @ b[k,n]` (row-major; `out` fully overwritten).
+///
+/// Equivalent to [`nn_core`] with no bias and no ReLU; the fused
+/// variants live in [`super::fused`].
+pub fn gemm_nn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    nn_core(a, b, None, out, m, k, n, false);
+}
+
+/// Shared `nn` micro-kernel: `out = a @ b [+ bias] [then ReLU]`.
+///
+/// Processes [`MR`] rows of A per pass so each B row is read once per
+/// `MR` output rows. Each output element accumulates its k terms in
+/// ascending-k order starting from `bias[j]` (or `0.0`), identically in
+/// the blocked body and the remainder rows — batched calls are bitwise
+/// identical to per-row calls.
+#[inline(always)]
+pub(crate) fn nn_core(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if let Some(bias) = bias {
+        debug_assert_eq!(bias.len(), n);
+    }
+    let init_row = |row: &mut [f32]| match bias {
+        Some(bias) => row.copy_from_slice(bias),
+        None => row.fill(0.0),
+    };
+    let mut i = 0;
+    while i + MR <= m {
+        let blk = &mut out[i * n..(i + MR) * n];
+        for row in blk.chunks_exact_mut(n) {
+            init_row(row);
+        }
+        let (top, bottom) = blk.split_at_mut(2 * n);
+        let (o0, o1) = top.split_at_mut(n);
+        let (o2, o3) = bottom.split_at_mut(n);
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        for kk in 0..k {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+            for j in 0..n {
+                let bv = brow[j];
+                o0[j] += x0 * bv;
+                o1[j] += x1 * bv;
+                o2[j] += x2 * bv;
+                o3[j] += x3 * bv;
+            }
+        }
+        if relu {
+            for row in [o0, o1, o2, o3] {
+                for v in row.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+    while i < m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        init_row(orow);
+        let arow = &a[i * k..(i + 1) * k];
+        for (kk, &x) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += x * bv;
+            }
+        }
+        if relu {
+            for v in orow.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// `out[m,n] = a[k,m]ᵀ @ b[k,n]` without materializing aᵀ
+/// (`out` fully overwritten).
+pub fn gemm_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    tn_accumulate_window(a, b, out, k, m, n, 0, n);
+}
+
+/// Accumulate `out[i,j] += Σ_kk a[kk·m + i] · b[kk·n + j0 + j]` over the
+/// column window `[j0, j0 + nb)`; `out` rows are `nb` wide and must be
+/// pre-initialized by the caller.
+///
+/// The reduction dimension is blocked by [`KB`], streaming the output
+/// window `⌈k / KB⌉` times instead of `k` times; within a block the
+/// terms are added one at a time, so each element still accumulates in
+/// strict ascending-kk order.
+#[inline(always)]
+pub(crate) fn tn_accumulate_window(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    j0: usize,
+    nb: usize,
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * nb);
+    debug_assert!(j0 + nb <= n);
+    let mut kk = 0;
+    while kk + KB <= k {
+        let a0 = &a[kk * m..(kk + 1) * m];
+        let a1 = &a[(kk + 1) * m..(kk + 2) * m];
+        let a2 = &a[(kk + 2) * m..(kk + 3) * m];
+        let a3 = &a[(kk + 3) * m..(kk + 4) * m];
+        let b0 = &b[kk * n + j0..kk * n + j0 + nb];
+        let b1 = &b[(kk + 1) * n + j0..(kk + 1) * n + j0 + nb];
+        let b2 = &b[(kk + 2) * n + j0..(kk + 2) * n + j0 + nb];
+        let b3 = &b[(kk + 3) * n + j0..(kk + 3) * n + j0 + nb];
+        for i in 0..m {
+            let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+            let orow = &mut out[i * nb..(i + 1) * nb];
+            for j in 0..nb {
+                let mut acc = orow[j];
+                acc += x0 * b0[j];
+                acc += x1 * b1[j];
+                acc += x2 * b2[j];
+                acc += x3 * b3[j];
+                orow[j] = acc;
+            }
+        }
+        kk += KB;
+    }
+    while kk < k {
+        let ar = &a[kk * m..(kk + 1) * m];
+        let br = &b[kk * n + j0..kk * n + j0 + nb];
+        for i in 0..m {
+            let x = ar[i];
+            let orow = &mut out[i * nb..(i + 1) * nb];
+            for (o, &bv) in orow.iter_mut().zip(br.iter()) {
+                *o += x * bv;
+            }
+        }
+        kk += 1;
+    }
+}
+
+/// `out[m,k] = a[m,n] @ b[k,n]ᵀ` without materializing bᵀ
+/// (`out` fully overwritten).
+///
+/// Dot-product shaped: each output element is a length-n reduction, so
+/// a single accumulator would serialize on float-add latency. Instead
+/// every dot keeps [`LANES`] partial sums (combined in a fixed order at
+/// the end) and two A rows share each streamed B row. The lane pattern
+/// depends only on `n`, so blocked and remainder rows — and therefore
+/// any batch split — produce identical bits.
+pub fn gemm_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    let mut i = 0;
+    while i + 2 <= m {
+        let a0 = &a[i * n..(i + 1) * n];
+        let a1 = &a[(i + 1) * n..(i + 2) * n];
+        let (o0, o1) = out[i * k..(i + 2) * k].split_at_mut(k);
+        for j in 0..k {
+            let brow = &b[j * n..(j + 1) * n];
+            let (d0, d1) = dot2(a0, a1, brow);
+            o0[j] = d0;
+            o1[j] = d1;
+        }
+        i += 2;
+    }
+    if i < m {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot(arow, &b[j * n..(j + 1) * n]);
+        }
+    }
+}
+
+/// Lane-parallel dot product with a fixed combine order.
+#[inline]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    while let (Some(av), Some(bv)) = (ac.next(), bc.next()) {
+        for l in 0..LANES {
+            lanes[l] += av[l] * bv[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * y;
+    }
+    let mut acc = 0.0f32;
+    for &l in lanes.iter() {
+        acc += l;
+    }
+    acc + tail
+}
+
+/// Two lane-parallel dots sharing one streamed `b` row; each output
+/// uses exactly the same accumulation pattern as [`dot`].
+#[inline]
+fn dot2(a0: &[f32], a1: &[f32], b: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(a0.len(), b.len());
+    debug_assert_eq!(a1.len(), b.len());
+    let mut l0 = [0.0f32; LANES];
+    let mut l1 = [0.0f32; LANES];
+    let mut a0c = a0.chunks_exact(LANES);
+    let mut a1c = a1.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    while let (Some(x0), Some(x1), Some(y)) = (a0c.next(), a1c.next(), bc.next()) {
+        for l in 0..LANES {
+            l0[l] += x0[l] * y[l];
+            l1[l] += x1[l] * y[l];
+        }
+    }
+    let mut t0 = 0.0f32;
+    let mut t1 = 0.0f32;
+    for ((&x0, &x1), &y) in a0c
+        .remainder()
+        .iter()
+        .zip(a1c.remainder())
+        .zip(bc.remainder())
+    {
+        t0 += x0 * y;
+        t1 += x1 * y;
+    }
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    for l in 0..LANES {
+        s0 += l0[l];
+        s1 += l1[l];
+    }
+    (s0 + t0, s1 + t1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nn_matches_hand_computed() {
+        // [1 2 3; 4 5 6] @ [1 0; 0 1; 1 1] = [4 5; 10 11]
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let mut out = [9.0f32; 4]; // prefilled garbage must be overwritten
+        gemm_nn(&a, &b, &mut out, 2, 3, 2);
+        assert_eq!(out, [4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn tn_matches_hand_computed() {
+        // aᵀ @ b with a = [1 2; 3 4] (stored [k=2, m=2]) and b = [5; 6].
+        // out[i][0] = a[0][i]*5 + a[1][i]*6
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0];
+        let mut out = [0.0f32; 2];
+        gemm_tn(&a, &b, &mut out, 2, 2, 1);
+        assert_eq!(out, [1.0 * 5.0 + 3.0 * 6.0, 2.0 * 5.0 + 4.0 * 6.0]);
+    }
+
+    #[test]
+    fn nt_matches_hand_computed() {
+        // a = [1 2 3], b rows are [1 1 1] and [0 1 0]  ⇒ out = [6, 2]
+        let a = [1.0, 2.0, 3.0];
+        let b = [1.0, 1.0, 1.0, 0.0, 1.0, 0.0];
+        let mut out = [0.0f32; 2];
+        gemm_nt(&a, &b, &mut out, 1, 3, 2);
+        assert_eq!(out, [6.0, 2.0]);
+    }
+
+    #[test]
+    fn dot_handles_lane_remainders() {
+        for n in [0usize, 1, 7, 8, 9, 16, 23] {
+            let a: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32).mul_add(0.5, 1.0)).collect();
+            let want: f32 = a.iter().zip(b.iter()).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - want).abs() < 1e-3, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Tiled compute kernels for the MLP hot path.
+//!
+//! Every FedMLH round funnels the same math through this module: each
+//! client's `train_step`, every evaluation batch and every serving
+//! request is two hidden layers plus one extreme-width output layer of
+//! dense matmuls. The naive scalar loops that seeded the repo (kept
+//! verbatim in [`naive`] as the property-test and benchmark baseline)
+//! spend most of their time re-streaming operands from memory; the
+//! kernels here restructure the loops for cache reuse without changing
+//! what is computed:
+//!
+//! - [`gemm`] — register-blocked matmul micro-kernels: `gemm_nn`
+//!   processes four output rows per pass so each row of the (wide) B
+//!   operand is loaded once per four rows of A instead of once per row;
+//!   `gemm_tn` blocks the reduction dimension so the output tile is
+//!   streamed k/4 times instead of k times; `gemm_nt` keeps eight
+//!   independent partial sums per dot product so the reduction
+//!   vectorizes instead of serializing on one accumulator.
+//! - [`fused`] — epilogue-fused variants that eliminate whole passes
+//!   over `[batch, out]` tiles: matmul+bias+ReLU in one sweep, the BCE
+//!   loss and its `sigmoid(z) − y` gradient in one read of the logits,
+//!   and the SGD weight update applied column-block-wise while the
+//!   just-computed gradient tile is still cache-hot (the gradient is
+//!   never materialized at full `[rows, cols]` size).
+//! - [`sparse`] — a CSR batch representation for the feature-hashed
+//!   input layer: layer-1 forward and its weight gradient scale with
+//!   the batch's nonzero count instead of `batch × d`.
+//!
+//! # Conventions (the whole-module contract)
+//!
+//! - Operands are row-major `f32` slices; dimensions are passed
+//!   explicitly and `debug_assert`ed against slice lengths.
+//! - **Every kernel fully overwrites its output** (accumulating
+//!   variants say so in their name, e.g. `*_sgd` updates parameters in
+//!   place). The seed code's mixed convention — `matmul`/`matmul_tn`
+//!   zeroed internally while `matmul_nt` overwrote — is gone.
+//! - **Determinism**: every kernel uses a fixed summation order that
+//!   depends only on the reduction dimension, never on how the output
+//!   is tiled. In particular each forward output element accumulates
+//!   its k terms in ascending-k order whether the row is computed in a
+//!   4-row block, as a remainder row, or in a different batch — so a
+//!   batched forward is bitwise identical to per-row forwards, the
+//!   property the serving micro-batcher and the round engine's
+//!   parallel-vs-sequential pin (`tests/parallel_determinism.rs`) rely
+//!   on.
+
+pub mod fused;
+pub mod gemm;
+pub mod naive;
+pub mod sparse;

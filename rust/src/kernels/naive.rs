@@ -1,0 +1,255 @@
+//! The seed repo's scalar reference kernels, frozen verbatim.
+//!
+//! This is the pre-tiling `model/mlp.rs` math: single-accumulator
+//! `ikj` matmuls with a per-element `== 0.0` skip, separate
+//! zero/bias/ReLU/copy passes, and a fully materialized weight
+//! gradient. It exists for two jobs:
+//!
+//! 1. **ground truth** — `tests/kernel_properties.rs` pins every tiled
+//!    kernel in [`super::gemm`] / [`super::fused`] / [`super::sparse`]
+//!    against these loops across awkward shapes;
+//! 2. **baseline** — `benches/bench_train.rs` runs [`train_step`] and
+//!    [`forward`] side by side with the tiled path and records the
+//!    speedup in `BENCH_train.json`.
+//!
+//! Do not optimize this module; its value is that it stays naive.
+
+use crate::model::params::ModelParams;
+
+/// `out[m,n] = a[m,k] @ b[k,n]` (row-major, accumulating into zeroed out).
+pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    // ikj loop order: streams through b and out rows contiguously.
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[m,n] = a[k,m]^T @ b[k,n]` (i.e. aᵀb) without materializing aᵀ.
+pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[m,k] = a[m,n] @ b[k,n]^T` (i.e. abᵀ) without materializing bᵀ.
+pub fn matmul_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * n..(j + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                acc += av * bv;
+            }
+            *o = acc;
+        }
+    }
+}
+
+fn add_bias_rows(x: &mut [f32], bias: &[f32]) {
+    let n = bias.len();
+    for row in x.chunks_mut(n) {
+        for (v, &b) in row.iter_mut().zip(bias.iter()) {
+            *v += b;
+        }
+    }
+}
+
+fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+fn bce_loss(z: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(z.len(), y.len());
+    let total: f64 = z
+        .iter()
+        .zip(y.iter())
+        .map(|(&z, &y)| (z.max(0.0) - z * y + (-z.abs()).exp().ln_1p()) as f64)
+        .sum();
+    (total / z.len() as f64) as f32
+}
+
+fn relu_backward(grad: &mut [f32], preact: &[f32]) {
+    for (g, &a) in grad.iter_mut().zip(preact.iter()) {
+        if a <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+fn sgd_update(param: &mut [f32], grad: &[f32], lr: f32) {
+    for (p, &g) in param.iter_mut().zip(grad.iter()) {
+        *p -= lr * g;
+    }
+}
+
+/// `bias -= lr * column_sum(grad)` for a `[m, n]` gradient.
+fn col_sum_update(bias: &mut [f32], grad: &[f32], m: usize, n: usize, lr: f32) {
+    for i in 0..m {
+        let row = &grad[i * n..(i + 1) * n];
+        for (b, &g) in bias.iter_mut().zip(row.iter()) {
+            *b -= lr * g;
+        }
+    }
+}
+
+/// The seed `Workspace`: keeps pre-activation copies (`a1`/`a2`) and a
+/// materialized weight-gradient buffer, exactly as the naive
+/// `train_step` needs. (The seed over-sized `gw` as
+/// `max(d,h) × max(h,out)`; sized here to what the three products
+/// actually need so the baseline is not penalized on allocation.)
+pub struct NaiveWorkspace {
+    batch: usize,
+    a1: Vec<f32>,
+    h1: Vec<f32>,
+    a2: Vec<f32>,
+    h2: Vec<f32>,
+    z: Vec<f32>,
+    dz: Vec<f32>,
+    dh2: Vec<f32>,
+    dh1: Vec<f32>,
+    gw: Vec<f32>,
+}
+
+impl NaiveWorkspace {
+    pub fn new(params: &ModelParams, batch: usize) -> Self {
+        let (d, h, out) = (params.d, params.hidden, params.out);
+        NaiveWorkspace {
+            batch,
+            a1: vec![0.0; batch * h],
+            h1: vec![0.0; batch * h],
+            a2: vec![0.0; batch * h],
+            h2: vec![0.0; batch * h],
+            z: vec![0.0; batch * out],
+            dz: vec![0.0; batch * out],
+            dh2: vec![0.0; batch * h],
+            dh1: vec![0.0; batch * h],
+            gw: vec![0.0; (d * h).max(h * h).max(h * out)],
+        }
+    }
+}
+
+/// The seed forward pass: three fresh `Vec` allocations per call.
+pub fn forward(params: &ModelParams, x: &[f32], rows: usize) -> Vec<f32> {
+    let (d, h, out) = (params.d, params.hidden, params.out);
+    debug_assert_eq!(x.len(), rows * d);
+    let mut h1 = vec![0.0f32; rows * h];
+    matmul(x, params.w1().data(), &mut h1, rows, d, h);
+    add_bias_rows(&mut h1, params.b1().data());
+    relu(&mut h1);
+    let mut h2 = vec![0.0f32; rows * h];
+    matmul(&h1, params.w2().data(), &mut h2, rows, h, h);
+    add_bias_rows(&mut h2, params.b2().data());
+    relu(&mut h2);
+    let mut z = vec![0.0f32; rows * out];
+    matmul(&h2, params.w3().data(), &mut z, rows, h, out);
+    add_bias_rows(&mut z, params.b3().data());
+    z
+}
+
+/// The seed SGD minibatch step; returns the pre-update loss.
+pub fn train_step(
+    params: &mut ModelParams,
+    ws: &mut NaiveWorkspace,
+    x: &[f32],
+    y: &[f32],
+    lr: f32,
+) -> f32 {
+    let (d, h, out) = (params.d, params.hidden, params.out);
+    let m = ws.batch;
+    debug_assert_eq!(x.len(), m * d);
+    debug_assert_eq!(y.len(), m * out);
+
+    // ---- forward (keeping pre-activations for the backward pass)
+    matmul(x, params.w1().data(), &mut ws.a1, m, d, h);
+    add_bias_rows(&mut ws.a1, params.b1().data());
+    ws.h1.copy_from_slice(&ws.a1);
+    relu(&mut ws.h1);
+
+    matmul(&ws.h1, params.w2().data(), &mut ws.a2, m, h, h);
+    add_bias_rows(&mut ws.a2, params.b2().data());
+    ws.h2.copy_from_slice(&ws.a2);
+    relu(&mut ws.h2);
+
+    matmul(&ws.h2, params.w3().data(), &mut ws.z, m, h, out);
+    add_bias_rows(&mut ws.z, params.b3().data());
+
+    let loss = bce_loss(&ws.z, y);
+
+    // ---- backward
+    let scale = 1.0 / (m * out) as f32;
+    for ((dz, &z), &yv) in ws.dz.iter_mut().zip(ws.z.iter()).zip(y.iter()) {
+        *dz = (sigmoid(z) - yv) * scale;
+    }
+
+    // layer 3 — backprop dh2 through the *pre-update* w3, then update.
+    matmul_nt(&ws.dz, params.w3().data(), &mut ws.dh2, m, out, h);
+    relu_backward(&mut ws.dh2, &ws.a2);
+    {
+        let gw3 = &mut ws.gw[..h * out];
+        matmul_tn(&ws.h2, &ws.dz, gw3, m, h, out);
+        sgd_update(params.tensors[4].data_mut(), gw3, lr);
+        col_sum_update(params.tensors[5].data_mut(), &ws.dz, m, out, lr);
+    }
+
+    // layer 2 — same ordering discipline.
+    matmul_nt(&ws.dh2, params.w2().data(), &mut ws.dh1, m, h, h);
+    relu_backward(&mut ws.dh1, &ws.a1);
+    {
+        let gw2 = &mut ws.gw[..h * h];
+        matmul_tn(&ws.h1, &ws.dh2, gw2, m, h, h);
+        sgd_update(params.tensors[2].data_mut(), gw2, lr);
+        col_sum_update(params.tensors[3].data_mut(), &ws.dh2, m, h, lr);
+    }
+
+    // layer 1
+    {
+        let gw1 = &mut ws.gw[..d * h];
+        matmul_tn(x, &ws.dh1, gw1, m, d, h);
+        sgd_update(params.tensors[0].data_mut(), gw1, lr);
+        col_sum_update(params.tensors[1].data_mut(), &ws.dh1, m, h, lr);
+    }
+
+    loss
+}

@@ -1,0 +1,225 @@
+//! CSR sparse-batch kernels for the feature-hashed input layer.
+//!
+//! Feature hashing maps a handful of raw `(index, value)` pairs into a
+//! `d`-wide dense row, so training and serving batches are mostly
+//! zeros — the naive dense loops still *scan* all `batch × d` entries.
+//! A [`CsrBatch`] holds only the nonzeros, and the layer-1 forward /
+//! weight-gradient kernels below scale with `nnz` instead of
+//! `batch × d`.
+//!
+//! Numerics: a CSR row visits its nonzero columns in ascending order —
+//! the same order the dense kernels walk the reduction — and the terms
+//! it skips are exact zeros, so (absent products that underflow to
+//! signed zero) the sparse forward is bitwise identical to the dense
+//! one. `tests/kernel_properties.rs` pins this equivalence.
+
+#![allow(clippy::too_many_arguments)]
+
+/// A batch of rows in compressed-sparse-row form, with reusable
+/// buffers so the per-step conversion allocates nothing at steady
+/// state.
+#[derive(Clone, Debug, Default)]
+pub struct CsrBatch {
+    rows: usize,
+    cols: usize,
+    /// `rows + 1` offsets into `indices`/`values`.
+    indptr: Vec<u32>,
+    /// Column of each nonzero, ascending within a row.
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Nonzero columns and values of row `r`.
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    /// Rebuild from a dense `[rows, cols]` batch, reusing the internal
+    /// buffers.
+    pub fn from_dense(&mut self, x: &[f32], rows: usize, cols: usize) {
+        let complete = self.try_from_dense(x, rows, cols, usize::MAX);
+        debug_assert!(complete);
+    }
+
+    /// Rebuild from a dense batch, giving up as soon as the nonzero
+    /// count exceeds `max_nnz` (the caller's dense-vs-sparse cutoff).
+    /// Returns whether the build completed; on `false` the batch is
+    /// left in an unspecified (but safe) state and must not be used.
+    pub fn try_from_dense(&mut self, x: &[f32], rows: usize, cols: usize, max_nnz: usize) -> bool {
+        assert_eq!(x.len(), rows * cols, "dense batch shape mismatch");
+        debug_assert!(cols <= u32::MAX as usize);
+        self.rows = rows;
+        self.cols = cols;
+        self.indptr.clear();
+        self.indices.clear();
+        self.values.clear();
+        self.indptr.push(0);
+        for xr in x.chunks_exact(cols) {
+            for (c, &v) in xr.iter().enumerate() {
+                if v != 0.0 {
+                    self.indices.push(c as u32);
+                    self.values.push(v);
+                }
+            }
+            if self.values.len() > max_nnz {
+                return false;
+            }
+            self.indptr.push(self.values.len() as u32);
+        }
+        true
+    }
+}
+
+/// The nnz threshold below which the sparse path beats the dense one
+/// for a batch of `len = rows × cols` entries (density ≤ ½ — each CSR
+/// term costs about two dense terms' worth of work).
+pub fn sparse_cutoff(len: usize) -> usize {
+    len / 2
+}
+
+/// `out[rows,n] = csr @ w + bias` (`w` is `[cols, n]` row-major).
+pub fn csr_gemm_bias(csr: &CsrBatch, w: &[f32], bias: &[f32], out: &mut [f32], n: usize) {
+    csr_nn_core(csr, w, bias, out, n, false);
+}
+
+/// `out[rows,n] = relu(csr @ w + bias)` — the fused sparse layer-1
+/// forward.
+pub fn csr_gemm_bias_relu(csr: &CsrBatch, w: &[f32], bias: &[f32], out: &mut [f32], n: usize) {
+    csr_nn_core(csr, w, bias, out, n, true);
+}
+
+#[inline(always)]
+fn csr_nn_core(csr: &CsrBatch, w: &[f32], bias: &[f32], out: &mut [f32], n: usize, relu: bool) {
+    debug_assert_eq!(w.len(), csr.cols * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), csr.rows * n);
+    for (r, orow) in out.chunks_exact_mut(n).enumerate() {
+        orow.copy_from_slice(bias);
+        let (idx, vals) = csr.row(r);
+        for (&c, &v) in idx.iter().zip(vals.iter()) {
+            let wrow = &w[c as usize * n..(c as usize + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += v * wv;
+            }
+        }
+        if relu {
+            for o in orow.iter_mut() {
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Fused sparse weight gradient + SGD update:
+/// `w[cols,n] -= lr · (csrᵀ @ d)` with `d` a dense `[rows, n]` matrix —
+/// the layer-1 backward as a scatter of rank-1 updates over the
+/// batch's nonzeros, costing `nnz × n` instead of `rows × cols × n`.
+///
+/// Deterministic: nonzeros are visited in (row, ascending column)
+/// order, so every parameter row sees its updates in a fixed sequence.
+pub fn csr_gemm_tn_sgd(csr: &CsrBatch, d: &[f32], w: &mut [f32], lr: f32, n: usize) {
+    debug_assert_eq!(d.len(), csr.rows * n);
+    debug_assert_eq!(w.len(), csr.cols * n);
+    for (r, drow) in d.chunks_exact(n).enumerate() {
+        let (idx, vals) = csr.row(r);
+        for (&c, &v) in idx.iter().zip(vals.iter()) {
+            let s = lr * v;
+            let wrow = &mut w[c as usize * n..(c as usize + 1) * n];
+            for (wv, &dv) in wrow.iter_mut().zip(drow.iter()) {
+                *wv -= s * dv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_example() -> (Vec<f32>, usize, usize) {
+        // [0 2 0; 1 0 3] — nnz 3 of 6
+        (vec![0.0, 2.0, 0.0, 1.0, 0.0, 3.0], 2, 3)
+    }
+
+    #[test]
+    fn from_dense_roundtrips_structure() {
+        let (x, rows, cols) = dense_example();
+        let mut csr = CsrBatch::new();
+        csr.from_dense(&x, rows, cols);
+        assert_eq!((csr.rows(), csr.cols(), csr.nnz()), (2, 3, 3));
+        assert_eq!(csr.row(0), (&[1u32][..], &[2.0f32][..]));
+        assert_eq!(csr.row(1), (&[0u32, 2][..], &[1.0f32, 3.0][..]));
+        // rebuild reuses buffers and fully resets state
+        csr.from_dense(&[0.0, 0.0], 1, 2);
+        assert_eq!((csr.rows(), csr.nnz()), (1, 0));
+        assert_eq!(csr.row(0), (&[][..], &[][..]));
+    }
+
+    #[test]
+    fn bounded_build_gives_up_past_cutoff() {
+        let (x, rows, cols) = dense_example();
+        let mut csr = CsrBatch::new();
+        assert!(!csr.try_from_dense(&x, rows, cols, 2));
+        assert!(csr.try_from_dense(&x, rows, cols, 3));
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(sparse_cutoff(rows * cols), 3);
+    }
+
+    #[test]
+    fn sparse_forward_matches_dense() {
+        let (x, rows, cols) = dense_example();
+        let n = 2;
+        let w: Vec<f32> = (0..cols * n).map(|i| i as f32 * 0.5 - 1.0).collect();
+        let bias = vec![0.25f32, -0.5];
+        let mut csr = CsrBatch::new();
+        csr.from_dense(&x, rows, cols);
+        let mut sparse_out = vec![0.0f32; rows * n];
+        csr_gemm_bias(&csr, &w, &bias, &mut sparse_out, n);
+        let mut dense_out = vec![0.0f32; rows * n];
+        crate::kernels::fused::gemm_bias(&x, &w, &bias, &mut dense_out, rows, cols, n);
+        assert_eq!(sparse_out, dense_out);
+    }
+
+    #[test]
+    fn scatter_gradient_matches_dense_tn() {
+        let (x, rows, cols) = dense_example();
+        let n = 2;
+        let d: Vec<f32> = (0..rows * n).map(|i| (i as f32 * 0.9).sin()).collect();
+        let lr = 0.1;
+        let mut csr = CsrBatch::new();
+        csr.from_dense(&x, rows, cols);
+        let init: Vec<f32> = (0..cols * n).map(|i| i as f32 * 0.01).collect();
+        let mut sparse_w = init.clone();
+        csr_gemm_tn_sgd(&csr, &d, &mut sparse_w, lr, n);
+        let mut g = vec![0.0f32; cols * n];
+        crate::kernels::gemm::gemm_tn(&x, &d, &mut g, rows, cols, n);
+        let dense_w: Vec<f32> = init
+            .iter()
+            .zip(g.iter())
+            .map(|(&p, &gv)| p - lr * gv)
+            .collect();
+        for (s, w) in sparse_w.iter().zip(dense_w.iter()) {
+            assert!((s - w).abs() < 1e-6, "{s} vs {w}");
+        }
+    }
+}

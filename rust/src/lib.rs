@@ -20,6 +20,9 @@
 //!   communication accounting, non-iid partitioning, evaluation, the
 //!   table/figure harness, and the serving subsystem ([`serve`]:
 //!   `.fmlh` checkpoints + a micro-batching HTTP inference server).
+//!   The pure-rust MLP hot path runs on the tiled compute kernels in
+//!   [`kernels`] (blocked GEMM, fused epilogues, CSR sparse-input fast
+//!   path) shared by training, evaluation and serving.
 //! - **L2** — the MLP forward/backward + SGD step, written in JAX
 //!   (`python/compile/model.py`) and AOT-lowered to HLO text.
 //! - **L1** — Pallas kernels for the wide output layer, the fused BCE
@@ -50,6 +53,7 @@ pub mod eval;
 pub mod federated;
 pub mod harness;
 pub mod hashing;
+pub mod kernels;
 pub mod model;
 pub mod partition;
 pub mod runtime;

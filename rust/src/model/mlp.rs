@@ -1,5 +1,6 @@
 //! Pure-rust reference MLP: the same forward/backward/SGD math as the
-//! L2 JAX graph (`python/compile/model.py`), implemented from scratch.
+//! L2 JAX graph (`python/compile/model.py`), running on the tiled
+//! compute kernels in [`crate::kernels`].
 //!
 //! Two jobs:
 //! 1. back the [`crate::federated::backend::RustBackend`] so the whole
@@ -9,146 +10,168 @@
 //!    parameters after several rounds).
 //!
 //! Loss is the numerically-stable mean BCE-with-logits over the full
-//! `[batch, out]` tile, matching `kernels/bce.py` exactly (including the
-//! 1/(batch·out) gradient scale).
+//! `[batch, out]` tile, matching `kernels/bce.py` exactly (including
+//! the 1/(batch·out) gradient scale).
+//!
+//! # Hot-path structure
+//!
+//! - The forward pass is two fused matmul+bias+ReLU sweeps plus one
+//!   matmul+bias sweep ([`fused::gemm_bias_relu`] / [`fused::gemm_bias`]);
+//!   no pre-activation copies exist — ReLU backward masks on the
+//!   *post*-activation (`h == 0 ⇔ pre ≤ 0`).
+//! - The feature-hashed input layer takes a CSR fast path
+//!   ([`crate::kernels::sparse`]) whenever the batch is at most half
+//!   nonzero, so layer-1 work scales with nnz instead of `batch × d`.
+//! - [`forward_into`] is allocation-free given a caller-held
+//!   [`InferScratch`]; [`train_step`] reuses a [`Workspace`] the same
+//!   way. Kernels keep a fixed, tiling-independent summation order, so
+//!   batched forwards stay bitwise identical to per-row forwards and
+//!   runs are deterministic at any worker count.
 
-use crate::util::tensor::Tensor;
+use crate::kernels::{fused, gemm, sparse};
 
 use super::params::ModelParams;
 
-/// `out[m,n] = a[m,k] @ b[k,n]` (row-major, accumulating into zeroed out).
-fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    out.fill(0.0);
-    // ikj loop order: streams through b and out rows contiguously.
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// `out[m,n] = a[k,m]^T @ b[k,n]` (i.e. aᵀb) without materializing aᵀ.
-fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    out.fill(0.0);
-    for kk in 0..k {
-        let arow = &a[kk * m..(kk + 1) * m];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// `out[m,k] = a[m,n] @ b[k,n]^T` (i.e. abᵀ) without materializing bᵀ.
-fn matmul_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
-    debug_assert_eq!(a.len(), m * n);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * k);
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let orow = &mut out[i * k..(i + 1) * k];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * n..(j + 1) * n];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow.iter()) {
-                acc += av * bv;
-            }
-            *o = acc;
-        }
-    }
-}
-
-fn add_bias_rows(x: &mut [f32], bias: &[f32]) {
-    let n = bias.len();
-    for row in x.chunks_mut(n) {
-        for (v, &b) in row.iter_mut().zip(bias.iter()) {
-            *v += b;
-        }
-    }
-}
-
-fn relu(x: &mut [f32]) {
-    for v in x.iter_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
-    }
-}
-
-#[inline]
-fn sigmoid(z: f32) -> f32 {
-    1.0 / (1.0 + (-z).exp())
-}
-
-/// Scratch buffers for one forward/backward pass (reused across steps so
-/// the hot loop allocates nothing).
+/// Scratch buffers for one forward/backward pass (reused across steps
+/// so the hot loop allocates nothing).
 pub struct Workspace {
     batch: usize,
-    a1: Vec<f32>,
     h1: Vec<f32>,
-    a2: Vec<f32>,
     h2: Vec<f32>,
     z: Vec<f32>,
     dz: Vec<f32>,
     dh2: Vec<f32>,
     dh1: Vec<f32>,
+    /// Column-block scratch for [`fused::gemm_tn_sgd`] — sized for the
+    /// largest layer, `max(d,h) × min(SGD_COL_BLOCK, max(h,out))`, not
+    /// for a full materialized gradient.
     gw: Vec<f32>,
+    csr: sparse::CsrBatch,
 }
 
 impl Workspace {
     pub fn new(params: &ModelParams, batch: usize) -> Self {
-        let (h, out) = (params.hidden, params.out);
+        let (d, h, out) = (params.d, params.hidden, params.out);
         Workspace {
             batch,
-            a1: vec![0.0; batch * h],
             h1: vec![0.0; batch * h],
-            a2: vec![0.0; batch * h],
             h2: vec![0.0; batch * h],
             z: vec![0.0; batch * out],
             dz: vec![0.0; batch * out],
             dh2: vec![0.0; batch * h],
             dh1: vec![0.0; batch * h],
-            gw: vec![0.0; params.d.max(h) * h.max(out)],
+            gw: vec![0.0; fused::sgd_scratch_len(d.max(h), h.max(out))],
+            csr: sparse::CsrBatch::new(),
         }
     }
 }
 
-/// Forward pass: logits for `rows` samples (`x` is `[rows, d]` flat).
-/// Returns the flat `[rows, out]` logits.
-pub fn forward(params: &ModelParams, x: &[f32], rows: usize) -> Vec<f32> {
+/// Reusable buffers for the inference-only forward pass (the hidden
+/// activations plus the CSR conversion of the input batch). Grows to
+/// the largest batch it has seen and then stops allocating.
+#[derive(Default)]
+pub struct InferScratch {
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    csr: sparse::CsrBatch,
+}
+
+impl InferScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Convert one input batch for the layer-1 fast-path decision: fills
+/// `scratch`'s CSR buffers and returns whether the sparse path applies
+/// (batch at most half nonzero). Callers running several sub-model
+/// forwards over the *same* batch (serving, evaluation) call this once
+/// and then [`forward_prepared_into`] per model, so the `rows × d`
+/// conversion scan is not repeated R times.
+pub fn prepare_input(x: &[f32], rows: usize, d: usize, scratch: &mut InferScratch) -> bool {
+    debug_assert_eq!(x.len(), rows * d);
+    scratch.csr.try_from_dense(x, rows, d, sparse::sparse_cutoff(rows * d))
+}
+
+/// Forward pass for `rows` samples (`x` is `[rows, d]` flat) written
+/// into the caller's `z` (`[rows, out]` flat) with zero allocations at
+/// steady state.
+pub fn forward_into(
+    params: &ModelParams,
+    x: &[f32],
+    rows: usize,
+    scratch: &mut InferScratch,
+    z: &mut [f32],
+) {
+    let use_sparse = prepare_input(x, rows, params.d, scratch);
+    forward_prepared_into(params, x, rows, use_sparse, scratch, z);
+}
+
+/// [`forward_into`] with the input conversion hoisted out:
+/// `use_sparse` must be [`prepare_input`]'s return for this exact
+/// (`x`, `rows`) on this `scratch`.
+pub fn forward_prepared_into(
+    params: &ModelParams,
+    x: &[f32],
+    rows: usize,
+    use_sparse: bool,
+    scratch: &mut InferScratch,
+    z: &mut [f32],
+) {
     let (d, h, out) = (params.d, params.hidden, params.out);
     debug_assert_eq!(x.len(), rows * d);
-    let mut h1 = vec![0.0f32; rows * h];
-    matmul(x, params.w1().data(), &mut h1, rows, d, h);
-    add_bias_rows(&mut h1, params.b1().data());
-    relu(&mut h1);
-    let mut h2 = vec![0.0f32; rows * h];
-    matmul(&h1, params.w2().data(), &mut h2, rows, h, h);
-    add_bias_rows(&mut h2, params.b2().data());
-    relu(&mut h2);
-    let mut z = vec![0.0f32; rows * out];
-    matmul(&h2, params.w3().data(), &mut z, rows, h, out);
-    add_bias_rows(&mut z, params.b3().data());
+    debug_assert_eq!(z.len(), rows * out);
+    if rows == 0 {
+        return;
+    }
+    if scratch.h1.len() < rows * h {
+        scratch.h1.resize(rows * h, 0.0);
+    }
+    if scratch.h2.len() < rows * h {
+        scratch.h2.resize(rows * h, 0.0);
+    }
+    let h1 = &mut scratch.h1[..rows * h];
+    if use_sparse {
+        debug_assert_eq!((scratch.csr.rows(), scratch.csr.cols()), (rows, d));
+        sparse::csr_gemm_bias_relu(&scratch.csr, params.w1().data(), params.b1().data(), h1, h);
+    } else {
+        fused::gemm_bias_relu(x, params.w1().data(), params.b1().data(), h1, rows, d, h);
+    }
+    let h2 = &mut scratch.h2[..rows * h];
+    fused::gemm_bias_relu(h1, params.w2().data(), params.b2().data(), h2, rows, h, h);
+    fused::gemm_bias(h2, params.w3().data(), params.b3().data(), z, rows, h, out);
+}
+
+/// Forward the *same* batch through several sub-models (the FedMLH
+/// serving/evaluation shape): one [`prepare_input`] conversion shared
+/// by all forwards, one output buffer per model. This is the safe
+/// wrapper around the `prepare_input` + [`forward_prepared_into`]
+/// pairing invariant — callers never handle `use_sparse` themselves.
+pub fn forward_models_into<'a>(
+    models: &[ModelParams],
+    x: &[f32],
+    rows: usize,
+    scratch: &mut InferScratch,
+    outs: impl IntoIterator<Item = &'a mut [f32]>,
+) {
+    let Some(first) = models.first() else {
+        return;
+    };
+    let use_sparse = prepare_input(x, rows, first.d, scratch);
+    let mut outs = outs.into_iter();
+    for m in models {
+        let z = outs.next().expect("one output buffer per sub-model");
+        forward_prepared_into(m, x, rows, use_sparse, scratch, z);
+    }
+}
+
+/// Forward pass returning fresh `[rows, out]` logits (convenience
+/// wrapper over [`forward_into`]; hot paths hold an [`InferScratch`]
+/// and call that directly).
+pub fn forward(params: &ModelParams, x: &[f32], rows: usize) -> Vec<f32> {
+    let mut z = vec![0.0f32; rows * params.out];
+    let mut scratch = InferScratch::new();
+    forward_into(params, x, rows, &mut scratch, &mut z);
     z
 }
 
@@ -158,9 +181,7 @@ pub fn bce_loss(z: &[f32], y: &[f32]) -> f32 {
     let total: f64 = z
         .iter()
         .zip(y.iter())
-        .map(|(&z, &y)| {
-            (z.max(0.0) - z * y + (-z.abs()).exp().ln_1p()) as f64
-        })
+        .map(|(&z, &y)| (z.max(0.0) - z * y + (-z.abs()).exp().ln_1p()) as f64)
         .sum();
     (total / z.len() as f64) as f32
 }
@@ -179,83 +200,45 @@ pub fn train_step(
     debug_assert_eq!(x.len(), m * d);
     debug_assert_eq!(y.len(), m * out);
 
-    // ---- forward (keeping pre-activations for the backward pass)
-    matmul(x, params.w1().data(), &mut ws.a1, m, d, h);
-    add_bias_rows(&mut ws.a1, params.b1().data());
-    ws.h1.copy_from_slice(&ws.a1);
-    relu(&mut ws.h1);
-
-    matmul(&ws.h1, params.w2().data(), &mut ws.a2, m, h, h);
-    add_bias_rows(&mut ws.a2, params.b2().data());
-    ws.h2.copy_from_slice(&ws.a2);
-    relu(&mut ws.h2);
-
-    matmul(&ws.h2, params.w3().data(), &mut ws.z, m, h, out);
-    add_bias_rows(&mut ws.z, params.b3().data());
-
-    let loss = bce_loss(&ws.z, y);
-
-    // ---- backward
-    let scale = 1.0 / (m * out) as f32;
-    for ((dz, &z), &yv) in ws.dz.iter_mut().zip(ws.z.iter()).zip(y.iter()) {
-        *dz = (sigmoid(z) - yv) * scale;
+    // ---- forward (fused bias+ReLU; the post-activations double as the
+    // ReLU masks for the backward pass)
+    let use_sparse = ws.csr.try_from_dense(x, m, d, sparse::sparse_cutoff(m * d));
+    if use_sparse {
+        sparse::csr_gemm_bias_relu(&ws.csr, params.w1().data(), params.b1().data(), &mut ws.h1, h);
+    } else {
+        fused::gemm_bias_relu(x, params.w1().data(), params.b1().data(), &mut ws.h1, m, d, h);
     }
+    fused::gemm_bias_relu(&ws.h1, params.w2().data(), params.b2().data(), &mut ws.h2, m, h, h);
+    fused::gemm_bias(&ws.h2, params.w3().data(), params.b3().data(), &mut ws.z, m, h, out);
+
+    // ---- loss + dz in one pass over the [batch, out] tile
+    let scale = 1.0 / (m * out) as f32;
+    let loss = fused::bce_loss_dz(&ws.z, y, scale, &mut ws.dz);
 
     // layer 3 — backprop dh2 through the *pre-update* w3, then update
     // (updating first would make this SGD-with-stale-gradient, visibly
     // wrong at lr = 1 in the finite-difference test).
-    matmul_nt(&ws.dz, params.w3().data(), &mut ws.dh2, m, out, h);
-    relu_backward(&mut ws.dh2, &ws.a2);
-    {
-        let gw3 = &mut ws.gw[..h * out];
-        matmul_tn(&ws.h2, &ws.dz, gw3, m, h, out);
-        sgd_update(params.tensors[4].data_mut(), gw3, lr);
-        col_sum_update(params.tensors[5].data_mut(), &ws.dz, m, out, lr);
-    }
+    gemm::gemm_nt(&ws.dz, params.w3().data(), &mut ws.dh2, m, out, h);
+    fused::relu_backward_mask(&mut ws.dh2, &ws.h2);
+    fused::gemm_tn_sgd(&ws.h2, &ws.dz, params.tensors[4].data_mut(), lr, m, h, out, &mut ws.gw);
+    fused::sgd_bias_colsum(params.tensors[5].data_mut(), &ws.dz, m, out, lr);
 
     // layer 2 — same ordering discipline.
-    matmul_nt(&ws.dh2, params.w2().data(), &mut ws.dh1, m, h, h);
-    relu_backward(&mut ws.dh1, &ws.a1);
-    {
-        let gw2 = &mut ws.gw[..h * h];
-        matmul_tn(&ws.h1, &ws.dh2, gw2, m, h, h);
-        sgd_update(params.tensors[2].data_mut(), gw2, lr);
-        col_sum_update(params.tensors[3].data_mut(), &ws.dh2, m, h, lr);
-    }
+    gemm::gemm_nt(&ws.dh2, params.w2().data(), &mut ws.dh1, m, h, h);
+    fused::relu_backward_mask(&mut ws.dh1, &ws.h1);
+    fused::gemm_tn_sgd(&ws.h1, &ws.dh2, params.tensors[2].data_mut(), lr, m, h, h, &mut ws.gw);
+    fused::sgd_bias_colsum(params.tensors[3].data_mut(), &ws.dh2, m, h, lr);
 
-    // layer 1
-    {
-        let gw1 = &mut ws.gw[..d * h];
-        matmul_tn(x, &ws.dh1, gw1, m, d, h);
-        sgd_update(params.tensors[0].data_mut(), gw1, lr);
-        col_sum_update(params.tensors[1].data_mut(), &ws.dh1, m, h, lr);
+    // layer 1 — the weight gradient is xᵀ dh1; on the sparse path it is
+    // applied as a scatter of rank-1 updates over the batch's nonzeros.
+    if use_sparse {
+        sparse::csr_gemm_tn_sgd(&ws.csr, &ws.dh1, params.tensors[0].data_mut(), lr, h);
+    } else {
+        fused::gemm_tn_sgd(x, &ws.dh1, params.tensors[0].data_mut(), lr, m, d, h, &mut ws.gw);
     }
+    fused::sgd_bias_colsum(params.tensors[1].data_mut(), &ws.dh1, m, h, lr);
 
     loss
-}
-
-fn relu_backward(grad: &mut [f32], preact: &[f32]) {
-    for (g, &a) in grad.iter_mut().zip(preact.iter()) {
-        if a <= 0.0 {
-            *g = 0.0;
-        }
-    }
-}
-
-fn sgd_update(param: &mut [f32], grad: &[f32], lr: f32) {
-    for (p, &g) in param.iter_mut().zip(grad.iter()) {
-        *p -= lr * g;
-    }
-}
-
-/// `bias -= lr * column_sum(grad)` for a `[m, n]` gradient.
-fn col_sum_update(bias: &mut [f32], grad: &[f32], m: usize, n: usize, lr: f32) {
-    for i in 0..m {
-        let row = &grad[i * n..(i + 1) * n];
-        for (b, &g) in bias.iter_mut().zip(row.iter()) {
-            *b -= lr * g;
-        }
-    }
 }
 
 /// Convenience wrapper used by tests: loss at (params, x, y).
@@ -264,67 +247,25 @@ pub fn loss(params: &ModelParams, x: &[f32], y: &[f32], rows: usize) -> f32 {
     bce_loss(&z, y)
 }
 
-#[allow(dead_code)]
-pub(crate) fn matmul_for_tests(a: &Tensor, b: &Tensor) -> Tensor {
-    let (m, k) = (a.shape()[0], a.shape()[1]);
-    let n = b.shape()[1];
-    let mut out = Tensor::zeros(&[m, n]);
-    matmul(a.data(), b.data(), out.data_mut(), m, k, n);
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::prop::check;
     use crate::util::rng::Rng;
 
     fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
         (0..n).map(|_| rng.gaussian_f32(0.0, scale)).collect()
     }
 
-    #[test]
-    fn matmul_variants_agree() {
-        check("matmul variants", 20, |g| {
-            let m = g.usize_in(1, 12);
-            let k = g.usize_in(1, 12);
-            let n = g.usize_in(1, 12);
-            let a = g.vec_f32(m * k, -2.0, 2.0);
-            let b = g.vec_f32(k * n, -2.0, 2.0);
-            let mut c = vec![0.0; m * n];
-            matmul(&a, &b, &mut c, m, k, n);
-            // naive reference
-            for i in 0..m {
-                for j in 0..n {
-                    let want: f32 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
-                    assert!((c[i * n + j] - want).abs() < 1e-3);
-                }
+    /// `[rows, d]` batch with `nnz` nonzeros per row (sparse-path data).
+    fn sparse_rows(rng: &mut Rng, rows: usize, d: usize, nnz: usize) -> Vec<f32> {
+        let mut x = vec![0.0f32; rows * d];
+        for r in 0..rows {
+            for _ in 0..nnz {
+                let c = rng.below(d);
+                x[r * d + c] = rng.gaussian_f32(0.0, 1.0);
             }
-            // a^T b via matmul_tn on a^T stored as a
-            let mut at = vec![0.0; k * m];
-            for i in 0..m {
-                for kk in 0..k {
-                    at[kk * m + i] = a[i * k + kk];
-                }
-            }
-            let mut c2 = vec![0.0; m * n];
-            matmul_tn(&at, &b, &mut c2, k, m, n);
-            for (x, y) in c.iter().zip(c2.iter()) {
-                assert!((x - y).abs() < 1e-3);
-            }
-            // a b^T via matmul_nt with b^T stored as b
-            let mut bt = vec![0.0; n * k];
-            for kk in 0..k {
-                for j in 0..n {
-                    bt[j * k + kk] = b[kk * n + j];
-                }
-            }
-            let mut c3 = vec![0.0; m * n];
-            matmul_nt(&a, &bt, &mut c3, m, k, n);
-            for (x, y) in c.iter().zip(c3.iter()) {
-                assert!((x - y).abs() < 1e-3);
-            }
-        });
+        }
+        x
     }
 
     #[test]
@@ -384,6 +325,40 @@ mod tests {
     }
 
     #[test]
+    fn sparse_path_gradient_matches_finite_differences() {
+        // Same probe as above but with a batch sparse enough to take
+        // the CSR layer-1 path (2 nonzeros of d=16 per row).
+        let mut rng = Rng::new(17);
+        let (d, h, out, m) = (16, 4, 6, 3);
+        let params = ModelParams::init(d, h, out, 2);
+        let x = sparse_rows(&mut rng, m, d, 2);
+        assert!(x.iter().filter(|v| **v != 0.0).count() * 2 <= m * d);
+        let y: Vec<f32> = (0..m * out)
+            .map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 })
+            .collect();
+        let mut stepped = params.clone();
+        let mut ws = Workspace::new(&stepped, m);
+        train_step(&mut stepped, &mut ws, &x, &y, 1.0);
+        let eps = 1e-3f32;
+        for ti in 0..6 {
+            let len = params.tensors[ti].len();
+            for probe in 0..3.min(len) {
+                let idx = (probe * 7919) % len;
+                let mut plus = params.clone();
+                plus.tensors[ti].data_mut()[idx] += eps;
+                let mut minus = params.clone();
+                minus.tensors[ti].data_mut()[idx] -= eps;
+                let fd = (loss(&plus, &x, &y, m) - loss(&minus, &x, &y, m)) / (2.0 * eps);
+                let analytic = params.tensors[ti].data()[idx] - stepped.tensors[ti].data()[idx];
+                assert!(
+                    (fd - analytic).abs() < 2e-3,
+                    "tensor {ti} idx {idx}: fd {fd} vs analytic {analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn training_reduces_loss() {
         let mut rng = Rng::new(9);
         let (d, h, out, m) = (8, 6, 12, 16);
@@ -413,5 +388,17 @@ mod tests {
         assert_eq!(&z[0..6], &z0[..]);
         assert_eq!(&z[6..12], &z1[..]);
     }
-}
 
+    #[test]
+    fn forward_into_matches_forward_and_reuses_scratch() {
+        let params = ModelParams::init(7, 5, 9, 4);
+        let mut rng = Rng::new(3);
+        let mut scratch = InferScratch::new();
+        for rows in [3usize, 1, 6] {
+            let x = rand_vec(&mut rng, rows * 7, 1.0);
+            let mut z = vec![f32::NAN; rows * 9];
+            forward_into(&params, &x, rows, &mut scratch, &mut z);
+            assert_eq!(z, forward(&params, &x, rows), "rows={rows}");
+        }
+    }
+}

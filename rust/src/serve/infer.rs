@@ -2,12 +2,15 @@
 //!
 //! [`InferenceEngine`] is the pure computation — feature-hash a raw
 //! sparse input ([`FeatureHasher`], same derived seed as training),
-//! run [`mlp::forward`] across all R sub-models, count-sketch-decode
-//! ([`sketch_decode`]) to per-class scores, select top-k. Every row is
-//! independent in all three stages, so batching N requests into one
-//! forward pass is **bitwise identical** to N single-row passes — the
-//! property the micro-batcher relies on and `tests/serve_roundtrip.rs`
-//! pins against the offline eval decode.
+//! run [`mlp::forward_into`] across all R sub-models, count-sketch-
+//! decode ([`sketch_decode`]) to per-class scores, select top-k. Every
+//! row is independent in all three stages, so batching N requests into
+//! one forward pass is **bitwise identical** to N single-row passes —
+//! the property the micro-batcher relies on and
+//! `tests/serve_roundtrip.rs` pins against the offline eval decode.
+//! Each inference worker owns a persistent [`ScoreScratch`] (hidden
+//! activations, CSR conversion, the flat `[R, rows, B]` logit slab),
+//! so the steady-state forward path allocates nothing per batch.
 //!
 //! [`Predictor`] adds the concurrency layer, reusing the round
 //! engine's fan-out idiom (workers pulling from a shared queue): HTTP
@@ -108,7 +111,24 @@ impl InferenceEngine {
     }
 
     /// Class scores for a flat `[rows, d]` batch → flat `[rows, p]`.
+    /// Convenience form of [`Self::scores_with`] that pays one scratch
+    /// allocation; hot paths (the [`Predictor`] workers) hold a
+    /// [`ScoreScratch`] and call `scores_with` directly.
     pub fn scores(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let mut scratch = ScoreScratch::new();
+        self.scores_with(x, rows, &mut scratch)
+    }
+
+    /// Class scores for a flat `[rows, d]` batch → flat `[rows, p]`,
+    /// reusing the caller's scratch: all R sub-model forwards write
+    /// into one persistent logit slab via [`mlp::forward_into`] instead
+    /// of allocating `h1`/`h2`/`z` per sub-model per call.
+    pub fn scores_with(
+        &self,
+        x: &[f32],
+        rows: usize,
+        scratch: &mut ScoreScratch,
+    ) -> Result<Vec<f32>> {
         if x.len() != rows * self.meta.d {
             bail!(
                 "input is {} values, expected rows {} × d {}",
@@ -122,13 +142,28 @@ impl InferenceEngine {
         }
         match &self.decoder {
             Some(dec) => {
-                let mut flat = Vec::with_capacity(dec.r * rows * dec.b);
-                for m in &self.models {
-                    flat.extend_from_slice(&mlp::forward(m, x, rows));
+                let slab = dec.r * rows * dec.b;
+                if scratch.logits.len() < slab {
+                    scratch.logits.resize(slab, 0.0);
                 }
-                Ok(sketch_decode(&flat, &dec.idx, dec.r, rows, dec.b, self.meta.p))
+                let flat = &mut scratch.logits[..slab];
+                // One input conversion shared by all R sub-model
+                // forwards — not R scans of the same dense batch.
+                mlp::forward_models_into(
+                    &self.models,
+                    x,
+                    rows,
+                    &mut scratch.infer,
+                    flat.chunks_exact_mut(rows * dec.b),
+                );
+                Ok(sketch_decode(flat, &dec.idx, dec.r, rows, dec.b, self.meta.p))
             }
-            None => Ok(mlp::forward(&self.models[0], x, rows)),
+            None => {
+                let m = &self.models[0];
+                let mut z = vec![0.0f32; rows * m.out];
+                mlp::forward_into(m, x, rows, &mut scratch.infer, &mut z);
+                Ok(z)
+            }
         }
     }
 
@@ -150,6 +185,24 @@ impl InferenceEngine {
                     .collect()
             })
             .collect())
+    }
+}
+
+/// Per-worker reusable buffers for [`InferenceEngine::scores_with`]:
+/// the MLP forward scratch plus the flat `[R, rows, B]` logit slab the
+/// R sub-model forwards write into. Grows to the largest coalesced
+/// batch seen, then the forward path stops allocating — the returned
+/// score vector itself is the one remaining per-call allocation (in
+/// both the decode and the passthrough branch).
+#[derive(Default)]
+pub struct ScoreScratch {
+    infer: mlp::InferScratch,
+    logits: Vec<f32>,
+}
+
+impl ScoreScratch {
+    pub fn new() -> Self {
+        Self::default()
     }
 }
 
@@ -247,6 +300,10 @@ impl Drop for Predictor {
 fn worker_loop(shared: &Shared) {
     let d = shared.engine.d();
     let p = shared.engine.p();
+    // Persistent per-worker buffers: the coalesced input batch and the
+    // engine's forward scratch both reach a steady size and stay there.
+    let mut scratch = ScoreScratch::new();
+    let mut x: Vec<f32> = Vec::new();
     loop {
         // Wait for work; exit only once shut down *and* drained.
         let jobs: Vec<Job> = {
@@ -265,11 +322,12 @@ fn worker_loop(shared: &Shared) {
 
         let rows = jobs.len();
         shared.metrics.record_batch(rows);
-        let mut x = Vec::with_capacity(rows * d);
+        x.clear();
+        x.reserve(rows * d);
         for job in &jobs {
             x.extend_from_slice(&job.x);
         }
-        match shared.engine.scores(&x, rows) {
+        match shared.engine.scores_with(&x, rows, &mut scratch) {
             Ok(scores) => {
                 for (row, job) in jobs.iter().enumerate() {
                     let slice = &scores[row * p..(row + 1) * p];
@@ -351,6 +409,24 @@ mod tests {
             .collect();
         let want = sketch_decode(&logits, scheme.index_matrix(), cfg.r(), 2, cfg.b(), cfg.preset.p);
         assert_eq!(engine.scores(&x, 2).unwrap(), want);
+    }
+
+    #[test]
+    fn scores_with_reused_scratch_matches_fresh() {
+        // The worker path (one ScoreScratch across many batches of
+        // varying size) must be bitwise identical to fresh-scratch
+        // calls, including after the slab has grown past the need.
+        for algo in [Algo::FedMlh, Algo::FedAvg] {
+            let engine = tiny_engine(algo);
+            let d = engine.d();
+            let mut scratch = ScoreScratch::new();
+            for (seed, rows) in [(21u64, 5usize), (22, 1), (23, 3)] {
+                let x = random_rows(d, rows, seed);
+                let got = engine.scores_with(&x, rows, &mut scratch).unwrap();
+                let want = engine.scores(&x, rows).unwrap();
+                assert_eq!(got, want, "{} rows {rows}", algo.name());
+            }
+        }
     }
 
     #[test]

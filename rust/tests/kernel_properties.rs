@@ -1,0 +1,304 @@
+//! Property tests pinning the tiled kernel subsystem
+//! (`fedmlh::kernels`) against the frozen naive baseline
+//! (`fedmlh::kernels::naive`) across awkward shapes — dimensions that
+//! are not multiples of the register tiles, degenerate `m = 1` /
+//! `k = 1` cases, all-zero operands, column counts that straddle the
+//! fused-SGD block width — plus the sparse-vs-dense layer-1
+//! equivalence and run-to-run / batch-split determinism.
+
+use fedmlh::kernels::{fused, gemm, naive, sparse};
+use fedmlh::model::mlp;
+use fedmlh::model::params::ModelParams;
+use fedmlh::util::prop::{check, Gen};
+use fedmlh::util::rng::Rng;
+
+/// Shapes chosen to stress tile edges: MR = 4 rows, KB = 4 reduction
+/// block, LANES = 8 dot lanes, SGD_COL_BLOCK = 512 columns.
+const AWKWARD: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 5, 3),
+    (4, 1, 9),
+    (3, 8, 1),
+    (4, 4, 8),
+    (5, 7, 9),
+    (8, 16, 8),
+    (6, 9, 17),
+    (13, 21, 11),
+    (2, 3, 530), // crosses the fused-SGD column block once
+];
+
+fn approx(a: &[f32], b: &[f32], tol: f32, tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!((x - y).abs() <= tol, "{tag}[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn tiled_gemm_matches_naive_on_awkward_shapes() {
+    check("gemm vs naive", AWKWARD.len(), |g: &mut Gen| {
+        let (m, k, n) = AWKWARD[g.case];
+        let a = g.vec_f32(m * k, -2.0, 2.0);
+        let b = g.vec_f32(k * n, -2.0, 2.0);
+
+        let mut want = vec![0.0f32; m * n];
+        naive::matmul(&a, &b, &mut want, m, k, n);
+        let mut got = vec![f32::NAN; m * n];
+        gemm::gemm_nn(&a, &b, &mut got, m, k, n);
+        approx(&got, &want, 1e-3, "nn");
+
+        // aᵀ b: reuse a as a [k, m]-shaped operand.
+        let at = g.vec_f32(k * m, -2.0, 2.0);
+        let mut want_tn = vec![0.0f32; m * n];
+        naive::matmul_tn(&at, &b, &mut want_tn, k, m, n);
+        let mut got_tn = vec![f32::NAN; m * n];
+        gemm::gemm_tn(&at, &b, &mut got_tn, k, m, n);
+        approx(&got_tn, &want_tn, 1e-3, "tn");
+
+        // a bᵀ contracts over n: fresh a2 [m, n] and bt [k, n].
+        let a2 = g.vec_f32(m * n, -2.0, 2.0);
+        let bt = g.vec_f32(k * n, -2.0, 2.0);
+        let mut want_nt = vec![0.0f32; m * k];
+        naive::matmul_nt(&a2, &bt, &mut want_nt, m, n, k);
+        let mut got_nt = vec![f32::NAN; m * k];
+        gemm::gemm_nt(&a2, &bt, &mut got_nt, m, n, k);
+        approx(&got_nt, &want_nt, 1e-3, "nt");
+    });
+}
+
+#[test]
+fn all_zero_inputs_stay_exactly_zero() {
+    for &(m, k, n) in AWKWARD {
+        let a = vec![0.0f32; m * k];
+        let b = vec![0.0f32; k * n];
+        let mut out = vec![f32::NAN; m * n];
+        gemm::gemm_nn(&a, &b, &mut out, m, k, n);
+        assert!(out.iter().all(|&v| v == 0.0), "nn zeros ({m},{k},{n})");
+        let at = vec![0.0f32; k * m];
+        let mut out_tn = vec![f32::NAN; m * n];
+        gemm::gemm_tn(&at, &b, &mut out_tn, k, m, n);
+        assert!(out_tn.iter().all(|&v| v == 0.0), "tn zeros");
+        let a2 = vec![0.0f32; m * n];
+        let mut out_nt = vec![f32::NAN; m * k];
+        gemm::gemm_nt(&a2, &b, &mut out_nt, m, n, k);
+        assert!(out_nt.iter().all(|&v| v == 0.0), "nt zeros");
+        // fused bias path reduces to broadcast bias rows
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 * 0.5 - 1.0).collect();
+        let mut biased = vec![f32::NAN; m * n];
+        fused::gemm_bias(&a, &b, &bias, &mut biased, m, k, n);
+        for row in biased.chunks_exact(n) {
+            assert_eq!(row, &bias[..], "bias rows");
+        }
+    }
+}
+
+#[test]
+fn fused_bias_relu_matches_naive_pipeline() {
+    check("fused bias+relu", 16, |g: &mut Gen| {
+        let m = g.usize_in(1, 10);
+        let k = g.usize_in(1, 12);
+        let n = g.usize_in(1, 20);
+        let a = g.vec_f32(m * k, -2.0, 2.0);
+        let b = g.vec_f32(k * n, -2.0, 2.0);
+        let bias = g.vec_f32(n, -1.0, 1.0);
+        let mut want = vec![0.0f32; m * n];
+        naive::matmul(&a, &b, &mut want, m, k, n);
+        for row in want.chunks_exact_mut(n) {
+            for (v, &bv) in row.iter_mut().zip(bias.iter()) {
+                *v += bv;
+            }
+        }
+        let mut relu_want = want.clone();
+        for v in relu_want.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let mut got = vec![f32::NAN; m * n];
+        fused::gemm_bias(&a, &b, &bias, &mut got, m, k, n);
+        approx(&got, &want, 1e-4, "gemm_bias");
+        let mut got_relu = vec![f32::NAN; m * n];
+        fused::gemm_bias_relu(&a, &b, &bias, &mut got_relu, m, k, n);
+        approx(&got_relu, &relu_want, 1e-4, "gemm_bias_relu");
+    });
+}
+
+#[test]
+fn fused_tn_sgd_is_bitwise_equal_to_materialized_gradient() {
+    // The column-blocked fused update preserves the per-element
+    // ascending-k summation order, so it is *exactly* the two-pass
+    // result, for every awkward shape including n > SGD_COL_BLOCK.
+    check("tn+sgd fusion", AWKWARD.len(), |g: &mut Gen| {
+        let (m, k, n) = AWKWARD[g.case];
+        let a = g.vec_f32(k * m, -2.0, 2.0);
+        let b = g.vec_f32(k * n, -2.0, 2.0);
+        let init = g.vec_f32(m * n, -1.0, 1.0);
+        let lr = g.f32_in(0.01, 1.0);
+        let mut grad = vec![0.0f32; m * n];
+        gemm::gemm_tn(&a, &b, &mut grad, k, m, n);
+        let mut want = init.clone();
+        for (p, &gv) in want.iter_mut().zip(grad.iter()) {
+            *p -= lr * gv;
+        }
+        let mut got = init.clone();
+        let mut scratch = vec![0.0f32; fused::sgd_scratch_len(m, n)];
+        fused::gemm_tn_sgd(&a, &b, &mut got, lr, k, m, n, &mut scratch);
+        assert_eq!(got, want, "({m},{k},{n})");
+    });
+}
+
+/// Sparse batch whose nonzero values avoid the underflow range, so the
+/// dense kernel's skipped `0 · w` terms cannot perturb a ±0 edge and
+/// sparse-vs-dense equality is exact.
+fn sparse_batch(g: &mut Gen, rows: usize, cols: usize, nnz_per_row: usize) -> Vec<f32> {
+    let mut x = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for _ in 0..nnz_per_row.min(cols) {
+            let c = g.usize_in(0, cols);
+            let mag = g.f32_in(0.25, 2.0);
+            x[r * cols + c] = if g.bool() { mag } else { -mag };
+        }
+    }
+    x
+}
+
+#[test]
+fn sparse_layer1_forward_is_bitwise_equal_to_dense() {
+    check("csr vs dense forward", 20, |g: &mut Gen| {
+        let rows = g.usize_in(1, 9);
+        let cols = g.usize_in(4, 40);
+        let n = g.usize_in(1, 16);
+        let x = sparse_batch(g, rows, cols, 2);
+        let w = g.vec_f32(cols * n, -1.5, 1.5);
+        let bias = g.vec_f32(n, -0.5, 0.5);
+        let mut csr = sparse::CsrBatch::new();
+        csr.from_dense(&x, rows, cols);
+        let mut got = vec![f32::NAN; rows * n];
+        sparse::csr_gemm_bias_relu(&csr, &w, &bias, &mut got, n);
+        let mut want = vec![f32::NAN; rows * n];
+        fused::gemm_bias_relu(&x, &w, &bias, &mut want, rows, cols, n);
+        assert_eq!(got, want, "rows {rows} cols {cols} n {n}");
+    });
+}
+
+#[test]
+fn sparse_layer1_gradient_matches_dense() {
+    check("csr vs dense tn+sgd", 20, |g: &mut Gen| {
+        let rows = g.usize_in(1, 8);
+        let cols = g.usize_in(4, 30);
+        let n = g.usize_in(1, 12);
+        let x = sparse_batch(g, rows, cols, 2);
+        let d = g.vec_f32(rows * n, -1.0, 1.0);
+        let init = g.vec_f32(cols * n, -1.0, 1.0);
+        let lr = 0.3f32;
+        let mut csr = sparse::CsrBatch::new();
+        csr.from_dense(&x, rows, cols);
+        let mut got = init.clone();
+        sparse::csr_gemm_tn_sgd(&csr, &d, &mut got, lr, n);
+        let mut want = init.clone();
+        let mut scratch = vec![0.0f32; fused::sgd_scratch_len(cols, n)];
+        fused::gemm_tn_sgd(&x, &d, &mut want, lr, rows, cols, n, &mut scratch);
+        // The scatter applies lr·v·dv per nonzero instead of
+        // lr·(Σ v·dv); associativity differs, values agree tightly.
+        approx(&got, &want, 1e-5, "layer1 grad");
+    });
+}
+
+#[test]
+fn kernels_are_run_to_run_deterministic() {
+    let mut g = Gen::new(0xdecaf);
+    let (m, k, n) = (7, 13, 530);
+    let a = g.vec_f32(m * k, -2.0, 2.0);
+    let b = g.vec_f32(k * n, -2.0, 2.0);
+    let mut first = vec![0.0f32; m * n];
+    let mut second = vec![0.0f32; m * n];
+    gemm::gemm_nn(&a, &b, &mut first, m, k, n);
+    gemm::gemm_nn(&a, &b, &mut second, m, k, n);
+    assert!(first
+        .iter()
+        .zip(second.iter())
+        .all(|(x, y)| x.to_bits() == y.to_bits()));
+
+    // Full train_step twice from identical state ⇒ identical params and
+    // bit-identical loss, with a stale (previously used) workspace.
+    let params = ModelParams::init(12, 6, 530, 3);
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..4 * 12).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+    let y: Vec<f32> = (0..4 * 530)
+        .map(|_| if rng.bernoulli(0.1) { 1.0 } else { 0.0 })
+        .collect();
+    let mut p1 = params.clone();
+    let mut ws = mlp::Workspace::new(&p1, 4);
+    let l_warm = mlp::train_step(&mut p1, &mut ws, &x, &y, 0.5);
+    let mut p2 = params.clone();
+    let l1 = mlp::train_step(&mut p2, &mut ws, &x, &y, 0.5); // reused, now-dirty ws
+    let mut p3 = params.clone();
+    let mut fresh = mlp::Workspace::new(&p3, 4);
+    let l2 = mlp::train_step(&mut p3, &mut fresh, &x, &y, 0.5);
+    assert_eq!(l_warm.to_bits(), l1.to_bits());
+    assert_eq!(l1.to_bits(), l2.to_bits());
+    assert_eq!(p2, p3);
+    assert_eq!(p1, p2);
+}
+
+#[test]
+fn forward_is_batch_split_invariant_at_mixed_density() {
+    // Rows of wildly different density in one batch: the whole-batch
+    // sparse/dense decision may differ from the per-row decision, and
+    // the result must not care.
+    let mut g = Gen::new(0xba7c4);
+    let (d, h, out) = (24, 5, 7);
+    let params = ModelParams::init(d, h, out, 9);
+    let rows = 6;
+    let mut x = vec![0.0f32; rows * d];
+    for (r, row) in x.chunks_exact_mut(d).enumerate() {
+        let nnz = match r % 3 {
+            0 => 0, // empty row
+            1 => 2, // sparse row
+            _ => d, // dense row
+        };
+        for v in row.iter_mut().take(nnz) {
+            let mag = g.f32_in(0.25, 2.0);
+            *v = if g.bool() { mag } else { -mag };
+        }
+    }
+    let batched = mlp::forward(&params, &x, rows);
+    for r in 0..rows {
+        let single = mlp::forward(&params, &x[r * d..(r + 1) * d], 1);
+        assert_eq!(
+            &batched[r * out..(r + 1) * out],
+            &single[..],
+            "row {r} differs between batched and single forward"
+        );
+    }
+}
+
+#[test]
+fn sparse_train_step_matches_naive_baseline() {
+    // End-to-end: one tiled train_step (CSR layer-1 path engaged) vs
+    // the frozen naive step from identical state — parameters must
+    // agree to float-reassociation tolerance, loss must agree tightly.
+    let mut g = Gen::new(0x5eed);
+    let (d, h, out, m) = (32, 8, 530, 6);
+    let init = ModelParams::init(d, h, out, 4);
+    let x = sparse_batch(&mut g, m, d, 3);
+    assert!(x.iter().filter(|v| **v != 0.0).count() * 2 <= m * d);
+    let y: Vec<f32> = (0..m * out)
+        .map(|_| if g.bool() { 0.0 } else { 1.0 })
+        .collect();
+
+    let mut tiled = init.clone();
+    let mut ws = mlp::Workspace::new(&tiled, m);
+    let tiled_loss = mlp::train_step(&mut tiled, &mut ws, &x, &y, 0.7);
+
+    let mut base = init.clone();
+    let mut nws = naive::NaiveWorkspace::new(&base, m);
+    let naive_loss = naive::train_step(&mut base, &mut nws, &x, &y, 0.7);
+
+    assert!(
+        (tiled_loss - naive_loss).abs() < 1e-5,
+        "loss {tiled_loss} vs naive {naive_loss}"
+    );
+    let drift = tiled.max_abs_diff(&base).unwrap();
+    assert!(drift < 1e-4, "param drift vs naive after one step: {drift}");
+}
