@@ -1,17 +1,35 @@
 //! Wire-codec benchmarks: encode/decode throughput and achieved
 //! compression per preset model size — the client-side cost of buying
 //! Table 4's communication reduction. Dense is the memcpy baseline;
-//! q8 pays a scan + scale; topk pays a sort over |delta|.
+//! q8 pays a scan + scale; q8g pays the same scan with per-block
+//! scales; topk pays a select over |delta|. The delta rows measure the
+//! downlink's per-client framing (`encode_delta`/`apply_delta`) on a
+//! drifted base — what the server pays per selected client per round.
+//!
+//! Besides the `Bencher` table/CSV, this bench writes `BENCH_wire.json`
+//! (override the path with `FEDMLH_BENCH_WIRE_JSON`): per
+//! preset × model × codec, the median encode/decode seconds and the
+//! achieved compression ratio vs dense f32. CI uploads it as the
+//! `bench-wire-json` artifact next to `bench-train-json`.
 //!
 //! The big presets (amztitle/wikititle FedAvg models are multi-million
 //! parameter) are skipped by default to keep the suite quick; set
 //! `FEDMLH_BENCH_WIRE_FULL=1` to include them.
 
+use std::collections::BTreeMap;
+
 use fedmlh::bench::Bencher;
 use fedmlh::config::presets::by_name;
-use fedmlh::federated::wire::{decode_update, encode_update, CodecSpec};
+use fedmlh::federated::wire::{
+    apply_delta, decode_update, encode_delta, encode_update, CodecSpec,
+};
 use fedmlh::model::params::ModelParams;
+use fedmlh::util::json::Json;
 use fedmlh::util::rng::Rng;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
 
 fn main() {
     let mut bench = Bencher::from_env("wire");
@@ -21,6 +39,7 @@ fn main() {
     } else {
         &["tiny", "eurlex"]
     };
+    let mut rows: Vec<Json> = Vec::new();
 
     for name in presets {
         let preset = by_name(name).unwrap();
@@ -37,21 +56,79 @@ fn main() {
             for codec in [
                 CodecSpec::Dense,
                 CodecSpec::QuantI8,
+                CodecSpec::QuantI8Group { block: 64 },
                 CodecSpec::TopK { frac: 0.1 },
                 CodecSpec::TopKPacked { frac: 0.1 },
             ] {
                 let enc = encode_update(codec, &global, &local).unwrap();
                 let ratio = dense_bytes as f64 / enc.byte_len() as f64;
-                bench.bench_val(
-                    &format!("{name}/{tag}/encode/{} ({ratio:.1}x)", codec.name()),
-                    || encode_update(codec, &global, &local).unwrap(),
+                let enc_s = bench
+                    .bench_val(
+                        &format!("{name}/{tag}/encode/{} ({ratio:.1}x)", codec.name()),
+                        || encode_update(codec, &global, &local).unwrap(),
+                    )
+                    .median;
+                let dec_s = bench
+                    .bench_val(&format!("{name}/{tag}/decode/{}", codec.name()), || {
+                        decode_update(&global, &enc).unwrap()
+                    })
+                    .median;
+                let mut o = BTreeMap::new();
+                o.insert("preset".to_string(), Json::Str(name.to_string()));
+                o.insert("model".to_string(), Json::Str(tag.to_string()));
+                o.insert("codec".to_string(), Json::Str(codec.name()));
+                o.insert("dense_bytes".to_string(), num(dense_bytes as f64));
+                o.insert("encoded_bytes".to_string(), num(enc.byte_len() as f64));
+                o.insert("compression".to_string(), num(ratio));
+                o.insert("encode_s".to_string(), num(enc_s));
+                o.insert("decode_s".to_string(), num(dec_s));
+                rows.push(Json::Obj(o));
+            }
+
+            // Delta framing: what the per-client downlink pays per round
+            // (`local` stands in for "the global one training step past
+            // the client's base").
+            for codec in [CodecSpec::TopKPacked { frac: 0.1 }, CodecSpec::QuantI8] {
+                let enc = encode_delta(codec, &global, &local).unwrap();
+                let ratio = dense_bytes as f64 / enc.byte_len() as f64;
+                let enc_s = bench
+                    .bench_val(
+                        &format!("{name}/{tag}/delta_encode/{} ({ratio:.1}x)", codec.name()),
+                        || encode_delta(codec, &global, &local).unwrap(),
+                    )
+                    .median;
+                let dec_s = bench
+                    .bench_val(
+                        &format!("{name}/{tag}/delta_apply/{}", codec.name()),
+                        || apply_delta(&global, &enc).unwrap(),
+                    )
+                    .median;
+                let mut o = BTreeMap::new();
+                o.insert("preset".to_string(), Json::Str(name.to_string()));
+                o.insert("model".to_string(), Json::Str(tag.to_string()));
+                o.insert(
+                    "codec".to_string(),
+                    Json::Str(format!("delta:{}", codec.name())),
                 );
-                bench.bench_val(
-                    &format!("{name}/{tag}/decode/{}", codec.name()),
-                    || decode_update(&global, &enc).unwrap(),
-                );
+                o.insert("dense_bytes".to_string(), num(dense_bytes as f64));
+                o.insert("encoded_bytes".to_string(), num(enc.byte_len() as f64));
+                o.insert("compression".to_string(), num(ratio));
+                o.insert("encode_s".to_string(), num(enc_s));
+                o.insert("decode_s".to_string(), num(dec_s));
+                rows.push(Json::Obj(o));
             }
         }
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("suite".to_string(), Json::Str("wire".to_string()));
+    top.insert("full".to_string(), Json::Bool(full));
+    top.insert("codecs".to_string(), Json::Arr(rows));
+    let path =
+        std::env::var("FEDMLH_BENCH_WIRE_JSON").unwrap_or_else(|_| "BENCH_wire.json".into());
+    match std::fs::write(&path, Json::Obj(top).to_string_pretty(2)) {
+        Ok(()) => eprintln!("# wrote {path}"),
+        Err(e) => eprintln!("# could not write {path}: {e}"),
     }
     bench.finish();
 }

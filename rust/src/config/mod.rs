@@ -78,8 +78,14 @@ pub struct ExperimentConfig {
     /// the encoded bytes). `Dense` reproduces the seed accounting.
     pub codec: CodecSpec,
     /// Broadcast (server→client) codec (CLI: `--down-codec`). `Dense`
-    /// reproduces the seed's raw-`f32` downlink bit-for-bit.
+    /// reproduces the seed's raw-`f32` downlink bit-for-bit; the sparse
+    /// codecs select the per-client versioned delta downlink.
     pub down_codec: DownCodec,
+    /// Delta-downlink staleness cap (CLI: `--resync-every`): a sampled
+    /// client whose base replica is more than this many rounds old gets
+    /// a full dense resync instead of a delta (0 = resync on every
+    /// participation). Ignored by the non-delta downlink codecs.
+    pub resync_every: usize,
     /// Carry compression state across rounds on both links (CLI:
     /// `--error-feedback`): client-side error-feedback accumulators add
     /// the un-shipped uplink residual into the next round's update, and
@@ -107,6 +113,7 @@ impl ExperimentConfig {
             workers: 1,
             codec: CodecSpec::Dense,
             down_codec: DownCodec::Dense,
+            resync_every: 8,
             error_feedback: false,
         }
     }
@@ -185,11 +192,13 @@ impl ExperimentConfig {
         if self.workers == 0 {
             bail!("workers must be positive (1 = sequential)");
         }
-        if let CodecSpec::TopK { frac } | CodecSpec::TopKPacked { frac } = self.codec {
-            if !(frac > 0.0 && frac <= 1.0) {
-                bail!("topk codec fraction must be in (0, 1], got {frac}");
-            }
-        }
+        // Codec parameter bounds live in one place (CodecSpec::validate),
+        // shared by CLI parsing and both links here.
+        self.codec.validate()?;
+        self.down_codec
+            .wire_spec()
+            .validate()
+            .map_err(|e| anyhow::anyhow!("downlink codec: {e}"))?;
         Ok(())
     }
 }
@@ -244,6 +253,7 @@ mod tests {
         assert_eq!(cfg.codec, CodecSpec::Dense);
         // Transport defaults are the stateless seed pipeline.
         assert_eq!(cfg.down_codec, DownCodec::Dense);
+        assert_eq!(cfg.resync_every, 8);
         assert!(!cfg.error_feedback);
         cfg.down_codec = DownCodec::QuantI8;
         cfg.error_feedback = true;
@@ -259,6 +269,23 @@ mod tests {
         cfg.validate().unwrap();
         cfg.codec = CodecSpec::TopKPacked { frac: 1.5 };
         assert!(cfg.validate().is_err());
+        cfg.codec = CodecSpec::QuantI8Group { block: 64 };
+        cfg.validate().unwrap();
+        cfg.codec = CodecSpec::QuantI8Group { block: 0 };
+        assert!(cfg.validate().is_err());
+        cfg.codec = CodecSpec::QuantI8Group { block: 1 << 30 };
+        assert!(cfg.validate().is_err(), "q8g block above the wire cap must fail early");
+        // Downlink codec parameters are validated too.
+        cfg.codec = CodecSpec::Dense;
+        cfg.down_codec = DownCodec::TopK { frac: 0.1 };
+        cfg.validate().unwrap();
+        cfg.down_codec = DownCodec::TopK { frac: 0.0 };
+        assert!(cfg.validate().is_err());
+        cfg.down_codec = DownCodec::QuantI8Group { block: 0 };
+        assert!(cfg.validate().is_err());
+        cfg.down_codec = DownCodec::QuantI8Group { block: 32 };
+        cfg.resync_every = 0; // "resync every participation" is valid
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -2,13 +2,18 @@
 //! `(selected client, sub-model)` work items across a worker pool.
 //!
 //! Each work item is keyed by `(round, client, sub-model)`: clone the
-//! broadcast sub-model, run E local epochs with the item's
-//! [`derive_seed`]-derived batch stream, and encode the update through
-//! the run's shared [`super::transport::UplinkCompressor`]. Items never
-//! share mutable state — a stateful (error-feedback) compressor keeps
-//! one slot per `(client, sub-model)` and a round touches each slot
-//! from exactly one item — so executing them on N threads instead of
-//! one changes *nothing* about the numbers:
+//! client's decoded broadcast base from the round's
+//! [`RoundBroadcast`](super::transport::RoundBroadcast) (per-client
+//! under the delta downlink, shared otherwise), run E local epochs with
+//! the item's [`derive_seed`]-derived batch stream, and encode the
+//! update through the run's shared
+//! [`super::transport::UplinkCompressor`] against that same base.
+//! Items never share mutable state — a stateful (error-feedback)
+//! compressor keeps one slot per `(client, sub-model)`, a round touches
+//! each slot from exactly one item, and the broadcast (including all
+//! per-client downlink state) is produced on the coordinator thread
+//! before the fan-out — so executing them on N threads instead of one
+//! changes *nothing* about the numbers:
 //!
 //! - the per-item RNG seed depends only on `(round, client, sub-model)`
 //!   — the seed scheme the sequential loop always used;
@@ -37,13 +42,12 @@ use anyhow::Result;
 use crate::algo::LabelScheme;
 use crate::config::ExperimentConfig;
 use crate::data::dataset::Dataset;
-use crate::model::params::ModelParams;
 use crate::partition::Partition;
 use crate::util::rng::derive_seed;
 
 use super::backend::{TrainBackend, TrainStats};
 use super::batcher::ClientBatcher;
-use super::transport::UplinkCompressor;
+use super::transport::{RoundBroadcast, UplinkCompressor};
 use super::wire::EncodedUpdate;
 
 /// What one `(client, sub-model)` work item produces.
@@ -80,8 +84,10 @@ impl RoundEngine {
 
     /// Train every `(selected client, sub-model)` pair of one round.
     ///
-    /// `globals` is the *decoded broadcast* — the model state the
-    /// clients actually received this round — and `uplink` is the run's
+    /// `bcast` is the round's *decoded broadcast* — each client trains
+    /// from (and encodes its update against) its own base,
+    /// `bcast.global(slot, j)`, which is client-specific under the
+    /// delta downlink and shared otherwise. `uplink` is the run's
     /// shared (possibly stateful) update compressor.
     ///
     /// Returns updates indexed `[slot][sub-model]` where `slot` follows
@@ -95,11 +101,11 @@ impl RoundEngine {
         uplink: &dyn UplinkCompressor,
         train: &Dataset,
         partition: &Partition,
-        globals: &[ModelParams],
+        bcast: &RoundBroadcast,
         round: usize,
         selected: &[usize],
     ) -> Result<Vec<Vec<ClientUpdate>>> {
-        let n_models = globals.len();
+        let n_models = bcast.n_models();
         let n_items = selected.len() * n_models;
 
         // One work item; `be` is threaded through explicitly so the
@@ -107,7 +113,8 @@ impl RoundEngine {
         let run_item = |be: &dyn TrainBackend, slot: usize, j: usize| -> Result<ClientUpdate> {
             let client = selected[slot];
             let shard = &partition.clients[client];
-            let mut local = globals[j].clone();
+            let global = bcast.global(slot, j);
+            let mut local = global.clone();
             let mut batcher = ClientBatcher::new(
                 train,
                 shard,
@@ -120,7 +127,7 @@ impl RoundEngine {
             );
             let stats = be.local_train(&mut local, &mut batcher, cfg.local_epochs, cfg.lr)?;
             let t_enc = std::time::Instant::now();
-            let encoded = uplink.compress(client, j, &globals[j], &local)?;
+            let encoded = uplink.compress(client, j, global, &local)?;
             Ok(ClientUpdate {
                 stats,
                 encode_seconds: t_enc.elapsed().as_secs_f64(),
@@ -187,8 +194,11 @@ mod tests {
     use crate::config::Algo;
     use crate::data::synth::generate_preset;
     use crate::federated::backend::RustBackend;
-    use crate::federated::transport::{FeedbackUplink, StatelessUplink};
+    use crate::federated::transport::{
+        DownCodec, DownlinkCompressor, FeedbackUplink, StatelessDownlink, StatelessUplink,
+    };
     use crate::federated::wire::CodecSpec;
+    use crate::model::params::ModelParams;
     use crate::partition::noniid::{partition as noniid, NonIidOptions};
 
     fn setup() -> (ExperimentConfig, crate::data::synth::SynthData, Partition) {
@@ -216,6 +226,11 @@ mod tests {
             })
             .collect();
         let selected = vec![0usize, 2, 3];
+        // A dense shared broadcast reproduces the historical "clients
+        // clone the global" behavior the engine contract is pinned on.
+        let bcast = StatelessDownlink::new(DownCodec::Dense)
+            .broadcast(0, &selected, &globals)
+            .unwrap();
         RoundEngine::new(workers)
             .run_round(
                 &cfg,
@@ -224,7 +239,7 @@ mod tests {
                 uplink,
                 &data.train,
                 &part,
-                &globals,
+                &bcast,
                 0,
                 &selected,
             )

@@ -5,33 +5,42 @@
 //! drives the stateless wire codecs ([`wire`]) as pluggable backends:
 //!
 //! ```text
-//!   globals ──▶ DownlinkCompressor ──payload──▶ clients decode
-//!      ▲        (dense/q8 + server     │        and locally train
-//!      │         residual folding)     ▼        (engine fan-out)
-//!   aggregate ◀──decode◀──payload◀── UplinkCompressor
-//!                                    (dense/q8/topk/topkv + per-
-//!                                     (client, sub-model) error-
-//!                                     feedback accumulators)
+//!   globals ──▶ DownlinkCompressor ──payload(s)──▶ clients decode
+//!      ▲        (dense/q8/q8g shared     │         and locally train
+//!      │         broadcast + residual    ▼         (engine fan-out)
+//!      │         folding, or per-client
+//!      │         versioned topk deltas)
+//!   aggregate ◀──decode◀──payload◀──── UplinkCompressor
+//!                                      (dense/q8/q8g/topk/topkv +
+//!                                       per-(client, sub-model) error-
+//!                                       feedback accumulators)
 //! ```
 //!
-//! Per round: sample S of K clients ([`sampler`]), compress and
-//! broadcast each global sub-model down ([`transport::Transport::broadcast`]),
-//! fan local training out through the [`engine`] worker pool (through a
-//! [`backend`] that is either the PJRT runtime executing AOT artifacts
-//! or the pure-rust reference trainer), encode each update through the
-//! shared [`transport::UplinkCompressor`], decode and aggregate per
-//! sub-model ([`aggregate`]), charge both links' *encoded* bytes to the
-//! [`comm::CommMeter`] (dense-equivalent tracked alongside), evaluate,
-//! early-stop. With `dense` on both links and `--error-feedback off`
-//! this is bit-identical to the historical stateless pipeline; FedAvg
-//! is the degenerate case with one sub-model trained on raw class
-//! labels.
+//! Per round: sample S of K clients ([`sampler`]), compress the globals
+//! down ([`transport::Transport::broadcast`]) — one shared payload per
+//! sub-model for the full-state codecs, or one payload per `(client,
+//! sub-model)` under the delta downlink
+//! ([`transport::DeltaDownlink`]: a versioned top-k delta against the
+//! replica that client last decoded, with a full dense resync once the
+//! base is stale past `--resync-every`) — fan local training out
+//! through the [`engine`] worker pool (through a [`backend`] that is
+//! either the PJRT runtime executing AOT artifacts or the pure-rust
+//! reference trainer), encode each update through the shared
+//! [`transport::UplinkCompressor`], decode each update against the base
+//! its client trained from and aggregate per sub-model
+//! ([`aggregate`]), charge both links' *encoded* bytes per client to
+//! the [`comm::CommMeter`] (dense-equivalent tracked alongside),
+//! evaluate, early-stop. With `dense` on both links and
+//! `--error-feedback off` this is bit-identical to the historical
+//! stateless pipeline; FedAvg is the degenerate case with one sub-model
+//! trained on raw class labels.
 //!
 //! Compression *state* — the error-feedback residuals on the client
-//! side, the broadcast quantization residual on the server side — lives
-//! across rounds inside the [`transport::Transport`] owned by one run,
-//! which is what lets aggressive `topk`/`q8` settings keep the signal
-//! they would otherwise discard every round.
+//! side, the broadcast quantization residual and the per-client base
+//! replicas on the server side — lives across rounds inside the
+//! [`transport::Transport`] owned by one run, which is what lets
+//! aggressive `topk`/`q8` settings keep the signal they would otherwise
+//! discard every round, and what lets the downlink ship deltas at all.
 
 pub mod aggregate;
 pub mod backend;
@@ -49,7 +58,8 @@ pub use backend::{RustBackend, TrainBackend};
 pub use engine::RoundEngine;
 pub use server::{run, RunOutput};
 pub use transport::{
-    BroadcastPayload, DownCodec, DownlinkCompressor, FeedbackUplink, FoldingDownlink,
-    StatelessDownlink, StatelessUplink, Transport, UplinkCompressor,
+    DeltaDownlink, DownCodec, DownlinkCompressor, DownlinkPayload, FeedbackUplink,
+    FoldingDownlink, PayloadKind, RoundBroadcast, StatelessDownlink, StatelessUplink, Transport,
+    UplinkCompressor,
 };
 pub use wire::{CodecSpec, EncodedUpdate};

@@ -4,8 +4,20 @@
 use crate::util::rng::{derive_seed, Rng};
 
 /// Seeded sampler: round `t` always draws the same subset for the same
-//  run seed, so paired FedMLH/FedAvg comparisons see identical client
+/// run seed, so paired FedMLH/FedAvg comparisons see identical client
 /// schedules (removes one source of comparison noise).
+///
+/// ## Interaction with the delta downlink
+///
+/// Partial participation is what makes per-client downlink bases
+/// diverge: a client sampled out for `k` rounds still holds the base it
+/// decoded `k` rounds ago, so on its next draw the
+/// [`DeltaDownlink`](super::transport::DeltaDownlink) either ships a
+/// delta against that stale base (`k ≤ --resync-every`) or falls back
+/// to a full dense resync (`k` past the cap). Uniform sampling without
+/// replacement bounds the *expected* staleness at `K / S` rounds, but
+/// an unlucky client's gap is unbounded — which is why the resync cap
+/// exists at all.
 #[derive(Clone, Debug)]
 pub struct ClientSampler {
     clients: usize,

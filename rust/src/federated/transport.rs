@@ -11,7 +11,20 @@
 //! are *objects* that carry state round to round, and the round loop
 //! drives them through a [`Transport`] facade.
 //!
-//! ## The three pieces
+//! ## Ownership model: per-client, not per-broadcast
+//!
+//! Since the delta downlink landed, the unit of downlink state is the
+//! `(client, sub-model)` pair, not the round. The server no longer
+//! thinks in terms of "one payload for everyone": every broadcast is
+//! addressed to a specific client, against the *base* that client is
+//! known to hold, and the trait seam reflects that —
+//! [`DownlinkCompressor::broadcast`] receives the round's selected
+//! clients and returns a [`RoundBroadcast`] that can be shared (dense /
+//! q8 / q8g: every client decodes the same bytes) or per-client
+//! ([`DeltaDownlink`]: each client gets a delta against its own
+//! replica).
+//!
+//! ## The pieces
 //!
 //! - [`UplinkCompressor`] — client→server. The error-feedback
 //!   implementation ([`FeedbackUplink`]) keeps one residual accumulator
@@ -22,18 +35,22 @@
 //!   coordinates it dropped (their accumulated delta doubles until
 //!   selected), and q8 cancels its quantization bias over time.
 //!   [`StatelessUplink`] reproduces the PR 1 behavior bit-for-bit.
-//! - [`DownlinkCompressor`] — server→client. Produces a codec-tagged
-//!   [`BroadcastPayload`] (dense or q8, reusing the [`super::wire`]
-//!   codecs as backends) and reports the *decoded* model — the state
-//!   every client actually trains from, so a lossy broadcast affects
-//!   training exactly as it would in deployment. [`FoldingDownlink`]
-//!   folds the broadcast's own quantization error into the next
-//!   round's broadcast (server-side residual feedback), so the mean of
-//!   the broadcasts converges to the true aggregate.
+//! - [`DownlinkCompressor`] — server→client. [`StatelessDownlink`]
+//!   encodes each sub-model once per round (dense/q8/q8g) and every
+//!   selected client decodes the same payload; [`FoldingDownlink`] adds
+//!   server-side residual feedback (the broadcast's quantization error
+//!   folds into the next round); [`DeltaDownlink`] keeps one *replica*
+//!   per `(client, sub-model)` — the model that client last decoded —
+//!   and ships a version-tagged top-k delta against it, falling back to
+//!   a full dense resync when the client's base is stale past
+//!   `--resync-every` (or was never initialized). Partial participation
+//!   ([`super::sampler::ClientSampler`]) is exactly what makes the
+//!   bases diverge.
 //! - [`Transport`] — the facade the round loop owns: `broadcast()`
-//!   compresses every sub-model's global down, `uplink()` hands the
+//!   produces the round's per-client downlink, `uplink()` hands the
 //!   engine the shared (Sync) uplink compressor, `decode()` brings an
-//!   encoded update back for aggregation.
+//!   encoded update back for aggregation against the base *that client*
+//!   trained from.
 //!
 //! ## Invariants
 //!
@@ -41,11 +58,17 @@
 //!   to the stateless PR 1 pipeline (`tests/parallel_determinism.rs`);
 //!   dense is lossless, so even feedback *on* cannot change it — both
 //!   stateful impls short-circuit to the stateless path for `dense`.
+//!   Non-delta payloads also carry no version header, so the byte
+//!   accounting is unchanged too.
 //! - Per-slot state makes the parallel engine safe: one round touches
-//!   each `(client, sub-model)` slot from exactly one work item, so
+//!   each `(client, sub-model)` slot from exactly one work item, and
+//!   the downlink runs on the coordinator thread before the fan-out, so
 //!   worker count and scheduling cannot reorder state updates.
 //! - Every pre-existing wire tag (`dense`/`q8`/`topk`/`topkv`) still
 //!   decodes unchanged — the codecs are backends, not replaced.
+//! - A full resync is always dense: after it, the client's replica is
+//!   bitwise equal to the server's broadcast base
+//!   (`tests/downlink_delta.rs`).
 
 use std::sync::Mutex;
 
@@ -54,88 +77,235 @@ use anyhow::{bail, Result};
 use crate::config::ExperimentConfig;
 use crate::model::params::ModelParams;
 
-use super::wire::{decode_update, encode_update, CodecSpec, EncodedUpdate};
+use super::wire::{
+    apply_delta, decode_update, encode_delta, encode_update, CodecSpec, EncodedUpdate,
+};
 
 /// Which codec compresses the server→client broadcast (CLI:
-/// `--down-codec`). Top-k makes no sense here — the broadcast is a
-/// full model state, not a sparse delta against something the client
-/// already holds — so the downlink menu is dense / q8.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `--down-codec`). `dense`/`q8`/`q8g` encode the full model state
+/// every round; `topk`/`topkv` select the **delta downlink** — a
+/// per-client, versioned delta against the model that client last
+/// decoded ([`DeltaDownlink`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum DownCodec {
     /// Raw `f32` broadcast — the seed behavior, lossless.
     Dense,
     /// Per-tensor symmetric int8 (~4× smaller), decoded client-side.
     QuantI8,
+    /// Group-wise int8: one scale per `block` values (`q8g:<block>`).
+    QuantI8Group { block: usize },
+    /// Per-client top-k delta vs the client's last decoded base.
+    TopK { frac: f32 },
+    /// Same, with the delta+varint packed index stream.
+    TopKPacked { frac: f32 },
 }
 
 impl DownCodec {
-    /// Parse a CLI name (`name()` output always re-parses).
-    pub fn parse(name: &str) -> Result<DownCodec> {
-        match name {
-            "dense" => Ok(DownCodec::Dense),
-            "q8" | "quant" => Ok(DownCodec::QuantI8),
-            other => bail!("unknown downlink codec '{other}' (expected dense|q8)"),
-        }
+    /// Parse a CLI name (`name()` output always re-parses). Shares the
+    /// grammar of [`CodecSpec::parse`]: `topk`/`topkv` take their
+    /// fraction embedded (`topk:0.1`) or from `topk_frac`.
+    pub fn parse(name: &str, topk_frac: f32) -> Result<DownCodec> {
+        Ok(match CodecSpec::parse(name, topk_frac)? {
+            CodecSpec::Dense => DownCodec::Dense,
+            CodecSpec::QuantI8 => DownCodec::QuantI8,
+            CodecSpec::QuantI8Group { block } => DownCodec::QuantI8Group { block },
+            CodecSpec::TopK { frac } => DownCodec::TopK { frac },
+            CodecSpec::TopKPacked { frac } => DownCodec::TopKPacked { frac },
+        })
     }
 
-    pub fn name(&self) -> &'static str {
+    /// Canonical spec string (re-parses to an equal codec).
+    pub fn name(&self) -> String {
         match self {
-            DownCodec::Dense => "dense",
-            DownCodec::QuantI8 => "q8",
+            DownCodec::Dense => "dense".to_string(),
+            DownCodec::QuantI8 => "q8".to_string(),
+            DownCodec::QuantI8Group { block } => format!("q8g:{block}"),
+            DownCodec::TopK { frac } => format!("topk:{frac}"),
+            DownCodec::TopKPacked { frac } => format!("topkv:{frac}"),
         }
     }
 
-    /// The wire codec that serializes this broadcast.
-    fn wire_spec(&self) -> CodecSpec {
+    /// `true` for the codecs that require per-client base state.
+    pub fn is_delta(&self) -> bool {
+        matches!(self, DownCodec::TopK { .. } | DownCodec::TopKPacked { .. })
+    }
+
+    /// The wire codec that serializes this broadcast's payloads. The
+    /// sparse downlink always ships the packed (delta+varint) index
+    /// stream: sorted top-k indices have small gaps, and unlike the
+    /// uplink there is no legacy raw-index delta receiver to stay
+    /// compatible with — `topk` and `topkv` differ only in name here.
+    pub fn wire_spec(&self) -> CodecSpec {
         match self {
             DownCodec::Dense => CodecSpec::Dense,
             DownCodec::QuantI8 => CodecSpec::QuantI8,
+            DownCodec::QuantI8Group { block } => CodecSpec::QuantI8Group { block: *block },
+            DownCodec::TopK { frac } | DownCodec::TopKPacked { frac } => {
+                CodecSpec::TopKPacked { frac: *frac }
+            }
         }
     }
 }
 
-/// One sub-model's compressed broadcast: the codec tag plus the
-/// [`super::wire`]-encoded payload. The tag is shared setup state (like
-/// the model shape), so old dense receivers and new q8 receivers can
-/// coexist as long as both ends agree on it.
+/// Whether a downlink payload is self-contained or applies onto a base.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// Complete model state. For the delta downlink this is always
+    /// dense-encoded, so the receiving client lands *bitwise* on the
+    /// server's broadcast base (initial sync and staleness resync).
+    Full,
+    /// Applies onto the client's base replica at `base_version`.
+    Delta { base_version: u64 },
+}
+
+/// One `(client, sub-model)` downlink payload: the codec tag (shared
+/// setup state, like the model shape), a version tag, and the
+/// [`super::wire`]-encoded body.
+///
+/// Wire layout: for the non-delta codecs this is exactly the encoded
+/// body — no header, byte-identical to the PR 3 broadcast. For the
+/// delta codecs a header precedes the body: `u8` kind (0 full,
+/// 1 delta), `u64` version, and for deltas the `u64` base version the
+/// payload applies onto.
 #[derive(Clone, Debug, PartialEq)]
-pub struct BroadcastPayload {
+pub struct DownlinkPayload {
     codec: DownCodec,
+    /// Server broadcast version this payload brings the client to
+    /// (`round + 1` under the delta downlink; 0 = unversioned).
+    version: u64,
+    kind: PayloadKind,
     enc: EncodedUpdate,
 }
 
-impl BroadcastPayload {
+impl DownlinkPayload {
     pub fn codec(&self) -> DownCodec {
         self.codec
     }
 
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn kind(&self) -> PayloadKind {
+        self.kind
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.kind == PayloadKind::Full
+    }
+
+    /// The version of the base this payload applies onto (`None` for
+    /// self-contained full payloads).
+    pub fn base_version(&self) -> Option<u64> {
+        match self.kind {
+            PayloadKind::Full => None,
+            PayloadKind::Delta { base_version } => Some(base_version),
+        }
+    }
+
+    fn header_len(&self) -> usize {
+        if !self.codec.is_delta() {
+            return 0;
+        }
+        match self.kind {
+            PayloadKind::Full => 1 + 8,
+            PayloadKind::Delta { .. } => 1 + 8 + 8,
+        }
+    }
+
     /// Exact wire size in bytes — what [`super::comm::CommMeter`] is
-    /// charged per client download.
+    /// charged for this client's download.
     pub fn byte_len(&self) -> usize {
-        self.enc.byte_len()
+        self.header_len() + self.enc.byte_len()
     }
 
-    /// Serialize to the little-endian wire layout (see [`super::wire`]).
+    /// Serialize to the wire layout (struct docs).
     pub fn to_bytes(&self) -> Vec<u8> {
-        self.enc.to_bytes()
+        let mut out = Vec::with_capacity(self.byte_len());
+        if self.codec.is_delta() {
+            match self.kind {
+                PayloadKind::Full => out.push(0u8),
+                PayloadKind::Delta { .. } => out.push(1u8),
+            }
+            out.extend_from_slice(&self.version.to_le_bytes());
+            if let PayloadKind::Delta { base_version } = self.kind {
+                out.extend_from_slice(&base_version.to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&self.enc.to_bytes());
+        out
     }
 
-    /// Parse a broadcast back; shape metadata comes from the shared
-    /// model setup, exactly like update payloads.
+    /// Parse a payload back; shape metadata comes from the shared model
+    /// setup, exactly like update payloads.
     pub fn from_bytes(
         codec: DownCodec,
         n_tensors: usize,
         n_values: usize,
         bytes: &[u8],
-    ) -> Result<BroadcastPayload> {
-        let enc = EncodedUpdate::from_bytes(codec.wire_spec(), n_tensors, n_values, bytes)?;
-        Ok(BroadcastPayload { codec, enc })
+    ) -> Result<DownlinkPayload> {
+        if !codec.is_delta() {
+            let enc = EncodedUpdate::from_bytes(codec.wire_spec(), n_tensors, n_values, bytes)?;
+            return Ok(DownlinkPayload {
+                codec,
+                version: 0,
+                kind: PayloadKind::Full,
+                enc,
+            });
+        }
+        if bytes.len() < 9 {
+            bail!("downlink payload is {} bytes, expected at least 9", bytes.len());
+        }
+        let version = u64::from_le_bytes(bytes[1..9].try_into().expect("8-byte version"));
+        let (kind, body) = match bytes[0] {
+            0 => (PayloadKind::Full, &bytes[9..]),
+            1 => {
+                if bytes.len() < 17 {
+                    bail!("delta payload is {} bytes, expected at least 17", bytes.len());
+                }
+                let base_version =
+                    u64::from_le_bytes(bytes[9..17].try_into().expect("8-byte base version"));
+                (PayloadKind::Delta { base_version }, &bytes[17..])
+            }
+            other => bail!("unknown downlink payload kind {other}"),
+        };
+        // Full payloads under the delta downlink are dense resyncs.
+        let spec = match kind {
+            PayloadKind::Full => CodecSpec::Dense,
+            PayloadKind::Delta { .. } => codec.wire_spec(),
+        };
+        let enc = EncodedUpdate::from_bytes(spec, n_tensors, n_values, body)?;
+        Ok(DownlinkPayload {
+            codec,
+            version,
+            kind,
+            enc,
+        })
     }
 
-    /// Reconstruct the model a client sees. `shape` only supplies the
-    /// tensor layout (dense and q8 decoding never read its values).
-    pub fn decode(&self, shape: &ModelParams) -> Result<ModelParams> {
+    /// Decode a [`PayloadKind::Full`] payload into the complete model
+    /// state. `shape` only supplies the tensor layout.
+    pub fn decode_full(&self, shape: &ModelParams) -> Result<ModelParams> {
+        if let PayloadKind::Delta { base_version } = self.kind {
+            bail!("delta payload (base version {base_version}) needs a base model to apply onto");
+        }
         decode_update(shape, &self.enc)
+    }
+
+    /// Reconstruct the model a client sees: full payloads decode
+    /// directly, deltas apply onto the client's current `base`.
+    ///
+    /// This trusts the caller to supply the state tagged by
+    /// [`Self::base_version`] — the in-process [`DeltaDownlink`] holds
+    /// that state itself, so it is correct by construction; a real
+    /// remote client must compare `base_version()` against its own
+    /// version first and request a resync on mismatch (applying a delta
+    /// onto the wrong base silently produces a wrong model).
+    pub fn apply(&self, base: &ModelParams) -> Result<ModelParams> {
+        match self.kind {
+            PayloadKind::Full => self.decode_full(base),
+            PayloadKind::Delta { .. } => apply_delta(base, &self.enc),
+        }
     }
 }
 
@@ -191,7 +361,8 @@ pub trait UplinkCompressor: Send + Sync {
     fn stateful(&self) -> bool;
 
     /// Encode `client`'s locally trained sub-model `j` against the
-    /// broadcast `global` it started from.
+    /// broadcast `global` it started from (under the delta downlink
+    /// that base is client-specific).
     fn compress(
         &self,
         client: usize,
@@ -305,22 +476,124 @@ impl UplinkCompressor for FeedbackUplink {
 
 // ----------------------------------------------------------- downlink
 
-/// Server→client compressor for the per-round global broadcast.
-/// `compress` returns both the tagged payload (what crosses the wire,
-/// what the meter charges) and its decoded form (what every client
-/// trains from this round).
+/// Either one value per sub-model (shared by every selected client) or
+/// one per `(slot, sub-model)` pair.
+#[derive(Debug)]
+enum PerSlot<T> {
+    Shared(Vec<T>),
+    PerClient(Vec<Vec<T>>),
+}
+
+impl<T> PerSlot<T> {
+    fn get(&self, slot: usize, j: usize) -> &T {
+        match self {
+            PerSlot::Shared(v) => &v[j],
+            PerSlot::PerClient(v) => &v[slot][j],
+        }
+    }
+}
+
+/// What one round's downlink produced: the payloads that crossed the
+/// wire to each selected client (for per-client metering) and the
+/// decoded sub-models each client trains from. `slot` indexes the
+/// round's `selected` order.
+#[derive(Debug)]
+pub struct RoundBroadcast {
+    n_models: usize,
+    payloads: PerSlot<DownlinkPayload>,
+    globals: PerSlot<ModelParams>,
+}
+
+impl RoundBroadcast {
+    /// Every selected client receives (and decodes) the same broadcast.
+    pub fn shared(payloads: Vec<DownlinkPayload>, globals: Vec<ModelParams>) -> RoundBroadcast {
+        debug_assert_eq!(payloads.len(), globals.len());
+        RoundBroadcast {
+            n_models: globals.len(),
+            payloads: PerSlot::Shared(payloads),
+            globals: PerSlot::Shared(globals),
+        }
+    }
+
+    /// Client-specific payloads and bases, indexed `[slot][sub-model]`.
+    pub fn per_client(
+        payloads: Vec<Vec<DownlinkPayload>>,
+        globals: Vec<Vec<ModelParams>>,
+    ) -> RoundBroadcast {
+        debug_assert_eq!(payloads.len(), globals.len());
+        let n_models = globals.first().map(|g| g.len()).unwrap_or(0);
+        RoundBroadcast {
+            n_models,
+            payloads: PerSlot::PerClient(payloads),
+            globals: PerSlot::PerClient(globals),
+        }
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.n_models
+    }
+
+    /// `true` when clients received client-specific payloads.
+    pub fn is_per_client(&self) -> bool {
+        matches!(self.payloads, PerSlot::PerClient(_))
+    }
+
+    /// The payload shipped to the client at `slot` for sub-model `j`.
+    pub fn payload(&self, slot: usize, j: usize) -> &DownlinkPayload {
+        self.payloads.get(slot, j)
+    }
+
+    /// The decoded sub-model `j` the client at `slot` trains from (and
+    /// the reference its uplink update is encoded/decoded against).
+    pub fn global(&self, slot: usize, j: usize) -> &ModelParams {
+        self.globals.get(slot, j)
+    }
+}
+
+/// Server→client compressor for the per-round broadcast, reshaped
+/// around `(client, sub-model)` ownership: one call produces the whole
+/// round's downlink for the selected clients, so implementations decide
+/// whether payloads are shared or client-specific.
 pub trait DownlinkCompressor: Send {
     fn codec(&self) -> DownCodec;
 
-    /// Whether broadcast residual is folded across rounds (reporting).
+    /// Whether broadcast state is carried across rounds (reporting).
     fn stateful(&self) -> bool;
 
-    /// Compress sub-model `j`'s current aggregate for broadcast.
-    fn compress(&mut self, j: usize, global: &ModelParams)
-        -> Result<(BroadcastPayload, ModelParams)>;
+    /// Produce round `round`'s broadcast of `globals` for the
+    /// `selected` clients.
+    fn broadcast(
+        &mut self,
+        round: usize,
+        selected: &[usize],
+        globals: &[ModelParams],
+    ) -> Result<RoundBroadcast>;
 }
 
-/// Broadcast each round independently (no residual folding).
+fn broadcast_model(
+    codec: DownCodec,
+    model: &ModelParams,
+) -> Result<(DownlinkPayload, ModelParams)> {
+    // Dense and the quantizers encode the model's own values (the
+    // `global` argument of `encode_update` is only a shape witness).
+    let enc = encode_update(codec.wire_spec(), model, model)?;
+    let payload = DownlinkPayload {
+        codec,
+        version: 0,
+        kind: PayloadKind::Full,
+        enc,
+    };
+    // A dense decode is a bitwise copy — skip the second full pass on
+    // the default path.
+    let decoded = match codec {
+        DownCodec::Dense => model.clone(),
+        _ => payload.decode_full(model)?,
+    };
+    Ok((payload, decoded))
+}
+
+/// Broadcast each round independently (no residual folding): encode
+/// each sub-model once, every selected client decodes the same payload.
 #[derive(Clone, Copy, Debug)]
 pub struct StatelessDownlink {
     codec: DownCodec,
@@ -332,23 +605,6 @@ impl StatelessDownlink {
     }
 }
 
-fn broadcast_model(
-    codec: DownCodec,
-    model: &ModelParams,
-) -> Result<(BroadcastPayload, ModelParams)> {
-    // Dense and q8 both encode the model's own values (the `global`
-    // argument of `encode_update` is only a shape witness for them).
-    let enc = encode_update(codec.wire_spec(), model, model)?;
-    let payload = BroadcastPayload { codec, enc };
-    // A dense decode is a bitwise copy — skip the second full pass on
-    // the default path.
-    let decoded = match codec {
-        DownCodec::Dense => model.clone(),
-        DownCodec::QuantI8 => payload.decode(model)?,
-    };
-    Ok((payload, decoded))
-}
-
 impl DownlinkCompressor for StatelessDownlink {
     fn codec(&self) -> DownCodec {
         self.codec
@@ -358,12 +614,26 @@ impl DownlinkCompressor for StatelessDownlink {
         false
     }
 
-    fn compress(
+    fn broadcast(
         &mut self,
-        _j: usize,
-        global: &ModelParams,
-    ) -> Result<(BroadcastPayload, ModelParams)> {
-        broadcast_model(self.codec, global)
+        _round: usize,
+        _selected: &[usize],
+        globals: &[ModelParams],
+    ) -> Result<RoundBroadcast> {
+        if self.codec.is_delta() {
+            bail!(
+                "downlink codec '{}' needs per-client base state — use DeltaDownlink",
+                self.codec.name()
+            );
+        }
+        let mut payloads = Vec::with_capacity(globals.len());
+        let mut decoded = Vec::with_capacity(globals.len());
+        for g in globals {
+            let (p, d) = broadcast_model(self.codec, g)?;
+            payloads.push(p);
+            decoded.push(d);
+        }
+        Ok(RoundBroadcast::shared(payloads, decoded))
     }
 }
 
@@ -384,22 +654,12 @@ impl FoldingDownlink {
             residuals: vec![Vec::new(); n_models],
         }
     }
-}
 
-impl DownlinkCompressor for FoldingDownlink {
-    fn codec(&self) -> DownCodec {
-        self.codec
-    }
-
-    fn stateful(&self) -> bool {
-        true
-    }
-
-    fn compress(
+    fn fold_one(
         &mut self,
         j: usize,
         global: &ModelParams,
-    ) -> Result<(BroadcastPayload, ModelParams)> {
+    ) -> Result<(DownlinkPayload, ModelParams)> {
         // Dense broadcasts are lossless → residual identically zero.
         if self.codec == DownCodec::Dense {
             return broadcast_model(self.codec, global);
@@ -412,24 +672,204 @@ impl DownlinkCompressor for FoldingDownlink {
         };
         let (enc, decoded) =
             fold_encode(self.codec.wire_spec(), global, global.flat_values(), slot)?;
-        let payload = BroadcastPayload {
+        let payload = DownlinkPayload {
             codec: self.codec,
+            version: 0,
+            kind: PayloadKind::Full,
             enc,
         };
         Ok((payload, decoded))
     }
 }
 
-// ------------------------------------------------------------- facade
+impl DownlinkCompressor for FoldingDownlink {
+    fn codec(&self) -> DownCodec {
+        self.codec
+    }
 
-/// What one round's downlink produced: the payloads that crossed the
-/// wire (for metering) and the decoded sub-models every selected
-/// client trains from.
-#[derive(Debug)]
-pub struct RoundBroadcast {
-    pub payloads: Vec<BroadcastPayload>,
-    pub client_globals: Vec<ModelParams>,
+    fn stateful(&self) -> bool {
+        true
+    }
+
+    fn broadcast(
+        &mut self,
+        _round: usize,
+        _selected: &[usize],
+        globals: &[ModelParams],
+    ) -> Result<RoundBroadcast> {
+        if self.codec.is_delta() {
+            bail!(
+                "downlink codec '{}' needs per-client base state — use DeltaDownlink",
+                self.codec.name()
+            );
+        }
+        let mut payloads = Vec::with_capacity(globals.len());
+        let mut decoded = Vec::with_capacity(globals.len());
+        for (j, g) in globals.iter().enumerate() {
+            let (p, d) = self.fold_one(j, g)?;
+            payloads.push(p);
+            decoded.push(d);
+        }
+        Ok(RoundBroadcast::shared(payloads, decoded))
+    }
 }
+
+/// One client's downlink base: the model it last decoded and the
+/// broadcast version it decoded at.
+#[derive(Clone, Debug)]
+struct Replica {
+    model: ModelParams,
+    version: u64,
+}
+
+/// The per-client versioned delta downlink. The server maintains a
+/// persistent replica of every `(client, sub-model)` — exactly the
+/// state the client holds on-device — and each broadcast ships the
+/// top-k delta between the current global and that replica, tagged with
+/// the `(base_version → version)` transition. Because the base is what
+/// the client *actually decoded* (not what the server wishes it had),
+/// every coordinate the top-k selection drops stays pending in the next
+/// round's |global − replica| delta: the scheme is error-feedback by
+/// construction, per client.
+///
+/// Clients with no replica yet, or whose base is more than
+/// `resync_every` versions stale (a run of unlucky
+/// [`super::sampler::ClientSampler`] draws), get a **full dense
+/// resync** instead: after it, replica == broadcast base, bitwise.
+pub struct DeltaDownlink {
+    codec: DownCodec,
+    spec: CodecSpec,
+    n_models: usize,
+    /// Staleness cap: deltas are allowed while
+    /// `version − replica.version <= resync_every` (0 = full resync on
+    /// every participation).
+    resync_every: u64,
+    /// `clients × n_models` replicas, flat-indexed
+    /// `client * n_models + j`. `None` = never synced.
+    replicas: Vec<Option<Replica>>,
+}
+
+impl DeltaDownlink {
+    pub fn new(
+        codec: DownCodec,
+        clients: usize,
+        n_models: usize,
+        resync_every: usize,
+    ) -> Result<DeltaDownlink> {
+        if !codec.is_delta() {
+            bail!(
+                "DeltaDownlink needs a sparse down codec (topk/topkv), got '{}'",
+                codec.name()
+            );
+        }
+        Ok(DeltaDownlink {
+            codec,
+            spec: codec.wire_spec(),
+            n_models,
+            resync_every: resync_every as u64,
+            replicas: (0..clients * n_models).map(|_| None).collect(),
+        })
+    }
+
+    /// The version a client's sub-model base is at (0 = never synced) —
+    /// test/diagnostic hook.
+    pub fn base_version(&self, client: usize, j: usize) -> u64 {
+        self.replicas[client * self.n_models + j]
+            .as_ref()
+            .map(|r| r.version)
+            .unwrap_or(0)
+    }
+
+    /// The server's replica of what a client currently holds.
+    pub fn replica(&self, client: usize, j: usize) -> Option<&ModelParams> {
+        self.replicas[client * self.n_models + j].as_ref().map(|r| &r.model)
+    }
+
+    fn ship(
+        &mut self,
+        version: u64,
+        client: usize,
+        j: usize,
+        global: &ModelParams,
+    ) -> Result<(DownlinkPayload, ModelParams)> {
+        let idx = client * self.n_models + j;
+        let Some(slot) = self.replicas.get_mut(idx) else {
+            bail!(
+                "downlink state has no slot for client {client}, sub-model {j} \
+                 ({} slots, {} sub-models)",
+                self.replicas.len(),
+                self.n_models
+            );
+        };
+        let (kind, enc, decoded) = match slot.as_ref() {
+            Some(r) if version.saturating_sub(r.version) <= self.resync_every => {
+                let enc = encode_delta(self.spec, &r.model, global)?;
+                let decoded = apply_delta(&r.model, &enc)?;
+                (PayloadKind::Delta { base_version: r.version }, enc, decoded)
+            }
+            _ => {
+                // Full dense resync: the client lands bitwise on the
+                // server's current broadcast base.
+                let enc = encode_update(CodecSpec::Dense, global, global)?;
+                (PayloadKind::Full, enc, global.clone())
+            }
+        };
+        *slot = Some(Replica {
+            model: decoded.clone(),
+            version,
+        });
+        let payload = DownlinkPayload {
+            codec: self.codec,
+            version,
+            kind,
+            enc,
+        };
+        Ok((payload, decoded))
+    }
+}
+
+impl DownlinkCompressor for DeltaDownlink {
+    fn codec(&self) -> DownCodec {
+        self.codec
+    }
+
+    fn stateful(&self) -> bool {
+        true
+    }
+
+    fn broadcast(
+        &mut self,
+        round: usize,
+        selected: &[usize],
+        globals: &[ModelParams],
+    ) -> Result<RoundBroadcast> {
+        if globals.len() != self.n_models {
+            bail!(
+                "delta downlink was built for {} sub-models, got {}",
+                self.n_models,
+                globals.len()
+            );
+        }
+        // Versions are 1-based so 0 can mean "never synced".
+        let version = round as u64 + 1;
+        let mut payloads = Vec::with_capacity(selected.len());
+        let mut decoded = Vec::with_capacity(selected.len());
+        for &client in selected {
+            let mut row_p = Vec::with_capacity(globals.len());
+            let mut row_g = Vec::with_capacity(globals.len());
+            for (j, g) in globals.iter().enumerate() {
+                let (p, d) = self.ship(version, client, j, g)?;
+                row_p.push(p);
+                row_g.push(d);
+            }
+            payloads.push(row_p);
+            decoded.push(row_g);
+        }
+        Ok(RoundBroadcast::per_client(payloads, decoded))
+    }
+}
+
+// ------------------------------------------------------------- facade
 
 /// The transport facade the round loop drives: owns both compressors
 /// and their cross-round state for the lifetime of one training run.
@@ -440,20 +880,29 @@ pub struct Transport {
 
 impl Transport {
     /// Wire the pipeline for a run: `cfg.codec`/`cfg.down_codec` select
-    /// the codecs, `cfg.error_feedback` selects the stateful (error-
-    /// feedback + residual-folding) implementations on both links.
-    pub fn new(cfg: &ExperimentConfig, n_models: usize) -> Transport {
+    /// the codecs; a sparse `down_codec` selects the per-client
+    /// [`DeltaDownlink`] (capped by `cfg.resync_every`), and
+    /// `cfg.error_feedback` selects the stateful (error-feedback +
+    /// residual-folding) implementations otherwise.
+    pub fn new(cfg: &ExperimentConfig, n_models: usize) -> Result<Transport> {
         let uplink: Box<dyn UplinkCompressor> = if cfg.error_feedback {
             Box::new(FeedbackUplink::new(cfg.codec, cfg.clients, n_models))
         } else {
             Box::new(StatelessUplink::new(cfg.codec))
         };
-        let downlink: Box<dyn DownlinkCompressor> = if cfg.error_feedback {
+        let downlink: Box<dyn DownlinkCompressor> = if cfg.down_codec.is_delta() {
+            Box::new(DeltaDownlink::new(
+                cfg.down_codec,
+                cfg.clients,
+                n_models,
+                cfg.resync_every,
+            )?)
+        } else if cfg.error_feedback {
             Box::new(FoldingDownlink::new(cfg.down_codec, n_models))
         } else {
             Box::new(StatelessDownlink::new(cfg.down_codec))
         };
-        Transport { uplink, downlink }
+        Ok(Transport { uplink, downlink })
     }
 
     /// Assemble from explicit parts (tests, custom pipelines).
@@ -469,25 +918,21 @@ impl Transport {
         self.uplink.as_ref()
     }
 
-    /// Compress every sub-model's current global for this round's
-    /// broadcast (downlink residual folding happens here).
-    pub fn broadcast(&mut self, globals: &[ModelParams]) -> Result<RoundBroadcast> {
-        let mut payloads = Vec::with_capacity(globals.len());
-        let mut client_globals = Vec::with_capacity(globals.len());
-        for (j, g) in globals.iter().enumerate() {
-            let (payload, decoded) = self.downlink.compress(j, g)?;
-            payloads.push(payload);
-            client_globals.push(decoded);
-        }
-        Ok(RoundBroadcast {
-            payloads,
-            client_globals,
-        })
+    /// Produce round `round`'s downlink for the `selected` clients
+    /// (per-client delta state and residual folding happen here, on the
+    /// coordinator thread, before the training fan-out).
+    pub fn broadcast(
+        &mut self,
+        round: usize,
+        selected: &[usize],
+        globals: &[ModelParams],
+    ) -> Result<RoundBroadcast> {
+        self.downlink.broadcast(round, selected, globals)
     }
 
     /// Decode one client update for aggregation. `reference` must be
-    /// the broadcast model the client encoded against
-    /// ([`RoundBroadcast::client_globals`]`[j]`).
+    /// the decoded broadcast *that client* encoded against
+    /// ([`RoundBroadcast::global`]`(slot, j)`).
     pub fn decode(&self, reference: &ModelParams, enc: &EncodedUpdate) -> Result<ModelParams> {
         decode_update(reference, enc)
     }
@@ -515,6 +960,18 @@ mod tests {
         (global, local)
     }
 
+    /// Step a model the way a round of training would (small drift).
+    fn drift(model: &ModelParams, seed: u64) -> ModelParams {
+        let mut out = model.clone();
+        let mut rng = Rng::new(seed);
+        for t in out.tensors.iter_mut() {
+            for v in t.data_mut() {
+                *v += (rng.next_f32() - 0.5) * 0.05;
+            }
+        }
+        out
+    }
+
     fn entry_indices(enc: &EncodedUpdate) -> Vec<u32> {
         match enc {
             EncodedUpdate::TopKDelta { entries } | EncodedUpdate::TopKPacked { entries } => {
@@ -526,11 +983,20 @@ mod tests {
 
     #[test]
     fn down_codec_names_roundtrip() {
-        for codec in [DownCodec::Dense, DownCodec::QuantI8] {
-            assert_eq!(DownCodec::parse(codec.name()).unwrap(), codec);
+        for codec in [
+            DownCodec::Dense,
+            DownCodec::QuantI8,
+            DownCodec::QuantI8Group { block: 32 },
+            DownCodec::TopK { frac: 0.1 },
+            DownCodec::TopKPacked { frac: 0.25 },
+        ] {
+            assert_eq!(DownCodec::parse(&codec.name(), 0.9).unwrap(), codec);
         }
-        assert_eq!(DownCodec::parse("quant").unwrap(), DownCodec::QuantI8);
-        assert!(DownCodec::parse("topk").is_err());
+        assert_eq!(DownCodec::parse("quant", 0.1).unwrap(), DownCodec::QuantI8);
+        assert!(DownCodec::parse("topk", 0.0).is_err());
+        assert!(DownCodec::parse("gzip", 0.1).is_err());
+        assert!(DownCodec::TopK { frac: 0.1 }.is_delta());
+        assert!(!DownCodec::QuantI8Group { block: 64 }.is_delta());
     }
 
     #[test]
@@ -539,6 +1005,7 @@ mod tests {
         for spec in [
             CodecSpec::Dense,
             CodecSpec::QuantI8,
+            CodecSpec::QuantI8Group { block: 16 },
             CodecSpec::TopK { frac: 0.2 },
             CodecSpec::TopKPacked { frac: 0.2 },
         ] {
@@ -643,15 +1110,24 @@ mod tests {
     #[test]
     fn dense_downlink_is_bitwise_lossless() {
         let (global, _) = random_pair(8);
+        let globals = vec![global.clone()];
         for stateful in [false, true] {
-            let (payload, decoded) = if stateful {
-                FoldingDownlink::new(DownCodec::Dense, 1).compress(0, &global).unwrap()
+            let bcast = if stateful {
+                FoldingDownlink::new(DownCodec::Dense, 1)
+                    .broadcast(0, &[0, 1], &globals)
+                    .unwrap()
             } else {
-                StatelessDownlink::new(DownCodec::Dense).compress(0, &global).unwrap()
+                StatelessDownlink::new(DownCodec::Dense)
+                    .broadcast(0, &[0, 1], &globals)
+                    .unwrap()
             };
-            assert_eq!(decoded, global, "dense broadcast must be exact");
-            assert_eq!(payload.byte_len(), global.byte_size());
-            assert_eq!(payload.codec(), DownCodec::Dense);
+            assert!(!bcast.is_per_client(), "dense broadcast is shared");
+            for slot in 0..2 {
+                assert_eq!(bcast.global(slot, 0), &global, "dense broadcast must be exact");
+                assert_eq!(bcast.payload(slot, 0).byte_len(), global.byte_size());
+                assert_eq!(bcast.payload(slot, 0).codec(), DownCodec::Dense);
+                assert!(bcast.payload(slot, 0).is_full());
+            }
         }
     }
 
@@ -659,10 +1135,12 @@ mod tests {
     fn q8_downlink_folding_cancels_quantization_bias() {
         let (global, _) = random_pair(9);
         let gf = global.flat_values();
+        let globals = vec![global.clone()];
         let mut folding = FoldingDownlink::new(DownCodec::QuantI8, 1);
 
-        let (_, first) = folding.compress(0, &global).unwrap();
+        let first = folding.broadcast(0, &[0], &globals).unwrap();
         let first_err: f64 = first
+            .global(0, 0)
             .flat_values()
             .iter()
             .zip(gf.iter())
@@ -677,9 +1155,9 @@ mod tests {
         let t = 8usize;
         let mut mean = vec![0.0f64; gf.len()];
         let mut folding = FoldingDownlink::new(DownCodec::QuantI8, 1);
-        for _ in 0..t {
-            let (_, decoded) = folding.compress(0, &global).unwrap();
-            for (m, v) in mean.iter_mut().zip(decoded.flat_values()) {
+        for round in 0..t {
+            let bcast = folding.broadcast(round, &[0], &globals).unwrap();
+            for (m, v) in mean.iter_mut().zip(bcast.global(0, 0).flat_values()) {
                 *m += v as f64 / t as f64;
             }
         }
@@ -695,34 +1173,189 @@ mod tests {
     }
 
     #[test]
-    fn broadcast_payload_bytes_roundtrip() {
+    fn q8g_downlink_broadcasts_within_block_bounds() {
         let (global, _) = random_pair(10);
-        for codec in [DownCodec::Dense, DownCodec::QuantI8] {
-            let (payload, _) = StatelessDownlink::new(codec).compress(0, &global).unwrap();
+        let bcast = StatelessDownlink::new(DownCodec::QuantI8Group { block: 8 })
+            .broadcast(0, &[0], &[global.clone()])
+            .unwrap();
+        let decoded = bcast.global(0, 0);
+        for (t_g, t_d) in global.tensors.iter().zip(decoded.tensors.iter()) {
+            for (chunk_g, chunk_d) in t_g.data().chunks(8).zip(t_d.data().chunks(8)) {
+                let scale = chunk_g.iter().fold(0.0f32, |m, &v| m.max(v.abs())) / 127.0;
+                for (&a, &b) in chunk_g.iter().zip(chunk_d.iter()) {
+                    assert!((a - b).abs() <= 0.5 * scale + 1e-7);
+                }
+            }
+        }
+        // Smaller than dense, larger than plain q8 (extra scales).
+        assert!(bcast.payload(0, 0).byte_len() < global.byte_size());
+    }
+
+    #[test]
+    fn stateless_downlink_rejects_delta_codecs() {
+        let (global, _) = random_pair(11);
+        let globals = vec![global];
+        let err = StatelessDownlink::new(DownCodec::TopK { frac: 0.1 })
+            .broadcast(0, &[0], &globals)
+            .unwrap_err();
+        assert!(err.to_string().contains("DeltaDownlink"), "{err}");
+        assert!(FoldingDownlink::new(DownCodec::TopK { frac: 0.1 }, 1)
+            .broadcast(0, &[0], &globals)
+            .is_err());
+        assert!(DeltaDownlink::new(DownCodec::Dense, 1, 1, 4).is_err());
+    }
+
+    #[test]
+    fn delta_downlink_first_contact_is_a_full_dense_resync() {
+        let (global, _) = random_pair(12);
+        let mut down = DeltaDownlink::new(DownCodec::TopK { frac: 0.1 }, 3, 1, 8).unwrap();
+        let bcast = down.broadcast(0, &[0, 2], &[global.clone()]).unwrap();
+        assert!(bcast.is_per_client());
+        for slot in 0..2 {
+            let p = bcast.payload(slot, 0);
+            assert!(p.is_full(), "first contact must be a full resync");
+            assert_eq!(p.version(), 1);
+            // Bitwise: the client lands exactly on the broadcast base.
+            assert_eq!(bcast.global(slot, 0), &global);
+            // Full resync is dense + the 9-byte versioned header.
+            assert_eq!(p.byte_len(), global.byte_size() + 9);
+        }
+        assert_eq!(down.base_version(0, 0), 1);
+        assert_eq!(down.base_version(2, 0), 1);
+        assert_eq!(down.base_version(1, 0), 0, "unselected client stays unsynced");
+    }
+
+    #[test]
+    fn delta_downlink_ships_versioned_deltas_against_the_replica() {
+        let (g0, _) = random_pair(13);
+        let g1 = drift(&g0, 100);
+        let mut down = DeltaDownlink::new(DownCodec::TopKPacked { frac: 0.2 }, 2, 1, 8).unwrap();
+        down.broadcast(0, &[0], &[g0.clone()]).unwrap();
+        let bcast = down.broadcast(1, &[0], &[g1.clone()]).unwrap();
+        let p = bcast.payload(0, 0);
+        assert_eq!(p.kind(), PayloadKind::Delta { base_version: 1 });
+        assert_eq!(p.version(), 2);
+        // The decoded state is the delta applied onto the old base (g0),
+        // and the server's replica tracks it exactly.
+        assert_eq!(down.replica(0, 0).unwrap(), bcast.global(0, 0));
+        // Top-k is lossy, so the client is near — not at — the global;
+        // the pending difference stays in the replica for next round.
+        assert_ne!(bcast.global(0, 0), &g1);
+        // A delta is much smaller than the full model.
+        assert!(p.byte_len() < g1.byte_size() / 2, "{} bytes", p.byte_len());
+    }
+
+    #[test]
+    fn delta_downlink_resyncs_past_the_staleness_cap() {
+        let (mut global, _) = random_pair(14);
+        let mut down = DeltaDownlink::new(DownCodec::TopK { frac: 0.2 }, 2, 1, 2).unwrap();
+        // Round 0: both clients sync. Client 1 then sits out rounds 1–3.
+        down.broadcast(0, &[0, 1], &[global.clone()]).unwrap();
+        for round in 1..4 {
+            global = drift(&global, 200 + round as u64);
+            let bcast = down.broadcast(round, &[0], &[global.clone()]).unwrap();
+            assert!(
+                !bcast.payload(0, 0).is_full(),
+                "round {round}: fresh client keeps getting deltas"
+            );
+        }
+        // Round 4: client 1's base is 4 versions old (> resync_every 2):
+        // it must get a full dense resync that lands it bitwise on the
+        // current broadcast base, while client 0 still gets a delta.
+        global = drift(&global, 300);
+        let bcast = down.broadcast(4, &[0, 1], &[global.clone()]).unwrap();
+        assert!(!bcast.payload(0, 0).is_full());
+        let p1 = bcast.payload(1, 0);
+        assert!(p1.is_full(), "stale client must be resynced");
+        assert_eq!(p1.version(), 5);
+        assert_eq!(bcast.global(1, 0), &global, "resync is bitwise");
+        assert_eq!(down.replica(1, 0).unwrap(), &global);
+    }
+
+    #[test]
+    fn delta_downlink_within_window_applies_onto_the_stale_base() {
+        let (g0, _) = random_pair(15);
+        let mut down = DeltaDownlink::new(DownCodec::TopK { frac: 0.3 }, 2, 1, 4).unwrap();
+        down.broadcast(0, &[0, 1], &[g0.clone()]).unwrap();
+        let stale_base = down.replica(1, 0).unwrap().clone();
+        // Client 1 sits out rounds 1–2 (staleness 3 ≤ cap 4 at round 3).
+        let mut global = g0.clone();
+        for round in 1..3 {
+            global = drift(&global, 400 + round as u64);
+            down.broadcast(round, &[0], &[global.clone()]).unwrap();
+        }
+        global = drift(&global, 500);
+        let bcast = down.broadcast(3, &[0, 1], &[global.clone()]).unwrap();
+        let p1 = bcast.payload(1, 0);
+        assert_eq!(p1.kind(), PayloadKind::Delta { base_version: 1 });
+        // The decoded state is exactly the payload applied to the base
+        // the client has held since round 0.
+        assert_eq!(bcast.global(1, 0), &p1.apply(&stale_base).unwrap());
+    }
+
+    #[test]
+    fn downlink_payload_bytes_roundtrip() {
+        let (global, _) = random_pair(16);
+        let n_tensors = global.tensors.len();
+        let n = global.num_params();
+        // Shared (non-delta) payloads: headerless, PR 3 layout.
+        for codec in [
+            DownCodec::Dense,
+            DownCodec::QuantI8,
+            DownCodec::QuantI8Group { block: 16 },
+        ] {
+            let bcast = StatelessDownlink::new(codec)
+                .broadcast(0, &[0], &[global.clone()])
+                .unwrap();
+            let payload = bcast.payload(0, 0);
             let bytes = payload.to_bytes();
             assert_eq!(bytes.len(), payload.byte_len(), "{}", codec.name());
-            let back = BroadcastPayload::from_bytes(
-                codec,
-                global.tensors.len(),
-                global.num_params(),
-                &bytes,
-            )
-            .unwrap();
-            assert_eq!(back, payload);
-            assert_eq!(back.decode(&global).unwrap(), payload.decode(&global).unwrap());
+            let back = DownlinkPayload::from_bytes(codec, n_tensors, n, &bytes).unwrap();
+            assert_eq!(&back, payload);
+            assert_eq!(
+                back.decode_full(&global).unwrap(),
+                payload.decode_full(&global).unwrap()
+            );
         }
+        // Delta payloads: versioned header + body, both kinds.
+        let codec = DownCodec::TopK { frac: 0.2 };
+        let mut down = DeltaDownlink::new(codec, 1, 1, 8).unwrap();
+        let full = down.broadcast(0, &[0], &[global.clone()]).unwrap();
+        let g1 = drift(&global, 600);
+        let delta = down.broadcast(1, &[0], &[g1.clone()]).unwrap();
+        for (bcast, tag) in [(&full, "full"), (&delta, "delta")] {
+            let payload = bcast.payload(0, 0);
+            let bytes = payload.to_bytes();
+            assert_eq!(bytes.len(), payload.byte_len(), "{tag}");
+            let back = DownlinkPayload::from_bytes(codec, n_tensors, n, &bytes).unwrap();
+            assert_eq!(&back, payload, "{tag}");
+        }
+        // A delta payload refuses to decode without a base.
+        assert!(delta.payload(0, 0).decode_full(&global).is_err());
+        // Truncated and corrupt-kind payloads are rejected.
+        let bytes = delta.payload(0, 0).to_bytes();
+        assert!(DownlinkPayload::from_bytes(codec, n_tensors, n, &bytes[..8]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = 7;
+        assert!(DownlinkPayload::from_bytes(codec, n_tensors, n, &bad).is_err());
     }
 
     #[test]
     fn facade_selects_impls_from_config() {
         let mut cfg = ExperimentConfig::preset("tiny").unwrap();
         cfg.codec = CodecSpec::TopK { frac: 0.1 };
-        let t = Transport::new(&cfg, 2);
+        let t = Transport::new(&cfg, 2).unwrap();
         assert!(!t.stateful(), "feedback off → stateless pipeline");
         cfg.error_feedback = true;
-        let t = Transport::new(&cfg, 2);
+        let t = Transport::new(&cfg, 2).unwrap();
         assert!(t.stateful());
         assert_eq!(t.uplink().spec(), CodecSpec::TopK { frac: 0.1 });
+        // A sparse down codec selects the delta downlink even with
+        // feedback off — it is stateful by construction.
+        cfg.error_feedback = false;
+        cfg.down_codec = DownCodec::TopK { frac: 0.1 };
+        let t = Transport::new(&cfg, 2).unwrap();
+        assert!(t.stateful());
     }
 
     #[test]
@@ -731,21 +1364,20 @@ mod tests {
         cfg.codec = CodecSpec::QuantI8;
         cfg.down_codec = DownCodec::QuantI8;
         cfg.error_feedback = true;
-        let (global, local) = random_pair(11);
+        let (global, local) = random_pair(17);
         let globals = vec![global.clone()];
-        let mut transport = Transport::new(&cfg, 1);
-        let bcast = transport.broadcast(&globals).unwrap();
-        assert_eq!(bcast.payloads.len(), 1);
-        assert_eq!(bcast.client_globals.len(), 1);
+        let mut transport = Transport::new(&cfg, 1).unwrap();
+        let bcast = transport.broadcast(0, &[0], &globals).unwrap();
+        assert_eq!(bcast.n_models(), 1);
         // q8 broadcast is smaller than dense and decodes near the global.
-        assert!(bcast.payloads[0].byte_len() < global.byte_size());
+        assert!(bcast.payload(0, 0).byte_len() < global.byte_size());
         // Close the loop: client encodes against the *decoded* broadcast,
         // server decodes against the same reference.
         let enc = transport
             .uplink()
-            .compress(0, 0, &bcast.client_globals[0], &local)
+            .compress(0, 0, bcast.global(0, 0), &local)
             .unwrap();
-        let back = transport.decode(&bcast.client_globals[0], &enc).unwrap();
+        let back = transport.decode(bcast.global(0, 0), &enc).unwrap();
         assert_eq!(back.num_params(), local.num_params());
     }
 }

@@ -20,6 +20,12 @@
 //!   upload" knob; the same role layer-wise pruning plays in FedLP
 //!   (Zhu et al., 2023, `Zhuzzq/FedLP`): a client-side lossy encoder
 //!   that the server can still aggregate after decoding.
+//! - [`CodecSpec::QuantI8Group`] — group-wise int8 (`q8g:<block>`,
+//!   default block 64): one scale per `block` consecutive values
+//!   instead of per tensor, so a single outlier coordinate no longer
+//!   inflates the quantization step of millions of neighbors. Costs
+//!   `4 / block` extra bytes per value; the error bound tightens from
+//!   per-tensor `scale/2` to per-*block* `scale/2`.
 //! - [`CodecSpec::TopK`] — sparse coordinate updates selected by
 //!   largest |local − global| delta, the mechanism behind
 //!   category-aware sparse updates in CatFedAvg (arXiv 2011.07229) and
@@ -40,9 +46,23 @@
 //! These codecs are deliberately *stateless* — one `(global, local)`
 //! pair in, bytes out. The cross-round state that fixes compounding
 //! sparsification error (client error-feedback accumulators, server
-//! residual folding, the compressed downlink broadcast) lives in
+//! residual folding, the per-client delta downlink) lives in
 //! [`super::transport`], which drives these codecs as pluggable
 //! backends.
+//!
+//! ## Delta framing
+//!
+//! [`encode_delta`] / [`apply_delta`] reuse the same codecs to express
+//! one model state *against another the receiver already holds* — the
+//! per-client delta broadcast ([`super::transport::DeltaDownlink`]) and
+//! the delta checkpoint chain (`serve::checkpoint`) are both built on
+//! it. The sparse codecs keep their replacement-entry semantics
+//! verbatim (entries are selected by `|target − base|` and carry the
+//! exact target value, so applying onto the same base is the ordinary
+//! [`decode_update`]); the quantized codecs switch to *difference*
+//! semantics (quantize `target − base`, receiver adds it back), which
+//! shrinks the scales with the step size. [`encode_changed`] is the
+//! lossless extreme: every coordinate whose bits differ, exactly.
 //!
 //! ## Wire layout (little-endian)
 //!
@@ -51,6 +71,9 @@
 //!
 //! - `Dense`:    `num_params × f32`
 //! - `QuantI8`:  `n_tensors × f32` scales, then `num_params × i8`
+//! - `QuantI8Group`: `u32` scale count, `n_blocks × f32` scales
+//!   (tensors chunked into `block`-sized groups, in tensor order), then
+//!   `num_params × i8`
 //! - `TopKDelta`: `u32` entry count, then per entry `u32` flat index +
 //!   `f32` value
 //! - `TopKPacked`: `u32` entry count, then the sorted index stream as
@@ -64,6 +87,12 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::model::params::ModelParams;
 
+/// Default group size for [`CodecSpec::QuantI8Group`] (a bare `q8g`).
+pub const DEFAULT_Q8G_BLOCK: usize = 64;
+
+/// Largest accepted `q8g` block (keeps the wire `u32` block tag exact).
+const MAX_Q8G_BLOCK: usize = 1 << 20;
+
 /// Which codec encodes client→server updates (CLI: `--codec`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum CodecSpec {
@@ -71,6 +100,9 @@ pub enum CodecSpec {
     Dense,
     /// Per-tensor symmetric int8 quantization (~4× smaller).
     QuantI8,
+    /// Group-wise symmetric int8: one scale per `block` consecutive
+    /// values within each tensor (`q8g:<block>`).
+    QuantI8Group { block: usize },
     /// Top-`frac` coordinates by |local − global|, `frac ∈ (0, 1]`.
     TopK { frac: f32 },
     /// Same selection as [`CodecSpec::TopK`], with the sorted index
@@ -82,45 +114,79 @@ impl CodecSpec {
     /// Parse a CLI name. The sparse codecs take their fraction either
     /// embedded in the name (`topk:0.05`, the [`Self::name`] echo
     /// format) or, for a bare `topk`/`topkv`, from `topk_frac` (the
-    /// `--topk-frac` flag).
+    /// `--topk-frac` flag). `q8g` takes its block size embedded
+    /// (`q8g:128`) or defaults to [`DEFAULT_Q8G_BLOCK`].
     pub fn parse(name: &str, topk_frac: f32) -> Result<CodecSpec> {
         let (family, embedded) = match name.split_once(':') {
-            Some((family, frac)) => {
-                let frac: f32 = frac
-                    .parse()
-                    .map_err(|e| anyhow!("bad codec fraction '{frac}': {e}"))?;
-                (family, Some(frac))
-            }
+            Some((family, param)) => (family, Some(param)),
             None => (name, None),
         };
-        let check_frac = |frac: f32| -> Result<f32> {
-            if !(frac > 0.0 && frac <= 1.0) {
-                bail!("topk fraction must be in (0, 1], got {frac}");
+        // This closure only *parses*; bounds come from `validate` below.
+        let frac_for = |family: &str| -> Result<f32> {
+            match embedded {
+                Some(s) => s
+                    .parse::<f32>()
+                    .map_err(|e| anyhow!("bad {family} fraction '{s}': {e}")),
+                None => Ok(topk_frac),
             }
-            Ok(frac)
         };
-        let frac = embedded.unwrap_or(topk_frac);
-        match family {
+        let spec = match family {
             "dense" | "q8" | "quant" if embedded.is_some() => {
-                bail!("codec '{family}' does not take a fraction")
+                bail!("codec '{family}' does not take a parameter")
             }
-            "dense" => Ok(CodecSpec::Dense),
-            "q8" | "quant" => Ok(CodecSpec::QuantI8),
-            "topk" => Ok(CodecSpec::TopK { frac: check_frac(frac)? }),
-            "topkv" => Ok(CodecSpec::TopKPacked { frac: check_frac(frac)? }),
-            other => bail!("unknown codec '{other}' (expected dense|q8|topk[:frac]|topkv[:frac])"),
+            "dense" => CodecSpec::Dense,
+            "q8" | "quant" => CodecSpec::QuantI8,
+            "q8g" => {
+                let block = match embedded {
+                    Some(s) => s
+                        .parse::<usize>()
+                        .map_err(|e| anyhow!("bad q8g block '{s}': {e}"))?,
+                    None => DEFAULT_Q8G_BLOCK,
+                };
+                CodecSpec::QuantI8Group { block }
+            }
+            "topk" => CodecSpec::TopK { frac: frac_for("topk")? },
+            "topkv" => CodecSpec::TopKPacked { frac: frac_for("topkv")? },
+            other => bail!(
+                "unknown codec '{other}' (expected dense|q8|q8g[:block]|topk[:frac]|topkv[:frac])"
+            ),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Bounds-check the spec's parameters — the single source for CLI
+    /// parsing, `ExperimentConfig::validate` (both links) and the
+    /// encoders: sparse fractions in `(0, 1]`, q8g blocks in
+    /// `1..=`[`MAX_Q8G_BLOCK`].
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            CodecSpec::Dense | CodecSpec::QuantI8 => Ok(()),
+            CodecSpec::QuantI8Group { block } => {
+                if block == 0 || block > MAX_Q8G_BLOCK {
+                    bail!("q8g block must be in 1..={MAX_Q8G_BLOCK}, got {block}");
+                }
+                Ok(())
+            }
+            CodecSpec::TopK { frac } | CodecSpec::TopKPacked { frac } => {
+                if !(frac > 0.0 && frac <= 1.0) {
+                    bail!("topk fraction must be in (0, 1], got {frac}");
+                }
+                Ok(())
+            }
         }
     }
 
-    /// Canonical spec string: `dense`, `q8`, `topk:<frac>`,
-    /// `topkv:<frac>`. Every output re-parses to an equal spec through
-    /// [`Self::parse`] (regardless of the `topk_frac` argument), so
-    /// config echoes round-trip losslessly — pinned by
-    /// `spec_string_roundtrips_every_variant`.
+    /// Canonical spec string: `dense`, `q8`, `q8g:<block>`,
+    /// `topk:<frac>`, `topkv:<frac>`. Every output re-parses to an
+    /// equal spec through [`Self::parse`] (regardless of the
+    /// `topk_frac` argument), so config echoes round-trip losslessly —
+    /// pinned by `spec_string_roundtrips_every_variant`.
     pub fn name(&self) -> String {
         match self {
             CodecSpec::Dense => "dense".to_string(),
             CodecSpec::QuantI8 => "q8".to_string(),
+            CodecSpec::QuantI8Group { block } => format!("q8g:{block}"),
             CodecSpec::TopK { frac } => format!("topk:{frac}"),
             CodecSpec::TopKPacked { frac } => format!("topkv:{frac}"),
         }
@@ -194,6 +260,13 @@ pub enum EncodedUpdate {
     Dense { values: Vec<f32> },
     /// One scale per tensor plus `num_params` quantized values.
     QuantI8 { scales: Vec<f32>, values: Vec<i8> },
+    /// One scale per `block`-sized group within each tensor plus
+    /// `num_params` quantized values.
+    QuantI8Group {
+        block: u32,
+        scales: Vec<f32>,
+        values: Vec<i8>,
+    },
     /// Sorted `(flat index, replacement value)` pairs.
     TopKDelta { entries: Vec<(u32, f32)> },
     /// Sorted `(flat index, replacement value)` pairs, index stream
@@ -208,6 +281,9 @@ impl EncodedUpdate {
         match self {
             EncodedUpdate::Dense { values } => 4 * values.len(),
             EncodedUpdate::QuantI8 { scales, values } => 4 * scales.len() + values.len(),
+            EncodedUpdate::QuantI8Group { scales, values, .. } => {
+                4 + 4 * scales.len() + values.len()
+            }
             EncodedUpdate::TopKDelta { entries } => 4 + 8 * entries.len(),
             EncodedUpdate::TopKPacked { entries } => {
                 4 + packed_index_len(entries) + 4 * entries.len()
@@ -219,6 +295,7 @@ impl EncodedUpdate {
         match self {
             EncodedUpdate::Dense { .. } => "dense",
             EncodedUpdate::QuantI8 { .. } => "q8",
+            EncodedUpdate::QuantI8Group { .. } => "q8g",
             EncodedUpdate::TopKDelta { .. } => "topk",
             EncodedUpdate::TopKPacked { .. } => "topkv",
         }
@@ -236,6 +313,17 @@ impl EncodedUpdate {
             }
             EncodedUpdate::QuantI8 { scales, values } => {
                 let mut out = Vec::with_capacity(4 * scales.len() + values.len());
+                for s in scales {
+                    out.extend_from_slice(&s.to_le_bytes());
+                }
+                for &q in values {
+                    out.push(q as u8);
+                }
+                out
+            }
+            EncodedUpdate::QuantI8Group { scales, values, .. } => {
+                let mut out = Vec::with_capacity(self.byte_len());
+                out.extend_from_slice(&(scales.len() as u32).to_le_bytes());
                 for s in scales {
                     out.extend_from_slice(&s.to_le_bytes());
                 }
@@ -301,6 +389,27 @@ impl EncodedUpdate {
                 let scales = (0..n_tensors).map(|i| f32_at(bytes, 4 * i)).collect();
                 let values = bytes[4 * n_tensors..].iter().map(|&b| b as i8).collect();
                 Ok(EncodedUpdate::QuantI8 { scales, values })
+            }
+            CodecSpec::QuantI8Group { block } => {
+                if bytes.len() < 4 {
+                    bail!("q8g payload is {} bytes, expected at least 4", bytes.len());
+                }
+                let n_scales = u32_at(bytes, 0) as usize;
+                let want = 4 + 4 * n_scales + n_values;
+                if bytes.len() != want {
+                    bail!(
+                        "q8g payload is {} bytes, header says {want} \
+                         ({n_scales} scales, {n_values} values)",
+                        bytes.len()
+                    );
+                }
+                let scales = (0..n_scales).map(|i| f32_at(bytes, 4 + 4 * i)).collect();
+                let values = bytes[4 + 4 * n_scales..].iter().map(|&b| b as i8).collect();
+                Ok(EncodedUpdate::QuantI8Group {
+                    block: block as u32,
+                    scales,
+                    values,
+                })
             }
             CodecSpec::TopK { .. } => {
                 if bytes.len() < 4 {
@@ -411,6 +520,40 @@ pub fn encode_update(
             }
             Ok(EncodedUpdate::QuantI8 { scales, values })
         }
+        CodecSpec::QuantI8Group { block } => {
+            spec.validate()?;
+            let mut scales = Vec::new();
+            let mut values = Vec::with_capacity(local.num_params());
+            for t in &local.tensors {
+                for chunk in t.data().chunks(block) {
+                    let mut max_abs = 0.0f32;
+                    let mut finite = true;
+                    for &v in chunk {
+                        finite &= v.is_finite();
+                        max_abs = max_abs.max(v.abs());
+                    }
+                    if !finite {
+                        // Same rationale as q8: fail loudly instead of
+                        // silently zeroing/poisoning a diverged block.
+                        bail!("q8g encode: non-finite parameter values in update");
+                    }
+                    let scale = max_abs / 127.0;
+                    scales.push(scale);
+                    if scale == 0.0 {
+                        values.extend(std::iter::repeat(0i8).take(chunk.len()));
+                    } else {
+                        for &v in chunk {
+                            values.push((v / scale).round().clamp(-127.0, 127.0) as i8);
+                        }
+                    }
+                }
+            }
+            Ok(EncodedUpdate::QuantI8Group {
+                block: block as u32,
+                scales,
+                values,
+            })
+        }
         CodecSpec::TopK { frac } => Ok(EncodedUpdate::TopKDelta {
             entries: select_topk_entries(global, local, frac)?,
         }),
@@ -482,6 +625,37 @@ pub fn decode_update(global: &ModelParams, enc: &EncodedUpdate) -> Result<ModelP
                 off += len;
             }
         }
+        EncodedUpdate::QuantI8Group { block, scales, values } => {
+            let block = *block as usize;
+            if block == 0 {
+                bail!("q8g update has a zero block size");
+            }
+            let want_scales: usize = out.tensors.iter().map(|t| t.len().div_ceil(block)).sum();
+            if scales.len() != want_scales {
+                bail!(
+                    "q8g update has {} scales, model with block {block} needs {want_scales}",
+                    scales.len()
+                );
+            }
+            if values.len() != n {
+                bail!("q8g update has {} values, model has {n}", values.len());
+            }
+            let mut off = 0usize;
+            let mut si = 0usize;
+            for t in out.tensors.iter_mut() {
+                let len = t.len();
+                let src = &values[off..off + len];
+                let chunks = t.data_mut().chunks_mut(block).zip(src.chunks(block));
+                for (dst_chunk, src_chunk) in chunks {
+                    let scale = scales[si];
+                    si += 1;
+                    for (dst, &q) in dst_chunk.iter_mut().zip(src_chunk.iter()) {
+                        *dst = q as f32 * scale;
+                    }
+                }
+                off += len;
+            }
+        }
         EncodedUpdate::TopKDelta { entries } | EncodedUpdate::TopKPacked { entries } => {
             let mut vals = global.flat_values();
             for &(i, v) in entries {
@@ -495,6 +669,83 @@ pub fn decode_update(global: &ModelParams, enc: &EncodedUpdate) -> Result<ModelP
         }
     }
     Ok(out)
+}
+
+fn check_delta_shapes(base: &ModelParams, target: &ModelParams) -> Result<()> {
+    if (base.d, base.hidden, base.out) != (target.d, target.hidden, target.out) {
+        bail!(
+            "delta shape mismatch: base ({},{},{}) vs target ({},{},{})",
+            base.d,
+            base.hidden,
+            base.out,
+            target.d,
+            target.hidden,
+            target.out
+        );
+    }
+    Ok(())
+}
+
+/// Encode `target` as a delta against a `base` the receiver already
+/// holds (module docs §Delta framing). The sparse codecs reuse their
+/// replacement-entry encoding verbatim; the quantized codecs encode the
+/// *difference* `target − base` so their scales track the step size;
+/// `dense` ships the full target (a lossless "delta").
+pub fn encode_delta(
+    spec: CodecSpec,
+    base: &ModelParams,
+    target: &ModelParams,
+) -> Result<EncodedUpdate> {
+    match spec {
+        CodecSpec::Dense | CodecSpec::TopK { .. } | CodecSpec::TopKPacked { .. } => {
+            encode_update(spec, base, target)
+        }
+        CodecSpec::QuantI8 | CodecSpec::QuantI8Group { .. } => {
+            check_delta_shapes(base, target)?;
+            let bv = base.flat_values();
+            let tv = target.flat_values();
+            let vals: Vec<f32> = tv.iter().zip(bv.iter()).map(|(t, b)| *t - *b).collect();
+            let mut diff = ModelParams::zeros(base.d, base.hidden, base.out);
+            diff.set_from_flat(&vals)?;
+            encode_update(spec, base, &diff)
+        }
+    }
+}
+
+/// Apply a delta produced by [`encode_delta`] onto the same `base`,
+/// reconstructing the receiver's view of the target.
+pub fn apply_delta(base: &ModelParams, enc: &EncodedUpdate) -> Result<ModelParams> {
+    match enc {
+        // Replacement / full-value payloads decode directly against the
+        // base (unselected coordinates keep the base value).
+        EncodedUpdate::Dense { .. }
+        | EncodedUpdate::TopKDelta { .. }
+        | EncodedUpdate::TopKPacked { .. } => decode_update(base, enc),
+        // Difference payloads dequantize, then add the base back.
+        EncodedUpdate::QuantI8 { .. } | EncodedUpdate::QuantI8Group { .. } => {
+            let mut out = decode_update(base, enc)?;
+            out.accumulate(base, 1.0)?;
+            Ok(out)
+        }
+    }
+}
+
+/// Lossless sparse delta: every coordinate whose `f32` bits differ
+/// between `base` and `target`, as packed replacement entries. Applying
+/// it onto the same base ([`apply_delta`] / [`decode_update`])
+/// reconstructs `target` bit for bit — the delta-checkpoint payload.
+pub fn encode_changed(base: &ModelParams, target: &ModelParams) -> Result<EncodedUpdate> {
+    check_delta_shapes(base, target)?;
+    let bv = base.flat_values();
+    let tv = target.flat_values();
+    let entries: Vec<(u32, f32)> = tv
+        .iter()
+        .zip(bv.iter())
+        .enumerate()
+        .filter(|(_, (t, b))| t.to_bits() != b.to_bits())
+        .map(|(i, (t, _))| (i as u32, *t))
+        .collect();
+    Ok(EncodedUpdate::TopKPacked { entries })
 }
 
 #[cfg(test)]
@@ -519,6 +770,14 @@ mod tests {
         assert_eq!(CodecSpec::parse("dense", 0.1).unwrap(), CodecSpec::Dense);
         assert_eq!(CodecSpec::parse("q8", 0.1).unwrap(), CodecSpec::QuantI8);
         assert_eq!(
+            CodecSpec::parse("q8g", 0.1).unwrap(),
+            CodecSpec::QuantI8Group { block: DEFAULT_Q8G_BLOCK }
+        );
+        assert_eq!(
+            CodecSpec::parse("q8g:128", 0.1).unwrap(),
+            CodecSpec::QuantI8Group { block: 128 }
+        );
+        assert_eq!(
             CodecSpec::parse("topk", 0.25).unwrap(),
             CodecSpec::TopK { frac: 0.25 }
         );
@@ -529,6 +788,8 @@ mod tests {
         assert!(CodecSpec::parse("topk", 0.0).is_err());
         assert!(CodecSpec::parse("topk", 1.5).is_err());
         assert!(CodecSpec::parse("topkv", 0.0).is_err());
+        assert!(CodecSpec::parse("q8g:0", 0.1).is_err());
+        assert!(CodecSpec::parse("q8g:half", 0.1).is_err());
         assert!(CodecSpec::parse("gzip", 0.1).is_err());
     }
 
@@ -537,6 +798,8 @@ mod tests {
         for spec in [
             CodecSpec::Dense,
             CodecSpec::QuantI8,
+            CodecSpec::QuantI8Group { block: 64 },
+            CodecSpec::QuantI8Group { block: 7 },
             CodecSpec::TopK { frac: 0.05 },
             CodecSpec::TopK { frac: 1.0 },
             CodecSpec::TopKPacked { frac: 0.37 },
@@ -707,6 +970,7 @@ mod tests {
         for spec in [
             CodecSpec::Dense,
             CodecSpec::QuantI8,
+            CodecSpec::QuantI8Group { block: 8 },
             CodecSpec::TopK { frac: 0.3 },
             CodecSpec::TopKPacked { frac: 0.3 },
         ] {
@@ -716,6 +980,146 @@ mod tests {
             let back = EncodedUpdate::from_bytes(spec, n_tensors, n, &bytes).unwrap();
             assert_eq!(back, enc);
         }
+    }
+
+    #[test]
+    fn q8g_error_is_block_scale_bounded() {
+        let (global, local) = random_pair(12);
+        let block = 8usize;
+        let enc = encode_update(CodecSpec::QuantI8Group { block }, &global, &local).unwrap();
+        let back = decode_update(&global, &enc).unwrap();
+        for (t_local, t_back) in local.tensors.iter().zip(back.tensors.iter()) {
+            let chunks = t_local.data().chunks(block).zip(t_back.data().chunks(block));
+            for (chunk_l, chunk_b) in chunks {
+                let max_abs = chunk_l.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let scale = max_abs / 127.0;
+                for (&a, &b) in chunk_l.iter().zip(chunk_b.iter()) {
+                    let err = (a - b).abs();
+                    assert!(err <= 0.5 * scale + 1e-7, "err {err} vs block scale {scale}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q8g_beats_q8_under_an_outlier() {
+        // One huge coordinate inflates the per-tensor q8 scale for the
+        // whole tensor; group-wise scales quarantine it to one block.
+        let global = ModelParams::zeros(8, 4, 4);
+        let mut local = global.clone();
+        let mut rng = Rng::new(77);
+        for v in local.tensors[0].data_mut() {
+            *v = (rng.next_f32() - 0.5) * 0.02;
+        }
+        local.tensors[0].data_mut()[0] = 10.0;
+        let q8 = decode_update(
+            &global,
+            &encode_update(CodecSpec::QuantI8, &global, &local).unwrap(),
+        )
+        .unwrap();
+        let q8g = decode_update(
+            &global,
+            &encode_update(CodecSpec::QuantI8Group { block: 8 }, &global, &local).unwrap(),
+        )
+        .unwrap();
+        // Error on the non-outlier tail (everything past the first block).
+        let tail_err = |m: &ModelParams| -> f32 {
+            m.tensors[0].data()[8..]
+                .iter()
+                .zip(local.tensors[0].data()[8..].iter())
+                .fold(0.0f32, |acc, (a, b)| acc.max((a - b).abs()))
+        };
+        assert!(
+            tail_err(&q8g) < tail_err(&q8),
+            "q8g tail error {} must beat q8 {}",
+            tail_err(&q8g),
+            tail_err(&q8)
+        );
+    }
+
+    #[test]
+    fn q8g_rejects_corrupt_payloads() {
+        let (global, local) = random_pair(13);
+        let spec = CodecSpec::QuantI8Group { block: 4 };
+        let enc = encode_update(spec, &global, &local).unwrap();
+        let bytes = enc.to_bytes();
+        let n = global.num_params();
+        // truncation is rejected
+        assert!(EncodedUpdate::from_bytes(spec, 6, n, &bytes[..bytes.len() - 1]).is_err());
+        assert!(EncodedUpdate::from_bytes(spec, 6, n, &bytes[..3]).is_err());
+        // a scale count that disagrees with the model shape is rejected
+        // at decode time even when the payload length is self-consistent
+        let bad = EncodedUpdate::QuantI8Group {
+            block: 4,
+            scales: vec![0.1f32; 3],
+            values: vec![0i8; n],
+        };
+        assert!(decode_update(&global, &bad).is_err());
+        // a wrong value count is rejected
+        let bad = EncodedUpdate::QuantI8Group {
+            block: 4,
+            scales: vec![0.1f32; 2],
+            values: vec![0i8; 7],
+        };
+        assert!(decode_update(&global, &bad).is_err());
+    }
+
+    #[test]
+    fn delta_sparse_is_replacement_semantics() {
+        let (base, target) = random_pair(14);
+        for spec in [CodecSpec::TopK { frac: 0.2 }, CodecSpec::TopKPacked { frac: 0.2 }] {
+            let enc = encode_delta(spec, &base, &target).unwrap();
+            assert_eq!(enc, encode_update(spec, &base, &target).unwrap());
+            assert_eq!(
+                apply_delta(&base, &enc).unwrap(),
+                decode_update(&base, &enc).unwrap()
+            );
+        }
+        // Dense "delta" ships the full target, losslessly.
+        let enc = encode_delta(CodecSpec::Dense, &base, &target).unwrap();
+        assert_eq!(apply_delta(&base, &enc).unwrap(), target);
+    }
+
+    #[test]
+    fn delta_q8_quantizes_the_difference() {
+        let (base, target) = random_pair(15);
+        for spec in [CodecSpec::QuantI8, CodecSpec::QuantI8Group { block: 8 }] {
+            let enc = encode_delta(spec, &base, &target).unwrap();
+            let back = apply_delta(&base, &enc).unwrap();
+            // The diff here is bounded by ±0.1 (random_pair), so every
+            // reconstructed coordinate is within the diff's scale bound —
+            // far tighter than quantizing the absolute values.
+            let (bv, tv, rv) = (base.flat_values(), target.flat_values(), back.flat_values());
+            let max_diff = bv
+                .iter()
+                .zip(tv.iter())
+                .fold(0.0f32, |m, (b, t)| m.max((t - b).abs()));
+            let bound = max_diff / 127.0 * 0.5 + 1e-6;
+            for (t, r) in tv.iter().zip(rv.iter()) {
+                assert!((t - r).abs() <= bound + 1e-6, "err {} vs {bound}", (t - r).abs());
+            }
+        }
+    }
+
+    #[test]
+    fn changed_entries_are_exact_and_minimal() {
+        let (base, _) = random_pair(16);
+        let mut target = base.clone();
+        // flip three coordinates, one to NaN-free extreme values
+        target.tensors[0].data_mut()[1] = 5.0;
+        target.tensors[2].data_mut()[0] = -3.5;
+        target.tensors[5].data_mut()[2] = 0.25;
+        let enc = encode_changed(&base, &target).unwrap();
+        let entries = match &enc {
+            EncodedUpdate::TopKPacked { entries } => entries,
+            other => panic!("wrong variant {other:?}"),
+        };
+        assert_eq!(entries.len(), 3, "exactly the changed coordinates ship");
+        assert_eq!(apply_delta(&base, &enc).unwrap(), target, "bitwise reconstruction");
+        // identical models produce an empty (4-byte) delta
+        let empty = encode_changed(&base, &base).unwrap();
+        assert_eq!(empty.byte_len(), 4);
+        assert_eq!(apply_delta(&base, &empty).unwrap(), base);
     }
 
     #[test]

@@ -75,6 +75,8 @@ pub struct HarnessOpts {
     pub codec: CodecSpec,
     /// Broadcast codec (`ExperimentConfig::down_codec`).
     pub down_codec: DownCodec,
+    /// Delta-downlink staleness cap (`ExperimentConfig::resync_every`).
+    pub resync_every: usize,
     /// Stateful transport: error-feedback accumulators + broadcast
     /// residual folding (`ExperimentConfig::error_feedback`).
     pub error_feedback: bool,
@@ -93,6 +95,7 @@ impl Default for HarnessOpts {
             workers: 1,
             codec: CodecSpec::Dense,
             down_codec: DownCodec::Dense,
+            resync_every: 8,
             error_feedback: false,
         }
     }
@@ -112,6 +115,7 @@ impl HarnessOpts {
         cfg.workers = self.workers;
         cfg.codec = self.codec;
         cfg.down_codec = self.down_codec;
+        cfg.resync_every = self.resync_every;
         cfg.error_feedback = self.error_feedback;
     }
 }

@@ -8,9 +8,20 @@
 //!                --down-codec q8 --error-feedback on
 //!                                # compress both links; error-feedback
 //!                                # accumulators keep the dropped signal
+//! fedmlh run     --preset eurlex --down-codec topk:0.1 --resync-every 8
+//!                                # per-client versioned delta downlink:
+//!                                # each client gets a top-k delta vs the
+//!                                # base it last decoded; stale clients
+//!                                # are dense-resynced
 //! fedmlh run     --preset eurlex --save model.fmlh  # + persist a serving checkpoint
+//! fedmlh run     --preset eurlex --save tuned.fmlh --save-delta base.fmlh
+//!                                # write tuned.fmlh as a lossless delta
+//!                                # against base.fmlh (ship tiny updates
+//!                                # to devices that already hold the base)
 //! fedmlh serve   --checkpoint model.fmlh --port 8080 --workers 4
 //!                                                   # POST /predict · GET /healthz · GET /metrics
+//! fedmlh serve   --checkpoint base.fmlh --delta d1.fmlh,d2.fmlh
+//!                                # apply a delta-checkpoint chain at load
 //! fedmlh tables  --presets eurlex,wiki31            # Tables 3–7
 //! fedmlh table1  --presets all                      # dataset stats
 //! fedmlh table2  --presets all                      # R and B
@@ -38,7 +49,7 @@ use fedmlh::harness::{self, figures, report, tables, BackendKind, HarnessOpts, P
 use fedmlh::hashing::label_hash::LabelHasher;
 use fedmlh::partition::divergence;
 use fedmlh::runtime::RuntimeClient;
-use fedmlh::serve::{Checkpoint, CheckpointCodec, ServeOpts, Server};
+use fedmlh::serve::{Checkpoint, CheckpointCodec, DeltaCodec, ServeOpts, Server};
 use fedmlh::theory;
 use fedmlh::util::cli::{Args, Parsed};
 
@@ -80,9 +91,10 @@ fn common_args(args: Args) -> Args {
         .flag("rounds", "0", "override synchronization rounds (0 = preset default 70)")
         .flag("out", "results", "output directory for CSV/markdown")
         .flag("workers", "1", "round-engine worker threads (1 = sequential; results identical)")
-        .flag("codec", "dense", "update (client->server) codec: dense | q8 | topk[:frac] | topkv[:frac]")
+        .flag("codec", "dense", "update (client->server) codec: dense | q8 | q8g[:block] | topk[:frac] | topkv[:frac]")
         .flag("topk-frac", "0.1", "fraction of coordinates the topk/topkv codecs ship")
-        .flag("down-codec", "dense", "broadcast (server->client) codec: dense | q8")
+        .flag("down-codec", "dense", "broadcast (server->client) codec: dense | q8 | q8g[:block] | topk[:frac] | topkv[:frac] (sparse = per-client versioned deltas vs each client's last decoded base)")
+        .flag("resync-every", "8", "delta downlink: full dense resync for clients whose base is more than N rounds stale (0 = resync every participation)")
         .flag("error-feedback", "off", "stateful transport (on|off): client error-feedback accumulators + server broadcast-residual folding")
         .switch("fast", "use the *_fast (jnp-lowered) artifact family — same math, ~7x faster on CPU")
         .switch("quiet", "suppress progress logging")
@@ -108,7 +120,8 @@ fn opts_from(p: &Parsed) -> Result<HarnessOpts> {
         verbose: !p.get_bool("quiet"),
         workers: p.get_usize("workers")?,
         codec: CodecSpec::parse(p.get("codec"), p.get_f32("topk-frac")?)?,
-        down_codec: DownCodec::parse(p.get("down-codec"))?,
+        down_codec: DownCodec::parse(p.get("down-codec"), p.get_f32("topk-frac")?)?,
+        resync_every: p.get_usize("resync-every")?,
         error_feedback: parse_on_off("error-feedback", p.get("error-feedback"))?,
     })
 }
@@ -133,7 +146,9 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         .flag("b", "0", "override buckets per table B (fedmlh)")
         .flag("r", "0", "override hash tables R (fedmlh)")
         .flag("save", "", "write the trained model as a serving checkpoint to this path")
-        .flag("save-codec", "q8", "checkpoint codec: q8 (~4x smaller) | dense")
+        .flag("save-codec", "q8", "full-checkpoint codec: q8 (~4x smaller) | dense (ignored with --save-delta; see --delta-codec)")
+        .flag("save-delta", "", "with --save: write the checkpoint as a delta against this base .fmlh (apply with `fedmlh serve --delta`)")
+        .flag("delta-codec", "sparse", "delta payload codec (with --save-delta): sparse (changed coordinates, lossless) | q8diff (quantized difference, ~4x smaller, lossy)")
         .parse(argv)?;
     let opts = opts_from(&p)?;
     let algo = Algo::parse(p.get("algo"))?;
@@ -233,8 +248,11 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         }
     }
     let save = p.get("save");
+    let save_delta = p.get("save-delta");
+    if save.is_empty() && !save_delta.is_empty() {
+        bail!("--save-delta needs --save <path> for the delta output");
+    }
     if !save.is_empty() {
-        let codec = CheckpointCodec::parse(p.get("save-codec"))?;
         let ckpt = Checkpoint::from_run(
             &cfg,
             algo,
@@ -243,16 +261,36 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             out.final_globals,
         )?;
         let path = PathBuf::from(save);
-        ckpt.save(&path, codec)?;
-        let size = std::fs::metadata(&path)?.len();
-        println!(
-            "checkpoint → {} ({} bytes, codec={}, {:.2}x vs dense f32; load with `fedmlh serve --checkpoint {}`)",
-            path.display(),
-            size,
-            codec.name(),
-            ckpt.dense_byte_size() as f64 / size as f64,
-            path.display()
-        );
+        if !save_delta.is_empty() {
+            let base_path = PathBuf::from(save_delta);
+            let base = Checkpoint::load(&base_path)?;
+            let codec = DeltaCodec::parse(p.get("delta-codec"))?;
+            let delta = ckpt.delta_against(&base, codec)?;
+            delta.save(&path)?;
+            let size = std::fs::metadata(&path)?.len();
+            println!(
+                "delta checkpoint → {} ({} bytes vs {} dense f32, {:.2}x, codec={}; apply with `fedmlh serve --checkpoint {} --delta {}`)",
+                path.display(),
+                size,
+                ckpt.dense_byte_size(),
+                ckpt.dense_byte_size() as f64 / size as f64,
+                codec.name(),
+                base_path.display(),
+                path.display()
+            );
+        } else {
+            let codec = CheckpointCodec::parse(p.get("save-codec"))?;
+            ckpt.save(&path, codec)?;
+            let size = std::fs::metadata(&path)?.len();
+            println!(
+                "checkpoint → {} ({} bytes, codec={}, {:.2}x vs dense f32; load with `fedmlh serve --checkpoint {}`)",
+                path.display(),
+                size,
+                codec.name(),
+                ckpt.dense_byte_size() as f64 / size as f64,
+                path.display()
+            );
+        }
     }
     Ok(())
 }
@@ -261,6 +299,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let p = Args::new("fedmlh serve", "serve a trained checkpoint over HTTP")
         .required("checkpoint", "path to a .fmlh checkpoint (from `fedmlh run --save`)")
+        .flag("delta", "", "comma-separated delta checkpoints (from `fedmlh run --save-delta`), applied onto --checkpoint in order")
         .flag("host", "127.0.0.1", "interface to bind")
         .flag("port", "8080", "TCP port (0 = ephemeral)")
         .flag("workers", "2", "inference worker threads (micro-batch pool)")
@@ -278,7 +317,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if max_batch == 0 {
         bail!("max-batch must be positive");
     }
-    let ckpt = Checkpoint::load(&PathBuf::from(p.get("checkpoint")))?;
+    let base_path = PathBuf::from(p.get("checkpoint"));
+    let deltas = p.get("delta");
+    let ckpt = if deltas.is_empty() {
+        Checkpoint::load(&base_path)?
+    } else {
+        let paths: Vec<PathBuf> = deltas.split(',').map(|s| PathBuf::from(s.trim())).collect();
+        let ckpt = Checkpoint::load_chain(&base_path, &paths)?;
+        eprintln!(
+            "[serve] applied {} delta checkpoint(s) onto {}",
+            paths.len(),
+            base_path.display()
+        );
+        ckpt
+    };
     eprintln!(
         "[serve] {} checkpoint '{}' — {} sub-model(s), d={}, p={}, seed {}",
         ckpt.meta.algo.name(),

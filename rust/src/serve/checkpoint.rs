@@ -32,13 +32,34 @@
 //! scale per parameter vs 4). Corruption anywhere flips the checksum;
 //! truncation, wrong magic and future versions all fail loudly —
 //! pinned by `tests/serve_roundtrip.rs`.
+//!
+//! ## Delta checkpoints (`FMLD`)
+//!
+//! The deployment half of the paper's communication story: a device
+//! that already holds a base checkpoint should not re-download the
+//! whole model after a fine-tune — it should download what *changed*.
+//! A [`DeltaCheckpoint`] carries, per sub-model, a
+//! [`crate::federated::wire`] delta payload against the base
+//! ([`DeltaCodec::Sparse`]: every changed coordinate, exact — applying
+//! reproduces the full checkpoint **bitwise**; [`DeltaCodec::QuantI8Diff`]:
+//! int8-quantized difference, ~4× smaller than a dense diff), plus the
+//! [`Checkpoint::state_checksum`] of the state it applies onto, so a
+//! chain (`base → d1 → d2 → …`) fails loudly when applied out of order
+//! or onto the wrong base. Written by `fedmlh run --save x.fmlh
+//! --save-delta base.fmlh`, applied by [`Checkpoint::load_chain`]
+//! (`fedmlh serve --delta`). Layout mirrors the full checkpoint with
+//! `FMLD` magic and a `u64` base checksum between the preset name and
+//! the model payloads.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::{Algo, ExperimentConfig};
-use crate::federated::wire::{decode_update, encode_update, CodecSpec, EncodedUpdate};
+use crate::federated::wire::{
+    apply_delta, decode_update, encode_changed, encode_delta, encode_update, CodecSpec,
+    EncodedUpdate,
+};
 use crate::model::params::ModelParams;
 
 /// File magic: the first four bytes of every checkpoint.
@@ -46,6 +67,12 @@ pub const MAGIC: [u8; 4] = *b"FMLH";
 
 /// Format version this build writes and reads.
 pub const VERSION: u16 = 1;
+
+/// File magic of a delta checkpoint.
+pub const DELTA_MAGIC: [u8; 4] = *b"FMLD";
+
+/// Delta format version this build writes and reads.
+pub const DELTA_VERSION: u16 = 1;
 
 /// Upper bound on sub-model count (corruption guard, far above any R).
 const MAX_MODELS: usize = 4096;
@@ -269,6 +296,12 @@ impl Checkpoint {
         if bytes.len() < MAGIC.len() + 2 {
             bail!("checkpoint truncated: {} bytes", bytes.len());
         }
+        if bytes[..4] == DELTA_MAGIC {
+            bail!(
+                "this is a delta checkpoint — apply it onto its base \
+                 (`fedmlh serve --delta` / Checkpoint::load_chain)"
+            );
+        }
         if bytes[..4] != MAGIC {
             bail!("not a FedMLH checkpoint (bad magic)");
         }
@@ -382,6 +415,328 @@ impl Checkpoint {
             .with_context(|| format!("reading checkpoint {}", path.display()))?;
         Self::from_bytes(&bytes)
             .with_context(|| format!("parsing checkpoint {}", path.display()))
+    }
+
+    /// Checksum of the canonical (dense) serialization. Identifies a
+    /// model *state* independent of the on-disk codec, so a delta can
+    /// chain onto either a loaded file or the result of a previous
+    /// delta.
+    pub fn state_checksum(&self) -> Result<u64> {
+        Ok(fnv1a64(&self.to_bytes(CheckpointCodec::Dense)?))
+    }
+
+    /// Express `self` as a delta checkpoint against `base` (the same
+    /// run lineage: identical metadata, shapes and sub-model count).
+    pub fn delta_against(&self, base: &Checkpoint, codec: DeltaCodec) -> Result<DeltaCheckpoint> {
+        if self.meta != base.meta {
+            bail!(
+                "delta checkpoint: metadata differs from base \
+                 (base preset '{}' d={} out={} R={}, this preset '{}' d={} out={} R={})",
+                base.meta.preset,
+                base.meta.d,
+                base.meta.out_dim,
+                base.r(),
+                self.meta.preset,
+                self.meta.d,
+                self.meta.out_dim,
+                self.r()
+            );
+        }
+        if self.models.len() != base.models.len() {
+            bail!(
+                "delta checkpoint: {} models vs base's {}",
+                self.models.len(),
+                base.models.len()
+            );
+        }
+        let deltas = self
+            .models
+            .iter()
+            .zip(base.models.iter())
+            .map(|(model, base_model)| match codec {
+                DeltaCodec::Sparse => encode_changed(base_model, model),
+                DeltaCodec::QuantI8Diff => encode_delta(CodecSpec::QuantI8, base_model, model),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DeltaCheckpoint {
+            meta: self.meta.clone(),
+            base_checksum: base.state_checksum()?,
+            codec,
+            deltas,
+        })
+    }
+
+    /// Load `base` and apply the `deltas` chain in order — the delivery
+    /// path of `fedmlh serve --checkpoint base --delta d1,d2,…`.
+    pub fn load_chain(base: &Path, deltas: &[PathBuf]) -> Result<Checkpoint> {
+        let mut ckpt = Checkpoint::load(base)?;
+        for path in deltas {
+            let delta = DeltaCheckpoint::load(path)?;
+            ckpt = delta
+                .apply(&ckpt)
+                .with_context(|| format!("applying delta checkpoint {}", path.display()))?;
+        }
+        Ok(ckpt)
+    }
+}
+
+/// How a [`DeltaCheckpoint`]'s per-model payloads are encoded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaCodec {
+    /// Every coordinate whose `f32` bits changed, exact — lossless:
+    /// applying reproduces the full checkpoint (and therefore its
+    /// predictions) bit for bit.
+    Sparse,
+    /// Per-tensor int8-quantized difference — ~4× smaller than a dense
+    /// diff, lossy within the diff's per-tensor scale bound.
+    QuantI8Diff,
+}
+
+impl DeltaCodec {
+    /// Parse a CLI name (`fedmlh run --delta-codec`).
+    pub fn parse(name: &str) -> Result<DeltaCodec> {
+        match name {
+            "sparse" => Ok(DeltaCodec::Sparse),
+            "q8diff" | "q8" => Ok(DeltaCodec::QuantI8Diff),
+            other => bail!("unknown delta checkpoint codec '{other}' (expected sparse|q8diff)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeltaCodec::Sparse => "sparse",
+            DeltaCodec::QuantI8Diff => "q8diff",
+        }
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            DeltaCodec::Sparse => 0,
+            DeltaCodec::QuantI8Diff => 1,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Result<DeltaCodec> {
+        match tag {
+            0 => Ok(DeltaCodec::Sparse),
+            1 => Ok(DeltaCodec::QuantI8Diff),
+            other => bail!("unknown delta checkpoint codec tag {other}"),
+        }
+    }
+
+    /// The wire codec the payloads parse with (the fraction of the
+    /// sparse spec is irrelevant to parsing).
+    fn wire_spec(&self) -> CodecSpec {
+        match self {
+            DeltaCodec::Sparse => CodecSpec::TopKPacked { frac: 1.0 },
+            DeltaCodec::QuantI8Diff => CodecSpec::QuantI8,
+        }
+    }
+}
+
+/// A checkpoint expressed as a delta against a base checkpoint (module
+/// docs §Delta checkpoints).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaCheckpoint {
+    /// Metadata of the *result* state (matches the base by
+    /// construction).
+    pub meta: CheckpointMeta,
+    /// [`Checkpoint::state_checksum`] of the state this applies onto.
+    pub base_checksum: u64,
+    codec: DeltaCodec,
+    /// One [`crate::federated::wire`] delta payload per sub-model.
+    deltas: Vec<EncodedUpdate>,
+}
+
+impl DeltaCheckpoint {
+    pub fn codec(&self) -> DeltaCodec {
+        self.codec
+    }
+
+    /// Apply onto `base`, reconstructing the (possibly lossy) result
+    /// checkpoint. Refuses a base whose state checksum does not match
+    /// the one recorded at encode time.
+    pub fn apply(&self, base: &Checkpoint) -> Result<Checkpoint> {
+        let m = &self.meta;
+        if (m.d, m.hidden, m.out_dim) != (base.meta.d, base.meta.hidden, base.meta.out_dim)
+            || self.deltas.len() != base.models.len()
+        {
+            bail!(
+                "delta checkpoint shape ({},{},{}) × {} does not match base ({},{},{}) × {}",
+                m.d,
+                m.hidden,
+                m.out_dim,
+                self.deltas.len(),
+                base.meta.d,
+                base.meta.hidden,
+                base.meta.out_dim,
+                base.models.len()
+            );
+        }
+        let got = base.state_checksum()?;
+        if got != self.base_checksum {
+            bail!(
+                "delta checkpoint does not chain onto this base \
+                 (base state checksum {got:#018x}, delta expects {:#018x})",
+                self.base_checksum
+            );
+        }
+        let models = base
+            .models
+            .iter()
+            .zip(self.deltas.iter())
+            .map(|(base_model, enc)| apply_delta(base_model, enc))
+            .collect::<Result<Vec<_>>>()?;
+        Checkpoint::new(self.meta.clone(), models)
+    }
+
+    /// Serialize to the delta wire layout (module docs).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let m = &self.meta;
+        let mut out = Vec::with_capacity(64);
+        out.extend_from_slice(&DELTA_MAGIC);
+        out.extend_from_slice(&DELTA_VERSION.to_le_bytes());
+        out.push(self.codec.tag());
+        out.push(algo_tag(m.algo));
+        for dim in [m.d, m.hidden, m.out_dim, m.p, self.deltas.len()] {
+            let v = u32::try_from(dim).context("checkpoint dimension exceeds u32")?;
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for seed in [m.hash_seed, m.feat_seed, m.root_seed] {
+            out.extend_from_slice(&seed.to_le_bytes());
+        }
+        let preset = m.preset.as_bytes();
+        let preset_len = u16::try_from(preset.len()).context("preset name too long")?;
+        out.extend_from_slice(&preset_len.to_le_bytes());
+        out.extend_from_slice(preset);
+        out.extend_from_slice(&self.base_checksum.to_le_bytes());
+        for enc in &self.deltas {
+            let payload = enc.to_bytes();
+            let len = u32::try_from(payload.len()).context("delta payload exceeds u32")?;
+            out.extend_from_slice(&len.to_le_bytes());
+            out.extend_from_slice(&payload);
+        }
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        Ok(out)
+    }
+
+    /// Parse and validate a serialized delta checkpoint.
+    pub fn from_bytes(bytes: &[u8]) -> Result<DeltaCheckpoint> {
+        if bytes.len() < DELTA_MAGIC.len() + 2 {
+            bail!("delta checkpoint truncated: {} bytes", bytes.len());
+        }
+        if bytes[..4] == MAGIC {
+            bail!("this is a full checkpoint, not a delta (pass it as --checkpoint)");
+        }
+        if bytes[..4] != DELTA_MAGIC {
+            bail!("not a FedMLH delta checkpoint (bad magic)");
+        }
+        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+        if version != DELTA_VERSION {
+            bail!(
+                "unsupported delta checkpoint version {version} (this build reads {DELTA_VERSION})"
+            );
+        }
+        if bytes.len() < DELTA_MAGIC.len() + 2 + 8 {
+            bail!("delta checkpoint truncated: {} bytes", bytes.len());
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
+        if fnv1a64(body) != want {
+            bail!("delta checkpoint checksum mismatch (corrupt or truncated file)");
+        }
+
+        let mut r = Reader {
+            bytes: body,
+            pos: 6, // past magic + version
+        };
+        let codec = DeltaCodec::from_tag(r.u8()?)?;
+        let algo = algo_from_tag(r.u8()?)?;
+        let d = r.u32_as_usize()?;
+        let hidden = r.u32_as_usize()?;
+        let out_dim = r.u32_as_usize()?;
+        let p = r.u32_as_usize()?;
+        let n_models = r.u32_as_usize()?;
+        for (name, v) in [("d", d), ("hidden", hidden), ("out", out_dim), ("p", p)] {
+            if v == 0 || v > MAX_DIM {
+                bail!("delta checkpoint dimension {name} = {v} out of range (1..={MAX_DIM})");
+            }
+        }
+        if n_models == 0 || n_models > MAX_MODELS {
+            bail!("delta checkpoint has {n_models} models (cap {MAX_MODELS})");
+        }
+        let hash_seed = r.u64()?;
+        let feat_seed = r.u64()?;
+        let root_seed = r.u64()?;
+        let preset_len = r.u16()? as usize;
+        let preset = String::from_utf8(r.take(preset_len)?.to_vec())
+            .context("delta checkpoint preset name is not utf-8")?;
+        let base_checksum = r.u64()?;
+
+        // Unlike the full loader, no template model is materialized here
+        // (a sparse delta can be tiny); payloads only parse against the
+        // declared shape, and `apply` validates against the real base.
+        let n_values: usize = ModelParams::shapes(d, hidden, out_dim)
+            .iter()
+            .map(|shape| shape.iter().product::<usize>())
+            .sum();
+        let mut deltas = Vec::with_capacity(n_models);
+        for j in 0..n_models {
+            let payload_len = r.u32_as_usize()?;
+            let payload = r.take(payload_len)?;
+            let enc = EncodedUpdate::from_bytes(
+                codec.wire_spec(),
+                crate::model::params::N_PARAMS,
+                n_values,
+                payload,
+            )
+            .with_context(|| format!("decoding delta checkpoint model {j}"))?;
+            deltas.push(enc);
+        }
+        if r.pos != body.len() {
+            bail!(
+                "delta checkpoint has {} trailing bytes after the last model",
+                body.len() - r.pos
+            );
+        }
+        Ok(DeltaCheckpoint {
+            meta: CheckpointMeta {
+                algo,
+                preset,
+                d,
+                hidden,
+                out_dim,
+                p,
+                hash_seed,
+                feat_seed,
+                root_seed,
+            },
+            base_checksum,
+            codec,
+            deltas,
+        })
+    }
+
+    /// Write to `path` (parent directories created on demand).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes()?;
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, &bytes)
+            .with_context(|| format!("writing delta checkpoint {}", path.display()))
+    }
+
+    /// Read and validate a delta checkpoint file.
+    pub fn load(path: &Path) -> Result<DeltaCheckpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading delta checkpoint {}", path.display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("parsing delta checkpoint {}", path.display()))
     }
 }
 
@@ -559,6 +914,134 @@ mod tests {
             vec![model.clone(), model],
         )
         .is_err());
+    }
+
+    /// A drifted copy standing in for "the same run, fine-tuned".
+    fn drifted(ckpt: &Checkpoint, seed: u64, frac_changed: f64) -> Checkpoint {
+        let mut rng = Rng::new(seed);
+        let mut out = ckpt.clone();
+        for m in out.models.iter_mut() {
+            for t in m.tensors.iter_mut() {
+                for v in t.data_mut() {
+                    if (rng.next_f32() as f64) < frac_changed {
+                        *v += (rng.next_f32() - 0.5) * 0.1;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn delta_codec_names_parse() {
+        for codec in [DeltaCodec::Sparse, DeltaCodec::QuantI8Diff] {
+            assert_eq!(DeltaCodec::parse(codec.name()).unwrap(), codec);
+        }
+        assert_eq!(DeltaCodec::parse("q8").unwrap(), DeltaCodec::QuantI8Diff);
+        assert!(DeltaCodec::parse("dense").is_err());
+    }
+
+    #[test]
+    fn sparse_delta_roundtrips_bitwise() {
+        let base = fedmlh_checkpoint(10);
+        let tuned = drifted(&base, 11, 1.0);
+        let delta = tuned.delta_against(&base, DeltaCodec::Sparse).unwrap();
+        let bytes = delta.to_bytes().unwrap();
+        let back = DeltaCheckpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back, delta);
+        // Applying reproduces the tuned checkpoint bit for bit.
+        assert_eq!(back.apply(&base).unwrap(), tuned);
+    }
+
+    #[test]
+    fn sparse_delta_is_small_when_little_changed() {
+        let base = fedmlh_checkpoint(12);
+        let tuned = drifted(&base, 13, 0.05);
+        let delta = tuned.delta_against(&base, DeltaCodec::Sparse).unwrap();
+        let bytes = delta.to_bytes().unwrap();
+        assert!(
+            bytes.len() < tuned.dense_byte_size() / 2,
+            "sparse delta {} bytes vs dense {}",
+            bytes.len(),
+            tuned.dense_byte_size()
+        );
+        assert_eq!(delta.apply(&base).unwrap(), tuned);
+    }
+
+    #[test]
+    fn q8diff_delta_is_scale_bounded() {
+        let base = fedmlh_checkpoint(14);
+        let tuned = drifted(&base, 15, 1.0);
+        let delta = tuned.delta_against(&base, DeltaCodec::QuantI8Diff).unwrap();
+        let back = delta.apply(&base).unwrap();
+        for ((m_t, m_b), m_base) in
+            tuned.models.iter().zip(back.models.iter()).zip(base.models.iter())
+        {
+            for ((t_t, t_b), t_base) in
+                m_t.tensors.iter().zip(m_b.tensors.iter()).zip(m_base.tensors.iter())
+            {
+                // Error bound follows the *diff* magnitude, not the
+                // absolute parameter magnitude.
+                let max_diff = t_t
+                    .data()
+                    .iter()
+                    .zip(t_base.data().iter())
+                    .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+                let bound = max_diff / 127.0 * 0.5 + 1e-6;
+                let err = t_t.max_abs_diff(t_b).unwrap();
+                assert!(err <= bound, "err {err} vs diff bound {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_refuses_the_wrong_base() {
+        let base = fedmlh_checkpoint(16);
+        let other = drifted(&base, 17, 1.0);
+        let tuned = drifted(&base, 18, 1.0);
+        let delta = tuned.delta_against(&base, DeltaCodec::Sparse).unwrap();
+        let err = delta.apply(&other).unwrap_err();
+        assert!(err.to_string().contains("does not chain"), "{err}");
+    }
+
+    #[test]
+    fn delta_chain_applies_in_order_through_the_filesystem() {
+        let a = fedmlh_checkpoint(19);
+        let b = drifted(&a, 20, 0.3);
+        let c = drifted(&b, 21, 0.3);
+        let d_ab = b.delta_against(&a, DeltaCodec::Sparse).unwrap();
+        let d_bc = c.delta_against(&b, DeltaCodec::Sparse).unwrap();
+        let dir = std::env::temp_dir().join(format!("fedmlh_delta_{}", std::process::id()));
+        let base_path = dir.join("base.fmlh");
+        let p_ab = dir.join("d_ab.fmlh");
+        let p_bc = dir.join("d_bc.fmlh");
+        a.save(&base_path, CheckpointCodec::Dense).unwrap();
+        d_ab.save(&p_ab).unwrap();
+        d_bc.save(&p_bc).unwrap();
+        let chained =
+            Checkpoint::load_chain(&base_path, &[p_ab.clone(), p_bc.clone()]).unwrap();
+        assert_eq!(chained, c, "base + d(a→b) + d(b→c) must equal c bitwise");
+        // Out of order fails loudly on the checksum.
+        assert!(Checkpoint::load_chain(&base_path, &[p_bc, p_ab]).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn full_and_delta_magics_cross_reject_with_hints() {
+        let base = fedmlh_checkpoint(22);
+        let tuned = drifted(&base, 23, 1.0);
+        let delta = tuned.delta_against(&base, DeltaCodec::Sparse).unwrap();
+        let delta_bytes = delta.to_bytes().unwrap();
+        let full_bytes = base.to_bytes(CheckpointCodec::Dense).unwrap();
+        let err = Checkpoint::from_bytes(&delta_bytes).unwrap_err();
+        assert!(err.to_string().contains("delta checkpoint"), "{err}");
+        let err = DeltaCheckpoint::from_bytes(&full_bytes).unwrap_err();
+        assert!(err.to_string().contains("full checkpoint"), "{err}");
+        // corruption flips the checksum
+        let mut corrupt = delta_bytes.clone();
+        let mid = corrupt.len() / 2;
+        corrupt[mid] ^= 0x10;
+        assert!(DeltaCheckpoint::from_bytes(&corrupt).is_err());
     }
 
     #[test]

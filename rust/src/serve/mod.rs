@@ -9,7 +9,11 @@
 //!   sub-models (dense `f32` or wire-codec q8, ~4× smaller), the
 //!   derived hash seeds that reconstruct the [`crate::hashing`] tables
 //!   bit-identically, and the experiment metadata. Written by
-//!   `fedmlh run --save`, checksummed, corruption-rejecting.
+//!   `fedmlh run --save`, checksummed, corruption-rejecting. Plus
+//!   **delta checkpoints** (`FMLD`, `fedmlh run --save-delta`): what
+//!   changed vs a base checkpoint a device already holds, chain-applied
+//!   at load (`fedmlh serve --delta d1,d2`) — downlink-compressed
+//!   checkpoint *delivery*, reusing the training wire's delta framing.
 //! - [`infer`] — [`infer::InferenceEngine`] (feature-hash → R-model
 //!   forward → count-sketch decode → top-k; batching-invariant) and
 //!   [`infer::Predictor`], a worker pool that coalesces concurrent
@@ -26,7 +30,7 @@ pub mod http;
 pub mod infer;
 pub mod metrics;
 
-pub use checkpoint::{Checkpoint, CheckpointCodec, CheckpointMeta};
+pub use checkpoint::{Checkpoint, CheckpointCodec, CheckpointMeta, DeltaCheckpoint, DeltaCodec};
 pub use http::{Server, ServeOpts, ServerHandle};
 pub use infer::{InferenceEngine, Predictor};
 pub use metrics::{MetricsSnapshot, ServeMetrics};

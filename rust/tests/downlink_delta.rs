@@ -1,0 +1,254 @@
+//! The per-client versioned delta downlink, end to end:
+//!
+//! 1. `--down-codec topk:0.1` achieves ≥ 5× *measured* download
+//!    compression (`CommMeter::download_compression()`) on a real run,
+//!    with final accuracy within tolerance of the dense-downlink run;
+//! 2. resync correctness: a client sampled out past `--resync-every`
+//!    decodes to exactly the server's current broadcast base, bitwise,
+//!    on its next participation — driven through the `Transport`
+//!    facade with evolving globals;
+//! 3. the per-round `down_bytes`/`up_bytes` columns sum exactly to
+//!    `CommMeter::downloaded()`/`uploaded()` for every uplink ×
+//!    downlink codec combination (dense/q8/q8g × dense/q8/delta);
+//! 4. the delta downlink keeps the engine's worker-count invariance
+//!    (`workers = 4` bitwise equals `workers = 1`).
+
+use fedmlh::algo::scheme_for;
+use fedmlh::config::{Algo, ExperimentConfig};
+use fedmlh::data::synth::generate_preset;
+use fedmlh::federated::backend::RustBackend;
+use fedmlh::federated::server::{self, RunOutput};
+use fedmlh::federated::transport::{DownCodec, Transport};
+use fedmlh::federated::wire::CodecSpec;
+use fedmlh::model::params::ModelParams;
+use fedmlh::partition::noniid::{partition as noniid, NonIidOptions};
+use fedmlh::util::rng::Rng;
+
+struct RunSpec {
+    codec: CodecSpec,
+    down_codec: DownCodec,
+    resync_every: usize,
+    clients: usize,
+    per_round: usize,
+    rounds: usize,
+    workers: usize,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            codec: CodecSpec::Dense,
+            down_codec: DownCodec::Dense,
+            resync_every: 8,
+            clients: 4,
+            per_round: 4,
+            rounds: 8,
+            workers: 1,
+        }
+    }
+}
+
+fn run(spec: RunSpec) -> RunOutput {
+    let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+    cfg.rounds = spec.rounds;
+    cfg.patience = 0;
+    cfg.clients = spec.clients;
+    cfg.clients_per_round = spec.per_round;
+    cfg.local_epochs = 1;
+    cfg.codec = spec.codec;
+    cfg.down_codec = spec.down_codec;
+    cfg.resync_every = spec.resync_every;
+    cfg.workers = spec.workers;
+    let data = generate_preset(&cfg.preset, cfg.seed);
+    let part = noniid(&data.train, &NonIidOptions::new(cfg.clients), cfg.seed);
+    let scheme = scheme_for(&cfg, Algo::FedMlh, &data.train);
+    let backend = RustBackend::new();
+    server::run(
+        &cfg,
+        scheme.as_ref(),
+        &backend,
+        &data.train,
+        &data.test,
+        &part,
+    )
+    .unwrap()
+}
+
+/// Acceptance pin: a `topk:0.1` delta downlink pays ~0.5 bytes per
+/// parameter per delta (packed indices + f32 values) against 4 bytes
+/// dense, so even with every client's round-0 full resync amortized
+/// over 16 rounds the *measured* cumulative ratio clears 5×.
+#[test]
+fn topk_delta_downlink_compresses_5x_within_accuracy_tolerance() {
+    let delta = run(RunSpec {
+        down_codec: DownCodec::TopK { frac: 0.1 },
+        resync_every: 32,
+        rounds: 16,
+        ..RunSpec::default()
+    });
+    let dense = run(RunSpec {
+        rounds: 16,
+        ..RunSpec::default()
+    });
+
+    assert!(
+        delta.comm.download_compression() >= 5.0,
+        "measured download compression {:.2}x < 5x",
+        delta.comm.download_compression()
+    );
+    // The dense-equivalent side of the meter matches the dense run's
+    // actual downlink, so the ratio is anchored, not self-referential.
+    assert_eq!(delta.comm.downloaded_dense_equiv(), dense.comm.downloaded());
+    // The uplink stayed dense in both runs: identical wire bill.
+    assert_eq!(delta.comm.uploaded(), dense.comm.uploaded());
+    assert_eq!(delta.comm.upload_compression(), 1.0);
+
+    // Accuracy: the lossy per-client downlink must stay within
+    // tolerance of the dense-downlink run — the pending (unshipped)
+    // part of each broadcast stays in the client's base delta, so the
+    // signal is delayed, not destroyed.
+    assert!(
+        delta.best.mean_topk() >= dense.best.mean_topk() - 0.15,
+        "delta downlink accuracy {:.4} too far below dense {:.4}",
+        delta.best.mean_topk(),
+        dense.best.mean_topk()
+    );
+    // …and it genuinely learns (not just "within tolerance of nothing").
+    let first = delta.history.records.first().unwrap().accuracy.top1;
+    assert!(delta.best.top1 >= first, "no improvement under delta downlink");
+    assert!(delta.best.top1 > 0.02, "top1 {} not above chance", delta.best.top1);
+}
+
+/// Resync correctness (acceptance criterion): drive the transport
+/// facade round by round with drifting globals. A client that sits out
+/// k rounds within the staleness window gets a delta against its old
+/// base; one past `--resync-every` gets a full payload that lands it
+/// *bitwise* on the server's current broadcast base.
+#[test]
+fn sampled_out_client_resyncs_bitwise_past_the_cap() {
+    let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+    cfg.clients = 3;
+    cfg.clients_per_round = 2;
+    cfg.down_codec = DownCodec::TopK { frac: 0.2 };
+    cfg.resync_every = 2;
+    let mut transport = Transport::new(&cfg, 1).unwrap();
+
+    let mut global = ModelParams::init(12, 6, 10, 99);
+    let mut rng = Rng::new(1234);
+    let mut drift = |g: &ModelParams| {
+        let mut out = g.clone();
+        for t in out.tensors.iter_mut() {
+            for v in t.data_mut() {
+                *v += (rng.next_f32() - 0.5) * 0.05;
+            }
+        }
+        out
+    };
+
+    // Round 0: everyone syncs (full, bitwise).
+    let bcast = transport.broadcast(0, &[0, 1, 2], &[global.clone()]).unwrap();
+    for slot in 0..3 {
+        assert!(bcast.payload(slot, 0).is_full());
+        assert_eq!(bcast.global(slot, 0), &global);
+    }
+    let client2_base = bcast.global(2, 0).clone();
+
+    // Rounds 1–2: client 2 is sampled out; the others get deltas.
+    for round in 1..3 {
+        global = drift(&global);
+        let bcast = transport.broadcast(round, &[0, 1], &[global.clone()]).unwrap();
+        for slot in 0..2 {
+            assert!(
+                !bcast.payload(slot, 0).is_full(),
+                "round {round}: participating client must get a delta"
+            );
+        }
+    }
+
+    // Round 3: client 2's base is 3 versions old (> resync_every = 2) →
+    // full dense resync, bitwise at the current broadcast base. Client 0
+    // (gap 1) still gets a delta applied onto what it last decoded.
+    global = drift(&global);
+    let bcast = transport.broadcast(3, &[0, 2], &[global.clone()]).unwrap();
+    let p2 = bcast.payload(1, 0); // slot 1 = client 2
+    assert!(p2.is_full(), "stale client must get a full resync");
+    assert_eq!(
+        bcast.global(1, 0),
+        &global,
+        "resync must land bitwise on the server's broadcast base"
+    );
+    // The resync payload itself decodes bitwise too (wire-level check),
+    // and it is *not* what the client held before.
+    assert_eq!(&p2.decode_full(&global).unwrap(), &global);
+    assert_ne!(&client2_base, &global);
+    let p0 = bcast.payload(0, 0);
+    assert!(!p0.is_full(), "fresh client keeps delta service");
+    // Deltas are versioned; this round's payloads advertise version 4.
+    assert_eq!(p0.version(), 4);
+    assert_eq!(p2.version(), 4);
+}
+
+/// Satellite pin: `RoundRecord`'s per-round byte columns decompose the
+/// cumulative meter exactly, for every codec combination on both links
+/// — including the per-client delta downlink under partial
+/// participation (where different clients pay different byte counts).
+#[test]
+fn round_byte_columns_sum_to_the_meter_for_all_codec_combos() {
+    let uplinks = [
+        CodecSpec::Dense,
+        CodecSpec::QuantI8,
+        CodecSpec::QuantI8Group { block: 64 },
+    ];
+    let downlinks = [
+        DownCodec::Dense,
+        DownCodec::QuantI8,
+        DownCodec::TopK { frac: 0.2 },
+    ];
+    for codec in uplinks {
+        for down_codec in downlinks {
+            let out = run(RunSpec {
+                codec,
+                down_codec,
+                clients: 5,
+                per_round: 2,
+                rounds: 3,
+                ..RunSpec::default()
+            });
+            let tag = format!("{} × {}", codec.name(), down_codec.name());
+            assert_eq!(out.history.records.len(), 3, "{tag}: every round evaluated");
+            let down_sum: u64 = out.history.records.iter().map(|r| r.down_bytes).sum();
+            let up_sum: u64 = out.history.records.iter().map(|r| r.up_bytes).sum();
+            assert_eq!(down_sum, out.comm.downloaded(), "{tag}: down column");
+            assert_eq!(up_sum, out.comm.uploaded(), "{tag}: up column");
+            assert_eq!(down_sum + up_sum, out.comm.total(), "{tag}: total");
+            for rec in &out.history.records {
+                assert!(rec.down_bytes > 0 && rec.up_bytes > 0, "{tag}");
+            }
+        }
+    }
+}
+
+/// The delta downlink runs on the coordinator thread before the
+/// training fan-out, so its per-client state cannot be reordered by
+/// worker scheduling: `workers = 4` must be bitwise `workers = 1`.
+#[test]
+fn delta_downlink_is_worker_count_invariant() {
+    let spec = |workers| RunSpec {
+        down_codec: DownCodec::TopK { frac: 0.1 },
+        clients: 6,
+        per_round: 3,
+        rounds: 4,
+        workers,
+        ..RunSpec::default()
+    };
+    let seq = run(spec(1));
+    let par = run(spec(4));
+    assert_eq!(seq.final_globals, par.final_globals, "final parameters");
+    assert_eq!(seq.comm, par.comm, "comm meters");
+    assert_eq!(seq.best, par.best, "best accuracy");
+    for (a, b) in seq.history.records.iter().zip(par.history.records.iter()) {
+        assert_eq!(a.accuracy, b.accuracy, "round {}", a.round);
+        assert_eq!(a.down_bytes, b.down_bytes, "round {}", a.round);
+        assert_eq!(a.up_bytes, b.up_bytes, "round {}", a.round);
+    }
+}

@@ -13,7 +13,10 @@ use fedmlh::config::{Algo, ExperimentConfig};
 use fedmlh::data::synth::generate_preset;
 use fedmlh::federated::backend::RustBackend;
 use fedmlh::federated::server::{self, RunOutput};
-use fedmlh::federated::wire::{decode_update, encode_update, CodecSpec, EncodedUpdate};
+use fedmlh::federated::wire::{
+    apply_delta, decode_update, encode_changed, encode_delta, encode_update, CodecSpec,
+    EncodedUpdate,
+};
 use fedmlh::model::params::{ModelParams, N_PARAMS};
 use fedmlh::partition::noniid::{partition as noniid, NonIidOptions};
 use fedmlh::util::prop::{check, Gen};
@@ -79,6 +82,78 @@ fn topk_full_fraction_equals_dense() {
 }
 
 #[test]
+fn grouped_quantization_roundtrips_within_per_block_bounds() {
+    // The q8g contract (ROADMAP "group-wise" item): every element's
+    // reconstruction error is at most half of its *block's* scale — a
+    // strictly local bound, unlike q8's per-tensor one.
+    check("q8g per-block scale bound", 25, |g: &mut Gen| {
+        let (global, local) = random_pair(g);
+        let block = g.usize_in(1, 16);
+        let spec = CodecSpec::QuantI8Group { block };
+        let enc = encode_update(spec, &global, &local).unwrap();
+        // Wire roundtrip is exact (the payload is already quantized).
+        let bytes = enc.to_bytes();
+        assert_eq!(enc.byte_len(), bytes.len());
+        let back =
+            EncodedUpdate::from_bytes(spec, N_PARAMS, global.num_params(), &bytes).unwrap();
+        assert_eq!(back, enc);
+        // Per-element error ≤ per-block scale / 2.
+        let decoded = decode_update(&global, &enc).unwrap();
+        for (t_local, t_dec) in local.tensors.iter().zip(decoded.tensors.iter()) {
+            let chunks = t_local.data().chunks(block).zip(t_dec.data().chunks(block));
+            for (chunk_l, chunk_d) in chunks {
+                let scale = chunk_l.iter().fold(0.0f32, |m, &v| m.max(v.abs())) / 127.0;
+                for (&a, &b) in chunk_l.iter().zip(chunk_d.iter()) {
+                    assert!(
+                        (a - b).abs() <= 0.5 * scale + 1e-7,
+                        "block {block}: err {} vs scale {scale}",
+                        (a - b).abs()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn delta_framing_applies_back_to_the_target() {
+    // encode_delta/apply_delta on every codec family: sparse replaces,
+    // quantized diffs, dense is lossless; encode_changed is bitwise.
+    check("delta framing", 25, |g: &mut Gen| {
+        let (base, target) = random_pair(g);
+        // Lossless paths reconstruct the target exactly.
+        for enc in [
+            encode_delta(CodecSpec::Dense, &base, &target).unwrap(),
+            encode_changed(&base, &target).unwrap(),
+        ] {
+            assert_eq!(apply_delta(&base, &enc).unwrap(), target);
+        }
+        // Sparse replacement: selected coordinates land exactly on the
+        // target, unselected stay at the base.
+        let frac = g.f32_in(0.05, 0.9);
+        let enc = encode_delta(CodecSpec::TopKPacked { frac }, &base, &target).unwrap();
+        let back = apply_delta(&base, &enc).unwrap();
+        let (bf, tf, rf) = (base.flat_values(), target.flat_values(), back.flat_values());
+        for i in 0..bf.len() {
+            assert!(
+                rf[i].to_bits() == tf[i].to_bits() || rf[i].to_bits() == bf[i].to_bits(),
+                "coordinate {i} is neither base nor target"
+            );
+        }
+        // Quantized diff: error bounded by the diff magnitude.
+        let enc = encode_delta(CodecSpec::QuantI8, &base, &target).unwrap();
+        let back = apply_delta(&base, &enc).unwrap();
+        let max_diff = bf
+            .iter()
+            .zip(tf.iter())
+            .fold(0.0f32, |m, (b, t)| m.max((t - b).abs()));
+        for (t, r) in tf.iter().zip(back.flat_values().iter()) {
+            assert!((t - r).abs() <= max_diff / 127.0 * 0.5 + 2e-6);
+        }
+    });
+}
+
+#[test]
 fn byte_len_always_equals_encoded_buffer_length() {
     check("byte_len == to_bytes().len()", 25, |g: &mut Gen| {
         let (global, local) = random_pair(g);
@@ -86,6 +161,7 @@ fn byte_len_always_equals_encoded_buffer_length() {
         for spec in [
             CodecSpec::Dense,
             CodecSpec::QuantI8,
+            CodecSpec::QuantI8Group { block: 16 },
             CodecSpec::TopK { frac },
             CodecSpec::TopKPacked { frac },
         ] {
@@ -208,6 +284,7 @@ fn packed_topk_real_round_compresses_beyond_raw_topk() {
 fn compressed_runs_still_learn() {
     for codec in [
         CodecSpec::QuantI8,
+        CodecSpec::QuantI8Group { block: 64 },
         CodecSpec::TopK { frac: 0.25 },
         CodecSpec::TopKPacked { frac: 0.25 },
     ] {
