@@ -6,6 +6,7 @@ pub mod presets;
 
 use anyhow::{bail, Result};
 
+use crate::federated::sim::Dist;
 use crate::federated::transport::DownCodec;
 use crate::federated::wire::CodecSpec;
 
@@ -34,6 +35,120 @@ impl Algo {
             "fedmlh" => Ok(Algo::FedMlh),
             other => bail!("unknown algo '{other}' (expected fedavg|fedmlh)"),
         }
+    }
+}
+
+/// Event-driven simulation setup (CLI: `--async` and friends). Only
+/// consulted when `async_mode` is on; the synchronous loop ignores it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Run the buffered-async (FedBuff-style) event-driven simulator
+    /// instead of the synchronous sample→train→barrier→aggregate loop.
+    pub async_mode: bool,
+    /// Virtual client registry size (0 = `clients`). Registry client
+    /// `c` trains on data shard `c % clients`, and per-client state is
+    /// derived lazily from the seed — memory stays proportional to
+    /// in-flight clients, never to the registry.
+    pub registry: usize,
+    /// Aggregate once this many updates have arrived (FedBuff's K).
+    pub buffer: usize,
+    /// Clients training/transferring concurrently in simulated time.
+    pub concurrency: usize,
+    /// Probability a dispatched client drops mid-round (it is charged
+    /// its broadcast download but ships nothing back).
+    pub dropout: f64,
+    /// Per-client compute seconds *per local epoch*, drawn once per
+    /// client from this distribution.
+    pub latency: Dist,
+    /// Per-client link bandwidth in Mbit/s, drawn independently for the
+    /// down and up directions.
+    pub bandwidth: Dist,
+    /// Staleness-weight exponent: an update `s` aggregations stale is
+    /// weighted `(1 + s)^-exp` (FedBuff uses 0.5).
+    pub staleness_exp: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            async_mode: false,
+            registry: 0,
+            buffer: 10,
+            concurrency: 32,
+            dropout: 0.0,
+            latency: Dist::LogNormal {
+                median: 2.0,
+                sigma: 0.7,
+            },
+            bandwidth: Dist::LogNormal {
+                median: 20.0,
+                sigma: 0.8,
+            },
+            staleness_exp: 0.5,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Named scenario presets (CLI: `--scenario`); explicit sim flags
+    /// override individual fields afterwards.
+    pub fn scenario(name: &str) -> Result<SimConfig> {
+        let base = SimConfig {
+            async_mode: true,
+            ..SimConfig::default()
+        };
+        Ok(match name {
+            // Small enough for CI: 10k registry, light dropout.
+            "smoke" => SimConfig {
+                registry: 10_000,
+                buffer: 20,
+                concurrency: 40,
+                dropout: 0.1,
+                ..base
+            },
+            // The ROADMAP's simulated-million-client target.
+            "million" => SimConfig {
+                registry: 1_000_000,
+                buffer: 50,
+                concurrency: 128,
+                dropout: 0.2,
+                latency: Dist::LogNormal {
+                    median: 3.0,
+                    sigma: 1.0,
+                },
+                bandwidth: Dist::LogNormal {
+                    median: 10.0,
+                    sigma: 1.0,
+                },
+                ..base
+            },
+            other => bail!("unknown scenario '{other}' (expected smoke|million)"),
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.async_mode {
+            return Ok(());
+        }
+        if self.buffer == 0 {
+            bail!("--buffer must be positive");
+        }
+        if self.concurrency == 0 {
+            bail!("--concurrency must be positive");
+        }
+        if !(0.0..1.0).contains(&self.dropout) {
+            bail!("--dropout must be in [0, 1): {}", self.dropout);
+        }
+        if !(self.staleness_exp >= 0.0) {
+            bail!("--staleness-exp must be >= 0: {}", self.staleness_exp);
+        }
+        self.latency
+            .validate()
+            .map_err(|e| anyhow::anyhow!("latency distribution: {e}"))?;
+        self.bandwidth
+            .validate()
+            .map_err(|e| anyhow::anyhow!("bandwidth distribution: {e}"))?;
+        Ok(())
     }
 }
 
@@ -92,6 +207,10 @@ pub struct ExperimentConfig {
     /// the server folds the broadcast's quantization error into the
     /// next broadcast. Off = the stateless seed pipeline.
     pub error_feedback: bool,
+    /// Event-driven async simulation setup (CLI: `--async`, `--buffer`,
+    /// `--dropout`, …). `async_mode = false` (the default) keeps the
+    /// synchronous loop and every seed trajectory untouched.
+    pub sim: SimConfig,
 }
 
 impl ExperimentConfig {
@@ -115,6 +234,7 @@ impl ExperimentConfig {
             down_codec: DownCodec::Dense,
             resync_every: 8,
             error_feedback: false,
+            sim: SimConfig::default(),
         }
     }
 
@@ -138,6 +258,19 @@ impl ExperimentConfig {
             self.override_b
         } else {
             self.preset.b
+        }
+    }
+
+    /// The client population a run addresses: the virtual registry
+    /// under the async simulator, the partition's clients otherwise.
+    /// Used as the per-item seed stride, so it never shrinks below
+    /// `clients` (a registry smaller than the shard count still maps
+    /// onto every shard).
+    pub fn client_population(&self) -> usize {
+        if self.sim.async_mode && self.sim.registry > 0 {
+            self.sim.registry.max(self.clients)
+        } else {
+            self.clients
         }
     }
 
@@ -199,6 +332,7 @@ impl ExperimentConfig {
             .wire_spec()
             .validate()
             .map_err(|e| anyhow::anyhow!("downlink codec: {e}"))?;
+        self.sim.validate()?;
         Ok(())
     }
 }
@@ -286,6 +420,39 @@ mod tests {
         cfg.down_codec = DownCodec::QuantI8Group { block: 32 };
         cfg.resync_every = 0; // "resync every participation" is valid
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn sim_defaults_and_validation() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        assert!(!cfg.sim.async_mode);
+        assert_eq!(cfg.client_population(), cfg.clients);
+        // sim fields are ignored while async is off
+        cfg.sim.buffer = 0;
+        cfg.validate().unwrap();
+        // ... and enforced once it is on
+        cfg.sim.async_mode = true;
+        assert!(cfg.validate().is_err(), "buffer 0 must fail");
+        cfg.sim.buffer = 4;
+        cfg.validate().unwrap();
+        cfg.sim.dropout = 1.0;
+        assert!(cfg.validate().is_err(), "dropout 1.0 never finishes");
+        cfg.sim.dropout = 0.3;
+        cfg.sim.registry = 1_000_000;
+        cfg.validate().unwrap();
+        assert_eq!(cfg.client_population(), 1_000_000);
+        cfg.sim.latency = Dist::Fixed { value: 0.0 };
+        assert!(cfg.validate().is_err(), "zero latency must fail");
+    }
+
+    #[test]
+    fn sim_scenarios_resolve() {
+        let smoke = SimConfig::scenario("smoke").unwrap();
+        assert!(smoke.async_mode);
+        assert_eq!(smoke.registry, 10_000);
+        let million = SimConfig::scenario("million").unwrap();
+        assert_eq!(million.registry, 1_000_000);
+        assert!(SimConfig::scenario("nope").is_err());
     }
 
     #[test]

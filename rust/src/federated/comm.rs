@@ -123,8 +123,10 @@ impl CommMeter {
 
 /// Closed-form per-round volume: `clients × (down + up) × model_bytes ×
 /// n_models` — used by tests and the Table 4 analytic cross-check.
+/// Widened to `u64` *before* multiplying: the old `usize` product
+/// overflowed 32-bit targets at million-client × MB-model scale.
 pub fn expected_round_bytes(clients: usize, model_bytes: usize, n_models: usize) -> u64 {
-    (clients * 2 * model_bytes * n_models) as u64
+    clients as u64 * 2 * model_bytes as u64 * n_models as u64
 }
 
 /// Pretty-print bytes the way the paper's Table 4 does (Mb/Gb).
@@ -144,6 +146,19 @@ pub fn format_bytes(bytes: u64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn expected_round_bytes_is_u64_wide() {
+        // 1M clients × 250MB sub-model × 4 sub-models = 2×10^15 bytes —
+        // far past u32::MAX, where 32-bit usize arithmetic wrapped.
+        assert_eq!(
+            expected_round_bytes(1_000_000, 250_000_000, 4),
+            2_000_000_000_000_000u64
+        );
+        // a single factor at 2^31 already exceeds 32-bit usize
+        assert_eq!(expected_round_bytes(3, 1 << 31, 1), 3 * 2 * (1u64 << 31));
+        assert_eq!(expected_round_bytes(0, 1 << 31, 7), 0);
+    }
 
     #[test]
     fn accumulates_and_snapshots() {

@@ -112,18 +112,27 @@ impl RoundEngine {
         // closure itself only captures Sync data.
         let run_item = |be: &dyn TrainBackend, slot: usize, j: usize| -> Result<ClientUpdate> {
             let client = selected[slot];
-            let shard = &partition.clients[client];
+            // `shard` maps virtual registry ids onto real partition
+            // shards; for the synchronous loop (client < shard count)
+            // it is the historical `&partition.clients[client]`.
+            let shard = partition.shard(client);
             let global = bcast.global(slot, j);
             let mut local = global.clone();
+            // Seed stride = the full client population (registry under
+            // --async), computed in u64 so million-client ids don't
+            // overflow; identical to the old usize arithmetic for every
+            // synchronous configuration.
+            let stream = (round as u64)
+                .wrapping_mul(cfg.client_population() as u64)
+                .wrapping_add(client as u64)
+                .wrapping_mul(n_models as u64)
+                .wrapping_add(j as u64);
             let mut batcher = ClientBatcher::new(
                 train,
                 shard,
                 scheme.target(j),
                 cfg.preset.batch,
-                derive_seed(
-                    cfg.seed,
-                    ((round * cfg.clients + client) * n_models + j) as u64,
-                ),
+                derive_seed(cfg.seed, stream),
             );
             let stats = be.local_train(&mut local, &mut batcher, cfg.local_epochs, cfg.lr)?;
             let t_enc = std::time::Instant::now();

@@ -40,6 +40,11 @@ pub struct RoundRecord {
     pub mean_loss: f64,
     /// Train / encode / aggregate split of this round.
     pub timing: RoundTiming,
+    /// Simulated wall-clock at the end of this round under the
+    /// event-driven `--async` simulator (0 for the synchronous loop,
+    /// whose clocks are real). This is the x-axis of the
+    /// wall-clock-vs-accuracy curves.
+    pub sim_seconds: f64,
 }
 
 /// The full run history.
@@ -66,12 +71,20 @@ impl History {
     }
 
     /// Record with the best mean top-k accuracy (paper's "best accuracy").
+    ///
+    /// NaN-last total ordering: a diverged round (NaN loss propagating
+    /// into the accuracy report) must never panic the comparator or win
+    /// over a real number. If *every* round is NaN one of them is still
+    /// returned rather than none, so the run still reports a round.
     pub fn best(&self) -> Option<&RoundRecord> {
         self.records.iter().max_by(|a, b| {
-            a.accuracy
-                .mean_topk()
-                .partial_cmp(&b.accuracy.mean_topk())
-                .unwrap()
+            let (x, y) = (a.accuracy.mean_topk(), b.accuracy.mean_topk());
+            match (x.is_nan(), y.is_nan()) {
+                (true, true) => std::cmp::Ordering::Equal,
+                (true, false) => std::cmp::Ordering::Less,
+                (false, true) => std::cmp::Ordering::Greater,
+                (false, false) => x.partial_cmp(&y).expect("both non-NaN"),
+            }
         })
     }
 
@@ -105,12 +118,12 @@ impl History {
     /// CSV with one row per evaluated round (figure regeneration).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,top1,top3,top5,freq1,freq3,freq5,infreq1,infreq3,infreq5,comm_bytes,down_bytes,up_bytes,round_seconds,mean_loss,train_seconds,encode_seconds,aggregate_seconds\n",
+            "round,top1,top3,top5,freq1,freq3,freq5,infreq1,infreq3,infreq5,comm_bytes,down_bytes,up_bytes,round_seconds,mean_loss,train_seconds,encode_seconds,aggregate_seconds,sim_seconds\n",
         );
         for r in &self.records {
             let a = &r.accuracy;
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{:.4},{:.6},{:.4},{:.4},{:.4}\n",
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{:.4},{:.6},{:.4},{:.4},{:.4},{:.4}\n",
                 r.round,
                 a.top1,
                 a.top3,
@@ -128,7 +141,8 @@ impl History {
                 r.mean_loss,
                 r.timing.train_seconds,
                 r.timing.encode_seconds,
-                r.timing.aggregate_seconds
+                r.timing.aggregate_seconds,
+                r.sim_seconds
             ));
         }
         out
@@ -154,6 +168,7 @@ impl History {
                         ("train_seconds", Json::num(r.timing.train_seconds)),
                         ("encode_seconds", Json::num(r.timing.encode_seconds)),
                         ("aggregate_seconds", Json::num(r.timing.aggregate_seconds)),
+                        ("sim_seconds", Json::num(r.sim_seconds)),
                     ])
                 })
                 .collect(),
@@ -184,6 +199,7 @@ mod tests {
                 encode_seconds: secs * 0.1,
                 aggregate_seconds: secs * 0.3,
             },
+            sim_seconds: secs * 2.0,
         }
     }
 
@@ -224,9 +240,30 @@ mod tests {
         h.push(rec(0, 0.25, 1.5));
         let csv = h.to_csv();
         assert!(csv.lines().next().unwrap().ends_with(
-            "train_seconds,encode_seconds,aggregate_seconds"
+            "train_seconds,encode_seconds,aggregate_seconds,sim_seconds"
         ));
-        assert!(csv.lines().nth(1).unwrap().ends_with("0.9000,0.1500,0.4500"));
+        // rec(secs = 1.5): split 0.9/0.15/0.45, simulated clock 3.0.
+        assert!(csv
+            .lines()
+            .nth(1)
+            .unwrap()
+            .ends_with("0.9000,0.1500,0.4500,3.0000"));
+    }
+
+    #[test]
+    fn best_survives_nan_rounds() {
+        // A diverged round (NaN loss → NaN accuracy) used to panic the
+        // partial_cmp().unwrap() comparator; it must sort last instead.
+        let mut h = History::new();
+        h.push(rec(0, 0.2, 1.0));
+        h.push(rec(1, f64::NAN, 1.0));
+        h.push(rec(2, 0.4, 1.0));
+        assert_eq!(h.best().unwrap().round, 2);
+
+        let mut all_nan = History::new();
+        all_nan.push(rec(0, f64::NAN, 1.0));
+        all_nan.push(rec(1, f64::NAN, 1.0));
+        assert!(all_nan.best().is_some(), "all-NaN history still reports");
     }
 
     #[test]

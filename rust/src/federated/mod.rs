@@ -51,12 +51,14 @@ pub mod engine;
 pub mod history;
 pub mod sampler;
 pub mod server;
+pub mod sim;
 pub mod transport;
 pub mod wire;
 
 pub use backend::{RustBackend, TrainBackend};
 pub use engine::RoundEngine;
 pub use server::{run, RunOutput};
+pub use sim::{run_async, ClientRegistry, Dist, SimStats};
 pub use transport::{
     DeltaDownlink, DownCodec, DownlinkCompressor, DownlinkPayload, FeedbackUplink,
     FoldingDownlink, PayloadKind, RoundBroadcast, StatelessDownlink, StatelessUplink, Transport,

@@ -51,6 +51,7 @@ use super::early_stop::EarlyStopper;
 use super::engine::RoundEngine;
 use super::history::{History, RoundRecord, RoundTiming};
 use super::sampler::ClientSampler;
+use super::sim::SimStats;
 use super::transport::Transport;
 
 /// Everything a finished run reports (inputs to Tables 3–7, Figs 3–5).
@@ -73,6 +74,9 @@ pub struct RunOutput {
     /// The trained global sub-models at the end of the run (used by the
     /// determinism tests and by callers that evaluate further).
     pub final_globals: Vec<ModelParams>,
+    /// Event-driven simulation statistics; `Some` only for runs through
+    /// [`super::sim::run_async`], `None` for the synchronous loop.
+    pub sim: Option<SimStats>,
 }
 
 /// Run one federated training experiment.
@@ -220,6 +224,7 @@ pub fn run(
                 round_seconds,
                 mean_loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 },
                 timing,
+                sim_seconds: 0.0,
             });
             if stopper.observe(round, report.mean_topk()) {
                 break 'rounds;
@@ -241,12 +246,15 @@ pub fn run(
         history,
         comm,
         final_globals: globals,
+        sim: None,
     })
 }
 
 /// Full test-set evaluation: predict per sub-model, decode, top-k.
+/// Shared with the async simulator ([`super::sim`]), which evaluates on
+/// the same grid after each buffered aggregation.
 #[allow(clippy::too_many_arguments)]
-fn evaluate(
+pub(crate) fn evaluate(
     scheme: &dyn LabelScheme,
     backend: &dyn TrainBackend,
     globals: &[ModelParams],

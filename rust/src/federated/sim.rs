@@ -1,0 +1,811 @@
+//! Event-driven asynchronous federation at simulated-million-client
+//! scale.
+//!
+//! The synchronous loop ([`super::server`]) advances in lock-step
+//! rounds; real cross-device deployments don't. This module simulates
+//! the deployment regime the paper targets — extreme classification
+//! over huge device fleets — with three pieces:
+//!
+//! 1. **A virtual client registry** ([`ClientRegistry`]): millions of
+//!    client *records*, each a seeded latency/bandwidth profile derived
+//!    on demand from `derive_seed(seed, PROFILE_TAG ^ id)`. No
+//!    per-client allocation happens until a client is actually
+//!    dispatched, so registry size is free — memory scales with the
+//!    concurrency window, not the population. Registry ids map onto
+//!    data shards via [`Partition::shard`] (wrap-around), so a
+//!    million-client fleet trains over a K-shard partition.
+//! 2. **A deterministic event clock**: a binary heap of
+//!    [`Event`]s ordered by `(simulated time, dispatch sequence)` via
+//!    `f64::total_cmp` — ties are impossible to mis-order, so the event
+//!    trace (and therefore every downstream number) is bitwise
+//!    reproducible for a fixed seed, independent of `--workers`.
+//!    Client compute executes *at dispatch time* on the coordinator
+//!    thread in deterministic event order; only its simulated duration
+//!    is scheduled.
+//! 3. **Buffered asynchronous aggregation** (FedBuff-style): arrivals
+//!    accumulate in a buffer; once `--buffer K` land, the server folds
+//!    the staleness-weighted mean delta into the globals and bumps its
+//!    version. An update trained against version `v` applied at version
+//!    `V` has staleness `V − v` and weight `(1 + V − v)^(-exp)`.
+//!
+//! Dropout is injected mid-round from a per-dispatch seeded RNG: a
+//! dropped client is charged its *download* (the broadcast was sent)
+//! but never uploads and never trains — the dispatch slot is simply
+//! refilled.
+//!
+//! All timing columns in the resulting [`History`] carry *simulated*
+//! seconds (`train_seconds` = simulated compute, `encode_seconds` =
+//! simulated transfer, `sim_seconds` = the event clock at aggregation),
+//! which is what makes the async history CSV bitwise reproducible —
+//! wall-clock never leaks into a record.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, Result};
+
+use crate::algo::LabelScheme;
+use crate::config::ExperimentConfig;
+use crate::data::dataset::{batch_ranges, Dataset};
+use crate::data::stats::LabelStats;
+use crate::model::params::ModelParams;
+use crate::partition::Partition;
+use crate::util::rng::{derive_seed, Rng};
+
+use super::backend::TrainBackend;
+use super::comm::CommMeter;
+use super::early_stop::EarlyStopper;
+use super::engine::{ClientUpdate, RoundEngine};
+use super::history::{History, RoundRecord, RoundTiming};
+use super::sampler::ClientSampler;
+use super::server::{evaluate, RunOutput};
+use super::transport::Transport;
+
+/// Seed-stream tag for client profiles (xor'd with the client id).
+const PROFILE_TAG: u64 = 0x51c0_b0de_0000_0000;
+/// Seed-stream tag for per-dispatch dropout fate (xor'd with the seq).
+const DROPOUT_TAG: u64 = 0xa51d_0000_0000_0000;
+
+// ---------------------------------------------------------------------
+// Latency / bandwidth distributions
+// ---------------------------------------------------------------------
+
+/// A positive-valued sampling distribution for client system profiles,
+/// parseable from the CLI (`fixed:<v> | uniform:<lo>,<hi> |
+/// lognormal:<median>,<sigma>`).
+///
+/// Log-normal is the default shape: device speed and link quality in
+/// real fleets are heavy-tailed, and the straggler tail is exactly what
+/// asynchronous aggregation exists to absorb.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Dist {
+    /// Every sample is `value`.
+    Fixed { value: f64 },
+    /// Uniform on `[lo, hi)`.
+    Uniform { lo: f64, hi: f64 },
+    /// `median * exp(sigma * N(0,1))` — median-parameterized so the
+    /// CLI number is directly interpretable.
+    LogNormal { median: f64, sigma: f64 },
+}
+
+impl Dist {
+    /// Parse a CLI spec. Inverse of [`Dist::name`].
+    pub fn parse(s: &str) -> Result<Dist> {
+        let (kind, rest) = s.split_once(':').unwrap_or((s, ""));
+        let args: Vec<f64> = if rest.is_empty() {
+            vec![]
+        } else {
+            rest.split(',')
+                .map(|a| {
+                    a.trim()
+                        .parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("bad number '{a}' in distribution '{s}'"))
+                })
+                .collect::<Result<_>>()?
+        };
+        let dist = match (kind, args.as_slice()) {
+            ("fixed", [value]) => Dist::Fixed { value: *value },
+            ("uniform", [lo, hi]) => Dist::Uniform { lo: *lo, hi: *hi },
+            ("lognormal", [median, sigma]) => Dist::LogNormal {
+                median: *median,
+                sigma: *sigma,
+            },
+            _ => bail!(
+                "unknown distribution '{s}' \
+                 (expected fixed:<v> | uniform:<lo>,<hi> | lognormal:<median>,<sigma>)"
+            ),
+        };
+        dist.validate()?;
+        Ok(dist)
+    }
+
+    /// The canonical spec string ([`Dist::parse`] round-trips it).
+    pub fn name(&self) -> String {
+        match self {
+            Dist::Fixed { value } => format!("fixed:{value}"),
+            Dist::Uniform { lo, hi } => format!("uniform:{lo},{hi}"),
+            Dist::LogNormal { median, sigma } => format!("lognormal:{median},{sigma}"),
+        }
+    }
+
+    /// Parameters must yield strictly positive samples.
+    pub fn validate(&self) -> Result<()> {
+        let ok = match self {
+            Dist::Fixed { value } => *value > 0.0,
+            Dist::Uniform { lo, hi } => *lo > 0.0 && *hi >= *lo,
+            Dist::LogNormal { median, sigma } => *median > 0.0 && *sigma >= 0.0,
+        };
+        if !ok {
+            bail!("distribution '{}' needs positive parameters", self.name());
+        }
+        Ok(())
+    }
+
+    /// Draw one sample (always `> 0` for validated parameters).
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            Dist::Fixed { value } => *value,
+            Dist::Uniform { lo, hi } => rng.range_f64(*lo, *hi),
+            Dist::LogNormal { median, sigma } => median * (sigma * rng.gaussian()).exp(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Virtual client registry
+// ---------------------------------------------------------------------
+
+/// One client's system profile — derived, never stored.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientProfile {
+    /// Simulated seconds to run one local epoch.
+    pub compute_seconds_per_epoch: f64,
+    /// Downlink throughput in bytes per simulated second.
+    pub down_bytes_per_second: f64,
+    /// Uplink throughput in bytes per simulated second.
+    pub up_bytes_per_second: f64,
+}
+
+/// A population of virtual clients addressed by id in `[0, clients)`.
+///
+/// Profiles are a pure function of `(seed, id)`, so a million-client
+/// registry costs 4 words: sampling client 782_113 twice — even across
+/// separate runs — yields the identical profile without any state.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientRegistry {
+    clients: usize,
+    seed: u64,
+    latency: Dist,
+    bandwidth: Dist,
+}
+
+impl ClientRegistry {
+    pub fn new(clients: usize, seed: u64, latency: Dist, bandwidth: Dist) -> Self {
+        assert!(clients > 0, "registry needs at least one client");
+        ClientRegistry {
+            clients,
+            seed,
+            latency,
+            bandwidth,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.clients
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clients == 0
+    }
+
+    /// Derive client `id`'s profile. Latency samples are seconds per
+    /// epoch; bandwidth samples are Mbit/s, converted to bytes/s (down
+    /// and up drawn independently from the same distribution).
+    pub fn profile(&self, id: usize) -> ClientProfile {
+        debug_assert!(id < self.clients);
+        let mut rng = Rng::new(derive_seed(self.seed, PROFILE_TAG ^ id as u64));
+        let compute = self.latency.sample(&mut rng);
+        let down_mbps = self.bandwidth.sample(&mut rng);
+        let up_mbps = self.bandwidth.sample(&mut rng);
+        ClientProfile {
+            compute_seconds_per_epoch: compute,
+            down_bytes_per_second: down_mbps * 1e6 / 8.0,
+            up_bytes_per_second: up_mbps * 1e6 / 8.0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Staleness-weighted buffered aggregation
+// ---------------------------------------------------------------------
+
+/// FedBuff-style staleness discount: an update trained against a base
+/// `staleness` versions behind the server weighs
+/// `(1 + staleness)^(-exp)`. `exp = 0` disables the discount;
+/// `exp = 0.5` is the literature's default.
+pub fn staleness_weight(staleness: u64, exp: f64) -> f64 {
+    (1.0 + staleness as f64).powf(-exp)
+}
+
+/// One arrived client update, reduced to its per-sub-model deltas
+/// (decoded update − broadcast base) and its staleness weight.
+#[derive(Clone, Debug)]
+pub struct WeightedUpdate {
+    pub weight: f64,
+    pub staleness: u64,
+    /// Per-sub-model delta the client contributed.
+    pub deltas: Vec<ModelParams>,
+}
+
+/// Fold one buffer of weighted updates into the globals:
+/// `global_j += Σ_i w_i · δ_ij / Σ_i w_i` for each sub-model `j`.
+pub fn apply_buffered(globals: &mut [ModelParams], buffer: &[WeightedUpdate]) -> Result<()> {
+    if buffer.is_empty() {
+        bail!("buffered aggregation over an empty buffer");
+    }
+    let w_sum: f64 = buffer.iter().map(|u| u.weight).sum();
+    if !(w_sum > 0.0) {
+        bail!("staleness weights sum to {w_sum}, expected > 0");
+    }
+    for (j, global) in globals.iter_mut().enumerate() {
+        for u in buffer {
+            global.accumulate(&u.deltas[j], (u.weight / w_sum) as f32)?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// The event queue
+// ---------------------------------------------------------------------
+
+/// Counters a finished async run reports alongside the usual output.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SimStats {
+    /// Clients dispatched (each charged a download).
+    pub dispatched: u64,
+    /// Updates that arrived back (each charged an upload).
+    pub arrived: u64,
+    /// Dispatches lost to mid-round dropout (download only).
+    pub dropped: u64,
+    /// Buffered aggregations applied (= final server version).
+    pub aggregations: u64,
+    /// Simulated wall-clock at the end of the run.
+    pub sim_seconds: f64,
+    /// Mean staleness over arrived updates.
+    pub mean_staleness: f64,
+    /// Worst staleness any applied update carried.
+    pub max_staleness: u64,
+}
+
+enum EventKind {
+    /// A client's update lands at the server.
+    Arrival {
+        /// Server version the client's broadcast base was at.
+        base_version: u64,
+        /// The decoded broadcast bases the client trained from (one per
+        /// sub-model) — needed to decode and difference the update.
+        bases: Vec<ModelParams>,
+        /// The trained, wire-encoded updates (one per sub-model).
+        updates: Vec<ClientUpdate>,
+        /// Simulated compute seconds the client spent.
+        compute_seconds: f64,
+        /// Simulated transfer seconds (download + upload).
+        transfer_seconds: f64,
+    },
+    /// A dispatched client dies mid-round; nothing arrives.
+    Dropout,
+}
+
+struct Event {
+    /// Simulated time the event fires.
+    time: f64,
+    /// Dispatch sequence number — the deterministic tie-breaker.
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // total_cmp gives f64 a total order (no NaN panics, -0 < +0),
+        // and the seq tie-break makes simultaneous events deterministic.
+        self.time
+            .total_cmp(&other.time)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+// ---------------------------------------------------------------------
+// The async loop
+// ---------------------------------------------------------------------
+
+struct AsyncLoop<'a> {
+    cfg: &'a ExperimentConfig,
+    scheme: &'a dyn LabelScheme,
+    backend: &'a dyn TrainBackend,
+    train: &'a Dataset,
+    partition: &'a Partition,
+    engine: RoundEngine,
+    registry: ClientRegistry,
+    sampler: ClientSampler,
+    transport: Transport,
+    comm: CommMeter,
+    globals: Vec<ModelParams>,
+    model_bytes_each: usize,
+    n_models: usize,
+    queue: BinaryHeap<Reverse<Event>>,
+    /// The simulated clock — the time of the event being handled.
+    now: f64,
+    /// Server model version (= aggregations applied so far).
+    version: u64,
+    /// Monotone dispatch counter; doubles as sampler round and event
+    /// tie-breaker.
+    dispatch_seq: u64,
+    buffer: Vec<WeightedUpdate>,
+    // Per-aggregation-window accumulators (reset after each apply).
+    window_start: f64,
+    window_loss_sum: f64,
+    window_loss_n: usize,
+    window_train_seconds: f64,
+    window_transfer_seconds: f64,
+    down_mark: u64,
+    up_mark: u64,
+    stats: SimStats,
+    staleness_sum_total: f64,
+}
+
+impl<'a> AsyncLoop<'a> {
+    /// Dispatch one sampled client: broadcast to it, charge the
+    /// download, run its local training *now* (deterministic order),
+    /// and schedule the arrival — or a dropout — on the event clock.
+    fn dispatch(&mut self) -> Result<()> {
+        let seq = self.dispatch_seq;
+        self.dispatch_seq += 1;
+        self.stats.dispatched += 1;
+
+        let client = self.sampler.sample(seq as usize)[0];
+        let profile = self.registry.profile(client);
+
+        let bcast = self.transport.broadcast(seq as usize, &[client], &self.globals)?;
+        let mut down_bytes = 0u64;
+        for j in 0..self.n_models {
+            let b = bcast.payload(0, j).byte_len();
+            self.comm.download_encoded(b, self.model_bytes_each);
+            down_bytes += b as u64;
+        }
+        let t_down = down_bytes as f64 / profile.down_bytes_per_second;
+        let t_compute = profile.compute_seconds_per_epoch * self.cfg.local_epochs as f64;
+
+        // Per-dispatch fate stream: one bernoulli, and — only when it
+        // fires — a mid-compute fraction for the death time.
+        let mut fate = Rng::new(derive_seed(self.cfg.seed, DROPOUT_TAG ^ seq));
+        if fate.bernoulli(self.cfg.sim.dropout) {
+            self.queue.push(Reverse(Event {
+                time: self.now + t_down + fate.next_f64() * t_compute,
+                seq,
+                kind: EventKind::Dropout,
+            }));
+            return Ok(());
+        }
+
+        // Local training executes here, at dispatch time, in event
+        // order — so results never depend on how simulated arrivals
+        // interleave, and the engine's worker-count invariance carries
+        // over unchanged.
+        let grouped = self.engine.run_round(
+            self.cfg,
+            self.scheme,
+            self.backend,
+            self.transport.uplink(),
+            self.train,
+            self.partition,
+            &bcast,
+            seq as usize,
+            &[client],
+        )?;
+        let updates = grouped
+            .into_iter()
+            .next()
+            .expect("one selected client yields one update group");
+        let bases: Vec<ModelParams> = (0..self.n_models)
+            .map(|j| bcast.global(0, j).clone())
+            .collect();
+        let up_bytes: u64 = updates.iter().map(|u| u.encoded.byte_len() as u64).sum();
+        let t_up = up_bytes as f64 / profile.up_bytes_per_second;
+
+        self.queue.push(Reverse(Event {
+            time: self.now + t_down + t_compute + t_up,
+            seq,
+            kind: EventKind::Arrival {
+                base_version: self.version,
+                bases,
+                updates,
+                compute_seconds: t_compute,
+                transfer_seconds: t_down + t_up,
+            },
+        }));
+        Ok(())
+    }
+
+    /// An update landed: charge the upload, decode each sub-model
+    /// against the base the client trained from, difference into a
+    /// delta, and push the staleness-weighted result into the buffer.
+    fn on_arrival(
+        &mut self,
+        base_version: u64,
+        bases: Vec<ModelParams>,
+        updates: Vec<ClientUpdate>,
+        compute_seconds: f64,
+        transfer_seconds: f64,
+    ) -> Result<()> {
+        self.stats.arrived += 1;
+        let staleness = self.version.saturating_sub(base_version);
+        self.staleness_sum_total += staleness as f64;
+        self.stats.max_staleness = self.stats.max_staleness.max(staleness);
+        self.window_train_seconds += compute_seconds;
+        self.window_transfer_seconds += transfer_seconds;
+
+        let mut deltas = Vec::with_capacity(self.n_models);
+        for (j, upd) in updates.iter().enumerate() {
+            self.comm
+                .upload_encoded(upd.encoded.byte_len(), self.model_bytes_each);
+            let mut decoded = self.transport.decode(&bases[j], &upd.encoded)?;
+            decoded.accumulate(&bases[j], -1.0)?;
+            deltas.push(decoded);
+            if upd.stats.steps > 0 {
+                self.window_loss_sum += upd.stats.mean_loss;
+                self.window_loss_n += 1;
+            }
+        }
+        self.buffer.push(WeightedUpdate {
+            weight: staleness_weight(staleness, self.cfg.sim.staleness_exp),
+            staleness,
+            deltas,
+        });
+        Ok(())
+    }
+}
+
+/// Run one asynchronous federated experiment on the event clock.
+///
+/// The output mirrors [`super::server::run`]: a [`History`] row per
+/// buffered aggregation (a "round" in async terms), exact per-client
+/// communication metering, early stopping on mean top-k — plus
+/// [`SimStats`] in `RunOutput::sim`. For a fixed `cfg.seed` the entire
+/// output is bitwise reproducible, including across `--workers` counts.
+pub fn run_async(
+    cfg: &ExperimentConfig,
+    scheme: &dyn LabelScheme,
+    backend: &dyn TrainBackend,
+    train: &Dataset,
+    test: &Dataset,
+    partition: &Partition,
+) -> Result<RunOutput> {
+    cfg.validate()?;
+    if !cfg.sim.async_mode {
+        bail!("run_async called with sim.async_mode = false; use server::run");
+    }
+    let t_start = std::time::Instant::now();
+    let n_models = scheme.n_models();
+    let out_dim = scheme.out_dim();
+    let batch = cfg.preset.batch;
+
+    // Same init streams as the synchronous loop: a sync and an async
+    // run of one config start from identical globals.
+    let globals: Vec<ModelParams> = (0..n_models)
+        .map(|j| {
+            ModelParams::init(
+                train.d(),
+                cfg.preset.hidden,
+                out_dim,
+                derive_seed(cfg.seed, 0x1417_0000 + j as u64),
+            )
+        })
+        .collect();
+    let model_bytes_each = globals[0].byte_size();
+
+    let registry_n = if cfg.sim.registry == 0 {
+        cfg.clients
+    } else {
+        cfg.sim.registry
+    };
+    let registry = ClientRegistry::new(registry_n, cfg.seed, cfg.sim.latency, cfg.sim.bandwidth);
+
+    let mut state = AsyncLoop {
+        cfg,
+        scheme,
+        backend,
+        train,
+        partition,
+        engine: RoundEngine::new(cfg.workers),
+        registry,
+        // One draw per dispatch; `seq` plays the sampler's round role.
+        sampler: ClientSampler::new(registry_n, 1, cfg.seed),
+        transport: Transport::new(cfg, n_models)?,
+        comm: CommMeter::new(),
+        globals,
+        model_bytes_each,
+        n_models,
+        queue: BinaryHeap::new(),
+        now: 0.0,
+        version: 0,
+        dispatch_seq: 0,
+        buffer: Vec::with_capacity(cfg.sim.buffer),
+        window_start: 0.0,
+        window_loss_sum: 0.0,
+        window_loss_n: 0,
+        window_train_seconds: 0.0,
+        window_transfer_seconds: 0.0,
+        down_mark: 0,
+        up_mark: 0,
+        stats: SimStats::default(),
+        staleness_sum_total: 0.0,
+    };
+
+    let mut history = History::new();
+    let mut stopper = EarlyStopper::new(cfg.patience);
+    let train_stats = LabelStats::from_dataset(train);
+    let frequent_k = partition.class_owner.len().max(1);
+    let test_batches = batch_ranges(test.len(), batch);
+
+    // Generous dispatch ceiling so a pathological dropout draw can't
+    // spin forever; validation already caps dropout below 1.
+    let needed = (cfg.rounds * cfg.sim.buffer) as f64;
+    let max_dispatch =
+        (needed / (1.0 - cfg.sim.dropout) * 64.0) as u64 + cfg.sim.concurrency as u64 + 1024;
+
+    // Prime the concurrency window.
+    for _ in 0..cfg.sim.concurrency {
+        state.dispatch()?;
+    }
+
+    loop {
+        let Some(Reverse(ev)) = state.queue.pop() else {
+            bail!(
+                "event queue drained after {} dispatches with only {}/{} aggregations \
+                 — concurrency {} cannot fill buffer {}",
+                state.dispatch_seq,
+                state.version,
+                cfg.rounds,
+                cfg.sim.concurrency,
+                cfg.sim.buffer
+            );
+        };
+        state.now = ev.time;
+        match ev.kind {
+            EventKind::Dropout => state.stats.dropped += 1,
+            EventKind::Arrival {
+                base_version,
+                bases,
+                updates,
+                compute_seconds,
+                transfer_seconds,
+            } => {
+                state.on_arrival(base_version, bases, updates, compute_seconds, transfer_seconds)?
+            }
+        }
+
+        // Buffer full → staleness-weighted aggregation = one "round".
+        if state.buffer.len() >= cfg.sim.buffer {
+            let round = state.version as usize;
+            let taken = std::mem::take(&mut state.buffer);
+            apply_buffered(&mut state.globals, &taken)?;
+            state.version += 1;
+            state.stats.aggregations = state.version;
+            state.comm.end_round();
+            let down_bytes = state.comm.downloaded() - state.down_mark;
+            let up_bytes = state.comm.uploaded() - state.up_mark;
+
+            let mut stop = false;
+            if round % cfg.eval_every == 0 || state.version as usize == cfg.rounds {
+                let report = evaluate(
+                    scheme,
+                    backend,
+                    &state.globals,
+                    test,
+                    &train_stats,
+                    frequent_k,
+                    batch,
+                    &test_batches,
+                )?;
+                history.push(RoundRecord {
+                    round,
+                    accuracy: report,
+                    comm_bytes: state.comm.total(),
+                    down_bytes,
+                    up_bytes,
+                    round_seconds: state.now - state.window_start,
+                    mean_loss: if state.window_loss_n > 0 {
+                        state.window_loss_sum / state.window_loss_n as f64
+                    } else {
+                        0.0
+                    },
+                    timing: RoundTiming {
+                        train_seconds: state.window_train_seconds,
+                        encode_seconds: state.window_transfer_seconds,
+                        aggregate_seconds: 0.0,
+                    },
+                    sim_seconds: state.now,
+                });
+                stop = stopper.observe(round, report.mean_topk());
+            }
+
+            // Reset the aggregation window.
+            state.window_start = state.now;
+            state.window_loss_sum = 0.0;
+            state.window_loss_n = 0;
+            state.window_train_seconds = 0.0;
+            state.window_transfer_seconds = 0.0;
+            state.down_mark = state.comm.downloaded();
+            state.up_mark = state.comm.uploaded();
+
+            if stop || state.version as usize >= cfg.rounds {
+                break;
+            }
+        }
+
+        // Refill the dispatch window (the in-flight population stays at
+        // `concurrency` minus whatever the ceiling clipped).
+        if state.dispatch_seq < max_dispatch {
+            state.dispatch()?;
+        }
+    }
+
+    state.stats.sim_seconds = state.now;
+    state.stats.mean_staleness = state.staleness_sum_total / state.stats.arrived.max(1) as f64;
+
+    let best_rec = *history
+        .best()
+        .ok_or_else(|| anyhow::anyhow!("no evaluation rounds recorded"))?;
+    Ok(RunOutput {
+        best: best_rec.accuracy,
+        best_round: best_rec.round + 1,
+        comm_to_best: best_rec.comm_bytes,
+        rounds_run: state.version as usize,
+        model_bytes: model_bytes_each * n_models,
+        n_models,
+        total_seconds: t_start.elapsed().as_secs_f64(),
+        history,
+        comm: state.comm,
+        final_globals: state.globals,
+        sim: Some(state.stats),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_parse_roundtrips_and_validates() {
+        let cases = [
+            ("fixed:2.5", Dist::Fixed { value: 2.5 }),
+            ("uniform:1,4", Dist::Uniform { lo: 1.0, hi: 4.0 }),
+            (
+                "lognormal:2,0.7",
+                Dist::LogNormal {
+                    median: 2.0,
+                    sigma: 0.7,
+                },
+            ),
+        ];
+        for (s, want) in cases {
+            let d = Dist::parse(s).unwrap();
+            assert_eq!(d, want, "{s}");
+            assert_eq!(Dist::parse(&d.name()).unwrap(), d, "roundtrip {s}");
+        }
+        assert!(Dist::parse("gamma:1,2").is_err());
+        assert!(Dist::parse("fixed:0").is_err(), "zero rejected");
+        assert!(Dist::parse("uniform:3,1").is_err(), "hi < lo rejected");
+        assert!(Dist::parse("lognormal:-1,0.5").is_err());
+        assert!(Dist::parse("fixed:abc").is_err());
+    }
+
+    #[test]
+    fn dist_samples_positive_and_shaped() {
+        let mut rng = Rng::new(7);
+        assert_eq!(Dist::Fixed { value: 3.0 }.sample(&mut rng), 3.0);
+        let u = Dist::Uniform { lo: 2.0, hi: 5.0 };
+        let ln = Dist::LogNormal {
+            median: 2.0,
+            sigma: 0.7,
+        };
+        for _ in 0..500 {
+            let x = u.sample(&mut rng);
+            assert!((2.0..5.0).contains(&x));
+            assert!(ln.sample(&mut rng) > 0.0);
+        }
+        // sigma = 0 degenerates to the median exactly.
+        let d = Dist::LogNormal {
+            median: 4.0,
+            sigma: 0.0,
+        };
+        assert_eq!(d.sample(&mut rng), 4.0);
+    }
+
+    #[test]
+    fn registry_profiles_are_pure_and_lazy() {
+        let reg = ClientRegistry::new(
+            1_000_000,
+            42,
+            Dist::LogNormal {
+                median: 2.0,
+                sigma: 0.7,
+            },
+            Dist::LogNormal {
+                median: 20.0,
+                sigma: 0.8,
+            },
+        );
+        assert_eq!(reg.len(), 1_000_000);
+        let a = reg.profile(782_113);
+        let b = reg.profile(782_113);
+        assert_eq!(a.compute_seconds_per_epoch, b.compute_seconds_per_epoch);
+        assert_eq!(a.down_bytes_per_second, b.down_bytes_per_second);
+        assert_eq!(a.up_bytes_per_second, b.up_bytes_per_second);
+        assert!(a.compute_seconds_per_epoch > 0.0);
+        assert!(a.down_bytes_per_second > 0.0);
+        // Different clients almost surely differ under a continuous dist.
+        let c = reg.profile(782_114);
+        assert_ne!(a.compute_seconds_per_epoch, c.compute_seconds_per_epoch);
+    }
+
+    #[test]
+    fn staleness_weights_discount_correctly() {
+        assert_eq!(staleness_weight(0, 0.5), 1.0);
+        assert_eq!(staleness_weight(0, 2.0), 1.0);
+        // (1+3)^-0.5 = 0.5 — powf goes through exp/ln, so compare approx
+        assert!((staleness_weight(3, 0.5) - 0.5).abs() < 1e-12);
+        assert_eq!(staleness_weight(7, 0.0), 1.0, "exp 0 disables");
+        assert!(staleness_weight(10, 0.5) < staleness_weight(1, 0.5));
+    }
+
+    #[test]
+    fn apply_buffered_takes_weighted_mean_of_deltas() {
+        let mut globals = vec![ModelParams::zeros(2, 3, 4)];
+        let mk = |v: f32, staleness: u64| {
+            let mut d = ModelParams::zeros(2, 3, 4);
+            for t in d.tensors.iter_mut() {
+                t.fill(v);
+            }
+            WeightedUpdate {
+                weight: staleness_weight(staleness, 0.5),
+                staleness,
+                deltas: vec![d],
+            }
+        };
+        // weights 1.0 and (1+3)^-0.5 = 0.5 → (1·1 + 0.5·3)/1.5 = 5/3
+        apply_buffered(&mut globals, &[mk(1.0, 0), mk(3.0, 3)]).unwrap();
+        let got = globals[0].flat_values();
+        for v in got {
+            assert!((v - 5.0 / 3.0).abs() < 1e-5, "got {v}");
+        }
+        // Degenerate cases bail instead of corrupting the globals.
+        assert!(apply_buffered(&mut globals, &[]).is_err());
+    }
+
+    #[test]
+    fn event_order_is_time_then_seq() {
+        let mut q: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+        for (time, seq) in [(2.0, 0), (1.0, 2), (1.0, 1), (3.0, 3)] {
+            q.push(Reverse(Event {
+                time,
+                seq,
+                kind: EventKind::Dropout,
+            }));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|Reverse(e)| e.seq)).collect();
+        assert_eq!(order, vec![1, 2, 0, 3], "time asc, seq breaks ties");
+    }
+}

@@ -70,7 +70,8 @@
 //!   bitwise equal to the server's broadcast base
 //!   (`tests/downlink_delta.rs`).
 
-use std::sync::Mutex;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -413,10 +414,16 @@ impl UplinkCompressor for StatelessUplink {
 pub struct FeedbackUplink {
     spec: CodecSpec,
     n_models: usize,
-    /// `clients × n_models` residual slots, flat-indexed
-    /// `client * n_models + j`. Mutex per slot: items never contend
-    /// within a round (one item per slot), the lock is for `Sync`.
-    slots: Vec<Mutex<Vec<f32>>>,
+    /// Slot-address bound: `client < clients` and `j < n_models`.
+    clients: usize,
+    /// Residual slots keyed `(client, sub-model)`, materialized on a
+    /// slot's first lossy encode — memory is proportional to the
+    /// clients that actually *participated*, so a million-client
+    /// registry costs nothing up front. The outer lock guards the map;
+    /// the per-slot `Arc<Mutex<_>>` is taken out under it and held for
+    /// the encode (items never contend within a round — one item per
+    /// slot — the locks are for `Sync`).
+    slots: Mutex<HashMap<(usize, usize), Arc<Mutex<Vec<f32>>>>>,
 }
 
 impl FeedbackUplink {
@@ -424,17 +431,18 @@ impl FeedbackUplink {
         FeedbackUplink {
             spec,
             n_models,
-            slots: (0..clients * n_models).map(|_| Mutex::new(Vec::new())).collect(),
+            clients,
+            slots: Mutex::new(HashMap::new()),
         }
     }
 
     /// A slot's current residual (empty until its first lossy encode) —
     /// test/diagnostic hook.
     pub fn residual(&self, client: usize, j: usize) -> Vec<f32> {
-        self.slots[client * self.n_models + j]
-            .lock()
-            .expect("uplink residual lock poisoned")
-            .clone()
+        let map = self.slots.lock().expect("uplink slot map lock poisoned");
+        map.get(&(client, j))
+            .map(|slot| slot.lock().expect("uplink residual lock poisoned").clone())
+            .unwrap_or_default()
     }
 }
 
@@ -460,13 +468,17 @@ impl UplinkCompressor for FeedbackUplink {
         if self.spec == CodecSpec::Dense {
             return encode_update(self.spec, global, local);
         }
-        let Some(slot) = self.slots.get(client * self.n_models + j) else {
+        if client >= self.clients || j >= self.n_models {
             bail!(
                 "uplink state has no slot for client {client}, sub-model {j} \
-                 ({} slots, {} sub-models)",
-                self.slots.len(),
+                 ({} clients, {} sub-models)",
+                self.clients,
                 self.n_models
             );
+        }
+        let slot = {
+            let mut map = self.slots.lock().expect("uplink slot map lock poisoned");
+            map.entry((client, j)).or_default().clone()
         };
         let mut residual = slot.lock().expect("uplink residual lock poisoned");
         let (enc, _) = fold_encode(self.spec, global, local.flat_values(), &mut residual)?;
@@ -740,13 +752,17 @@ pub struct DeltaDownlink {
     codec: DownCodec,
     spec: CodecSpec,
     n_models: usize,
+    /// Slot-address bound: `client < clients` and `j < n_models`.
+    clients: usize,
     /// Staleness cap: deltas are allowed while
     /// `version − replica.version <= resync_every` (0 = full resync on
     /// every participation).
     resync_every: u64,
-    /// `clients × n_models` replicas, flat-indexed
-    /// `client * n_models + j`. `None` = never synced.
-    replicas: Vec<Option<Replica>>,
+    /// Replicas keyed `(client, sub-model)`, materialized on a client's
+    /// first participation (absent = never synced) — memory is
+    /// proportional to clients *seen*, so a million-client registry
+    /// costs nothing up front.
+    replicas: HashMap<(usize, usize), Replica>,
 }
 
 impl DeltaDownlink {
@@ -766,23 +782,24 @@ impl DeltaDownlink {
             codec,
             spec: codec.wire_spec(),
             n_models,
+            clients,
             resync_every: resync_every as u64,
-            replicas: (0..clients * n_models).map(|_| None).collect(),
+            replicas: HashMap::new(),
         })
     }
 
     /// The version a client's sub-model base is at (0 = never synced) —
     /// test/diagnostic hook.
     pub fn base_version(&self, client: usize, j: usize) -> u64 {
-        self.replicas[client * self.n_models + j]
-            .as_ref()
+        self.replicas
+            .get(&(client, j))
             .map(|r| r.version)
             .unwrap_or(0)
     }
 
     /// The server's replica of what a client currently holds.
     pub fn replica(&self, client: usize, j: usize) -> Option<&ModelParams> {
-        self.replicas[client * self.n_models + j].as_ref().map(|r| &r.model)
+        self.replicas.get(&(client, j)).map(|r| &r.model)
     }
 
     fn ship(
@@ -792,16 +809,15 @@ impl DeltaDownlink {
         j: usize,
         global: &ModelParams,
     ) -> Result<(DownlinkPayload, ModelParams)> {
-        let idx = client * self.n_models + j;
-        let Some(slot) = self.replicas.get_mut(idx) else {
+        if client >= self.clients || j >= self.n_models {
             bail!(
                 "downlink state has no slot for client {client}, sub-model {j} \
-                 ({} slots, {} sub-models)",
-                self.replicas.len(),
+                 ({} clients, {} sub-models)",
+                self.clients,
                 self.n_models
             );
-        };
-        let (kind, enc, decoded) = match slot.as_ref() {
+        }
+        let (kind, enc, decoded) = match self.replicas.get(&(client, j)) {
             Some(r) if version.saturating_sub(r.version) <= self.resync_every => {
                 let enc = encode_delta(self.spec, &r.model, global)?;
                 let decoded = apply_delta(&r.model, &enc)?;
@@ -814,10 +830,13 @@ impl DeltaDownlink {
                 (PayloadKind::Full, enc, global.clone())
             }
         };
-        *slot = Some(Replica {
-            model: decoded.clone(),
-            version,
-        });
+        self.replicas.insert(
+            (client, j),
+            Replica {
+                model: decoded.clone(),
+                version,
+            },
+        );
         let payload = DownlinkPayload {
             codec: self.codec,
             version,
@@ -885,15 +904,20 @@ impl Transport {
     /// `cfg.error_feedback` selects the stateful (error-feedback +
     /// residual-folding) implementations otherwise.
     pub fn new(cfg: &ExperimentConfig, n_models: usize) -> Result<Transport> {
+        // Stateful links are addressed by the full client population —
+        // the async registry when simulating, `cfg.clients` otherwise.
+        // Both links materialize state lazily, so a huge population
+        // only costs memory for clients that actually participate.
+        let population = cfg.client_population();
         let uplink: Box<dyn UplinkCompressor> = if cfg.error_feedback {
-            Box::new(FeedbackUplink::new(cfg.codec, cfg.clients, n_models))
+            Box::new(FeedbackUplink::new(cfg.codec, population, n_models))
         } else {
             Box::new(StatelessUplink::new(cfg.codec))
         };
         let downlink: Box<dyn DownlinkCompressor> = if cfg.down_codec.is_delta() {
             Box::new(DeltaDownlink::new(
                 cfg.down_codec,
-                cfg.clients,
+                population,
                 n_models,
                 cfg.resync_every,
             )?)

@@ -13,6 +13,15 @@
 //!                                # each client gets a top-k delta vs the
 //!                                # base it last decoded; stale clients
 //!                                # are dense-resynced
+//! fedmlh run     --preset tiny --async --registry 1000000 --buffer 50 \
+//!                --concurrency 128 --dropout 0.2
+//!                                # event-driven async federation over a
+//!                                # million-client virtual registry:
+//!                                # staleness-weighted buffered aggregation
+//!                                # on a seeded simulated clock (bitwise
+//!                                # reproducible, incl. across --workers)
+//! fedmlh run     --preset tiny --scenario smoke     # canned async scenarios
+//!                                                   # (smoke | million)
 //! fedmlh run     --preset eurlex --save model.fmlh  # + persist a serving checkpoint
 //! fedmlh run     --preset eurlex --save tuned.fmlh --save-delta base.fmlh
 //!                                # write tuned.fmlh as a lossless delta
@@ -42,7 +51,8 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use fedmlh::config::presets::{by_name, paper_presets};
-use fedmlh::config::{Algo, DatasetPreset, ExperimentConfig};
+use fedmlh::config::{Algo, DatasetPreset, ExperimentConfig, SimConfig};
+use fedmlh::federated::sim::Dist;
 use fedmlh::federated::transport::DownCodec;
 use fedmlh::federated::wire::CodecSpec;
 use fedmlh::harness::{self, figures, report, tables, BackendKind, HarnessOpts, PairResult};
@@ -126,6 +136,42 @@ fn opts_from(p: &Parsed) -> Result<HarnessOpts> {
     })
 }
 
+/// Assemble the async-sim config: scenario preset first (if any), then
+/// explicit flags on top. The CLI parser has no presence detection, so
+/// "differs from the declared default" is the override signal — the
+/// declared defaults match `SimConfig::default()` exactly.
+fn sim_config_from(p: &Parsed) -> Result<SimConfig> {
+    let scenario = p.get("scenario");
+    let mut sim = if scenario.is_empty() {
+        SimConfig::default()
+    } else {
+        SimConfig::scenario(scenario)?
+    };
+    sim.async_mode = sim.async_mode || p.get_bool("async");
+    if p.get("registry") != "0" {
+        sim.registry = p.get_usize("registry")?;
+    }
+    if p.get("buffer") != "10" {
+        sim.buffer = p.get_usize("buffer")?;
+    }
+    if p.get("concurrency") != "32" {
+        sim.concurrency = p.get_usize("concurrency")?;
+    }
+    if p.get("dropout") != "0" {
+        sim.dropout = p.get_f64("dropout")?;
+    }
+    if p.get("latency-dist") != "lognormal:2,0.7" {
+        sim.latency = Dist::parse(p.get("latency-dist"))?;
+    }
+    if p.get("bandwidth-dist") != "lognormal:20,0.8" {
+        sim.bandwidth = Dist::parse(p.get("bandwidth-dist"))?;
+    }
+    if p.get("staleness-exp") != "0.5" {
+        sim.staleness_exp = p.get_f64("staleness-exp")?;
+    }
+    Ok(sim)
+}
+
 fn preset_list(spec: &str) -> Result<Vec<DatasetPreset>> {
     if spec == "all" {
         return Ok(paper_presets());
@@ -145,6 +191,15 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         .flag("lr", "0", "learning rate (0 = preset default)")
         .flag("b", "0", "override buckets per table B (fedmlh)")
         .flag("r", "0", "override hash tables R (fedmlh)")
+        .switch("async", "event-driven asynchronous federation: staleness-weighted buffered aggregation (FedBuff-style) on a seeded simulated clock")
+        .flag("scenario", "", "canned async scenario: smoke (10k registry) | million (1M registry); explicit sim flags below override it")
+        .flag("registry", "0", "async: virtual client registry size (0 = --clients); profiles are derived lazily so memory stays O(--concurrency), not O(registry)")
+        .flag("buffer", "10", "async: apply one staleness-weighted aggregation once K client updates have arrived")
+        .flag("concurrency", "32", "async: clients kept in flight on the simulated clock")
+        .flag("dropout", "0", "async: probability a dispatched client dies mid-round (charged its download only, never uploads)")
+        .flag("latency-dist", "lognormal:2,0.7", "async: per-client compute seconds/epoch: fixed:<v> | uniform:<lo>,<hi> | lognormal:<median>,<sigma>")
+        .flag("bandwidth-dist", "lognormal:20,0.8", "async: per-client link Mbit/s (down and up drawn independently), same grammar as --latency-dist")
+        .flag("staleness-exp", "0.5", "async: staleness discount exponent; an update s versions stale weighs (1+s)^-exp")
         .flag("save", "", "write the trained model as a serving checkpoint to this path")
         .flag("save-codec", "q8", "full-checkpoint codec: q8 (~4x smaller) | dense (ignored with --save-delta; see --delta-codec)")
         .flag("save-delta", "", "with --save: write the checkpoint as a delta against this base .fmlh (apply with `fedmlh serve --delta`)")
@@ -163,6 +218,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     if lr > 0.0 {
         cfg.lr = lr;
     }
+    cfg.sim = sim_config_from(&p)?;
     opts.configure(&mut cfg);
     cfg.validate()?;
 
@@ -189,15 +245,38 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             cfg.down_codec.name(),
             if cfg.error_feedback { "on" } else { "off" }
         );
+        if cfg.sim.async_mode {
+            eprintln!(
+                "[run] async sim: registry={} buffer={} concurrency={} dropout={} latency={} bandwidth={} staleness-exp={}",
+                cfg.client_population(),
+                cfg.sim.buffer,
+                cfg.sim.concurrency,
+                cfg.sim.dropout,
+                cfg.sim.latency.name(),
+                cfg.sim.bandwidth.name(),
+                cfg.sim.staleness_exp
+            );
+        }
     }
-    let out = fedmlh::federated::server::run(
-        &cfg,
-        scheme.as_ref(),
-        backend.as_ref(),
-        &world.data.train,
-        &world.data.test,
-        &world.partition,
-    )?;
+    let out = if cfg.sim.async_mode {
+        fedmlh::federated::sim::run_async(
+            &cfg,
+            scheme.as_ref(),
+            backend.as_ref(),
+            &world.data.train,
+            &world.data.test,
+            &world.partition,
+        )?
+    } else {
+        fedmlh::federated::server::run(
+            &cfg,
+            scheme.as_ref(),
+            backend.as_ref(),
+            &world.data.train,
+            &world.data.test,
+            &world.partition,
+        )?
+    };
 
     println!(
         "preset={} algo={} backend={}",
@@ -240,6 +319,18 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         "round time split: train {:.3}s  encode {:.3}s  aggregate {:.3}s  (mean per evaluated round; train/encode summed over the round's client x sub-model items)",
         timing.train_seconds, timing.encode_seconds, timing.aggregate_seconds
     );
+    if let Some(s) = &out.sim {
+        println!(
+            "async sim: {} dispatched / {} arrived / {} dropped over {} aggregations; simulated clock {:.1}s; staleness mean {:.2} max {}",
+            s.dispatched,
+            s.arrived,
+            s.dropped,
+            s.aggregations,
+            s.sim_seconds,
+            s.mean_staleness,
+            s.max_staleness
+        );
+    }
     if let Some(dir) = &opts.out_dir {
         let name = format!("run_{}_{}.csv", cfg.preset.name, algo.name());
         report::write_result(dir, &name, &out.history.to_csv())?;

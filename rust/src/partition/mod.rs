@@ -42,4 +42,30 @@ impl Partition {
         }
         seen.into_iter().all(|s| s)
     }
+
+    /// The data shard behind a (possibly virtual) client id. Registry
+    /// clients beyond the partition width wrap onto the underlying
+    /// shards (`client % clients.len()`), so the async simulator can
+    /// address a million-client registry over a K-shard partition
+    /// without materializing per-client data. For `client <
+    /// clients.len()` this is exactly `&self.clients[client]`.
+    pub fn shard(&self, client: usize) -> &[usize] {
+        &self.clients[client % self.clients.len()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_wraps_virtual_clients_onto_real_shards() {
+        let p = Partition {
+            clients: vec![vec![0, 1], vec![2], vec![3, 4, 5]],
+            class_owner: vec![],
+        };
+        assert_eq!(p.shard(1), &[2][..]);
+        assert_eq!(p.shard(4), &[2][..], "client 4 wraps onto shard 1");
+        assert_eq!(p.shard(999_999), p.shard(999_999 % 3));
+    }
 }

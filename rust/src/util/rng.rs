@@ -113,16 +113,30 @@ impl Rng {
         }
     }
 
-    /// `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    /// `k` distinct indices from `[0, n)` — the partial Fisher–Yates
+    /// draw sequence, computed lazily: the identity array is virtualized
+    /// behind a sparse displacement map, so time and memory are O(k)
+    /// instead of O(n) while every draw stays bit-identical to the dense
+    /// swap loop this replaced. Sampling S clients from a million-client
+    /// registry costs S map entries, and existing seeds keep their exact
+    /// round-for-round schedules.
     pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
         assert!(k <= n, "sample {k} from {n}");
-        let mut idx: Vec<usize> = (0..n).collect();
+        // disp[p] = current occupant of virtual position p (identity
+        // where absent). Only positions touched by a swap are stored.
+        let mut disp: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::with_capacity(2 * k);
+        let mut out = Vec::with_capacity(k);
         for i in 0..k {
             let j = i + self.below(n - i);
-            idx.swap(i, j);
+            let vj = disp.get(&j).copied().unwrap_or(j);
+            let vi = disp.get(&i).copied().unwrap_or(i);
+            out.push(vj);
+            // swap(i, j): position j inherits i's occupant; position i
+            // (== out[i]) is never read again since all later j' >= i'.
+            disp.insert(j, vi);
         }
-        idx.truncate(k);
-        idx
+        out
     }
 
     /// Index drawn from an (unnormalized, non-negative) weight vector.
@@ -261,6 +275,43 @@ mod tests {
     #[should_panic]
     fn sample_more_than_population_panics() {
         Rng::new(0).sample_without_replacement(3, 4);
+    }
+
+    /// The dense partial Fisher–Yates the lazy version replaced; kept
+    /// here as the reference the sparse path must match bit for bit.
+    fn dense_reference(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + rng.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    #[test]
+    fn lazy_sampler_matches_dense_fisher_yates() {
+        for seed in [0u64, 9, 42, 1234] {
+            for (n, k) in [(1, 1), (10, 4), (10, 10), (97, 13), (500, 499)] {
+                let lazy = Rng::new(seed).sample_without_replacement(n, k);
+                let dense = dense_reference(&mut Rng::new(seed), n, k);
+                assert_eq!(lazy, dense, "seed {seed}, sample {k} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_huge_population_stays_o_of_k() {
+        // 2^40 virtual positions: the dense identity array would need
+        // 8 TiB. The lazy sampler must finish instantly in O(k).
+        let n = 1usize << 40;
+        let s = Rng::new(21).sample_without_replacement(n, 8);
+        assert_eq!(s.len(), 8);
+        let mut t = s.clone();
+        t.sort_unstable();
+        t.dedup();
+        assert_eq!(t.len(), 8, "duplicates in {s:?}");
+        assert!(t.iter().all(|&i| i < n));
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! End-to-end guarantees of the event-driven async simulator
+//! (`federated::sim`): bitwise reproducibility for a fixed seed —
+//! including across worker counts and through lossy/stateful transports
+//! — exact dropout accounting, and million-client registries at
+//! O(concurrency) memory.
+
+use fedmlh::algo::scheme_for;
+use fedmlh::config::{Algo, ExperimentConfig};
+use fedmlh::federated::sim::run_async;
+use fedmlh::federated::transport::DownCodec;
+use fedmlh::federated::wire::CodecSpec;
+use fedmlh::federated::{RunOutput, RustBackend};
+use fedmlh::partition::noniid::{partition as noniid, NonIidOptions};
+
+fn sim_cfg(registry: usize, buffer: usize, rounds: usize, dropout: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+    cfg.rounds = rounds;
+    cfg.patience = 0;
+    cfg.clients = 4;
+    cfg.clients_per_round = 2;
+    cfg.local_epochs = 1;
+    cfg.sim.async_mode = true;
+    cfg.sim.registry = registry;
+    cfg.sim.buffer = buffer;
+    cfg.sim.concurrency = 8;
+    cfg.sim.dropout = dropout;
+    cfg
+}
+
+fn run(cfg: &ExperimentConfig) -> RunOutput {
+    let data = fedmlh::data::synth::generate_preset(&cfg.preset, cfg.seed);
+    let part = noniid(&data.train, &NonIidOptions::new(cfg.clients), cfg.seed);
+    let scheme = scheme_for(cfg, Algo::FedMlh, &data.train);
+    let backend = RustBackend::new();
+    run_async(cfg, scheme.as_ref(), &backend, &data.train, &data.test, &part).unwrap()
+}
+
+/// Bit-level equality of two runs: history CSV (every column, including
+/// the simulated timing ones), communication meter, and final weights.
+fn assert_bitwise_equal(a: &RunOutput, b: &RunOutput, tag: &str) {
+    assert_eq!(a.history.to_csv(), b.history.to_csv(), "{tag}: history CSV");
+    assert_eq!(a.comm.total(), b.comm.total(), "{tag}: comm total");
+    assert_eq!(a.rounds_run, b.rounds_run, "{tag}: rounds");
+    assert_eq!(a.sim, b.sim, "{tag}: sim stats");
+    assert_eq!(a.final_globals.len(), b.final_globals.len());
+    for (j, (ga, gb)) in a.final_globals.iter().zip(b.final_globals.iter()).enumerate() {
+        let (va, vb) = (ga.flat_values(), gb.flat_values());
+        assert_eq!(va.len(), vb.len());
+        for (i, (x, y)) in va.iter().zip(vb.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{tag}: sub-model {j} weight {i} differs"
+            );
+        }
+    }
+}
+
+#[test]
+fn same_seed_is_bitwise_identical() {
+    let cfg = sim_cfg(1000, 4, 3, 0.2);
+    assert_bitwise_equal(&run(&cfg), &run(&cfg), "dense");
+
+    // …and through a lossy, *stateful* transport (lazy error-feedback
+    // slots on the uplink, q8 broadcast on the downlink).
+    let mut cfg = sim_cfg(1000, 4, 3, 0.2);
+    cfg.codec = CodecSpec::QuantI8;
+    cfg.down_codec = DownCodec::QuantI8;
+    cfg.error_feedback = true;
+    assert_bitwise_equal(&run(&cfg), &run(&cfg), "q8+feedback");
+}
+
+#[test]
+fn worker_count_does_not_change_the_simulation() {
+    let mut a = sim_cfg(1000, 4, 3, 0.2);
+    a.workers = 1;
+    let mut b = a.clone();
+    b.workers = 4;
+    assert_bitwise_equal(&run(&a), &run(&b), "workers 1 vs 4");
+}
+
+#[test]
+fn dropout_is_charged_download_only() {
+    let cfg = sim_cfg(1000, 4, 3, 0.5);
+    let out = run(&cfg);
+    let s = out.sim.expect("async run reports sim stats");
+    assert!(s.dropped > 0, "dropout 0.5 must drop someone");
+    // Everything dispatched either arrived, dropped, or was still in
+    // flight when the round target hit — never more than the window.
+    let in_flight = s.dispatched - s.arrived - s.dropped;
+    assert!(in_flight <= cfg.sim.concurrency as u64, "in flight {in_flight}");
+    // Dense codec: every dispatch downloads exactly one full model set;
+    // only arrivals upload one. A dropped client costs download only.
+    let model = out.model_bytes as u64;
+    assert_eq!(out.comm.downloaded(), s.dispatched * model);
+    assert_eq!(out.comm.uploaded(), s.arrived * model);
+    assert!(s.dispatched > s.arrived, "drops mean dispatches exceed arrivals");
+}
+
+#[test]
+fn staleness_is_measured_and_bounded() {
+    // Tiny buffer + deep concurrency forces version churn while clients
+    // are in flight → nonzero staleness must show up in the stats.
+    let mut cfg = sim_cfg(1000, 2, 6, 0.0);
+    cfg.sim.concurrency = 16;
+    let out = run(&cfg);
+    let s = out.sim.unwrap();
+    assert_eq!(s.aggregations, 6);
+    assert!(s.max_staleness > 0, "deep pipeline must see stale arrivals");
+    assert!(s.mean_staleness > 0.0 && s.mean_staleness <= s.max_staleness as f64);
+}
+
+#[test]
+fn million_client_registry_completes_smoke() {
+    let cfg = sim_cfg(1_000_000, 4, 2, 0.0);
+    let out = run(&cfg);
+    assert_eq!(out.rounds_run, 2);
+    let s = out.sim.unwrap();
+    assert_eq!(s.aggregations, 2);
+    assert!(s.sim_seconds > 0.0);
+    // History carries the simulated clock: monotone, positive, and in
+    // the CSV as the last column.
+    let csv = out.history.to_csv();
+    assert!(csv.lines().next().unwrap().ends_with(",sim_seconds"));
+    let mut prev = 0.0;
+    for rec in &out.history.records {
+        assert!(rec.sim_seconds > prev, "sim clock advances");
+        prev = rec.sim_seconds;
+    }
+}
+
+#[test]
+fn delta_downlink_rides_the_async_loop() {
+    // registry 0 → the 4 partition clients themselves; repeated
+    // participation exercises the lazy per-client replica map.
+    let mut cfg = sim_cfg(0, 3, 3, 0.0);
+    cfg.down_codec = DownCodec::TopK { frac: 0.1 };
+    cfg.resync_every = 1_000_000; // deltas whenever a base exists
+    let out = run(&cfg);
+    assert_eq!(out.rounds_run, 3);
+    // First contacts are full resyncs; repeats ship small deltas, so
+    // the measured downlink ratio must beat dense.
+    assert!(
+        out.comm.downloaded() < out.comm.downloaded_dense_equiv(),
+        "deltas must undercut dense: {} vs {}",
+        out.comm.downloaded(),
+        out.comm.downloaded_dense_equiv()
+    );
+    assert_bitwise_equal(&run(&cfg), &run(&cfg), "delta downlink");
+}
