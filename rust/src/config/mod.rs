@@ -152,6 +152,60 @@ impl SimConfig {
     }
 }
 
+/// Observability surface (CLI: `--trace-out`, `--log-level`), shared by
+/// `fedmlh run` and `fedmlh serve`. Parsed once at startup and applied
+/// through [`ObsConfig::apply`]; the telemetry machinery itself lives in
+/// [`crate::obs`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Write a Chrome-trace-event JSON file here when the process is
+    /// done (`None` = tracing stays disabled, near-zero cost).
+    pub trace_out: Option<std::path::PathBuf>,
+    /// Log threshold name (`error|warn|info|debug`).
+    pub log_level: String,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            trace_out: None,
+            log_level: "info".to_string(),
+        }
+    }
+}
+
+impl ObsConfig {
+    pub fn new(trace_out: Option<std::path::PathBuf>, log_level: &str) -> Result<ObsConfig> {
+        if crate::obs::log::Level::parse(log_level).is_none() {
+            bail!("unknown --log-level '{log_level}' (expected error|warn|info|debug)");
+        }
+        Ok(ObsConfig {
+            trace_out,
+            log_level: log_level.to_string(),
+        })
+    }
+
+    /// Set the global log threshold and, when a trace path is
+    /// configured, install the process-global tracer.
+    pub fn apply(&self) {
+        if let Some(level) = crate::obs::log::Level::parse(&self.log_level) {
+            crate::obs::log::set_level(level);
+        }
+        if self.trace_out.is_some() {
+            crate::obs::trace::install();
+        }
+    }
+
+    /// Write the collected trace to the configured path (no-op unless
+    /// [`ObsConfig::apply`] installed the tracer).
+    pub fn export(&self) -> Result<()> {
+        if let (Some(path), Some(tracer)) = (&self.trace_out, crate::obs::trace::tracer()) {
+            tracer.write_chrome_trace(path)?;
+        }
+        Ok(())
+    }
+}
+
 /// Full experiment description. Defaults mirror the paper's FL setup
 /// (Section 6): K = 10 clients, S = 4 sampled per round, E = 5 local
 /// epochs, T = 70 synchronization rounds, early stopping on the mean of

@@ -109,8 +109,14 @@ impl RoundEngine {
         let n_items = selected.len() * n_models;
 
         // One work item; `be` is threaded through explicitly so the
-        // closure itself only captures Sync data.
-        let run_item = |be: &dyn TrainBackend, slot: usize, j: usize| -> Result<ClientUpdate> {
+        // closure itself only captures Sync data. `lane` is the trace
+        // lane (worker index + 1; lane 0 is the coordinator thread) —
+        // purely observational, it never touches seeds or numbers.
+        let run_item = |be: &dyn TrainBackend,
+                        lane: u64,
+                        slot: usize,
+                        j: usize|
+         -> Result<ClientUpdate> {
             let client = selected[slot];
             // `shard` maps virtual registry ids onto real partition
             // shards; for the synchronous loop (client < shard count)
@@ -134,9 +140,18 @@ impl RoundEngine {
                 cfg.preset.batch,
                 derive_seed(cfg.seed, stream),
             );
-            let stats = be.local_train(&mut local, &mut batcher, cfg.local_epochs, cfg.lr)?;
+            let stats = {
+                let _span = crate::obs::trace::wall_span("train", lane).map(|g| {
+                    g.arg("client", crate::util::json::Json::num(client as f64))
+                        .arg("model", crate::util::json::Json::num(j as f64))
+                });
+                be.local_train(&mut local, &mut batcher, cfg.local_epochs, cfg.lr)?
+            };
             let t_enc = std::time::Instant::now();
-            let encoded = uplink.compress(client, j, global, &local)?;
+            let encoded = {
+                let _span = crate::obs::trace::wall_span("encode", lane);
+                uplink.compress(client, j, global, &local)?
+            };
             Ok(ClientUpdate {
                 stats,
                 encode_seconds: t_enc.elapsed().as_secs_f64(),
@@ -153,15 +168,18 @@ impl RoundEngine {
                 let slots: Vec<Mutex<Option<Result<ClientUpdate>>>> =
                     (0..n_items).map(|_| Mutex::new(None)).collect();
                 std::thread::scope(|scope| {
-                    for _ in 0..pool {
-                        scope.spawn(|| {
+                    let next = &next;
+                    let slots = &slots;
+                    let run_item = &run_item;
+                    for w in 0..pool {
+                        scope.spawn(move || {
                             let be: &dyn TrainBackend = sync_be;
                             loop {
                                 let i = next.fetch_add(1, Ordering::Relaxed);
                                 if i >= n_items {
                                     break;
                                 }
-                                let out = run_item(be, i / n_models, i % n_models);
+                                let out = run_item(be, w as u64 + 1, i / n_models, i % n_models);
                                 *slots[i].lock().unwrap() = Some(out);
                             }
                         });
@@ -177,7 +195,7 @@ impl RoundEngine {
                     .collect()
             }
             None => (0..n_items)
-                .map(|i| run_item(backend, i / n_models, i % n_models))
+                .map(|i| run_item(backend, 0, i / n_models, i % n_models))
                 .collect(),
         };
 

@@ -148,6 +148,91 @@ impl History {
         out
     }
 
+    /// Parse a history CSV written by [`History::to_csv`] (column
+    /// lookup is by header name, so column reordering or future columns
+    /// don't break old files). Fuel for the sync-vs-async comparison
+    /// figure, which reads two saved run histories back.
+    pub fn parse_csv(text: &str) -> anyhow::Result<History> {
+        let mut lines = text.lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty history CSV"))?;
+        let cols: Vec<&str> = header.split(',').collect();
+        let col = |name: &str| -> anyhow::Result<usize> {
+            cols.iter()
+                .position(|c| *c == name)
+                .ok_or_else(|| anyhow::anyhow!("history CSV is missing column '{name}'"))
+        };
+        let (c_round, c_top1, c_top3, c_top5) =
+            (col("round")?, col("top1")?, col("top3")?, col("top5")?);
+        let (c_freq1, c_freq3, c_freq5) = (col("freq1")?, col("freq3")?, col("freq5")?);
+        let (c_infreq1, c_infreq3, c_infreq5) =
+            (col("infreq1")?, col("infreq3")?, col("infreq5")?);
+        let (c_comm, c_down, c_up) = (col("comm_bytes")?, col("down_bytes")?, col("up_bytes")?);
+        let (c_secs, c_loss, c_sim) =
+            (col("round_seconds")?, col("mean_loss")?, col("sim_seconds")?);
+        let (c_train, c_enc, c_agg) = (
+            col("train_seconds")?,
+            col("encode_seconds")?,
+            col("aggregate_seconds")?,
+        );
+
+        let mut history = History::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').collect();
+            if fields.len() != cols.len() {
+                anyhow::bail!(
+                    "history CSV row {} has {} fields, header has {}",
+                    i + 2,
+                    fields.len(),
+                    cols.len()
+                );
+            }
+            let f = |c: usize| -> anyhow::Result<f64> {
+                fields[c]
+                    .trim()
+                    .parse::<f64>()
+                    .map_err(|e| anyhow::anyhow!("row {}, column {}: {e}", i + 2, cols[c]))
+            };
+            let u = |c: usize| -> anyhow::Result<u64> {
+                fields[c]
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|e| anyhow::anyhow!("row {}, column {}: {e}", i + 2, cols[c]))
+            };
+            history.push(RoundRecord {
+                round: u(c_round)? as usize,
+                accuracy: AccuracyReport {
+                    top1: f(c_top1)?,
+                    top3: f(c_top3)?,
+                    top5: f(c_top5)?,
+                    freq1: f(c_freq1)?,
+                    freq3: f(c_freq3)?,
+                    freq5: f(c_freq5)?,
+                    infreq1: f(c_infreq1)?,
+                    infreq3: f(c_infreq3)?,
+                    infreq5: f(c_infreq5)?,
+                    ..Default::default()
+                },
+                comm_bytes: u(c_comm)?,
+                down_bytes: u(c_down)?,
+                up_bytes: u(c_up)?,
+                round_seconds: f(c_secs)?,
+                mean_loss: f(c_loss)?,
+                timing: RoundTiming {
+                    train_seconds: f(c_train)?,
+                    encode_seconds: f(c_enc)?,
+                    aggregate_seconds: f(c_agg)?,
+                },
+                sim_seconds: f(c_sim)?,
+            });
+        }
+        Ok(history)
+    }
+
     /// JSON series (used by `results/*.json`).
     pub fn to_json(&self) -> Json {
         Json::Arr(
@@ -293,6 +378,26 @@ mod tests {
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,top1"));
         assert!(lines[1].starts_with("0,0.25"));
+    }
+
+    #[test]
+    fn csv_parses_back() {
+        let mut h = History::new();
+        h.push(rec(0, 0.25, 1.5));
+        h.push(rec(1, 0.5, 2.0));
+        let parsed = History::parse_csv(&h.to_csv()).unwrap();
+        assert_eq!(parsed.len(), 2);
+        let (a, b) = (&parsed.records[1], &h.records[1]);
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.accuracy.top1, b.accuracy.top1);
+        assert_eq!(a.comm_bytes, b.comm_bytes);
+        assert_eq!(a.down_bytes, b.down_bytes);
+        assert_eq!(a.sim_seconds, b.sim_seconds);
+        assert_eq!(a.timing.train_seconds, b.timing.train_seconds);
+        // Malformed input fails loudly, not silently.
+        assert!(History::parse_csv("").is_err());
+        assert!(History::parse_csv("round,top1\n0").is_err());
+        assert!(History::parse_csv("nope\n").is_err());
     }
 
     #[test]

@@ -123,16 +123,42 @@ pub fn run(
 
     let engine = RoundEngine::new(cfg.workers);
     if cfg.workers > 1 && backend.as_parallel().is_none() {
-        eprintln!(
-            "[server] backend '{}' is single-threaded; --workers {} falls back to sequential",
+        crate::log_warn!(
+            "server: backend '{}' is single-threaded; --workers {} falls back to sequential",
             backend.name(),
             cfg.workers
         );
     }
 
+    // Run-level instrumentation (purely observational — updated from
+    // values the loop already computes, never read back into it).
+    let obs = crate::obs::metrics::global();
+    let m_rounds = obs.counter("fedmlh_rounds_total", "Synchronous rounds completed.");
+    let m_down = obs.counter_with(
+        "fedmlh_comm_bytes_total",
+        "Encoded bytes moved over the federated links.",
+        &[("dir", "down")],
+    );
+    let m_up = obs.counter_with(
+        "fedmlh_comm_bytes_total",
+        "Encoded bytes moved over the federated links.",
+        &[("dir", "up")],
+    );
+    let m_round_seconds = obs.histogram(
+        "fedmlh_round_seconds",
+        "Wall-clock seconds per synchronous round.",
+        &[0.01, 0.1, 1.0, 10.0, 60.0, 600.0],
+    );
+    let m_accuracy = obs.gauge(
+        "fedmlh_mean_topk_accuracy",
+        "Mean top-k accuracy at the latest evaluation.",
+    );
+
     let mut rounds_run = 0usize;
     'rounds: for round in 0..cfg.rounds {
         let t_round = std::time::Instant::now();
+        let _span_round = crate::obs::trace::wall_span("round", 0)
+            .map(|g| g.arg("round", crate::util::json::Json::num(round as f64)));
         let selected = sampler.sample(round);
 
         // -- downlink (Algorithm 2 line 10): dense/q8/q8g compress each
@@ -190,31 +216,43 @@ pub fn run(
         // client-specific under the delta downlink and differs from
         // `globals[j]` whenever the downlink codec is lossy).
         let t_agg = std::time::Instant::now();
-        for j in 0..n_models {
-            let decoded: Vec<ModelParams> = updates
-                .iter()
-                .enumerate()
-                .map(|(slot, per_model)| {
-                    transport.decode(bcast.global(slot, j), &per_model[j].encoded)
-                })
-                .collect::<Result<_>>()?;
-            let refs: Vec<(&ModelParams, usize)> = decoded
-                .iter()
-                .zip(selected.iter())
-                .map(|(model, &client)| (model, partition.clients[client].len()))
-                .collect();
-            globals[j] = aggregate(&refs, Weighting::Uniform)?;
+        {
+            let _span_agg = crate::obs::trace::wall_span("aggregate", 0);
+            for j in 0..n_models {
+                let decoded: Vec<ModelParams> = updates
+                    .iter()
+                    .enumerate()
+                    .map(|(slot, per_model)| {
+                        transport.decode(bcast.global(slot, j), &per_model[j].encoded)
+                    })
+                    .collect::<Result<_>>()?;
+                let refs: Vec<(&ModelParams, usize)> = decoded
+                    .iter()
+                    .zip(selected.iter())
+                    .map(|(model, &client)| (model, partition.clients[client].len()))
+                    .collect();
+                globals[j] = aggregate(&refs, Weighting::Uniform)?;
+            }
         }
         timing.aggregate_seconds = t_agg.elapsed().as_secs_f64();
         comm.end_round();
         let round_seconds = t_round.elapsed().as_secs_f64();
         rounds_run = round + 1;
+        m_rounds.inc();
+        m_down.add(down_bytes);
+        m_up.add(up_bytes);
+        m_round_seconds.observe(round_seconds);
 
         // -- evaluation
         if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            let report = evaluate(
-                scheme, backend, &globals, test, &train_stats, frequent_k, batch, &test_batches,
-            )?;
+            let report = {
+                let _span_eval = crate::obs::trace::wall_span("evaluate", 0);
+                evaluate(
+                    scheme, backend, &globals, test, &train_stats, frequent_k, batch,
+                    &test_batches,
+                )?
+            };
+            m_accuracy.set(report.mean_topk());
             history.push(RoundRecord {
                 round,
                 accuracy: report,

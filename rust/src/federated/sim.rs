@@ -366,6 +366,13 @@ struct AsyncLoop<'a> {
 }
 
 impl<'a> AsyncLoop<'a> {
+    /// Trace lane for a dispatch: in-flight slots cycle through the
+    /// `concurrency` lanes so concurrent clients render side by side in
+    /// Perfetto instead of stacking on one row.
+    fn trace_lane(&self, seq: u64) -> u64 {
+        seq % self.cfg.sim.concurrency.max(1) as u64
+    }
+
     /// Dispatch one sampled client: broadcast to it, charge the
     /// download, run its local training *now* (deterministic order),
     /// and schedule the arrival — or a dropout — on the event clock.
@@ -391,8 +398,21 @@ impl<'a> AsyncLoop<'a> {
         // fires — a mid-compute fraction for the death time.
         let mut fate = Rng::new(derive_seed(self.cfg.seed, DROPOUT_TAG ^ seq));
         if fate.bernoulli(self.cfg.sim.dropout) {
+            let death = self.now + t_down + fate.next_f64() * t_compute;
+            if crate::obs::trace::enabled() {
+                crate::obs::trace::sim_span(
+                    "client dropout",
+                    self.trace_lane(seq),
+                    self.now,
+                    death,
+                    vec![(
+                        "client".to_string(),
+                        crate::util::json::Json::num(client as f64),
+                    )],
+                );
+            }
             self.queue.push(Reverse(Event {
-                time: self.now + t_down + fate.next_f64() * t_compute,
+                time: death,
                 seq,
                 kind: EventKind::Dropout,
             }));
@@ -424,8 +444,31 @@ impl<'a> AsyncLoop<'a> {
         let up_bytes: u64 = updates.iter().map(|u| u.encoded.byte_len() as u64).sum();
         let t_up = up_bytes as f64 / profile.up_bytes_per_second;
 
+        // Simulated-clock lifecycle spans: the trace shows what the
+        // *virtual* timeline looked like (stragglers stretch the train
+        // span, slow links stretch the transfers), not the wall time the
+        // simulator spent computing it.
+        let arrival = self.now + t_down + t_compute + t_up;
+        if crate::obs::trace::enabled() {
+            let lane = self.trace_lane(seq);
+            let args = vec![(
+                "client".to_string(),
+                crate::util::json::Json::num(client as f64),
+            )];
+            let t0 = self.now;
+            crate::obs::trace::sim_span("download", lane, t0, t0 + t_down, args.clone());
+            crate::obs::trace::sim_span(
+                "train",
+                lane,
+                t0 + t_down,
+                t0 + t_down + t_compute,
+                args.clone(),
+            );
+            crate::obs::trace::sim_span("upload", lane, t0 + t_down + t_compute, arrival, args);
+        }
+
         self.queue.push(Reverse(Event {
-            time: self.now + t_down + t_compute + t_up,
+            time: arrival,
             seq,
             kind: EventKind::Arrival {
                 base_version: self.version,
@@ -559,6 +602,23 @@ pub fn run_async(
     let frequent_k = partition.class_owner.len().max(1);
     let test_batches = batch_ranges(test.len(), batch);
 
+    // Event-loop instrumentation (observational only: updated from
+    // state the loop already computes, never read back).
+    let obs = crate::obs::metrics::global();
+    let m_aggregations = obs.counter(
+        "fedmlh_sim_aggregations_total",
+        "Buffered async aggregations applied.",
+    );
+    let m_staleness = obs.histogram(
+        "fedmlh_sim_staleness",
+        "Staleness (server versions behind) of aggregated updates.",
+        &[0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0],
+    );
+    let m_clock = obs.gauge(
+        "fedmlh_sim_clock_seconds",
+        "Simulated clock at the latest aggregation.",
+    );
+
     // Generous dispatch ceiling so a pathological dropout draw can't
     // spin forever; validation already caps dropout below 1.
     let needed = (cfg.rounds * cfg.sim.buffer) as f64;
@@ -603,6 +663,22 @@ pub fn run_async(
             apply_buffered(&mut state.globals, &taken)?;
             state.version += 1;
             state.stats.aggregations = state.version;
+            m_aggregations.inc();
+            for upd in &taken {
+                m_staleness.observe(upd.staleness as f64);
+            }
+            m_clock.set(state.now);
+            if crate::obs::trace::enabled() {
+                crate::obs::trace::sim_instant(
+                    "aggregate",
+                    0,
+                    state.now,
+                    vec![(
+                        "version".to_string(),
+                        crate::util::json::Json::num(state.version as f64),
+                    )],
+                );
+            }
             state.comm.end_round();
             let down_bytes = state.comm.downloaded() - state.down_mark;
             let up_bytes = state.comm.uploaded() - state.up_mark;
@@ -664,6 +740,24 @@ pub fn run_async(
 
     state.stats.sim_seconds = state.now;
     state.stats.mean_staleness = state.staleness_sum_total / state.stats.arrived.max(1) as f64;
+
+    // Dispatch/arrival/dropout totals land in the registry once at the
+    // end (the hot loop stays free of per-event registry traffic).
+    obs.counter(
+        "fedmlh_sim_dispatched_total",
+        "Client dispatches issued by the async simulator.",
+    )
+    .add(state.stats.dispatched);
+    obs.counter(
+        "fedmlh_sim_arrived_total",
+        "Client updates that arrived back.",
+    )
+    .add(state.stats.arrived);
+    obs.counter(
+        "fedmlh_sim_dropped_total",
+        "Dispatches lost to mid-round dropout.",
+    )
+    .add(state.stats.dropped);
 
     let best_rec = *history
         .best()

@@ -821,12 +821,26 @@ impl DeltaDownlink {
             Some(r) if version.saturating_sub(r.version) <= self.resync_every => {
                 let enc = encode_delta(self.spec, &r.model, global)?;
                 let decoded = apply_delta(&r.model, &enc)?;
+                crate::obs::metrics::global()
+                    .counter_with(
+                        "fedmlh_downlink_payloads_total",
+                        "Delta-downlink payloads shipped, by kind.",
+                        &[("kind", "delta")],
+                    )
+                    .inc();
                 (PayloadKind::Delta { base_version: r.version }, enc, decoded)
             }
             _ => {
                 // Full dense resync: the client lands bitwise on the
                 // server's current broadcast base.
                 let enc = encode_update(CodecSpec::Dense, global, global)?;
+                crate::obs::metrics::global()
+                    .counter_with(
+                        "fedmlh_downlink_payloads_total",
+                        "Delta-downlink payloads shipped, by kind.",
+                        &[("kind", "resync")],
+                    )
+                    .inc();
                 (PayloadKind::Full, enc, global.clone())
             }
         };

@@ -163,6 +163,54 @@ pub fn fig5_sweep_r(
     Ok(out)
 }
 
+/// Sync-vs-async wall-clock-vs-accuracy comparison, driven from two
+/// saved history CSVs (one synchronous run, one `--async` run of the
+/// same preset). Each mode gets a `clock_seconds` x-axis on its own
+/// terms: the synchronous run's clock is the *cumulative* measured
+/// per-round wall time, the async run's is the simulated clock the
+/// event loop stamped into `sim_seconds` — so the figure shows which
+/// mode reaches a given accuracy sooner on the timeline it actually
+/// experiences.
+pub fn fig_sync_vs_async(sync_csv: &str, async_csv: &str) -> Result<String> {
+    let sync_h = History::parse_csv(sync_csv)?;
+    let async_h = History::parse_csv(async_csv)?;
+    let mut csv = Csv::new(&[
+        "mode",
+        "round",
+        "clock_seconds",
+        "top1",
+        "top3",
+        "top5",
+        "comm_bytes",
+    ]);
+    let mut clock = 0.0f64;
+    for rec in &sync_h.records {
+        clock += rec.round_seconds;
+        comparison_row(&mut csv, "sync", rec, clock);
+    }
+    for rec in &async_h.records {
+        comparison_row(&mut csv, "async", rec, rec.sim_seconds);
+    }
+    Ok(csv.render())
+}
+
+fn comparison_row(
+    csv: &mut Csv,
+    mode: &str,
+    rec: &crate::federated::history::RoundRecord,
+    clock: f64,
+) {
+    csv.row(&[
+        mode.to_string(),
+        (rec.round + 1).to_string(),
+        format!("{clock:.4}"),
+        format!("{:.6}", rec.accuracy.top1),
+        format!("{:.6}", rec.accuracy.top3),
+        format!("{:.6}", rec.accuracy.top5),
+        rec.comm_bytes.to_string(),
+    ]);
+}
+
 /// Render sweep points as CSV (`param` column is "B" or "R").
 pub fn fig5_csv(param: &str, points: &[SweepPoint]) -> String {
     let mut csv = Csv::new(&["param", "value", "top1", "top3", "top5", "best_round", "model_bytes"]);
@@ -229,6 +277,49 @@ mod tests {
         assert!(csv.contains("fedmlh") && csv.contains("fedavg"));
         // 2 rounds × 2 algos + header
         assert_eq!(csv.trim().lines().count(), 1 + 4);
+    }
+
+    #[test]
+    fn sync_vs_async_comparison_uses_each_modes_clock() {
+        use crate::eval::metrics::AccuracyReport;
+        use crate::federated::history::{History, RoundRecord, RoundTiming};
+        let mk = |round: usize, top1: f64, secs: f64, sim: f64| RoundRecord {
+            round,
+            accuracy: AccuracyReport {
+                top1,
+                top3: top1,
+                top5: top1,
+                ..Default::default()
+            },
+            comm_bytes: (round as u64 + 1) * 1000,
+            down_bytes: 600,
+            up_bytes: 400,
+            round_seconds: secs,
+            mean_loss: 0.5,
+            timing: RoundTiming::default(),
+            sim_seconds: sim,
+        };
+        let mut sync_h = History::new();
+        sync_h.push(mk(0, 0.1, 2.0, 0.0));
+        sync_h.push(mk(1, 0.2, 3.0, 0.0));
+        let mut async_h = History::new();
+        async_h.push(mk(0, 0.15, 0.0, 40.0));
+        async_h.push(mk(1, 0.25, 0.0, 90.0));
+        let csv = fig_sync_vs_async(&sync_h.to_csv(), &async_h.to_csv()).unwrap();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 1 + 4);
+        assert_eq!(
+            lines[0],
+            "mode,round,clock_seconds,top1,top3,top5,comm_bytes"
+        );
+        // Sync clock accumulates measured round seconds: 2.0 then 5.0.
+        assert!(lines[1].starts_with("sync,1,2.0000,0.100000"), "{}", lines[1]);
+        assert!(lines[2].starts_with("sync,2,5.0000,0.200000"), "{}", lines[2]);
+        // Async clock is the simulated timeline, verbatim.
+        assert!(lines[3].starts_with("async,1,40.0000,0.150000"), "{}", lines[3]);
+        assert!(lines[4].starts_with("async,2,90.0000,0.250000"), "{}", lines[4]);
+        // Malformed history propagates as an error.
+        assert!(fig_sync_vs_async("bogus", &async_h.to_csv()).is_err());
     }
 
     #[test]

@@ -247,8 +247,8 @@ pub fn run_pair(cfg: &ExperimentConfig, opts: &HarnessOpts) -> Result<PairResult
     let mut outs = Vec::with_capacity(2);
     for algo in [Algo::FedAvg, Algo::FedMlh] {
         if opts.verbose {
-            eprintln!(
-                "[harness] {} × {} on preset '{}' ({} backend, ≤{} rounds)…",
+            crate::log_info!(
+                "harness: {} × {} on preset '{}' ({} backend, ≤{} rounds)…",
                 algo.name(),
                 cfg.preset.paper_analog,
                 cfg.preset.name,
@@ -267,8 +267,8 @@ pub fn run_pair(cfg: &ExperimentConfig, opts: &HarnessOpts) -> Result<PairResult
             &world.partition,
         )?;
         if opts.verbose {
-            eprintln!(
-                "[harness]   best mean@k {:.4} at round {} ({} rounds run, {:.1}s)",
+            crate::log_info!(
+                "harness:   best mean@k {:.4} at round {} ({} rounds run, {:.1}s)",
                 out.best.mean_topk(),
                 out.best_round,
                 out.rounds_run,

@@ -55,6 +55,7 @@ pub mod harness;
 pub mod hashing;
 pub mod kernels;
 pub mod model;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod serve;

@@ -38,6 +38,10 @@
 //! fedmlh fig3    --preset eurlex                    # accuracy curves CSV
 //! fedmlh fig5    --preset eurlex --sweep b          # hyper-param sensitivity
 //! fedmlh theory  --preset eurlex                    # Lemma 1/2, Theorem 2
+//! fedmlh figasync --sync-history results/run_tiny_fedmlh.csv \
+//!                 --async-history results/run_tiny_fedmlh_async.csv
+//!                                # sync-vs-async accuracy vs each mode's
+//!                                # own clock (measured vs simulated)
 //! fedmlh artifacts                                  # list compiled artifacts
 //! ```
 //!
@@ -45,13 +49,29 @@
 //! hashed model is small enough to ship (q8 checkpoints are ~4× smaller
 //! than dense f32), and the count-sketch decode answers `POST /predict`
 //! with exactly the offline evaluation's top-k.
+//!
+//! ## Observability
+//!
+//! Every training command accepts `--log-level <error|warn|info|debug>`
+//! (leveled stderr logging; `--quiet` implies `error`) and
+//! `--trace-out <path>`, which records named nested spans — rounds,
+//! per-client train/encode, aggregation, evaluation, kernel sections;
+//! async runs are stamped on the *simulated* clock — and writes a
+//! Chrome-trace-event JSON on exit. Load the file at
+//! <https://ui.perfetto.dev> or `chrome://tracing`. Tracing is purely
+//! observational: instrumented runs stay bitwise identical.
+//!
+//! `fedmlh serve` answers `GET /metrics` with JSON (the historical
+//! default) and with Prometheus text exposition at
+//! `GET /metrics?format=prometheus` — serve-local request/latency/batch
+//! stats plus the process-global metrics registry in one scrape.
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
 use fedmlh::config::presets::{by_name, paper_presets};
-use fedmlh::config::{Algo, DatasetPreset, ExperimentConfig, SimConfig};
+use fedmlh::config::{Algo, DatasetPreset, ExperimentConfig, ObsConfig, SimConfig};
 use fedmlh::federated::sim::Dist;
 use fedmlh::federated::transport::DownCodec;
 use fedmlh::federated::wire::CodecSpec;
@@ -66,12 +86,12 @@ use fedmlh::util::cli::{Args, Parsed};
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = dispatch(&argv) {
-        eprintln!("error: {e:#}");
+        fedmlh::log_error!("{e:#}");
         std::process::exit(1);
     }
 }
 
-const COMMANDS: &str = "run, serve, tables, table1, table2, fig2, fig3, fig4, fig5, theory, artifacts";
+const COMMANDS: &str = "run, serve, tables, table1, table2, fig2, fig3, fig4, fig5, figasync, theory, artifacts";
 
 fn dispatch(argv: &[String]) -> Result<()> {
     let Some(cmd) = argv.first() else {
@@ -87,6 +107,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "fig2" => cmd_fig2(rest),
         "fig3" | "fig4" => cmd_fig34(rest),
         "fig5" => cmd_fig5(rest),
+        "figasync" => cmd_figasync(rest),
         "theory" => cmd_theory(rest),
         "artifacts" => cmd_artifacts(rest),
         other => bail!("unknown command '{other}'\ncommands: {COMMANDS}"),
@@ -106,8 +127,27 @@ fn common_args(args: Args) -> Args {
         .flag("down-codec", "dense", "broadcast (server->client) codec: dense | q8 | q8g[:block] | topk[:frac] | topkv[:frac] (sparse = per-client versioned deltas vs each client's last decoded base)")
         .flag("resync-every", "8", "delta downlink: full dense resync for clients whose base is more than N rounds stale (0 = resync every participation)")
         .flag("error-feedback", "off", "stateful transport (on|off): client error-feedback accumulators + server broadcast-residual folding")
+        .flag("trace-out", "", "write a Chrome-trace-event JSON span trace here on exit (open in Perfetto / chrome://tracing)")
+        .flag("log-level", "info", "stderr log threshold: error | warn | info | debug")
         .switch("fast", "use the *_fast (jnp-lowered) artifact family — same math, ~7x faster on CPU")
-        .switch("quiet", "suppress progress logging")
+        .switch("quiet", "suppress progress logging (implies --log-level error)")
+}
+
+/// Parse the shared observability flags, apply them process-wide (log
+/// threshold + tracer install), and hand back the config so the caller
+/// can `export()` the trace once its run completes. `--quiet` lowers
+/// the threshold to `error` unless `--log-level` says otherwise.
+fn obs_from(p: &Parsed) -> Result<ObsConfig> {
+    let trace = p.get("trace-out");
+    let trace_out = (!trace.is_empty()).then(|| PathBuf::from(trace));
+    let level = if p.get_bool("quiet") && p.get("log-level") == "info" {
+        "error"
+    } else {
+        p.get("log-level")
+    };
+    let obs = ObsConfig::new(trace_out, level)?;
+    obs.apply();
+    Ok(obs)
 }
 
 fn parse_on_off(flag: &str, value: &str) -> Result<bool> {
@@ -205,6 +245,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         .flag("save-delta", "", "with --save: write the checkpoint as a delta against this base .fmlh (apply with `fedmlh serve --delta`)")
         .flag("delta-codec", "sparse", "delta payload codec (with --save-delta): sparse (changed coordinates, lossless) | q8diff (quantized difference, ~4x smaller, lossy)")
         .parse(argv)?;
+    let obs = obs_from(&p)?;
     let opts = opts_from(&p)?;
     let algo = Algo::parse(p.get("algo"))?;
 
@@ -230,8 +271,8 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let backend = harness::make_backend(opts.backend, rt.as_ref(), &cfg, algo)?;
     let scheme = fedmlh::algo::scheme_for(&cfg, algo, &world.data.train);
     if opts.verbose {
-        eprintln!(
-            "[run] {} on '{}' ({}), K={} S={} E={} rounds≤{} backend={} workers={} codec={} down={} feedback={}",
+        fedmlh::log_info!(
+            "run: {} on '{}' ({}), K={} S={} E={} rounds≤{} backend={} workers={} codec={} down={} feedback={}",
             algo.name(),
             cfg.preset.name,
             cfg.preset.paper_analog,
@@ -246,8 +287,8 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             if cfg.error_feedback { "on" } else { "off" }
         );
         if cfg.sim.async_mode {
-            eprintln!(
-                "[run] async sim: registry={} buffer={} concurrency={} dropout={} latency={} bandwidth={} staleness-exp={}",
+            fedmlh::log_info!(
+                "run: async sim: registry={} buffer={} concurrency={} dropout={} latency={} bandwidth={} staleness-exp={}",
                 cfg.client_population(),
                 cfg.sim.buffer,
                 cfg.sim.concurrency,
@@ -335,7 +376,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         let name = format!("run_{}_{}.csv", cfg.preset.name, algo.name());
         report::write_result(dir, &name, &out.history.to_csv())?;
         if opts.verbose {
-            eprintln!("[run] history → {}/{name}", dir.display());
+            fedmlh::log_info!("run: history → {}/{name}", dir.display());
         }
     }
     let save = p.get("save");
@@ -383,6 +424,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             );
         }
     }
+    obs.export()?;
     Ok(())
 }
 
@@ -395,7 +437,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("port", "8080", "TCP port (0 = ephemeral)")
         .flag("workers", "2", "inference worker threads (micro-batch pool)")
         .flag("max-batch", "32", "max requests coalesced into one forward pass")
+        .flag("log-level", "info", "stderr log threshold: error | warn | info | debug")
         .parse(argv)?;
+    ObsConfig::new(None, p.get("log-level"))?.apply();
     let port = p.get_usize("port")?;
     if port > u16::MAX as usize {
         bail!("--port {port} exceeds 65535");
@@ -415,15 +459,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     } else {
         let paths: Vec<PathBuf> = deltas.split(',').map(|s| PathBuf::from(s.trim())).collect();
         let ckpt = Checkpoint::load_chain(&base_path, &paths)?;
-        eprintln!(
-            "[serve] applied {} delta checkpoint(s) onto {}",
+        fedmlh::log_info!(
+            "serve: applied {} delta checkpoint(s) onto {}",
             paths.len(),
             base_path.display()
         );
         ckpt
     };
-    eprintln!(
-        "[serve] {} checkpoint '{}' — {} sub-model(s), d={}, p={}, seed {}",
+    fedmlh::log_info!(
+        "serve: {} checkpoint '{}' — {} sub-model(s), d={}, p={}, seed {}",
         ckpt.meta.algo.name(),
         ckpt.meta.preset,
         ckpt.r(),
@@ -438,8 +482,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         max_batch,
     };
     let server = Server::bind(ckpt, &opts)?;
-    eprintln!(
-        "[serve] listening on http://{} (POST /predict, GET /healthz, GET /metrics)",
+    fedmlh::log_info!(
+        "serve: listening on http://{} (POST /predict, GET /healthz, GET /metrics — JSON, or ?format=prometheus)",
         server.local_addr()?
     );
     server.run()
@@ -464,6 +508,7 @@ fn cmd_tables(argv: &[String]) -> Result<()> {
     ))
     .flag("presets", "eurlex", "comma-separated presets, or 'all'")
     .parse(argv)?;
+    let obs = obs_from(&p)?;
     let opts = opts_from(&p)?;
     let pairs = run_pairs(&preset_list(p.get("presets"))?, &opts)?;
     let text = tables::all_pair_tables(&pairs);
@@ -478,6 +523,7 @@ fn cmd_tables(argv: &[String]) -> Result<()> {
             )?;
         }
     }
+    obs.export()?;
     Ok(())
 }
 
@@ -485,6 +531,7 @@ fn cmd_table1(argv: &[String]) -> Result<()> {
     let p = common_args(Args::new("fedmlh table1", "dataset statistics"))
         .flag("presets", "all", "comma-separated presets, or 'all'")
         .parse(argv)?;
+    obs_from(&p)?;
     let presets = preset_list(p.get("presets"))?;
     let text = tables::table1(&presets, p.get_u64("seed")?);
     println!("### Table 1 — dataset statistics (synthetic analogs)\n\n{text}");
@@ -495,6 +542,7 @@ fn cmd_table2(argv: &[String]) -> Result<()> {
     let p = common_args(Args::new("fedmlh table2", "FedMLH hyper-parameters"))
         .flag("presets", "all", "comma-separated presets, or 'all'")
         .parse(argv)?;
+    obs_from(&p)?;
     let presets = preset_list(p.get("presets"))?;
     println!(
         "### Table 2 — hash tables R and buckets B\n\n{}",
@@ -512,6 +560,7 @@ fn cmd_fig2(argv: &[String]) -> Result<()> {
     ))
     .flag("preset", "eurlex", "dataset preset")
     .parse(argv)?;
+    obs_from(&p)?;
     let opts = opts_from(&p)?;
     let mut cfg = ExperimentConfig::preset(p.get("preset"))?;
     opts.configure(&mut cfg);
@@ -555,6 +604,7 @@ fn cmd_fig34(argv: &[String]) -> Result<()> {
     ))
     .flag("preset", "eurlex", "dataset preset")
     .parse(argv)?;
+    let obs = obs_from(&p)?;
     let opts = opts_from(&p)?;
     let cfg = ExperimentConfig::preset(p.get("preset"))?;
     let pair = harness::run_pair(&cfg, &opts)?;
@@ -574,6 +624,7 @@ fn cmd_fig34(argv: &[String]) -> Result<()> {
         report::pct(pair.fedavg.best.mean_topk()),
         pair.fedavg.best_round
     );
+    obs.export()?;
     Ok(())
 }
 
@@ -586,6 +637,7 @@ fn cmd_fig5(argv: &[String]) -> Result<()> {
     .flag("sweep", "b", "which hyper-parameter to sweep: b | r")
     .flag("values", "", "comma-separated sweep values (default: preset sweep list + default)")
     .parse(argv)?;
+    let obs = obs_from(&p)?;
     let opts = opts_from(&p)?;
     let cfg = ExperimentConfig::preset(p.get("preset"))?;
 
@@ -624,6 +676,35 @@ fn cmd_fig5(argv: &[String]) -> Result<()> {
             &csv,
         )?;
     }
+    obs.export()?;
+    Ok(())
+}
+
+/// `fedmlh figasync` — the sync-vs-async wall-clock-vs-accuracy
+/// comparison, from two saved history CSVs (one synchronous run, one
+/// `--async` run). Sync rows are keyed by cumulative measured round
+/// time, async rows by the event loop's simulated clock.
+fn cmd_figasync(argv: &[String]) -> Result<()> {
+    let p = Args::new(
+        "fedmlh figasync",
+        "sync-vs-async accuracy-vs-clock comparison from two saved history CSVs",
+    )
+    .required("sync-history", "history CSV from a synchronous run (e.g. results/run_tiny_fedmlh.csv)")
+    .required("async-history", "history CSV from an --async run of the same preset")
+    .flag("out", "results", "output directory for the comparison CSV")
+    .parse(argv)?;
+    let sync_csv = std::fs::read_to_string(p.get("sync-history"))
+        .with_context(|| format!("reading --sync-history {}", p.get("sync-history")))?;
+    let async_csv = std::fs::read_to_string(p.get("async-history"))
+        .with_context(|| format!("reading --async-history {}", p.get("async-history")))?;
+    let csv = figures::fig_sync_vs_async(&sync_csv, &async_csv)?;
+    let dir = PathBuf::from(p.get("out"));
+    report::write_result(&dir, "fig_sync_vs_async.csv", &csv)?;
+    println!(
+        "sync-vs-async comparison → {}/fig_sync_vs_async.csv ({} rows; clock_seconds is each mode's own timeline)",
+        dir.display(),
+        csv.trim().lines().count() - 1
+    );
     Ok(())
 }
 
@@ -637,6 +718,7 @@ fn cmd_theory(argv: &[String]) -> Result<()> {
     .flag("preset", "eurlex", "dataset preset")
     .flag("trials", "200", "Monte-Carlo trials")
     .parse(argv)?;
+    obs_from(&p)?;
     let opts = opts_from(&p)?;
     let mut cfg = ExperimentConfig::preset(p.get("preset"))?;
     opts.configure(&mut cfg);

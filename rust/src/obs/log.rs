@@ -1,0 +1,140 @@
+//! Leveled logging with a process-global threshold.
+//!
+//! The crate historically wrote progress chatter straight to stderr via
+//! `eprintln!`. Those call sites now route through the [`log_error!`],
+//! [`log_warn!`], [`log_info!`] and [`log_debug!`] macros, which check a
+//! single atomic level before formatting anything. `--log-level error`
+//! therefore silences progress output in scripted runs without touching
+//! result printing on stdout.
+//!
+//! The fast path is one relaxed atomic load; a disabled level never
+//! evaluates its format arguments.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered from most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or strongly unexpected conditions.
+    Error = 0,
+    /// Degraded behavior the run can continue through.
+    Warn = 1,
+    /// Progress chatter (default).
+    Info = 2,
+    /// High-volume diagnostics.
+    Debug = 3,
+}
+
+impl Level {
+    /// Parse a CLI level name. Accepts `error|warn|info|debug`.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    /// Lowercase name, matching what [`Level::parse`] accepts.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Current threshold; messages with `level as u8 <= LEVEL` are emitted.
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global log threshold.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current global log threshold.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Whether a message at `level` would be emitted right now.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit a pre-checked message. Called by the logging macros; the level
+/// check happens again here so direct callers stay correct.
+pub fn emit(level: Level, args: std::fmt::Arguments) {
+    if enabled(level) {
+        eprintln!("[{}] {args}", level.name());
+    }
+}
+
+/// Log at [`Level::Error`].
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::log::Level::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Warn`].
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Info`].
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::log::Level::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Debug`].
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::log::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_names() {
+        for lvl in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(lvl.name()), Some(lvl));
+        }
+        assert_eq!(Level::parse("verbose"), None);
+    }
+
+    #[test]
+    fn threshold_orders_levels() {
+        // Error is always enabled regardless of threshold; Debug only at Debug.
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

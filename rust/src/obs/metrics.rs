@@ -1,0 +1,429 @@
+//! Thread-safe metrics registry: counters, gauges, fixed-bucket histograms.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap `Arc`s over
+//! atomics — updating one is lock-free and safe from any thread, including
+//! the engine's worker pool. The [`MetricsRegistry`] owns the name →
+//! series map (a lock is taken only at registration and render time) and
+//! renders the whole collection in the Prometheus text exposition format.
+//!
+//! A process-global registry ([`global()`]) backs the train/sim/transport
+//! instrumentation; the serve path additionally keeps its windowed
+//! [`crate::serve::ServeMetrics`] and renders both on
+//! `GET /metrics?format=prometheus`.
+//!
+//! Naming convention: everything registered here is `fedmlh_*`, counters
+//! end in `_total`, and serve-local metrics use the disjoint
+//! `fedmlh_serve_*` prefix so the two renders concatenate without
+//! collisions.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonically increasing integer metric.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous float metric (stored as f64 bits in an atomic).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    /// Set the gauge to `v`.
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram. Bucket `i` counts observations `v <= uppers[i]`
+/// (non-cumulative internally); one extra overflow slot catches the rest.
+#[derive(Debug)]
+pub struct Histogram {
+    uppers: Vec<f64>,
+    counts: Vec<AtomicU64>, // len = uppers.len() + 1 (overflow / +Inf)
+    sum_bits: AtomicU64,
+    total: AtomicU64,
+}
+
+impl Histogram {
+    fn new(uppers: &[f64]) -> Histogram {
+        debug_assert!(
+            uppers.windows(2).all(|w| w[0] < w[1]),
+            "histogram bucket bounds must be strictly increasing"
+        );
+        Histogram {
+            uppers: uppers.to_vec(),
+            counts: (0..uppers.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .uppers
+            .iter()
+            .position(|&u| v <= u)
+            .unwrap_or(self.uppers.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        // CAS loop: atomics have no f64 fetch_add.
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Total number of observations.
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative `(upper_bound, count<=bound)` pairs; the last entry is
+    /// `(f64::INFINITY, count())` as Prometheus requires.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.counts.len());
+        let mut running = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            running += c.load(Ordering::Relaxed);
+            let upper = self.uppers.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((upper, running));
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    fn prom_type(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Series {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+#[derive(Debug)]
+struct Family {
+    help: String,
+    kind: MetricKind,
+    // Keyed by the rendered label set (`{k="v",...}` or "") so
+    // re-registration returns the existing handle.
+    series: BTreeMap<String, Series>,
+}
+
+/// Thread-safe collection of named metric families.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+fn label_key(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        // Escape per the Prometheus text format.
+        let escaped = v.replace('\\', "\\\\").replace('"', "\\\"");
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(&escaped);
+        out.push('"');
+    }
+    out.push('}');
+    out
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn register(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Series,
+        kind: MetricKind,
+    ) -> Series {
+        let key = label_key(labels);
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            series: BTreeMap::new(),
+        });
+        assert!(
+            fam.kind == kind,
+            "metric '{name}' re-registered as a different kind"
+        );
+        fam.series.entry(key).or_insert_with(make).clone()
+    }
+
+    /// Register (or look up) an unlabeled counter.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        self.counter_with(name, help, &[])
+    }
+
+    /// Register (or look up) a labeled counter.
+    pub fn counter_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.register(
+            name,
+            help,
+            labels,
+            || Series::Counter(Arc::new(Counter::default())),
+            MetricKind::Counter,
+        ) {
+            Series::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or look up) an unlabeled gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        self.gauge_with(name, help, &[])
+    }
+
+    /// Register (or look up) a labeled gauge.
+    pub fn gauge_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.register(
+            name,
+            help,
+            labels,
+            || Series::Gauge(Arc::new(Gauge::default())),
+            MetricKind::Gauge,
+        ) {
+            Series::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or look up) an unlabeled histogram with the given
+    /// strictly increasing bucket upper bounds (`+Inf` is implicit).
+    pub fn histogram(&self, name: &str, help: &str, uppers: &[f64]) -> Arc<Histogram> {
+        self.histogram_with(name, help, uppers, &[])
+    }
+
+    /// Register (or look up) a labeled histogram.
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        help: &str,
+        uppers: &[f64],
+        labels: &[(&str, &str)],
+    ) -> Arc<Histogram> {
+        match self.register(
+            name,
+            help,
+            labels,
+            || Series::Histogram(Arc::new(Histogram::new(uppers))),
+            MetricKind::Histogram,
+        ) {
+            Series::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Render every family in the Prometheus text exposition format.
+    pub fn render_prometheus(&self) -> String {
+        let fams = self.families.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in fams.iter() {
+            out.push_str(&format!("# HELP {name} {}\n", fam.help));
+            out.push_str(&format!("# TYPE {name} {}\n", fam.kind.prom_type()));
+            for (labels, series) in fam.series.iter() {
+                match series {
+                    Series::Counter(c) => {
+                        out.push_str(&format!("{name}{labels} {}\n", c.get()));
+                    }
+                    Series::Gauge(g) => {
+                        out.push_str(&format!("{name}{labels} {}\n", fmt_f64(g.get())));
+                    }
+                    Series::Histogram(h) => {
+                        // One bucket snapshot feeds both `_bucket` and
+                        // `_count`: `+Inf` must equal `_count` even if
+                        // another thread is observing mid-render.
+                        let buckets = h.buckets();
+                        let total = buckets.last().map_or(0, |&(_, c)| c);
+                        for (upper, count) in buckets {
+                            let le = if upper.is_infinite() {
+                                "+Inf".to_string()
+                            } else {
+                                fmt_f64(upper)
+                            };
+                            let merged = merge_le(labels, &le);
+                            out.push_str(&format!("{name}_bucket{merged} {count}\n"));
+                        }
+                        out.push_str(&format!("{name}_sum{labels} {}\n", fmt_f64(h.sum())));
+                        out.push_str(&format!("{name}_count{labels} {total}\n"));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Merge an `le` label into an existing rendered label set.
+fn merge_le(labels: &str, le: &str) -> String {
+    if labels.is_empty() {
+        format!("{{le=\"{le}\"}}")
+    } else {
+        // labels is "{k=\"v\",...}" — splice before the closing brace.
+        let inner = &labels[..labels.len() - 1];
+        format!("{inner},le=\"{le}\"}}")
+    }
+}
+
+/// Render an f64 the way Prometheus expects (integers without a trailing
+/// `.0`, everything else via the default float formatter).
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+
+/// The process-global registry used by train/sim/transport instrumentation.
+pub fn global() -> &'static MetricsRegistry {
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("fedmlh_test_total", "test counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Re-registration returns the same underlying series.
+        let c2 = reg.counter("fedmlh_test_total", "test counter");
+        c2.inc();
+        assert_eq!(c.get(), 6);
+
+        let g = reg.gauge("fedmlh_test_gauge", "test gauge");
+        g.set(0.25);
+        assert_eq!(g.get(), 0.25);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("fedmlh_test_hist", "test hist", &[1.0, 2.0, 4.0]);
+        // Exactly-on-boundary lands in that bucket (le semantics).
+        h.observe(1.0);
+        h.observe(1.5);
+        h.observe(4.0);
+        h.observe(100.0); // overflow
+        let b = h.buckets();
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[0], (1.0, 1)); // v=1.0
+        assert_eq!(b[1], (2.0, 2)); // + v=1.5
+        assert_eq!(b[2], (4.0, 3)); // + v=4.0
+        assert!(b[3].0.is_infinite());
+        assert_eq!(b[3].1, 4); // + v=100
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 106.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prometheus_render_shape() {
+        let reg = MetricsRegistry::new();
+        reg.counter("fedmlh_rounds_total", "rounds run").add(3);
+        reg.gauge("fedmlh_accuracy", "top-1").set(0.5);
+        let h = reg.histogram("fedmlh_lat_seconds", "latency", &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(5.0);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# HELP fedmlh_rounds_total rounds run\n"));
+        assert!(text.contains("# TYPE fedmlh_rounds_total counter\n"));
+        assert!(text.contains("fedmlh_rounds_total 3\n"));
+        assert!(text.contains("fedmlh_accuracy 0.5\n"));
+        assert!(text.contains("fedmlh_lat_seconds_bucket{le=\"0.1\"} 1\n"));
+        assert!(text.contains("fedmlh_lat_seconds_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("fedmlh_lat_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("fedmlh_lat_seconds_sum 5.05\n"));
+        assert!(text.contains("fedmlh_lat_seconds_count 2\n"));
+    }
+
+    #[test]
+    fn labeled_series_render_sorted() {
+        let reg = MetricsRegistry::new();
+        reg.counter_with("fedmlh_bytes_total", "bytes", &[("dir", "up")])
+            .add(10);
+        reg.counter_with("fedmlh_bytes_total", "bytes", &[("dir", "down")])
+            .add(20);
+        let text = reg.render_prometheus();
+        let down = text.find("fedmlh_bytes_total{dir=\"down\"} 20").unwrap();
+        let up = text.find("fedmlh_bytes_total{dir=\"up\"} 10").unwrap();
+        assert!(down < up, "series render in sorted label order");
+        // HELP/TYPE appear exactly once for the family.
+        assert_eq!(text.matches("# TYPE fedmlh_bytes_total").count(), 1);
+    }
+}

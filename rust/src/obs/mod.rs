@@ -1,0 +1,27 @@
+//! Observability: metrics, span tracing, and leveled logging.
+//!
+//! Zero-dependency telemetry shared by the round engine, the async
+//! simulator, the transport layer, and the serve path:
+//!
+//! * [`metrics`] — a thread-safe registry of counters, gauges, and
+//!   fixed-bucket histograms with Prometheus text exposition. The
+//!   process-global registry ([`metrics::global()`]) is scraped by
+//!   `GET /metrics?format=prometheus` alongside the serve-local window
+//!   metrics.
+//! * [`trace`] — a span tracer exporting Chrome-trace-event JSON
+//!   (open in Perfetto or `chrome://tracing`). Sync rounds and kernel
+//!   sections record wall-clock spans; async simulation records spans on
+//!   the *simulated* clock, so stragglers / buffer flushes / dropout are
+//!   visible at million-client scale. Enabled by `--trace-out <path>`.
+//! * [`log`] — `log_error!` / `log_warn!` / `log_info!` / `log_debug!`
+//!   macros behind a global threshold set by `--log-level` (and lowered
+//!   to `error` by `--quiet`).
+//!
+//! All three are near-zero-cost when disabled (one relaxed atomic load)
+//! and strictly observational: instrumentation never feeds back into RNG
+//! draws, event ordering, or model arithmetic, so bitwise determinism is
+//! preserved with tracing on.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;

@@ -25,7 +25,10 @@
 //!   exactly the training-time map.
 //! - `GET /healthz` — checkpoint identity + pool shape, for probes.
 //! - `GET /metrics` — request count, p50/p99 latency, batch-size
-//!   histogram ([`super::metrics`]).
+//!   histogram ([`super::metrics`]) as JSON;
+//!   `GET /metrics?format=prometheus` serves the same data (plus the
+//!   process-global [`crate::obs::metrics`] registry) in the Prometheus
+//!   text exposition format for scrapers.
 //!
 //! One OS thread per connection parses and responds; prediction work
 //! is handed to the shared [`Predictor`] pool, which coalesces
@@ -180,7 +183,7 @@ impl Server {
                     // Persistent accept errors (e.g. fd exhaustion under
                     // a connection flood) would otherwise busy-spin this
                     // loop at 100% CPU; back off briefly before retrying.
-                    eprintln!("[serve] accept error: {e}");
+                    crate::log_warn!("serve: accept error: {e}");
                     std::thread::sleep(Duration::from_millis(50));
                 }
             }
@@ -203,58 +206,91 @@ fn handle_connection(conn: &mut TcpStream, ctx: &ServeCtx) {
             // Clean close (or idle timeout) between keep-alive requests.
             Ok(None) => return,
             Err(e) => {
-                let _ =
-                    respond(conn, 400, "Bad Request", &error_body(&format!("{e:#}")), false);
+                let _ = respond(
+                    conn,
+                    400,
+                    "Bad Request",
+                    CT_JSON,
+                    &error_body(&format!("{e:#}")),
+                    false,
+                );
                 return;
             }
         };
         let Request {
             method,
             path,
+            query,
             body,
             keep_alive: client_keep_alive,
         } = req;
         let keep_alive = client_keep_alive && served < MAX_REQUESTS_PER_CONN;
         let t0 = Instant::now();
-        let (status, reason, body) = route(ctx, &method, &path, &body);
+        let (status, reason, content_type, body) = route(ctx, &method, &path, &query, &body);
         if method == "POST" && path == "/predict" {
             ctx.metrics.record_request(t0.elapsed(), status == 200);
         }
-        if respond(conn, status, reason, &body, keep_alive).is_err() || !keep_alive {
+        if respond(conn, status, reason, content_type, &body, keep_alive).is_err() || !keep_alive {
             return;
         }
     }
 }
 
-fn route(ctx: &ServeCtx, method: &str, path: &str, body: &[u8]) -> (u16, &'static str, String) {
+/// JSON content type (default for every endpoint).
+const CT_JSON: &str = "application/json";
+/// Prometheus text exposition content type.
+const CT_PROM: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+fn route(
+    ctx: &ServeCtx,
+    method: &str,
+    path: &str,
+    query: &str,
+    body: &[u8],
+) -> (u16, &'static str, &'static str, String) {
     match (method, path) {
-        ("GET", "/healthz") => (200, "OK", ctx.health.clone()),
-        ("GET", "/metrics") => (
-            200,
-            "OK",
-            ctx.metrics.snapshot().to_json().to_string_pretty(2),
-        ),
+        ("GET", "/healthz") => (200, "OK", CT_JSON, ctx.health.clone()),
+        // Plain `/metrics` stays JSON (the historical contract);
+        // `?format=prometheus` serves the text exposition format,
+        // appending the process-global training/sim registry so one
+        // scrape covers both the serve window and run-level counters.
+        ("GET", "/metrics") => {
+            if query.split('&').any(|kv| kv == "format=prometheus") {
+                let mut text = ctx.metrics.snapshot().to_prometheus();
+                text.push_str(&crate::obs::metrics::global().render_prometheus());
+                (200, "OK", CT_PROM, text)
+            } else {
+                (
+                    200,
+                    "OK",
+                    CT_JSON,
+                    ctx.metrics.snapshot().to_json().to_string_pretty(2),
+                )
+            }
+        }
         // Parse failures are the client's fault (400); a predictor that
         // cannot answer a well-formed request is ours (500), so load
         // balancers and alerting see a server fault, not a bad request.
         ("POST", "/predict") => match parse_predict(ctx, body) {
-            Err(e) => (400, "Bad Request", error_body(&format!("{e:#}"))),
+            Err(e) => (400, "Bad Request", CT_JSON, error_body(&format!("{e:#}"))),
             Ok((x, k)) => match ctx.predictor.predict(x, k) {
                 // Non-finite scores (diverged dense checkpoint, or
                 // finite-but-extreme inputs overflowing the forward
                 // pass) would serialize as the illegal JSON tokens
                 // NaN/inf — report a server fault instead.
                 Ok(topk) if topk.iter().all(|&(_, s)| s.is_finite()) => {
-                    (200, "OK", predict_body(&topk, k))
+                    (200, "OK", CT_JSON, predict_body(&topk, k))
                 }
                 Ok(_) => (
                     500,
                     "Internal Server Error",
+                    CT_JSON,
                     error_body("model produced non-finite scores"),
                 ),
                 Err(e) => (
                     500,
                     "Internal Server Error",
+                    CT_JSON,
                     error_body(&format!("{e:#}")),
                 ),
             },
@@ -262,11 +298,13 @@ fn route(ctx: &ServeCtx, method: &str, path: &str, body: &[u8]) -> (u16, &'stati
         (_, "/predict") | (_, "/healthz") | (_, "/metrics") => (
             405,
             "Method Not Allowed",
+            CT_JSON,
             error_body("use POST /predict, GET /healthz, GET /metrics"),
         ),
         _ => (
             404,
             "Not Found",
+            CT_JSON,
             error_body("unknown path (endpoints: /predict, /healthz, /metrics)"),
         ),
     }
@@ -353,6 +391,8 @@ fn error_body(message: &str) -> String {
 struct Request {
     method: String,
     path: String,
+    /// Raw query string (without the `?`); empty when absent.
+    query: String,
     body: Vec<u8>,
     /// The client asked for `Connection: keep-alive` (reuse is opt-in:
     /// absent or any other value means close after this response).
@@ -415,8 +455,12 @@ fn read_request(conn: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Requ
         .context("empty request line")?
         .to_ascii_uppercase();
     let path = parts.next().context("request line has no path")?.to_string();
-    // Strip any query string: routing is path-only.
-    let path = path.split('?').next().unwrap_or("").to_string();
+    // Routing matches on the bare path; the query string rides along
+    // separately (e.g. `/metrics?format=prometheus`).
+    let (path, query) = match path.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (path, String::new()),
+    };
 
     let mut content_length = 0usize;
     let mut keep_alive = false;
@@ -450,6 +494,7 @@ fn read_request(conn: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Requ
     Ok(Some(Request {
         method,
         path,
+        query,
         body,
         keep_alive,
     }))
@@ -459,12 +504,13 @@ fn respond(
     conn: &mut TcpStream,
     status: u16,
     reason: &str,
+    content_type: &str,
     body: &str,
     keep_alive: bool,
 ) -> std::io::Result<()> {
     let connection = if keep_alive { "keep-alive" } else { "close" };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {connection}\r\n\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {connection}\r\n\r\n",
         body.len()
     );
     conn.write_all(head.as_bytes())?;

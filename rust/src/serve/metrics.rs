@@ -94,8 +94,20 @@ impl ServeMetrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let inner = self.inner.lock().unwrap();
-        let mut sorted = inner.latencies_us.clone();
+        // Copy everything out under the lock, then do the O(n log n)
+        // percentile sort outside it — a scrape must not stall the
+        // predict path for the duration of sorting a 4096-entry ring.
+        let (requests, errors, mut sorted, batches, batched_rows, batch_buckets) = {
+            let inner = self.inner.lock().unwrap();
+            (
+                inner.requests,
+                inner.errors,
+                inner.latencies_us.clone(),
+                inner.batches,
+                inner.batched_rows,
+                inner.batch_buckets.clone(),
+            )
+        };
         sorted.sort_unstable();
         let pick = |q: f64| -> u64 {
             if sorted.is_empty() {
@@ -105,14 +117,13 @@ impl ServeMetrics {
             }
         };
         MetricsSnapshot {
-            requests: inner.requests,
-            errors: inner.errors,
+            requests,
+            errors,
             p50_us: pick(0.50),
             p99_us: pick(0.99),
-            batches: inner.batches,
-            batched_rows: inner.batched_rows,
-            batch_hist: inner
-                .batch_buckets
+            batches,
+            batched_rows,
+            batch_hist: batch_buckets
                 .iter()
                 .enumerate()
                 .map(|(i, &count)| (1usize << i, count))
@@ -144,6 +155,59 @@ impl MetricsSnapshot {
             ("batched_rows", Json::num(self.batched_rows as f64)),
             ("batch_size_hist", hist),
         ])
+    }
+
+    /// Prometheus text exposition of the same snapshot
+    /// (`GET /metrics?format=prometheus`). Serve-local metrics use the
+    /// `fedmlh_serve_*` prefix, disjoint from the training registry's
+    /// `fedmlh_*` names, so both renders concatenate cleanly.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut scalar = |name: &str, kind: &str, help: &str, value: u64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+            ));
+        };
+        scalar(
+            "fedmlh_serve_requests_total",
+            "counter",
+            "Predict requests received.",
+            self.requests,
+        );
+        scalar(
+            "fedmlh_serve_errors_total",
+            "counter",
+            "Predict requests that failed.",
+            self.errors,
+        );
+        scalar(
+            "fedmlh_serve_latency_p50_us",
+            "gauge",
+            "Median prediction latency over the ring window (microseconds).",
+            self.p50_us,
+        );
+        scalar(
+            "fedmlh_serve_latency_p99_us",
+            "gauge",
+            "99th-percentile prediction latency over the ring window (microseconds).",
+            self.p99_us,
+        );
+        // Batch-size histogram: per-bucket counts become the cumulative
+        // `le` buckets Prometheus expects; rows/batches double as _sum
+        // and _count.
+        let name = "fedmlh_serve_batch_size";
+        out.push_str(&format!(
+            "# HELP {name} Rows per coalesced forward pass.\n# TYPE {name} histogram\n"
+        ));
+        let mut running = 0u64;
+        for &(le, count) in &self.batch_hist {
+            running += count;
+            out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {running}\n"));
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {running}\n"));
+        out.push_str(&format!("{name}_sum {}\n", self.batched_rows));
+        out.push_str(&format!("{name}_count {}\n", self.batches));
+        out
     }
 }
 
@@ -211,5 +275,27 @@ mod tests {
         assert_eq!(j.expect("latency_p50_us").unwrap().as_f64().unwrap(), 42.0);
         let hist = j.expect("batch_size_hist").unwrap().as_arr().unwrap();
         assert!(!hist.is_empty());
+    }
+
+    #[test]
+    fn metrics_prometheus_shape() {
+        let m = ServeMetrics::new();
+        m.record_request(Duration::from_micros(42), true);
+        m.record_request(Duration::from_micros(10), false);
+        m.record_batch(1);
+        m.record_batch(3);
+        let text = m.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE fedmlh_serve_requests_total counter\n"));
+        assert!(text.contains("fedmlh_serve_requests_total 2\n"));
+        assert!(text.contains("fedmlh_serve_errors_total 1\n"));
+        assert!(text.contains("fedmlh_serve_latency_p50_us 42\n"));
+        // Cumulative buckets: le=1 holds the single-row batch, le=2
+        // stays at 1, le=4 adds the size-3 batch, +Inf matches _count.
+        assert!(text.contains("fedmlh_serve_batch_size_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("fedmlh_serve_batch_size_bucket{le=\"2\"} 1\n"));
+        assert!(text.contains("fedmlh_serve_batch_size_bucket{le=\"4\"} 2\n"));
+        assert!(text.contains("fedmlh_serve_batch_size_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("fedmlh_serve_batch_size_sum 4\n"));
+        assert!(text.contains("fedmlh_serve_batch_size_count 2\n"));
     }
 }

@@ -21,6 +21,9 @@
 //! - [`http`] — `fedmlh serve`: a `std::net` HTTP front end exposing
 //!   `POST /predict`, `GET /healthz` and `GET /metrics`
 //!   ([`metrics`]: request count, p50/p99 latency, batch histogram).
+//!   `/metrics` answers JSON by default (the historical contract) and
+//!   Prometheus text exposition at `?format=prometheus`, which also
+//!   folds in the process-global [`crate::obs::metrics`] registry.
 //!
 //! End to end: `fedmlh run --preset eurlex --save m.fmlh` then
 //! `fedmlh serve --checkpoint m.fmlh --port 8080 --workers 4`.

@@ -1,4 +1,9 @@
 //! Wall-clock timing helpers for the harness and the bench substrate.
+//!
+//! When the span tracer is installed (`--trace-out`), every
+//! [`Stopwatch::time`] section doubles as a wall-clock trace span, so
+//! harness/kernel sections show up on the Perfetto timeline without any
+//! extra call sites.
 
 use std::time::Instant;
 
@@ -13,8 +18,10 @@ impl Stopwatch {
         Self::default()
     }
 
-    /// Time a closure and record it under `name`.
+    /// Time a closure and record it under `name` (and as a trace span
+    /// when tracing is enabled).
     pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let _span = crate::obs::trace::wall_span(name, 0);
         let t0 = Instant::now();
         let out = f();
         self.sections

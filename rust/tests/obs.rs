@@ -1,0 +1,290 @@
+//! End-to-end guarantees of the observability layer (`fedmlh::obs`):
+//! the Prometheus text exposition is format-clean, the Chrome-trace
+//! JSON written by `--trace-out` parses and is well-formed, histogram
+//! bucket boundaries follow the `v <= upper` convention, and — the
+//! load-bearing one — enabling the tracer does not perturb a seeded
+//! simulation by a single bit.
+
+use fedmlh::algo::scheme_for;
+use fedmlh::config::{Algo, ExperimentConfig, ObsConfig};
+use fedmlh::federated::sim::run_async;
+use fedmlh::federated::{RunOutput, RustBackend};
+use fedmlh::obs::metrics::MetricsRegistry;
+use fedmlh::obs::trace;
+use fedmlh::partition::noniid::{partition as noniid, NonIidOptions};
+use fedmlh::util::json::Json;
+
+// ------------------------------------------------ Prometheus lint
+
+fn valid_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && !s.starts_with(|c: char| c.is_ascii_digit())
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Split a sample line into (metric name, le label if any, value).
+fn parse_sample(line: &str) -> (String, Option<String>, f64) {
+    let (name_labels, value) = line.rsplit_once(' ').expect("sample has a value");
+    let (name, le) = match name_labels.split_once('{') {
+        Some((name, rest)) => {
+            let labels = rest.strip_suffix('}').expect("labels close");
+            let le = labels.split(',').find_map(|kv| {
+                kv.strip_prefix("le=\"")
+                    .and_then(|v| v.strip_suffix('"'))
+                    .map(|v| v.to_string())
+            });
+            (name.to_string(), le)
+        }
+        None => (name_labels.to_string(), None),
+    };
+    let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in '{line}'"));
+    (name, le, v)
+}
+
+/// Lint a Prometheus text page: valid names, HELP/TYPE announced once
+/// per family before its samples, counters named `*_total`, histogram
+/// `le` buckets cumulative and capped by `+Inf` == `_count`.
+fn lint_prometheus(text: &str) {
+    use std::collections::HashMap;
+    let mut kinds: HashMap<String, String> = HashMap::new();
+    let mut helped: Vec<String> = Vec::new();
+    // histogram family -> (le list in order, bucket counts, count sample)
+    let mut hist: HashMap<String, (Vec<String>, Vec<f64>, Option<f64>)> = HashMap::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap();
+            assert!(valid_metric_name(name), "bad family name in '{line}'");
+            assert!(!helped.contains(&name.to_string()), "duplicate HELP for {name}");
+            helped.push(name.to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().unwrap();
+            let kind = it.next().expect("TYPE has a kind");
+            assert!(
+                ["counter", "gauge", "histogram"].contains(&kind),
+                "unknown kind in '{line}'"
+            );
+            assert!(
+                helped.contains(&name.to_string()),
+                "TYPE before HELP for {name}"
+            );
+            assert!(
+                kinds.insert(name.to_string(), kind.to_string()).is_none(),
+                "duplicate TYPE for {name}"
+            );
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unexpected comment '{line}'");
+        let (name, le, value) = parse_sample(line);
+        assert!(valid_metric_name(&name), "bad sample name in '{line}'");
+        // Resolve the family the sample belongs to.
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                name.strip_suffix(suf)
+                    .filter(|base| kinds.get(*base).map(String::as_str) == Some("histogram"))
+            })
+            .unwrap_or(&name)
+            .to_string();
+        let kind = kinds
+            .get(&family)
+            .unwrap_or_else(|| panic!("sample '{line}' precedes its TYPE"))
+            .clone();
+        if kind == "counter" {
+            assert!(family.ends_with("_total"), "counter {family} must end _total");
+            assert!(value >= 0.0, "counter went negative: '{line}'");
+        }
+        if kind == "histogram" {
+            let entry = hist.entry(family).or_default();
+            if name.ends_with("_bucket") {
+                entry.0.push(le.expect("bucket sample has le"));
+                entry.1.push(value);
+            } else if name.ends_with("_count") {
+                entry.2 = Some(value);
+            }
+        }
+    }
+    for (family, (les, counts, count)) in &hist {
+        assert_eq!(les.last().map(String::as_str), Some("+Inf"), "{family} missing +Inf");
+        for w in counts.windows(2) {
+            assert!(w[0] <= w[1], "{family} buckets not cumulative: {counts:?}");
+        }
+        assert_eq!(
+            counts.last().copied(),
+            *count,
+            "{family}: +Inf bucket must equal _count"
+        );
+    }
+}
+
+#[test]
+fn prometheus_exposition_is_format_clean() {
+    let reg = MetricsRegistry::new();
+    reg.counter("fedmlh_test_events_total", "Test events.").add(3);
+    reg.gauge("fedmlh_test_level", "Test level.").set(1.5);
+    reg.counter_with("fedmlh_test_bytes_total", "Bytes by dir.", &[("dir", "down")])
+        .add(100);
+    reg.counter_with("fedmlh_test_bytes_total", "Bytes by dir.", &[("dir", "up")])
+        .add(40);
+    let h = reg.histogram("fedmlh_test_latency", "Latency.", &[0.1, 1.0, 10.0]);
+    for v in [0.05, 0.5, 0.5, 5.0, 50.0] {
+        h.observe(v);
+    }
+    let page = reg.render_prometheus();
+    lint_prometheus(&page);
+    assert!(page.contains("fedmlh_test_bytes_total{dir=\"down\"} 100"), "{page}");
+    assert!(page.contains("fedmlh_test_latency_bucket{le=\"+Inf\"} 5"), "{page}");
+    assert!(page.contains("fedmlh_test_latency_count 5"), "{page}");
+}
+
+#[test]
+fn global_registry_renders_clean_after_a_run() {
+    // A real run populates the global registry (rounds, comm bytes,
+    // accuracy, …); whatever ended up in there must lint.
+    let cfg = sim_cfg(100, 2, 2, 0.0);
+    run(&cfg);
+    let page = fedmlh::obs::metrics::global().render_prometheus();
+    lint_prometheus(&page);
+    assert!(page.contains("fedmlh_sim_aggregations_total"), "{page}");
+}
+
+// ------------------------------------------------ histogram buckets
+
+#[test]
+fn histogram_boundaries_are_inclusive_upper() {
+    let reg = MetricsRegistry::new();
+    let h = reg.histogram("fedmlh_test_bounds", "Bounds.", &[1.0, 2.0]);
+    h.observe(1.0); // exactly on a boundary → counts in that bucket
+    h.observe(2.0);
+    h.observe(2.0000001); // just over → overflow bucket
+    let buckets = h.buckets();
+    assert_eq!(buckets[0], (1.0, 1));
+    assert_eq!(buckets[1], (2.0, 2));
+    assert_eq!(buckets[2].1, 3);
+    assert!(buckets[2].0.is_infinite());
+    assert_eq!(h.count(), 3);
+}
+
+// ------------------------------------------------ trace JSON
+
+#[test]
+fn trace_out_writes_valid_chrome_trace_json() {
+    trace::install();
+    {
+        let _outer = trace::wall_span("obs test outer", 7)
+            .map(|g| g.arg("k", Json::num(1.0)));
+        let _inner = trace::wall_span("obs test inner", 7);
+    }
+    trace::sim_span("obs test sim", 3, 1.0, 2.5, vec![("client".to_string(), Json::num(9.0))]);
+    trace::sim_instant("obs test mark", 0, 2.5, vec![]);
+
+    let path = std::env::temp_dir().join(format!("fedmlh_obs_trace_{}.json", std::process::id()));
+    let obs = ObsConfig::new(Some(path.clone()), "info").unwrap();
+    obs.apply();
+    obs.export().unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let parsed = Json::parse(&text).unwrap();
+    let events = parsed
+        .get("traceEvents")
+        .expect("traceEvents key")
+        .as_arr()
+        .unwrap();
+    assert!(events.len() >= 6, "metadata + our 4 events, got {}", events.len());
+    let mut prev_ts = f64::NEG_INFINITY;
+    let mut names = Vec::new();
+    for ev in events {
+        let ph = ev.get("ph").expect("ph").as_str().unwrap();
+        names.push(ev.get("name").expect("name").as_str().unwrap().to_string());
+        if ph == "M" {
+            continue; // metadata has no timestamp
+        }
+        let ts = ev.get("ts").expect("ts").as_f64().unwrap();
+        assert!(ts >= prev_ts, "events sorted by ts: {ts} < {prev_ts}");
+        prev_ts = ts;
+        let pid = ev.get("pid").expect("pid").as_f64().unwrap();
+        assert!(pid == trace::SIM_PID as f64 || pid == trace::WALL_PID as f64);
+        match ph {
+            "X" => assert!(ev.get("dur").expect("dur").as_f64().unwrap() >= 0.0),
+            "i" => assert_eq!(ev.get("s").expect("scope").as_str().unwrap(), "t"),
+            other => panic!("unexpected phase '{other}'"),
+        }
+    }
+    for want in ["simulated", "wall-clock", "obs test outer", "obs test sim", "obs test mark"] {
+        assert!(names.iter().any(|n| n == want), "missing event '{want}'");
+    }
+    // The simulated-clock span carries sim time in microseconds.
+    let sim_ev = events
+        .iter()
+        .find(|e| e.get("name").and_then(|n| n.as_str().ok()) == Some("obs test sim"))
+        .unwrap();
+    assert_eq!(sim_ev.get("ts").unwrap().as_f64().unwrap(), 1.0e6);
+    assert_eq!(sim_ev.get("dur").unwrap().as_f64().unwrap(), 1.5e6);
+}
+
+// ------------------------------------------------ determinism
+
+fn sim_cfg(registry: usize, buffer: usize, rounds: usize, dropout: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+    cfg.rounds = rounds;
+    cfg.patience = 0;
+    cfg.clients = 4;
+    cfg.clients_per_round = 2;
+    cfg.local_epochs = 1;
+    cfg.sim.async_mode = true;
+    cfg.sim.registry = registry;
+    cfg.sim.buffer = buffer;
+    cfg.sim.concurrency = 8;
+    cfg.sim.dropout = dropout;
+    cfg
+}
+
+fn run(cfg: &ExperimentConfig) -> RunOutput {
+    let data = fedmlh::data::synth::generate_preset(&cfg.preset, cfg.seed);
+    let part = noniid(&data.train, &NonIidOptions::new(cfg.clients), cfg.seed);
+    let scheme = scheme_for(cfg, Algo::FedMlh, &data.train);
+    let backend = RustBackend::new();
+    run_async(cfg, scheme.as_ref(), &backend, &data.train, &data.test, &part).unwrap()
+}
+
+#[test]
+fn tracing_does_not_change_the_simulation() {
+    let cfg = sim_cfg(1000, 4, 3, 0.2);
+    let baseline = run(&cfg);
+    trace::install();
+    assert!(trace::enabled());
+    let traced = run(&cfg);
+    assert_eq!(
+        baseline.history.to_csv(),
+        traced.history.to_csv(),
+        "tracing must be purely observational"
+    );
+    assert_eq!(baseline.comm.total(), traced.comm.total());
+    assert_eq!(baseline.sim, traced.sim);
+    for (ga, gb) in baseline.final_globals.iter().zip(traced.final_globals.iter()) {
+        for (x, y) in ga.flat_values().iter().zip(gb.flat_values().iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+    // …and the traced run actually recorded simulated-clock spans.
+    let tracer = trace::tracer().unwrap();
+    assert!(!tracer.is_empty(), "traced run must record spans");
+}
+
+// ------------------------------------------------ config surface
+
+#[test]
+fn obs_config_rejects_unknown_level() {
+    assert!(ObsConfig::new(None, "verbose").is_err());
+    assert!(ObsConfig::new(None, "debug").is_ok());
+    let d = ObsConfig::default();
+    assert_eq!(d.log_level, "info");
+    assert!(d.trace_out.is_none());
+    d.export().unwrap(); // no trace path → no-op
+}

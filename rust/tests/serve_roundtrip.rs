@@ -434,6 +434,28 @@ fn http_server_smoke_test_over_a_real_socket() {
     assert_eq!(metrics.expect("errors").unwrap().as_usize().unwrap(), 2);
     assert!(metrics.expect("batches").unwrap().as_usize().unwrap() >= 2);
 
+    // Prometheus exposition is opt-in via ?format=prometheus: the same
+    // counters in text format with the exposition content type (the
+    // plain GET above pins the historical JSON contract).
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(
+        b"GET /metrics?format=prometheus HTTP/1.1\r\nHost: test\r\nContent-Length: 0\r\n\r\n",
+    )
+    .unwrap();
+    let mut response = String::new();
+    conn.read_to_string(&mut response).unwrap();
+    assert!(response.starts_with("HTTP/1.1 200"), "{response}");
+    assert!(
+        response.contains("Content-Type: text/plain; version=0.0.4; charset=utf-8"),
+        "{response}"
+    );
+    let prom = &response[response.find("\r\n\r\n").unwrap() + 4..];
+    assert!(prom.contains("# TYPE fedmlh_serve_requests_total counter"), "{prom}");
+    assert!(prom.contains("fedmlh_serve_requests_total 4"), "{prom}");
+    assert!(prom.contains("fedmlh_serve_errors_total 2"), "{prom}");
+    assert!(prom.contains("# TYPE fedmlh_serve_batch_size histogram"), "{prom}");
+    assert!(prom.contains("fedmlh_serve_batch_size_bucket{le=\"+Inf\"}"), "{prom}");
+
     handle.stop();
     server_thread.join().unwrap();
 }
