@@ -12,7 +12,9 @@ use std::sync::Arc;
 use fedmlh::bench::Bencher;
 use fedmlh::config::{Algo, ExperimentConfig};
 use fedmlh::model::params::ModelParams;
-use fedmlh::serve::{Checkpoint, CheckpointCodec, InferenceEngine, Predictor, ServeMetrics};
+use fedmlh::serve::{
+    Checkpoint, CheckpointCodec, InferenceEngine, ModelVersion, Predictor, ServeMetrics, ServeOpts,
+};
 use fedmlh::util::rng::Rng;
 
 fn eurlex_checkpoint() -> Checkpoint {
@@ -62,13 +64,33 @@ fn main() {
     // -- through the micro-batching queue (sequential caller: measures
     // the queue/handoff overhead over the raw single-row forward)
     let predictor = Predictor::new(
-        InferenceEngine::new(Checkpoint::from_bytes(&q8_bytes).unwrap()).unwrap(),
+        Arc::new(InferenceEngine::new(Checkpoint::from_bytes(&q8_bytes).unwrap()).unwrap()),
         2,
         32,
         Arc::new(ServeMetrics::new()),
     );
     bench.bench_val("predict/queue/rows1_top5", || {
         predictor.predict(row.clone(), 5).unwrap()
+    });
+
+    // -- hot-reload cost: everything a `POST /reload` does off the
+    // request path (decode the checkpoint, spawn replica pools). The
+    // swap itself is one Arc pointer write under a write lock.
+    let opts = ServeOpts {
+        workers: 1,
+        max_batch: 8,
+        ..ServeOpts::default()
+    };
+    let totals = Arc::new(ServeMetrics::new());
+    bench.bench_val("reload/build_version", || {
+        ModelVersion::build(
+            Checkpoint::from_bytes(&q8_bytes).unwrap(),
+            1,
+            "bench".into(),
+            &opts,
+            &totals,
+        )
+        .unwrap()
     });
 
     bench.finish();

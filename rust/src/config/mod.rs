@@ -152,6 +152,54 @@ impl SimConfig {
     }
 }
 
+/// Canary rollout policy for `fedmlh serve` hot reloads (CLI:
+/// `--canary-window` and friends; per-reload overrides via the
+/// `POST /reload?canary=<pct>&window=<n>` query). Consulted by
+/// [`crate::serve::control::ControlPlane`] when a reload asks for a
+/// canary split instead of an immediate swap.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CanaryConfig {
+    /// Requests the canary version must serve before the verdict
+    /// (promote / rollback) is computed.
+    pub window: usize,
+    /// Maximum tolerated canary error rate over the window; above it
+    /// the rollout is rolled back (early, once the failure budget is
+    /// exhausted, without waiting for the full window).
+    pub max_error_rate: f64,
+    /// Latency guard: roll back if the canary's p99 exceeds the stable
+    /// version's p99 times this ratio (0 disables the latency check —
+    /// useful in tests where tiny-model latencies are noise).
+    pub p99_ratio: f64,
+}
+
+impl Default for CanaryConfig {
+    fn default() -> Self {
+        CanaryConfig {
+            window: 50,
+            max_error_rate: 0.05,
+            p99_ratio: 10.0,
+        }
+    }
+}
+
+impl CanaryConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.window == 0 {
+            bail!("--canary-window must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.max_error_rate) {
+            bail!(
+                "--canary-max-error-rate must be in [0, 1]: {}",
+                self.max_error_rate
+            );
+        }
+        if self.p99_ratio.is_nan() || self.p99_ratio < 0.0 {
+            bail!("--canary-p99-ratio must be >= 0 (0 disables): {}", self.p99_ratio);
+        }
+        Ok(())
+    }
+}
+
 /// Observability surface (CLI: `--trace-out`, `--log-level`), shared by
 /// `fedmlh run` and `fedmlh serve`. Parsed once at startup and applied
 /// through [`ObsConfig::apply`]; the telemetry machinery itself lives in
@@ -507,6 +555,23 @@ mod tests {
         let million = SimConfig::scenario("million").unwrap();
         assert_eq!(million.registry, 1_000_000);
         assert!(SimConfig::scenario("nope").is_err());
+    }
+
+    #[test]
+    fn canary_defaults_and_validation() {
+        let mut canary = CanaryConfig::default();
+        assert_eq!(canary.window, 50);
+        canary.validate().unwrap();
+        canary.p99_ratio = 0.0; // disabled latency guard is valid
+        canary.validate().unwrap();
+        canary.window = 0;
+        assert!(canary.validate().is_err(), "window 0 must fail");
+        canary.window = 10;
+        canary.max_error_rate = 1.5;
+        assert!(canary.validate().is_err(), "error rate above 1 must fail");
+        canary.max_error_rate = 0.1;
+        canary.p99_ratio = -1.0;
+        assert!(canary.validate().is_err(), "negative p99 ratio must fail");
     }
 
     #[test]

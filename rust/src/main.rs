@@ -31,6 +31,12 @@
 //!                                                   # POST /predict · GET /healthz · GET /metrics
 //! fedmlh serve   --checkpoint base.fmlh --delta d1.fmlh,d2.fmlh
 //!                                # apply a delta-checkpoint chain at load
+//! fedmlh serve   --checkpoint model.fmlh --replicas 3
+//!                                # 3 health-tracked predictor replicas
+//!                                # sharing one copy of the weights;
+//!                                # POST /reload hot-swaps the model
+//!                                # (?canary=10 rolls it out to 10% of
+//!                                # traffic with auto-promote/rollback)
 //! fedmlh tables  --presets eurlex,wiki31            # Tables 3–7
 //! fedmlh table1  --presets all                      # dataset stats
 //! fedmlh table2  --presets all                      # R and B
@@ -48,7 +54,16 @@
 //! The `serve` path is the deployment half of the paper's story: the
 //! hashed model is small enough to ship (q8 checkpoints are ~4× smaller
 //! than dense f32), and the count-sketch decode answers `POST /predict`
-//! with exactly the offline evaluation's top-k.
+//! with exactly the offline evaluation's top-k. The serving control
+//! plane keeps that true across model updates: `POST /reload` (body
+//! `{"checkpoint": path}` or `{"checkpoint": base, "deltas": [...]}`)
+//! atomically hot-swaps the model with zero dropped requests;
+//! `?canary=<pct>` routes that share of traffic to the new version and
+//! auto-promotes after a clean `--canary-window` (or auto-rolls-back on
+//! error-rate/latency regression; `?window=<n>` overrides per reload).
+//! SIGINT/SIGTERM (or `POST /quitquitquit`) drain gracefully: stop
+//! accepting, finish in-flight requests within `--drain-secs`, flush a
+//! final metrics snapshot.
 //!
 //! ## Observability
 //!
@@ -62,16 +77,22 @@
 //! observational: instrumented runs stay bitwise identical.
 //!
 //! `fedmlh serve` answers `GET /metrics` with JSON (the historical
-//! default) and with Prometheus text exposition at
-//! `GET /metrics?format=prometheus` — serve-local request/latency/batch
-//! stats plus the process-global metrics registry in one scrape.
+//! default, now including reload counters and per-version rows) and
+//! with Prometheus text exposition at `GET /metrics?format=prometheus`
+//! — serve-local request/latency/batch stats plus the process-global
+//! metrics registry (per-generation `fedmlh_serve_version_*` and
+//! per-replica `fedmlh_serve_replica_*` series, the
+//! `fedmlh_serve_reloads_total` / `fedmlh_serve_rollout_transitions_total`
+//! counters, and the `fedmlh_serve_generation` gauge) in one scrape.
+//! Reloads and rollout transitions also land as spans/instants in
+//! `--trace-out` traces when tracing is enabled.
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
 use fedmlh::config::presets::{by_name, paper_presets};
-use fedmlh::config::{Algo, DatasetPreset, ExperimentConfig, ObsConfig, SimConfig};
+use fedmlh::config::{Algo, CanaryConfig, DatasetPreset, ExperimentConfig, ObsConfig, SimConfig};
 use fedmlh::federated::sim::Dist;
 use fedmlh::federated::transport::DownCodec;
 use fedmlh::federated::wire::CodecSpec;
@@ -79,7 +100,9 @@ use fedmlh::harness::{self, figures, report, tables, BackendKind, HarnessOpts, P
 use fedmlh::hashing::label_hash::LabelHasher;
 use fedmlh::partition::divergence;
 use fedmlh::runtime::RuntimeClient;
-use fedmlh::serve::{Checkpoint, CheckpointCodec, DeltaCodec, ServeOpts, Server};
+use fedmlh::serve::{
+    Checkpoint, CheckpointCodec, ControlPlane, DeltaCodec, ServeOpts, Server, ServerHandle,
+};
 use fedmlh::theory;
 use fedmlh::util::cli::{Args, Parsed};
 
@@ -428,15 +451,23 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// `fedmlh serve` — load a checkpoint and answer predictions over HTTP.
+/// `fedmlh serve` — load a checkpoint and answer predictions over HTTP,
+/// with hot reload (`POST /reload`), canary rollouts (`?canary=<pct>`),
+/// replica supervision (`--replicas`), and graceful drain on
+/// SIGINT/SIGTERM or `POST /quitquitquit`.
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let p = Args::new("fedmlh serve", "serve a trained checkpoint over HTTP")
         .required("checkpoint", "path to a .fmlh checkpoint (from `fedmlh run --save`)")
         .flag("delta", "", "comma-separated delta checkpoints (from `fedmlh run --save-delta`), applied onto --checkpoint in order")
         .flag("host", "127.0.0.1", "interface to bind")
         .flag("port", "8080", "TCP port (0 = ephemeral)")
-        .flag("workers", "2", "inference worker threads (micro-batch pool)")
+        .flag("replicas", "1", "predictor replicas per model version (independent health-tracked worker pools over one shared copy of the weights)")
+        .flag("workers", "2", "inference worker threads per replica (micro-batch pool)")
         .flag("max-batch", "32", "max requests coalesced into one forward pass")
+        .flag("drain-secs", "5", "graceful-shutdown budget: seconds to wait for in-flight requests after SIGINT/SIGTERM or POST /quitquitquit")
+        .flag("canary-window", "50", "canary rollout: requests the canary must serve before the promote decision (POST /reload?canary=<pct>; ?window=<n> overrides per reload)")
+        .flag("canary-max-error-rate", "0.05", "canary rollout: error rate tolerated inside the window; exceeding the budget rolls back immediately")
+        .flag("canary-p99-ratio", "10", "canary rollout: max canary p99 latency as a multiple of stable p99 (0 disables the latency guard)")
         .flag("log-level", "info", "stderr log threshold: error | warn | info | debug")
         .parse(argv)?;
     ObsConfig::new(None, p.get("log-level"))?.apply();
@@ -444,18 +475,31 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if port > u16::MAX as usize {
         bail!("--port {port} exceeds 65535");
     }
+    let replicas = p.get_usize("replicas")?;
     let workers = p.get_usize("workers")?;
     let max_batch = p.get_usize("max-batch")?;
+    if replicas == 0 {
+        bail!("replicas must be positive");
+    }
     if workers == 0 {
         bail!("workers must be positive");
     }
     if max_batch == 0 {
         bail!("max-batch must be positive");
     }
+    let canary = CanaryConfig {
+        window: p.get_usize("canary-window")?,
+        max_error_rate: p.get_f64("canary-max-error-rate")?,
+        p99_ratio: p.get_f64("canary-p99-ratio")?,
+    };
+    canary.validate()?;
     let base_path = PathBuf::from(p.get("checkpoint"));
     let deltas = p.get("delta");
-    let ckpt = if deltas.is_empty() {
-        Checkpoint::load(&base_path)?
+    let (ckpt, source) = if deltas.is_empty() {
+        (
+            Checkpoint::load(&base_path)?,
+            base_path.display().to_string(),
+        )
     } else {
         let paths: Vec<PathBuf> = deltas.split(',').map(|s| PathBuf::from(s.trim())).collect();
         let ckpt = Checkpoint::load_chain(&base_path, &paths)?;
@@ -464,7 +508,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             paths.len(),
             base_path.display()
         );
-        ckpt
+        let source = format!("{} + {} delta(s)", base_path.display(), paths.len());
+        (ckpt, source)
     };
     fedmlh::log_info!(
         "serve: {} checkpoint '{}' — {} sub-model(s), d={}, p={}, seed {}",
@@ -478,15 +523,62 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let opts = ServeOpts {
         host: p.get("host").to_string(),
         port: port as u16,
+        replicas,
         workers,
         max_batch,
+        drain: std::time::Duration::from_secs(p.get_u64("drain-secs")?),
+        canary,
     };
-    let server = Server::bind(ckpt, &opts)?;
+    let control = std::sync::Arc::new(ControlPlane::with_initial(ckpt, source, opts)?);
+    let server = Server::bind_with(control.clone())?;
+    install_signal_watcher(control, server.handle()?);
     fedmlh::log_info!(
-        "serve: listening on http://{} (POST /predict, GET /healthz, GET /metrics — JSON, or ?format=prometheus)",
-        server.local_addr()?
+        "serve: listening on http://{} ({} replica(s); POST /predict, GET /healthz, GET /metrics — JSON, or ?format=prometheus — POST /reload [?canary=<pct>], POST /quitquitquit)",
+        server.local_addr()?,
+        replicas
     );
     server.run()
+}
+
+/// Graceful-shutdown signal plumbing: a SIGINT/SIGTERM handler flips
+/// one flag; a watcher thread notices, starts the control plane's drain
+/// (healthz → 503, connections close after their response), and stops
+/// the accept loop so [`Server::run`] proceeds to the drain wait and
+/// the final metrics flush. Raw `signal(2)` FFI — the offline registry
+/// has no signal-handling crate, and an atomic store is async-signal
+/// safe.
+#[cfg(unix)]
+fn install_signal_watcher(control: std::sync::Arc<ControlPlane>, handle: ServerHandle) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SIGNALED: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_signal(_signum: i32) {
+        SIGNALED.store(true, Ordering::SeqCst);
+    }
+    type SigHandler = extern "C" fn(i32);
+    extern "C" {
+        fn signal(signum: i32, handler: SigHandler) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        let _ = signal(SIGINT, on_signal);
+        let _ = signal(SIGTERM, on_signal);
+    }
+    std::thread::spawn(move || loop {
+        if SIGNALED.load(Ordering::SeqCst) {
+            fedmlh::log_info!("serve: signal received, draining");
+            control.start_drain();
+            handle.stop();
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    });
+}
+
+#[cfg(not(unix))]
+fn install_signal_watcher(_control: std::sync::Arc<ControlPlane>, _handle: ServerHandle) {
+    // No signal plumbing off unix; POST /quitquitquit still drains.
 }
 
 // ----------------------------------------------------------- tables

@@ -7,7 +7,11 @@
 //!   fixed-bucket histograms with Prometheus text exposition. The
 //!   process-global registry ([`metrics::global()`]) is scraped by
 //!   `GET /metrics?format=prometheus` alongside the serve-local window
-//!   metrics.
+//!   metrics. The serving control plane publishes its lifecycle here:
+//!   `fedmlh_serve_reloads_total{result}`,
+//!   `fedmlh_serve_rollout_transitions_total{to}`, the
+//!   `fedmlh_serve_generation` gauge, and per-version / per-replica
+//!   request and error series labeled by `generation` (and `replica`).
 //! * [`trace`] — a span tracer exporting Chrome-trace-event JSON
 //!   (open in Perfetto or `chrome://tracing`). Sync rounds and kernel
 //!   sections record wall-clock spans; async simulation records spans on

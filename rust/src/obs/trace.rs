@@ -223,6 +223,23 @@ pub fn wall_span(name: &str, tid: u64) -> Option<SpanGuard> {
     })
 }
 
+/// Record a wall-clock instant event (ph `i`) on lane `tid` at "now".
+/// Used for point-in-time state transitions (e.g. the serve control
+/// plane's canary promoted/rolled-back markers).
+pub fn wall_instant(name: &str, tid: u64, args: Vec<(String, Json)>) {
+    if let Some(t) = tracer() {
+        t.record(TraceEvent {
+            name: name.to_string(),
+            pid: WALL_PID,
+            tid,
+            ts_us: t.now_us(),
+            dur_us: 0.0,
+            ph: 'i',
+            args,
+        });
+    }
+}
+
 /// Record a simulated-clock complete span from `start_s` to `end_s`
 /// (seconds of virtual time) on lane `tid`.
 pub fn sim_span(name: &str, tid: u64, start_s: f64, end_s: f64, args: Vec<(String, Json)>) {

@@ -1,0 +1,252 @@
+//! Canary rollout state: route a percentage of traffic to a freshly
+//! loaded [`ModelVersion`], watch its error rate and tail latency over
+//! a configurable window, and decide — promote or roll back — without
+//! an operator in the loop.
+//!
+//! The traffic split is deterministic, not random: ticket `t` goes to
+//! the canary iff `(t * pct) % 100 < pct`, which spreads canary picks
+//! evenly through the request stream (pct 50 alternates versions; pct
+//! 1 sends every 100th request) instead of clustering them. Only
+//! requests that actually reached a predictor count toward the verdict
+//! — a client sending malformed JSON says nothing about the model.
+//!
+//! The verdict is computed after each canary-served request:
+//!
+//! * **Rollback (early)** the moment the error budget
+//!   `floor(max_error_rate × window)` is exhausted — a model rigged to
+//!   error is evicted after a handful of requests, not a full window.
+//! * **Promote** once `window` requests have been served within the
+//!   error budget, provided the canary's p99 latency stays within
+//!   `p99_ratio ×` the stable version's p99 (`p99_ratio` 0 disables
+//!   the latency guard).
+//! * **Pending** otherwise.
+//!
+//! [`CanaryRollout::try_decide`] is a one-shot gate (compare-and-swap)
+//! so concurrent request threads cannot apply the verdict twice.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::CanaryConfig;
+
+use super::metrics::MetricsSnapshot;
+use super::reload::ModelVersion;
+
+/// What the watcher concluded about an in-flight canary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Verdict {
+    /// Keep routing; not enough evidence yet.
+    Pending,
+    /// The canary met the bar over the full window.
+    Promote,
+    /// The canary regressed; the reason is operator-readable.
+    Rollback(String),
+}
+
+/// An in-flight canary: the candidate version plus its routing state
+/// and verdict accounting.
+pub struct CanaryRollout {
+    /// The candidate model version receiving `pct`% of traffic.
+    pub version: Arc<ModelVersion>,
+    /// Traffic percentage routed to the canary (1..=99).
+    pub pct: u64,
+    /// Decision policy (window / error budget / latency guard).
+    pub policy: CanaryConfig,
+    tickets: AtomicU64,
+    served: AtomicU64,
+    errors: AtomicU64,
+    decided: AtomicBool,
+}
+
+impl CanaryRollout {
+    pub fn new(version: Arc<ModelVersion>, pct: u64, policy: CanaryConfig) -> CanaryRollout {
+        CanaryRollout {
+            version,
+            pct,
+            policy,
+            tickets: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            decided: AtomicBool::new(false),
+        }
+    }
+
+    /// Draw the next routing ticket: `true` = this request goes to the
+    /// canary. Deterministic Bresenham-style split (see module docs).
+    pub fn take_ticket(&self) -> bool {
+        let t = self.tickets.fetch_add(1, Ordering::Relaxed);
+        (t % 100) * self.pct % 100 < self.pct
+    }
+
+    /// Record the outcome of one canary-served prediction.
+    pub fn note(&self, ok: bool) {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Canary-served request count so far.
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Canary-served failures so far.
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Requests the canary may fail within the window before rollback.
+    fn error_budget(&self) -> u64 {
+        (self.policy.max_error_rate * self.policy.window as f64).floor() as u64
+    }
+
+    /// Evaluate the rollout against the stable version's snapshot.
+    pub fn verdict(&self, stable: &MetricsSnapshot) -> Verdict {
+        let served = self.served();
+        let errors = self.errors();
+        let budget = self.error_budget();
+        if errors > budget {
+            return Verdict::Rollback(format!(
+                "canary error budget exhausted: {errors} errors in {served} requests \
+                 (budget {budget} per {} window)",
+                self.policy.window
+            ));
+        }
+        if served < self.policy.window as u64 {
+            return Verdict::Pending;
+        }
+        if self.policy.p99_ratio > 0.0 && stable.p99_us > 0 {
+            let canary_p99 = self.version.stats.snapshot().p99_us;
+            let limit = stable.p99_us as f64 * self.policy.p99_ratio;
+            if canary_p99 as f64 > limit {
+                return Verdict::Rollback(format!(
+                    "canary p99 {canary_p99}us exceeds {:.0}us ({}x stable p99 {}us)",
+                    limit, self.policy.p99_ratio, stable.p99_us
+                ));
+            }
+        }
+        Verdict::Promote
+    }
+
+    /// One-shot gate: the first caller gets `true` and must apply the
+    /// verdict; everyone after gets `false`.
+    pub fn try_decide(&self) -> bool {
+        self.decided
+            .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+    }
+
+    /// Whether a verdict has already been applied (or is being applied).
+    pub fn decided(&self) -> bool {
+        self.decided.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algo, ExperimentConfig};
+    use crate::model::params::ModelParams;
+    use crate::serve::checkpoint::Checkpoint;
+    use crate::serve::http::ServeOpts;
+    use crate::serve::metrics::ServeMetrics;
+    use std::time::Duration;
+
+    fn tiny_version() -> Arc<ModelVersion> {
+        let cfg = ExperimentConfig::preset("tiny").unwrap();
+        let models: Vec<ModelParams> = (0..cfg.r())
+            .map(|j| ModelParams::init(cfg.preset.d, cfg.preset.hidden, cfg.b(), 40 + j as u64))
+            .collect();
+        let ckpt =
+            Checkpoint::from_run(&cfg, Algo::FedMlh, cfg.preset.d, cfg.preset.p, models).unwrap();
+        let opts = ServeOpts {
+            workers: 1,
+            max_batch: 4,
+            ..ServeOpts::default()
+        };
+        let totals = Arc::new(ServeMetrics::new());
+        Arc::new(ModelVersion::build(ckpt, 2, "canary-test".into(), &opts, &totals).unwrap())
+    }
+
+    fn policy(window: usize, max_error_rate: f64, p99_ratio: f64) -> CanaryConfig {
+        CanaryConfig {
+            window,
+            max_error_rate,
+            p99_ratio,
+        }
+    }
+
+    #[test]
+    fn ticket_split_is_even() {
+        for pct in [1u64, 10, 50, 99] {
+            let rollout = CanaryRollout::new(tiny_version(), pct, policy(10, 0.1, 0.0));
+            let canary = (0..100).filter(|_| rollout.take_ticket()).count() as u64;
+            assert_eq!(canary, pct, "pct {pct} must route exactly {pct}/100");
+            // pct 50 must alternate, not front-load.
+            if pct == 50 {
+                let first10: Vec<bool> = (0..10).map(|_| rollout.take_ticket()).collect();
+                assert_eq!(first10.iter().filter(|&&c| c).count(), 5);
+            }
+        }
+    }
+
+    #[test]
+    fn verdict_rolls_back_early_on_errors() {
+        // window 10, 10% tolerated → budget floor(1.0) = 1 error.
+        let rollout = CanaryRollout::new(tiny_version(), 50, policy(10, 0.1, 0.0));
+        let stable = ServeMetrics::new().snapshot();
+        assert_eq!(rollout.verdict(&stable), Verdict::Pending);
+        rollout.note(false);
+        assert_eq!(rollout.verdict(&stable), Verdict::Pending, "within budget");
+        rollout.note(false);
+        // 2 errors > budget 1 → rollback after only 2 requests.
+        assert!(matches!(rollout.verdict(&stable), Verdict::Rollback(_)));
+    }
+
+    #[test]
+    fn verdict_promotes_after_a_clean_window() {
+        let rollout = CanaryRollout::new(tiny_version(), 50, policy(5, 0.2, 0.0));
+        let stable = ServeMetrics::new().snapshot();
+        for _ in 0..4 {
+            rollout.note(true);
+        }
+        assert_eq!(rollout.verdict(&stable), Verdict::Pending);
+        rollout.note(true);
+        assert_eq!(rollout.verdict(&stable), Verdict::Promote);
+    }
+
+    #[test]
+    fn verdict_rolls_back_on_latency_regression() {
+        let rollout = CanaryRollout::new(tiny_version(), 50, policy(3, 0.5, 2.0));
+        // Canary answers take ~1000us; stable served at ~10us.
+        for _ in 0..3 {
+            rollout.note(true);
+            rollout
+                .version
+                .stats
+                .record_request(Duration::from_micros(1000), true);
+        }
+        let stable_metrics = ServeMetrics::new();
+        stable_metrics.record_request(Duration::from_micros(10), true);
+        assert!(matches!(
+            rollout.verdict(&stable_metrics.snapshot()),
+            Verdict::Rollback(_)
+        ));
+        // With the guard disabled the same numbers promote.
+        let relaxed = CanaryRollout::new(rollout.version.clone(), 50, policy(3, 0.5, 0.0));
+        for _ in 0..3 {
+            relaxed.note(true);
+        }
+        assert_eq!(relaxed.verdict(&stable_metrics.snapshot()), Verdict::Promote);
+    }
+
+    #[test]
+    fn decide_gate_is_one_shot() {
+        let rollout = CanaryRollout::new(tiny_version(), 10, policy(5, 0.1, 0.0));
+        assert!(!rollout.decided());
+        assert!(rollout.try_decide());
+        assert!(!rollout.try_decide(), "second decider must lose the race");
+        assert!(rollout.decided());
+    }
+}

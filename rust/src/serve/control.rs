@@ -1,0 +1,783 @@
+//! The serving control plane: atomic hot reload, a multi-replica
+//! routing state, and canary rollout with auto-promote/rollback.
+//!
+//! [`ControlPlane`] owns everything mutable about *which model is
+//! serving*: a [`RouterState`] (the stable [`ModelVersion`] plus an
+//! optional in-flight [`CanaryRollout`]) behind one `RwLock`. Request
+//! threads take the read lock only long enough to clone two `Arc`s;
+//! reloads take the write lock only for the pointer swap. Everything
+//! expensive — reading the checkpoint (full `.fmlh` or delta chain),
+//! decoding it into an [`super::InferenceEngine`], spawning replica
+//! predictor pools — happens *before* the lock, so a reload never
+//! stalls the predict path and a failed reload leaves the previous
+//! version serving untouched. In-flight requests hold their version's
+//! `Arc`, so an old version's worker pools stay alive until the last
+//! request on them answers: zero dropped requests across a swap.
+//!
+//! `POST /reload` semantics (body `{"checkpoint": …, "deltas": […]}`):
+//!
+//! * no `canary` query param (or `canary=100`) — immediate atomic swap.
+//! * `canary=<1..=99>` — the new version serves that share of traffic
+//!   while [`CanaryRollout`] watches its error rate and p99 latency;
+//!   it is auto-promoted after a clean window and auto-rolled-back the
+//!   moment the error budget is exhausted (`window=<n>` overrides the
+//!   configured window per reload). A reload during an active canary
+//!   supersedes it.
+//!
+//! Observability: reload outcomes, rollout transitions, and the
+//! serving generation are mirrored into the process-global
+//! [`crate::obs::metrics`] registry (`fedmlh_serve_reloads_total`,
+//! `fedmlh_serve_rollout_transitions_total`, `fedmlh_serve_generation`,
+//! plus per-generation/per-replica request counters registered by
+//! [`ModelVersion`]); each transition is also a wall-clock trace
+//! instant and every reload a traced span. The control plane's own
+//! atomic counters — not the global registry — back the JSON
+//! `/metrics` response, because the global registry is shared by every
+//! server in the process (e.g. across `cargo test` servers) while the
+//! JSON contract is per-instance.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::CanaryConfig;
+use crate::obs::metrics::{global, Counter, Gauge};
+use crate::obs::trace::{wall_instant, wall_span};
+use crate::util::json::Json;
+
+use super::canary::{CanaryRollout, Verdict};
+use super::checkpoint::Checkpoint;
+use super::http::{error_body, parse_predict, predict_body, query_get, ServeOpts};
+use super::metrics::ServeMetrics;
+use super::reload::{ModelVersion, ReloadSpec};
+
+/// Wall-clock trace lane for control-plane spans and instants.
+const CONTROL_TID: u64 = 90;
+
+/// What is currently serving: the promoted version plus (at most) one
+/// in-flight canary. Swapped wholesale under the write lock.
+#[derive(Default)]
+struct RouterState {
+    stable: Option<Arc<ModelVersion>>,
+    canary: Option<Arc<CanaryRollout>>,
+}
+
+/// The outcome of a successful `POST /reload`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReloadOutcome {
+    /// The new version was swapped in immediately.
+    Swapped { generation: u64 },
+    /// The new version is serving `pct`% of traffic under watch.
+    CanaryStarted {
+        generation: u64,
+        pct: u64,
+        window: usize,
+    },
+}
+
+impl ReloadOutcome {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ReloadOutcome::Swapped { generation } => Json::obj(vec![
+                ("status", Json::str("swapped")),
+                ("generation", Json::num(*generation as f64)),
+            ]),
+            ReloadOutcome::CanaryStarted {
+                generation,
+                pct,
+                window,
+            } => Json::obj(vec![
+                ("status", Json::str("canary")),
+                ("generation", Json::num(*generation as f64)),
+                ("pct", Json::num(*pct as f64)),
+                ("window", Json::num(*window as f64)),
+            ]),
+        }
+    }
+}
+
+/// Supervisor for the serving path: version routing, hot reload,
+/// canary decisions, draining, and the `/metrics` aggregation.
+pub struct ControlPlane {
+    opts: ServeOpts,
+    state: RwLock<RouterState>,
+    /// Monotone generation allocator (1 = the startup checkpoint).
+    next_gen: AtomicU64,
+    /// Process-lifetime serve stats: every `/predict` request and every
+    /// coalesced batch from every version land here, so the historical
+    /// JSON `/metrics` contract (monotone requests/errors/batches)
+    /// holds across reloads.
+    totals: Arc<ServeMetrics>,
+    draining: AtomicBool,
+    // Per-instance reload accounting (authoritative for JSON).
+    swapped: AtomicU64,
+    canary_started: AtomicU64,
+    promoted: AtomicU64,
+    rolled_back: AtomicU64,
+    rejected: AtomicU64,
+    superseded: AtomicU64,
+    // Global-registry mirrors (Prometheus).
+    obs_swapped: Arc<Counter>,
+    obs_canary: Arc<Counter>,
+    obs_rejected: Arc<Counter>,
+    obs_generation: Arc<Gauge>,
+}
+
+impl ControlPlane {
+    /// An empty (not-ready) control plane: `/healthz` answers 503 and
+    /// `/predict` 503 until the first model is installed.
+    pub fn new(opts: ServeOpts) -> Result<ControlPlane> {
+        opts.canary.validate()?;
+        let reg = global();
+        let reload_counter = |result: &str| {
+            reg.counter_with(
+                "fedmlh_serve_reloads_total",
+                "Model reload operations, by outcome.",
+                &[("result", result)],
+            )
+        };
+        let obs_swapped = reload_counter("swapped");
+        let obs_canary = reload_counter("canary");
+        let obs_rejected = reload_counter("rejected");
+        // Pre-register the transition variants a scrape should always
+        // see (a zero is informative; an absent family is not).
+        for to in ["canary", "promoted", "rolled_back", "swapped"] {
+            transition_counter(to);
+        }
+        let obs_generation = reg.gauge(
+            "fedmlh_serve_generation",
+            "Model generation currently serving stable traffic.",
+        );
+        obs_generation.set(0.0);
+        Ok(ControlPlane {
+            opts,
+            state: RwLock::new(RouterState::default()),
+            next_gen: AtomicU64::new(0),
+            totals: Arc::new(ServeMetrics::new()),
+            draining: AtomicBool::new(false),
+            swapped: AtomicU64::new(0),
+            canary_started: AtomicU64::new(0),
+            promoted: AtomicU64::new(0),
+            rolled_back: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            superseded: AtomicU64::new(0),
+            obs_swapped,
+            obs_canary,
+            obs_rejected,
+            obs_generation,
+        })
+    }
+
+    /// Control plane pre-loaded with a startup checkpoint (generation
+    /// 1): the `fedmlh serve --checkpoint` path.
+    pub fn with_initial(ckpt: Checkpoint, source: String, opts: ServeOpts) -> Result<ControlPlane> {
+        let control = ControlPlane::new(opts)?;
+        let generation = control.next_gen.fetch_add(1, Ordering::SeqCst) + 1;
+        let version = Arc::new(ModelVersion::build(
+            ckpt,
+            generation,
+            source,
+            &control.opts,
+            &control.totals,
+        )?);
+        control.install_stable(version);
+        Ok(control)
+    }
+
+    pub fn opts(&self) -> &ServeOpts {
+        &self.opts
+    }
+
+    /// Process-lifetime serve stats (shared with the HTTP layer's
+    /// request accounting and every replica's batch accounting).
+    pub fn totals(&self) -> &Arc<ServeMetrics> {
+        &self.totals
+    }
+
+    /// Whether a first model has been fully loaded.
+    pub fn ready(&self) -> bool {
+        self.state.read().unwrap().stable.is_some()
+    }
+
+    /// Generation serving stable traffic (0 before the first load).
+    pub fn generation(&self) -> u64 {
+        self.state
+            .read()
+            .unwrap()
+            .stable
+            .as_ref()
+            .map_or(0, |v| v.generation)
+    }
+
+    /// The stable version, if one is installed (test hook).
+    pub fn stable(&self) -> Option<Arc<ModelVersion>> {
+        self.state.read().unwrap().stable.clone()
+    }
+
+    /// Enter draining: `/healthz` flips to 503, responses close their
+    /// connections, and [`super::Server::run`] waits for in-flight
+    /// requests (up to the drain deadline) before returning.
+    pub fn start_drain(&self) {
+        if !self.draining.swap(true, Ordering::SeqCst) {
+            crate::log_info!(
+                "serve: draining (deadline {:.1}s)",
+                self.opts.drain.as_secs_f64()
+            );
+        }
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Log the final metrics snapshot (graceful-shutdown flush).
+    pub fn flush_final_snapshot(&self) {
+        crate::log_info!(
+            "serve: final metrics snapshot: {}",
+            self.totals.snapshot().to_json().to_string_pretty(0)
+        );
+    }
+
+    // ---- reload ---------------------------------------------------------
+
+    /// Full `POST /reload` handling: body spec, `canary=`/`window=`
+    /// query overrides, load, build, swap-or-canary. Every failure is
+    /// a 400 and leaves the serving state untouched.
+    pub fn handle_reload(&self, query: &str, body: &[u8]) -> (u16, String) {
+        let spec = match ReloadSpec::from_json(body) {
+            Ok(spec) => spec,
+            Err(e) => {
+                self.note_rejected();
+                return (400, error_body(&format!("{e:#}")));
+            }
+        };
+        let canary_pct = match query_get(query, "canary").map(str::parse::<u64>) {
+            None => None,
+            Some(Ok(pct)) => Some(pct),
+            Some(Err(_)) => {
+                self.note_rejected();
+                return (400, error_body("'canary' must be an integer percentage"));
+            }
+        };
+        let window = match query_get(query, "window").map(str::parse::<usize>) {
+            None => None,
+            Some(Ok(w)) => Some(w),
+            Some(Err(_)) => {
+                self.note_rejected();
+                return (400, error_body("'window' must be a non-negative integer"));
+            }
+        };
+        match self.reload(&spec, canary_pct, window) {
+            Ok(outcome) => (200, outcome.to_json().to_string_pretty(0)),
+            Err(e) => (400, error_body(&format!("{e:#}"))),
+        }
+    }
+
+    /// Load `spec` and either swap it in atomically (`canary_pct`
+    /// `None` or `Some(100)`) or start a canary rollout at that
+    /// percentage. Failures reject the reload without touching the
+    /// serving state.
+    pub fn reload(
+        &self,
+        spec: &ReloadSpec,
+        canary_pct: Option<u64>,
+        window: Option<usize>,
+    ) -> Result<ReloadOutcome> {
+        let result = self.try_reload(spec, canary_pct, window);
+        match &result {
+            Ok(outcome) => {
+                crate::log_info!("serve: reload {}: {:?}", spec.describe(), outcome);
+            }
+            Err(e) => {
+                self.note_rejected();
+                crate::log_warn!("serve: reload {} rejected: {e:#}", spec.describe());
+            }
+        }
+        result
+    }
+
+    fn try_reload(
+        &self,
+        spec: &ReloadSpec,
+        canary_pct: Option<u64>,
+        window: Option<usize>,
+    ) -> Result<ReloadOutcome> {
+        let _span = wall_span("serve_reload", CONTROL_TID)
+            .map(|s| s.arg("source", Json::str(spec.describe())));
+        let pct = match canary_pct {
+            None | Some(100) => None,
+            Some(pct) if (1..=99).contains(&pct) => Some(pct),
+            Some(pct) => bail!("canary percentage must be in 1..=100, got {pct}"),
+        };
+        let policy = CanaryConfig {
+            window: window.unwrap_or(self.opts.canary.window),
+            ..self.opts.canary
+        };
+        policy.validate()?;
+        // Everything fallible and slow happens here, off the serving
+        // path and before any state changes.
+        let ckpt = spec.load()?;
+        let generation = self.next_gen.fetch_add(1, Ordering::SeqCst) + 1;
+        let version = Arc::new(ModelVersion::build(
+            ckpt,
+            generation,
+            spec.describe(),
+            &self.opts,
+            &self.totals,
+        )?);
+        match pct {
+            Some(pct) if self.ready() => {
+                let rollout = Arc::new(CanaryRollout::new(version, pct, policy));
+                let old = {
+                    let mut state = self.state.write().unwrap();
+                    state.canary.replace(rollout.clone())
+                };
+                if let Some(old) = old.filter(|c| !c.decided()) {
+                    self.note_superseded(&old);
+                }
+                self.canary_started.fetch_add(1, Ordering::Relaxed);
+                self.obs_canary.inc();
+                self.transition("canary", generation);
+                Ok(ReloadOutcome::CanaryStarted {
+                    generation,
+                    pct,
+                    window: policy.window,
+                })
+            }
+            // A canary with no stable version to split against (first
+            // load) degenerates to a swap.
+            _ => {
+                self.install_stable(version);
+                self.swapped.fetch_add(1, Ordering::Relaxed);
+                self.obs_swapped.inc();
+                Ok(ReloadOutcome::Swapped { generation })
+            }
+        }
+    }
+
+    /// Atomically make `version` the stable serving version, retiring
+    /// any in-flight canary.
+    fn install_stable(&self, version: Arc<ModelVersion>) {
+        let old_canary = {
+            let mut state = self.state.write().unwrap();
+            let old = state.canary.take();
+            state.stable = Some(version.clone());
+            old
+        };
+        if let Some(old) = old_canary.filter(|c| !c.decided()) {
+            self.note_superseded(&old);
+        }
+        self.obs_generation.set(version.generation as f64);
+        self.transition("swapped", version.generation);
+    }
+
+    fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.obs_rejected.inc();
+    }
+
+    fn note_superseded(&self, old: &Arc<CanaryRollout>) {
+        self.superseded.fetch_add(1, Ordering::Relaxed);
+        self.transition("superseded", old.version.generation);
+    }
+
+    fn transition(&self, to: &str, generation: u64) {
+        transition_counter(to).inc();
+        wall_instant(
+            &format!("rollout_{to}"),
+            CONTROL_TID,
+            vec![("generation".to_string(), Json::num(generation as f64))],
+        );
+        crate::log_info!("serve: rollout transition to {to} (generation {generation})");
+    }
+
+    // ---- predict routing ------------------------------------------------
+
+    /// Route one `POST /predict`: pick the version (canary split when a
+    /// rollout is active), parse against its engine, predict through a
+    /// replica, and feed the canary verdict. Returns `(status, body)`.
+    pub fn predict_http(&self, body: &[u8]) -> (u16, String) {
+        let (stable, canary) = {
+            let state = self.state.read().unwrap();
+            (state.stable.clone(), state.canary.clone())
+        };
+        let Some(stable) = stable else {
+            return (503, error_body("no model loaded yet"));
+        };
+        let active = canary.filter(|c| !c.decided());
+        let (version, canary_route) = match active {
+            Some(c) if c.take_ticket() => (c.version.clone(), Some(c)),
+            _ => (stable, None),
+        };
+        // Parse failures are the client's fault and say nothing about
+        // the model: they count toward neither replica health nor the
+        // canary verdict.
+        let (x, k) = match parse_predict(version.engine(), body) {
+            Ok(parsed) => parsed,
+            Err(e) => return (400, error_body(&format!("{e:#}"))),
+        };
+        let t0 = Instant::now();
+        let result = version.predict(x, k);
+        let ok = result.is_ok();
+        version.stats.record_request(t0.elapsed(), ok);
+        if let Some(rollout) = &canary_route {
+            rollout.note(ok);
+            self.maybe_decide(rollout);
+        }
+        match result {
+            Ok(topk) => (200, predict_body(&topk, k)),
+            Err(e) => (500, error_body(&format!("{e:#}"))),
+        }
+    }
+
+    /// Evaluate the canary verdict and, exactly once, apply it: swap
+    /// the canary to stable (promote) or drop it (rollback). The write
+    /// lock guards against a concurrent reload having superseded this
+    /// rollout in the meantime.
+    fn maybe_decide(&self, rollout: &Arc<CanaryRollout>) {
+        let stable_snapshot = {
+            let state = self.state.read().unwrap();
+            match &state.stable {
+                Some(stable) => stable.stats.snapshot(),
+                None => return,
+            }
+        };
+        let verdict = rollout.verdict(&stable_snapshot);
+        if verdict == Verdict::Pending || !rollout.try_decide() {
+            return;
+        }
+        let still_installed = {
+            let mut state = self.state.write().unwrap();
+            let installed = state
+                .canary
+                .as_ref()
+                .is_some_and(|c| Arc::ptr_eq(c, rollout));
+            if installed {
+                state.canary = None;
+                if verdict == Verdict::Promote {
+                    state.stable = Some(rollout.version.clone());
+                }
+            }
+            installed
+        };
+        if !still_installed {
+            return;
+        }
+        match verdict {
+            Verdict::Promote => {
+                self.promoted.fetch_add(1, Ordering::Relaxed);
+                self.obs_generation.set(rollout.version.generation as f64);
+                self.transition("promoted", rollout.version.generation);
+            }
+            Verdict::Rollback(reason) => {
+                self.rolled_back.fetch_add(1, Ordering::Relaxed);
+                self.transition("rolled_back", rollout.version.generation);
+                crate::log_warn!(
+                    "serve: canary generation {} rolled back: {reason}",
+                    rollout.version.generation
+                );
+            }
+            Verdict::Pending => unreachable!("pending verdicts return above"),
+        }
+    }
+
+    // ---- health and metrics ---------------------------------------------
+
+    /// `GET /healthz`: 503 with `ready: false` until the first model is
+    /// loaded (and again while draining); otherwise the loaded
+    /// checkpoint's identity, generation, and per-replica health.
+    pub fn health(&self) -> (u16, String) {
+        if self.draining() {
+            let body = Json::obj(vec![
+                ("status", Json::str("draining")),
+                ("ready", Json::Bool(false)),
+            ]);
+            return (503, body.to_string_pretty(0));
+        }
+        let state = self.state.read().unwrap();
+        let Some(version) = &state.stable else {
+            let body = Json::obj(vec![
+                ("status", Json::str("loading")),
+                ("ready", Json::Bool(false)),
+            ]);
+            return (503, body.to_string_pretty(0));
+        };
+        let meta = version.meta();
+        let mut fields = vec![
+            ("status", Json::str("ok")),
+            ("ready", Json::Bool(true)),
+            ("algo", Json::str(meta.algo.name())),
+            ("preset", Json::str(meta.preset.clone())),
+            ("models", Json::num(version.engine().n_models() as f64)),
+            ("p", Json::num(meta.p as f64)),
+            ("d", Json::num(meta.d as f64)),
+            ("out_dim", Json::num(meta.out_dim as f64)),
+            ("workers", Json::num(self.opts.workers.max(1) as f64)),
+            ("max_batch", Json::num(self.opts.max_batch.max(1) as f64)),
+            ("generation", Json::num(version.generation as f64)),
+            ("checkpoint", Json::str(version.source.clone())),
+            (
+                "state_checksum",
+                Json::str(format!("{:016x}", version.state_checksum)),
+            ),
+            ("replicas", Json::num(version.n_replicas() as f64)),
+            ("replica_health", version.replica_health()),
+        ];
+        if let Some(rollout) = state.canary.as_ref().filter(|c| !c.decided()) {
+            fields.push((
+                "canary",
+                Json::obj(vec![
+                    ("generation", Json::num(rollout.version.generation as f64)),
+                    ("pct", Json::num(rollout.pct as f64)),
+                    ("window", Json::num(rollout.policy.window as f64)),
+                    ("served", Json::num(rollout.served() as f64)),
+                    ("errors", Json::num(rollout.errors() as f64)),
+                ]),
+            ));
+        }
+        (200, Json::obj(fields).to_string_pretty(0))
+    }
+
+    /// `GET /metrics` (JSON): the historical process-lifetime contract
+    /// (requests/errors/latency/batches at the top level) plus the
+    /// control plane's generation, reload counters, and per-version
+    /// rows.
+    pub fn metrics_json(&self) -> String {
+        let Json::Obj(mut map) = self.totals.snapshot().to_json() else {
+            unreachable!("snapshot JSON is an object");
+        };
+        map.insert(
+            "generation".to_string(),
+            Json::num(self.generation() as f64),
+        );
+        let count = |c: &AtomicU64| Json::num(c.load(Ordering::Relaxed) as f64);
+        map.insert(
+            "reloads".to_string(),
+            Json::obj(vec![
+                ("swapped", count(&self.swapped)),
+                ("canary_started", count(&self.canary_started)),
+                ("promoted", count(&self.promoted)),
+                ("rolled_back", count(&self.rolled_back)),
+                ("rejected", count(&self.rejected)),
+                ("superseded", count(&self.superseded)),
+            ]),
+        );
+        let state = self.state.read().unwrap();
+        let mut versions = Vec::new();
+        if let Some(stable) = &state.stable {
+            versions.push(version_row(stable, "stable"));
+        }
+        if let Some(rollout) = state.canary.as_ref().filter(|c| !c.decided()) {
+            versions.push(version_row(&rollout.version, "canary"));
+        }
+        map.insert("versions".to_string(), Json::Arr(versions));
+        Json::Obj(map).to_string_pretty(2)
+    }
+
+    /// `GET /metrics?format=prometheus`: the process-lifetime serve
+    /// family plus the global registry (which carries the labeled
+    /// per-generation/per-replica series and the reload/rollout
+    /// counters). Per-version latency percentiles are published as
+    /// gauges at scrape time.
+    pub fn metrics_prometheus(&self) -> String {
+        {
+            let state = self.state.read().unwrap();
+            if let Some(stable) = &state.stable {
+                publish_version_latency(stable);
+            }
+            if let Some(rollout) = state.canary.as_ref().filter(|c| !c.decided()) {
+                publish_version_latency(&rollout.version);
+            }
+        }
+        let mut text = self.totals.snapshot().to_prometheus();
+        text.push_str(&global().render_prometheus());
+        text
+    }
+}
+
+fn transition_counter(to: &str) -> Arc<Counter> {
+    global().counter_with(
+        "fedmlh_serve_rollout_transitions_total",
+        "Serve rollout state transitions, by target state.",
+        &[("to", to)],
+    )
+}
+
+fn version_row(version: &ModelVersion, role: &str) -> Json {
+    let Json::Obj(mut map) = version.stats.snapshot().to_json_brief() else {
+        unreachable!("brief snapshot JSON is an object");
+    };
+    map.insert(
+        "generation".to_string(),
+        Json::num(version.generation as f64),
+    );
+    map.insert("role".to_string(), Json::str(role));
+    map.insert("checkpoint".to_string(), Json::str(version.source.clone()));
+    Json::Obj(map)
+}
+
+/// Publish a version's latency percentiles as labeled gauges (set at
+/// scrape time; gauges are idempotent to re-register).
+fn publish_version_latency(version: &ModelVersion) {
+    let snap = version.stats.snapshot();
+    let gen_label = version.generation.to_string();
+    let reg = global();
+    reg.gauge_with(
+        "fedmlh_serve_version_latency_p50_us",
+        "Median prediction latency by model generation (microseconds).",
+        &[("generation", &gen_label)],
+    )
+    .set(snap.p50_us as f64);
+    reg.gauge_with(
+        "fedmlh_serve_version_latency_p99_us",
+        "99th-percentile prediction latency by model generation (microseconds).",
+        &[("generation", &gen_label)],
+    )
+    .set(snap.p99_us as f64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algo, ExperimentConfig};
+    use crate::model::params::ModelParams;
+    use crate::serve::checkpoint::CheckpointCodec;
+
+    fn tiny_checkpoint(seed: u64) -> Checkpoint {
+        let cfg = ExperimentConfig::preset("tiny").unwrap();
+        let models: Vec<ModelParams> = (0..cfg.r())
+            .map(|j| {
+                ModelParams::init(cfg.preset.d, cfg.preset.hidden, cfg.b(), seed + j as u64)
+            })
+            .collect();
+        Checkpoint::from_run(&cfg, Algo::FedMlh, cfg.preset.d, cfg.preset.p, models).unwrap()
+    }
+
+    fn opts() -> ServeOpts {
+        ServeOpts {
+            workers: 1,
+            max_batch: 4,
+            ..ServeOpts::default()
+        }
+    }
+
+    fn temp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fedmlh-control-{}-{name}", std::process::id()))
+    }
+
+    fn predict_sparse(control: &ControlPlane) -> (u16, String) {
+        control.predict_http(br#"{"sparse": [[3, 1.5]], "k": 3}"#)
+    }
+
+    #[test]
+    fn not_ready_until_first_load_then_ready() {
+        let control = ControlPlane::new(opts()).unwrap();
+        assert!(!control.ready());
+        assert_eq!(control.generation(), 0);
+        let (status, body) = control.health();
+        assert_eq!(status, 503);
+        assert!(body.contains("\"ready\":false"), "{body}");
+        let (status, _) = predict_sparse(&control);
+        assert_eq!(status, 503);
+
+        let path = temp_path("first.fmlh");
+        tiny_checkpoint(7).save(&path, CheckpointCodec::Dense).unwrap();
+        let spec = ReloadSpec {
+            checkpoint: path.clone(),
+            deltas: vec![],
+        };
+        let outcome = control.reload(&spec, None, None).unwrap();
+        assert_eq!(outcome, ReloadOutcome::Swapped { generation: 1 });
+        assert!(control.ready());
+        let (status, body) = control.health();
+        assert_eq!(status, 200, "healthz must be 200 once loaded");
+        assert!(body.contains("\"ready\":true"), "{body}");
+        assert!(body.contains("\"generation\":1"), "{body}");
+        let (status, _) = predict_sparse(&control);
+        assert_eq!(status, 200);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn failed_reload_keeps_previous_version() {
+        let control =
+            ControlPlane::with_initial(tiny_checkpoint(7), "seed".into(), opts()).unwrap();
+        assert_eq!(control.generation(), 1);
+        let before = control.stable().unwrap().state_checksum;
+        let spec = ReloadSpec {
+            checkpoint: temp_path("missing.fmlh"),
+            deltas: vec![],
+        };
+        assert!(control.reload(&spec, None, None).is_err());
+        assert_eq!(control.generation(), 1, "generation unchanged after a failed reload");
+        assert_eq!(control.stable().unwrap().state_checksum, before);
+        let metrics = Json::parse(&control.metrics_json()).unwrap();
+        let reloads = metrics.expect("reloads").unwrap();
+        assert_eq!(reloads.expect("rejected").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(reloads.expect("swapped").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn swap_changes_answers_to_the_new_model() {
+        let control =
+            ControlPlane::with_initial(tiny_checkpoint(7), "seed".into(), opts()).unwrap();
+        let path = temp_path("next.fmlh");
+        tiny_checkpoint(99).save(&path, CheckpointCodec::Dense).unwrap();
+        let spec = ReloadSpec {
+            checkpoint: path.clone(),
+            deltas: vec![],
+        };
+        let outcome = control.reload(&spec, Some(100), None).unwrap();
+        assert_eq!(outcome, ReloadOutcome::Swapped { generation: 2 });
+        assert_eq!(control.generation(), 2);
+        // The swapped-in engine answers, and the checksum tracks the
+        // new weights.
+        let want = Checkpoint::load(&path).unwrap().state_checksum().unwrap();
+        assert_eq!(control.stable().unwrap().state_checksum, want);
+        let (status, _) = predict_sparse(&control);
+        assert_eq!(status, 200);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bad_canary_percentages_are_rejected() {
+        let control =
+            ControlPlane::with_initial(tiny_checkpoint(7), "seed".into(), opts()).unwrap();
+        let path = temp_path("pct.fmlh");
+        tiny_checkpoint(8).save(&path, CheckpointCodec::Dense).unwrap();
+        let spec = ReloadSpec {
+            checkpoint: path.clone(),
+            deltas: vec![],
+        };
+        assert!(control.reload(&spec, Some(0), None).is_err());
+        assert!(control.reload(&spec, Some(101), None).is_err());
+        assert_eq!(control.generation(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn reload_http_surface_rejects_bad_requests() {
+        let control =
+            ControlPlane::with_initial(tiny_checkpoint(7), "seed".into(), opts()).unwrap();
+        let (status, body) = control.handle_reload("", b"not json");
+        assert_eq!(status, 400);
+        assert!(body.contains("error"), "{body}");
+        let (status, _) = control.handle_reload("canary=abc", br#"{"checkpoint": "x"}"#);
+        assert_eq!(status, 400);
+        let (status, _) = control.handle_reload("window=-1", br#"{"checkpoint": "x"}"#);
+        assert_eq!(status, 400);
+        // All three were counted as rejected without touching state.
+        let metrics = Json::parse(&control.metrics_json()).unwrap();
+        let rejected = metrics
+            .expect("reloads")
+            .unwrap()
+            .expect("rejected")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert_eq!(rejected, 3);
+        assert_eq!(control.generation(), 1);
+    }
+}

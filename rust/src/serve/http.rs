@@ -16,39 +16,53 @@
 //! in sequence — bytes read past one request's body seed the next
 //! request's parse instead of being dropped.
 //!
-//! Endpoints:
+//! Endpoints (routing is delegated to the
+//! [`ControlPlane`](super::control::ControlPlane)):
 //!
 //! - `POST /predict` — body `{"dense": [f32; d], "k": 5}` or
 //!   `{"sparse": [[index, value], …], "k": 5}`; responds
 //!   `{"topk": [{"class": c, "score": s}, …], "k": k}`. Raw sparse
 //!   inputs are feature-hashed with the checkpoint's stored seed —
-//!   exactly the training-time map.
-//! - `GET /healthz` — checkpoint identity + pool shape, for probes.
-//! - `GET /metrics` — request count, p50/p99 latency, batch-size
-//!   histogram ([`super::metrics`]) as JSON;
-//!   `GET /metrics?format=prometheus` serves the same data (plus the
-//!   process-global [`crate::obs::metrics`] registry) in the Prometheus
-//!   text exposition format for scrapers.
+//!   exactly the training-time map. Served by the current stable model
+//!   version (or the canary, for its traffic share).
+//! - `GET /healthz` — loaded checkpoint identity, generation, replica
+//!   health, and a `ready` flag; 503 until the first model loads and
+//!   while draining.
+//! - `GET /metrics` — process-lifetime request count, p50/p99 latency,
+//!   batch-size histogram ([`super::metrics`]) plus reload counters and
+//!   per-version rows, as JSON; `GET /metrics?format=prometheus` serves
+//!   the same data (plus the process-global [`crate::obs::metrics`]
+//!   registry, which carries the per-generation and per-replica series)
+//!   in the Prometheus text exposition format for scrapers.
+//! - `POST /reload` — body `{"checkpoint": path}` or
+//!   `{"checkpoint": base, "deltas": [d1, d2, …]}`; atomically hot-swaps
+//!   the model (`?canary=<pct>` starts a watched canary rollout instead,
+//!   `?window=<n>` overrides its decision window).
+//! - `POST /quitquitquit` — begin graceful shutdown: stop accepting,
+//!   drain in-flight requests, flush a final metrics snapshot (the
+//!   test-friendly twin of SIGTERM).
 //!
 //! One OS thread per connection parses and responds; prediction work
-//! is handed to the shared [`Predictor`] pool, which coalesces
-//! concurrent requests into batched forward passes. JSON number
-//! round-tripping is exact for `f32` scores (shortest-representation
-//! printing), so a served top-k is bitwise the offline decode's.
+//! is handed to the routed version's replica [`Predictor`] pools, which
+//! coalesce concurrent requests into batched forward passes. JSON
+//! number round-tripping is exact for `f32` scores
+//! (shortest-representation printing), so a served top-k is bitwise the
+//! offline decode's — before and after a hot swap.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::config::CanaryConfig;
 use crate::util::json::Json;
 
 use super::checkpoint::Checkpoint;
-use super::infer::{InferenceEngine, Predictor, ScoredClass};
-use super::metrics::ServeMetrics;
+use super::control::ControlPlane;
+use super::infer::{InferenceEngine, ScoredClass};
 
 /// Server configuration (CLI: `fedmlh serve`).
 #[derive(Clone, Debug)]
@@ -57,10 +71,18 @@ pub struct ServeOpts {
     pub host: String,
     /// TCP port (0 = ephemeral, reported by [`Server::local_addr`]).
     pub port: u16,
-    /// Inference worker threads.
+    /// Predictor replicas per model version (each with its own worker
+    /// pool, sharing one copy of the weights).
+    pub replicas: usize,
+    /// Inference worker threads per replica.
     pub workers: usize,
     /// Max rows coalesced into one forward pass.
     pub max_batch: usize,
+    /// Graceful-shutdown budget: how long to wait for in-flight
+    /// requests after the accept loop stops.
+    pub drain: Duration,
+    /// Default canary rollout policy (per-reload `window=` overrides).
+    pub canary: CanaryConfig,
 }
 
 impl Default for ServeOpts {
@@ -68,8 +90,11 @@ impl Default for ServeOpts {
         ServeOpts {
             host: "127.0.0.1".to_string(),
             port: 8080,
+            replicas: 1,
             workers: 2,
             max_batch: 32,
+            drain: Duration::from_secs(5),
+            canary: CanaryConfig::default(),
         }
     }
 }
@@ -91,13 +116,14 @@ const MAX_REQUESTS_PER_CONN: usize = 100;
 
 /// Shared per-connection state.
 struct ServeCtx {
-    predictor: Predictor,
-    metrics: Arc<ServeMetrics>,
-    /// Pre-rendered `GET /healthz` body.
-    health: String,
+    control: Arc<ControlPlane>,
+    /// Requests currently being routed or responded to (drain gate).
+    active: AtomicUsize,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
 }
 
-/// The accept loop plus its inference pool.
+/// The accept loop plus its control plane.
 pub struct Server {
     listener: TcpListener,
     ctx: Arc<ServeCtx>,
@@ -127,32 +153,31 @@ impl ServerHandle {
 impl Server {
     /// Load the pool from a checkpoint and bind the listening socket.
     pub fn bind(ckpt: Checkpoint, opts: &ServeOpts) -> Result<Server> {
-        let metrics = Arc::new(ServeMetrics::new());
-        let engine = InferenceEngine::new(ckpt)?;
-        let meta = engine.meta();
-        let health = Json::obj(vec![
-            ("status", Json::str("ok")),
-            ("algo", Json::str(meta.algo.name())),
-            ("preset", Json::str(meta.preset.clone())),
-            ("models", Json::num(engine.n_models() as f64)),
-            ("p", Json::num(meta.p as f64)),
-            ("d", Json::num(meta.d as f64)),
-            ("out_dim", Json::num(meta.out_dim as f64)),
-            ("workers", Json::num(opts.workers.max(1) as f64)),
-            ("max_batch", Json::num(opts.max_batch.max(1) as f64)),
-        ])
-        .to_string_pretty(0);
-        let predictor = Predictor::new(engine, opts.workers, opts.max_batch, metrics.clone());
+        let control = Arc::new(ControlPlane::with_initial(
+            ckpt,
+            "startup".to_string(),
+            opts.clone(),
+        )?);
+        Server::bind_with(control)
+    }
+
+    /// Bind the listening socket for an existing control plane (the
+    /// CLI path, which records the real checkpoint path as the source).
+    pub fn bind_with(control: Arc<ControlPlane>) -> Result<Server> {
+        let opts = control.opts().clone();
         let listener = TcpListener::bind((opts.host.as_str(), opts.port))
             .with_context(|| format!("binding {}:{}", opts.host, opts.port))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
         Ok(Server {
             listener,
             ctx: Arc::new(ServeCtx {
-                predictor,
-                metrics,
-                health,
+                control,
+                active: AtomicUsize::new(0),
+                stop: stop.clone(),
+                addr,
             }),
-            stop: Arc::new(AtomicBool::new(false)),
+            stop,
         })
     }
 
@@ -167,8 +192,17 @@ impl Server {
         })
     }
 
-    /// Serve until [`ServerHandle::stop`] is called. Each accepted
-    /// connection gets its own detached handler thread.
+    /// The control plane behind this server (reload, drain, metrics).
+    pub fn control(&self) -> Arc<ControlPlane> {
+        self.ctx.control.clone()
+    }
+
+    /// Serve until [`ServerHandle::stop`] is called (or the control
+    /// plane starts draining via `/quitquitquit` or a signal handler).
+    /// Each accepted connection gets its own detached handler thread.
+    /// When stopping through a drain, waits for in-flight requests up
+    /// to the configured drain deadline and flushes a final metrics
+    /// snapshot before returning.
     pub fn run(self) -> Result<()> {
         for stream in self.listener.incoming() {
             if self.stop.load(Ordering::SeqCst) {
@@ -187,6 +221,19 @@ impl Server {
                     std::thread::sleep(Duration::from_millis(50));
                 }
             }
+        }
+        if self.ctx.control.draining() {
+            let deadline = Instant::now() + self.ctx.control.opts().drain;
+            while self.ctx.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            let leftover = self.ctx.active.load(Ordering::SeqCst);
+            if leftover > 0 {
+                crate::log_warn!(
+                    "serve: drain deadline reached with {leftover} request(s) in flight"
+                );
+            }
+            self.ctx.control.flush_final_snapshot();
         }
         Ok(())
     }
@@ -224,13 +271,21 @@ fn handle_connection(conn: &mut TcpStream, ctx: &ServeCtx) {
             body,
             keep_alive: client_keep_alive,
         } = req;
-        let keep_alive = client_keep_alive && served < MAX_REQUESTS_PER_CONN;
         let t0 = Instant::now();
-        let (status, reason, content_type, body) = route(ctx, &method, &path, &query, &body);
+        ctx.active.fetch_add(1, Ordering::SeqCst);
+        let (status, content_type, body) = route(ctx, &method, &path, &query, &body);
         if method == "POST" && path == "/predict" {
-            ctx.metrics.record_request(t0.elapsed(), status == 200);
+            ctx.control
+                .totals()
+                .record_request(t0.elapsed(), status == 200);
         }
-        if respond(conn, status, reason, content_type, &body, keep_alive).is_err() || !keep_alive {
+        // A draining server answers the request it already accepted but
+        // closes the connection, steering keep-alive clients away.
+        let keep_alive =
+            client_keep_alive && served < MAX_REQUESTS_PER_CONN && !ctx.control.draining();
+        let sent = respond(conn, status, reason(status), content_type, &body, keep_alive);
+        ctx.active.fetch_sub(1, Ordering::SeqCst);
+        if sent.is_err() || !keep_alive {
             return;
         }
     }
@@ -247,84 +302,102 @@ fn route(
     path: &str,
     query: &str,
     body: &[u8],
-) -> (u16, &'static str, &'static str, String) {
+) -> (u16, &'static str, String) {
     match (method, path) {
-        ("GET", "/healthz") => (200, "OK", CT_JSON, ctx.health.clone()),
+        ("GET", "/healthz") => {
+            let (status, body) = ctx.control.health();
+            (status, CT_JSON, body)
+        }
         // Plain `/metrics` stays JSON (the historical contract);
         // `?format=prometheus` serves the text exposition format,
         // appending the process-global training/sim registry so one
-        // scrape covers both the serve window and run-level counters.
+        // scrape covers the serve window, the per-version/per-replica
+        // series, and run-level counters.
         ("GET", "/metrics") => {
-            if query.split('&').any(|kv| kv == "format=prometheus") {
-                let mut text = ctx.metrics.snapshot().to_prometheus();
-                text.push_str(&crate::obs::metrics::global().render_prometheus());
-                (200, "OK", CT_PROM, text)
+            if query_get(query, "format") == Some("prometheus") {
+                (200, CT_PROM, ctx.control.metrics_prometheus())
             } else {
-                (
-                    200,
-                    "OK",
-                    CT_JSON,
-                    ctx.metrics.snapshot().to_json().to_string_pretty(2),
-                )
+                (200, CT_JSON, ctx.control.metrics_json())
             }
         }
-        // Parse failures are the client's fault (400); a predictor that
-        // cannot answer a well-formed request is ours (500), so load
-        // balancers and alerting see a server fault, not a bad request.
-        ("POST", "/predict") => match parse_predict(ctx, body) {
-            Err(e) => (400, "Bad Request", CT_JSON, error_body(&format!("{e:#}"))),
-            Ok((x, k)) => match ctx.predictor.predict(x, k) {
-                // Non-finite scores (diverged dense checkpoint, or
-                // finite-but-extreme inputs overflowing the forward
-                // pass) would serialize as the illegal JSON tokens
-                // NaN/inf — report a server fault instead.
-                Ok(topk) if topk.iter().all(|&(_, s)| s.is_finite()) => {
-                    (200, "OK", CT_JSON, predict_body(&topk, k))
-                }
-                Ok(_) => (
-                    500,
-                    "Internal Server Error",
-                    CT_JSON,
-                    error_body("model produced non-finite scores"),
-                ),
-                Err(e) => (
-                    500,
-                    "Internal Server Error",
-                    CT_JSON,
-                    error_body(&format!("{e:#}")),
-                ),
-            },
-        },
-        (_, "/predict") | (_, "/healthz") | (_, "/metrics") => (
+        ("POST", "/predict") => {
+            let (status, body) = ctx.control.predict_http(body);
+            (status, CT_JSON, body)
+        }
+        ("POST", "/reload") => {
+            let (status, body) = ctx.control.handle_reload(query, body);
+            (status, CT_JSON, body)
+        }
+        ("POST", "/quitquitquit") => {
+            ctx.control.start_drain();
+            ctx.stop.store(true, Ordering::SeqCst);
+            // Poke the accept loop loose so run() proceeds to the drain
+            // wait without needing another client connection.
+            let _ = TcpStream::connect(ctx.addr);
+            (
+                200,
+                CT_JSON,
+                Json::obj(vec![("status", Json::str("draining"))]).to_string_pretty(0),
+            )
+        }
+        (_, "/predict")
+        | (_, "/healthz")
+        | (_, "/metrics")
+        | (_, "/reload")
+        | (_, "/quitquitquit") => (
             405,
-            "Method Not Allowed",
             CT_JSON,
-            error_body("use POST /predict, GET /healthz, GET /metrics"),
+            error_body(
+                "use POST /predict, GET /healthz, GET /metrics, POST /reload, \
+                 POST /quitquitquit",
+            ),
         ),
         _ => (
             404,
-            "Not Found",
             CT_JSON,
-            error_body("unknown path (endpoints: /predict, /healthz, /metrics)"),
+            error_body(
+                "unknown path (endpoints: /predict, /healthz, /metrics, /reload, /quitquitquit)",
+            ),
         ),
     }
 }
 
-/// Parse a predict request body into a dense feature row and a `k`.
-fn parse_predict(ctx: &ServeCtx, body: &[u8]) -> Result<(Vec<f32>, usize)> {
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Look up `key` in a raw query string (`a=1&b=2`); first match wins.
+pub(crate) fn query_get<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
+/// Parse a predict request body into a dense feature row and a `k`,
+/// validated against `engine`'s dimensions.
+pub(crate) fn parse_predict(engine: &InferenceEngine, body: &[u8]) -> Result<(Vec<f32>, usize)> {
     let text = std::str::from_utf8(body).context("request body is not utf-8")?;
     let req = Json::parse(text).context("request body is not valid JSON")?;
     let k = match req.get("k") {
         Some(j) => {
             let k = j.as_usize().context("'k' must be a non-negative integer")?;
-            if k == 0 || k > ctx.predictor.engine().p() {
-                bail!("'k' must be in 1..={}", ctx.predictor.engine().p());
+            if k == 0 || k > engine.p() {
+                bail!("'k' must be in 1..={}", engine.p());
             }
             k
         }
-        None => DEFAULT_K.min(ctx.predictor.engine().p()),
+        None => DEFAULT_K.min(engine.p()),
     };
-    let x = parse_features(ctx.predictor.engine(), &req)?;
+    let x = parse_features(engine, &req)?;
     Ok((x, k))
 }
 
@@ -369,7 +442,7 @@ fn parse_features(engine: &InferenceEngine, req: &Json) -> Result<Vec<f32>> {
     bail!("request must contain 'dense' ([f32; d]) or 'sparse' ([[index, value], …])")
 }
 
-fn predict_body(topk: &[ScoredClass], k: usize) -> String {
+pub(crate) fn predict_body(topk: &[ScoredClass], k: usize) -> String {
     let arr = Json::Arr(
         topk.iter()
             .map(|&(class, score)| {
@@ -383,7 +456,7 @@ fn predict_body(topk: &[ScoredClass], k: usize) -> String {
     Json::obj(vec![("k", Json::num(k as f64)), ("topk", arr)]).to_string_pretty(0)
 }
 
-fn error_body(message: &str) -> String {
+pub(crate) fn error_body(message: &str) -> String {
     Json::obj(vec![("error", Json::str(message))]).to_string_pretty(0)
 }
 
@@ -544,6 +617,15 @@ mod tests {
         assert_eq!(find_subslice(b"abcd\r\n\r\nrest", b"\r\n\r\n"), Some(4));
         assert_eq!(find_subslice(b"abc", b"\r\n\r\n"), None);
         assert_eq!(find_subslice(b"", b"\r\n\r\n"), None);
+    }
+
+    #[test]
+    fn query_lookup() {
+        assert_eq!(query_get("format=prometheus", "format"), Some("prometheus"));
+        assert_eq!(query_get("canary=10&window=5", "window"), Some("5"));
+        assert_eq!(query_get("canary=10&window=5", "canary"), Some("10"));
+        assert_eq!(query_get("", "format"), None);
+        assert_eq!(query_get("format", "format"), None, "bare key has no value");
     }
 
     #[test]

@@ -215,7 +215,7 @@ struct Job {
 }
 
 struct Shared {
-    engine: InferenceEngine,
+    engine: Arc<InferenceEngine>,
     queue: Mutex<VecDeque<Job>>,
     available: Condvar,
     shutdown: AtomicBool,
@@ -231,9 +231,11 @@ pub struct Predictor {
 
 impl Predictor {
     /// Spawn `workers` inference threads (min 1) that coalesce up to
-    /// `max_batch` queued requests (min 1) per forward pass.
+    /// `max_batch` queued requests (min 1) per forward pass. The
+    /// engine is shared (`Arc`) so multiple replicas can serve the
+    /// same weights without duplicating them.
     pub fn new(
-        engine: InferenceEngine,
+        engine: Arc<InferenceEngine>,
         workers: usize,
         max_batch: usize,
         metrics: Arc<ServeMetrics>,
@@ -459,7 +461,8 @@ mod tests {
         let x = random_rows(engine.d(), 1, 11);
         let want = engine.predict_topk(&x, 1, 5).unwrap().remove(0);
         let metrics = Arc::new(ServeMetrics::new());
-        let predictor = Predictor::new(tiny_engine(Algo::FedMlh), 2, 8, metrics.clone());
+        let predictor =
+            Predictor::new(Arc::new(tiny_engine(Algo::FedMlh)), 2, 8, metrics.clone());
         for _ in 0..3 {
             let got = predictor.predict(x.clone(), 5).unwrap();
             assert_eq!(got, want);
@@ -474,8 +477,12 @@ mod tests {
     #[test]
     fn predictor_coalesces_under_concurrency() {
         let metrics = Arc::new(ServeMetrics::new());
-        let predictor =
-            Arc::new(Predictor::new(tiny_engine(Algo::FedMlh), 1, 32, metrics.clone()));
+        let predictor = Arc::new(Predictor::new(
+            Arc::new(tiny_engine(Algo::FedMlh)),
+            1,
+            32,
+            metrics.clone(),
+        ));
         let d = predictor.engine().d();
         let n_requests = 24;
         let mut threads = Vec::new();

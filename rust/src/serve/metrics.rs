@@ -157,6 +157,19 @@ impl MetricsSnapshot {
         ])
     }
 
+    /// Compact JSON row used by the control plane's per-version
+    /// `versions` array on `GET /metrics`: request/error counts plus
+    /// latency percentiles, without the batch histogram (batching is a
+    /// per-process property, not a per-version one).
+    pub fn to_json_brief(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("latency_p50_us", Json::num(self.p50_us as f64)),
+            ("latency_p99_us", Json::num(self.p99_us as f64)),
+        ])
+    }
+
     /// Prometheus text exposition of the same snapshot
     /// (`GET /metrics?format=prometheus`). Serve-local metrics use the
     /// `fedmlh_serve_*` prefix, disjoint from the training registry's

@@ -1,9 +1,10 @@
-//! The serving subsystem: persist a trained run, answer predictions.
+//! The serving subsystem: persist a trained run, answer predictions,
+//! and keep answering them across model updates.
 //!
 //! Training compresses the label space so the model is small enough to
 //! ship and run everywhere; this module is where that pays off
 //! (deployment cost, not just training cost — the communication-
-//! efficiency surveys' point). Three layers:
+//! efficiency surveys' point). Layers:
 //!
 //! - [`checkpoint`] — the versioned `.fmlh` binary format: R trained
 //!   sub-models (dense `f32` or wire-codec q8, ~4× smaller), the
@@ -17,23 +18,44 @@
 //! - [`infer`] — [`infer::InferenceEngine`] (feature-hash → R-model
 //!   forward → count-sketch decode → top-k; batching-invariant) and
 //!   [`infer::Predictor`], a worker pool that coalesces concurrent
-//!   requests into one forward pass (micro-batching).
+//!   requests into one forward pass (micro-batching). The engine is
+//!   `Arc`-shared so any number of replicas serve one copy of the
+//!   weights.
+//! - [`reload`] + [`canary`] + [`control`] — the control plane.
+//!   [`reload::ModelVersion`] wraps one decoded checkpoint (full or
+//!   delta chain) behind `--replicas` health-tracked predictor pools;
+//!   [`control::ControlPlane`] hot-swaps versions atomically
+//!   (`POST /reload`) with zero dropped requests, runs
+//!   [`canary::CanaryRollout`]s (`?canary=<pct>`) that auto-promote or
+//!   auto-roll-back on error-rate/latency evidence, and drives graceful
+//!   drain on shutdown.
 //! - [`http`] — `fedmlh serve`: a `std::net` HTTP front end exposing
-//!   `POST /predict`, `GET /healthz` and `GET /metrics`
-//!   ([`metrics`]: request count, p50/p99 latency, batch histogram).
-//!   `/metrics` answers JSON by default (the historical contract) and
-//!   Prometheus text exposition at `?format=prometheus`, which also
-//!   folds in the process-global [`crate::obs::metrics`] registry.
+//!   `POST /predict`, `GET /healthz`, `GET /metrics`, `POST /reload`,
+//!   and `POST /quitquitquit` ([`metrics`]: request count, p50/p99
+//!   latency, batch histogram). `/metrics` answers JSON by default (the
+//!   historical contract) and Prometheus text exposition at
+//!   `?format=prometheus`, which also folds in the process-global
+//!   [`crate::obs::metrics`] registry (per-generation / per-replica
+//!   series, reload and rollout counters).
 //!
 //! End to end: `fedmlh run --preset eurlex --save m.fmlh` then
-//! `fedmlh serve --checkpoint m.fmlh --port 8080 --workers 4`.
+//! `fedmlh serve --checkpoint m.fmlh --port 8080 --workers 4
+//! --replicas 2`, then `curl -XPOST :8080/reload -d
+//! '{"checkpoint":"m.fmlh","deltas":["d1.fmld"]}'` to pick up new
+//! weights without dropping a request.
 
+pub mod canary;
 pub mod checkpoint;
+pub mod control;
 pub mod http;
 pub mod infer;
 pub mod metrics;
+pub mod reload;
 
+pub use canary::{CanaryRollout, Verdict};
 pub use checkpoint::{Checkpoint, CheckpointCodec, CheckpointMeta, DeltaCheckpoint, DeltaCodec};
+pub use control::{ControlPlane, ReloadOutcome};
 pub use http::{Server, ServeOpts, ServerHandle};
 pub use infer::{InferenceEngine, Predictor};
 pub use metrics::{MetricsSnapshot, ServeMetrics};
+pub use reload::{ModelVersion, ReloadSpec};

@@ -1,0 +1,393 @@
+//! Hot-reload building blocks for the serve control plane: what to
+//! load ([`ReloadSpec`]) and the immutable serving unit a reload
+//! produces ([`ModelVersion`] — one decoded checkpoint behind N
+//! health-tracked predictor [`Replica`]s).
+//!
+//! A `ModelVersion` is built entirely off the request path: the
+//! checkpoint is loaded (full `.fmlh`, or a delta chain via
+//! [`Checkpoint::load_chain`]), decoded into one shared
+//! [`InferenceEngine`], and fronted by `--replicas` independent
+//! [`Predictor`] worker pools over that engine (the weights are never
+//! duplicated). Only after everything is up does
+//! [`super::control::ControlPlane`] swap an `Arc<ModelVersion>` into
+//! the routing state — an in-flight request holding the old `Arc`
+//! keeps the old pools alive until it answers, so no request is
+//! dropped or ever sees a torn model. Any load/decode failure happens
+//! before the swap and leaves the previous version serving.
+//!
+//! Replica health is consecutive-failure based: a replica that failed
+//! its last [`UNHEALTHY_AFTER`] requests is skipped by the round-robin
+//! pick, except that every [`PROBE_EVERY`]-th request probes its slot
+//! anyway so a recovered replica re-enters rotation without an
+//! operator action.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::metrics::{global, Counter};
+use crate::util::json::Json;
+
+use super::checkpoint::{Checkpoint, CheckpointMeta};
+use super::http::ServeOpts;
+use super::infer::{InferenceEngine, Predictor, ScoredClass};
+use super::metrics::ServeMetrics;
+
+/// A replica is skipped by the healthy-preferring pick once this many
+/// requests in a row have failed on it.
+pub const UNHEALTHY_AFTER: u32 = 3;
+/// Every N-th pick goes to the plain round-robin slot even if that
+/// replica is unhealthy, giving it traffic to recover on.
+const PROBE_EVERY: usize = 16;
+
+/// What `POST /reload` asks the control plane to load: a full
+/// checkpoint, or a base plus an ordered delta chain.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReloadSpec {
+    /// Full `.fmlh` checkpoint (or the chain's base when `deltas` is
+    /// non-empty).
+    pub checkpoint: PathBuf,
+    /// FMLD delta checkpoints, applied in order on top of `checkpoint`.
+    pub deltas: Vec<PathBuf>,
+}
+
+impl ReloadSpec {
+    /// Parse a reload request body:
+    /// `{"checkpoint": "path.fmlh", "deltas": ["d1.fmld", …]}`
+    /// (`deltas` optional).
+    pub fn from_json(body: &[u8]) -> Result<ReloadSpec> {
+        let text = std::str::from_utf8(body).context("reload body is not utf-8")?;
+        let req = Json::parse(text).context("reload body is not valid JSON")?;
+        let checkpoint = req
+            .get("checkpoint")
+            .context("reload body must name a 'checkpoint' path")?
+            .as_str()
+            .context("'checkpoint' must be a string path")?
+            .to_string();
+        let mut deltas = Vec::new();
+        if let Some(list) = req.get("deltas") {
+            let arr = list.as_arr().context("'deltas' must be an array of paths")?;
+            for (i, item) in arr.iter().enumerate() {
+                let path = item
+                    .as_str()
+                    .with_context(|| format!("'deltas'[{i}] must be a string path"))?;
+                deltas.push(PathBuf::from(path));
+            }
+        }
+        Ok(ReloadSpec {
+            checkpoint: PathBuf::from(checkpoint),
+            deltas,
+        })
+    }
+
+    /// Load the checkpoint (chain-applying deltas in order). Every
+    /// failure — missing file, wrong base checksum, out-of-order chain
+    /// — surfaces here, before anything is swapped.
+    pub fn load(&self) -> Result<Checkpoint> {
+        if self.deltas.is_empty() {
+            Checkpoint::load(&self.checkpoint)
+        } else {
+            Checkpoint::load_chain(&self.checkpoint, &self.deltas)
+        }
+    }
+
+    /// Provenance string stored on the built version and reported by
+    /// `GET /healthz`.
+    pub fn describe(&self) -> String {
+        if self.deltas.is_empty() {
+            self.checkpoint.display().to_string()
+        } else {
+            format!(
+                "{} + {} delta(s)",
+                self.checkpoint.display(),
+                self.deltas.len()
+            )
+        }
+    }
+}
+
+/// One predictor pool plus its health/accounting state. All replicas
+/// of a version share one [`InferenceEngine`]; what a replica adds is
+/// an independent worker pool and queue, so a wedged or failing pool
+/// can be routed around.
+pub struct Replica {
+    pub id: usize,
+    predictor: Predictor,
+    /// Consecutive failures; reset to 0 by any success.
+    fails: AtomicU32,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    /// Global-registry mirrors, labeled `{generation, replica}`.
+    obs_requests: Arc<Counter>,
+    obs_errors: Arc<Counter>,
+}
+
+impl Replica {
+    /// Healthy = fewer than [`UNHEALTHY_AFTER`] consecutive failures.
+    pub fn healthy(&self) -> bool {
+        self.fails.load(Ordering::Relaxed) < UNHEALTHY_AFTER
+    }
+
+    fn record(&self, ok: bool) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.obs_requests.inc();
+        if ok {
+            self.fails.store(0, Ordering::Relaxed);
+        } else {
+            self.fails.fetch_add(1, Ordering::Relaxed);
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            self.obs_errors.inc();
+        }
+    }
+}
+
+/// One fully-decoded model generation: shared engine, N replicas,
+/// per-version stats. Immutable once built; the control plane swaps
+/// `Arc<ModelVersion>`s, never mutates one in place.
+pub struct ModelVersion {
+    /// Monotone generation number (1 = the checkpoint the server
+    /// started with).
+    pub generation: u64,
+    /// Where the weights came from (path, or "base + N delta(s)").
+    pub source: String,
+    /// [`Checkpoint::state_checksum`] of the loaded weights.
+    pub state_checksum: u64,
+    engine: Arc<InferenceEngine>,
+    replicas: Vec<Replica>,
+    next: AtomicUsize,
+    /// Per-version request/latency stats (authoritative for this
+    /// process; the obs-registry mirrors below are global and shared
+    /// across every server in the process, e.g. under `cargo test`).
+    pub stats: ServeMetrics,
+    obs_requests: Arc<Counter>,
+    obs_errors: Arc<Counter>,
+}
+
+impl ModelVersion {
+    /// Decode a loaded checkpoint into a serving unit: one engine,
+    /// `opts.replicas` predictor pools. Batch accounting flows into
+    /// `totals` (the process-lifetime [`ServeMetrics`]) so the
+    /// historical `/metrics` contract spans reloads.
+    pub fn build(
+        ckpt: Checkpoint,
+        generation: u64,
+        source: String,
+        opts: &ServeOpts,
+        totals: &Arc<ServeMetrics>,
+    ) -> Result<ModelVersion> {
+        let state_checksum = ckpt.state_checksum()?;
+        let engine = Arc::new(InferenceEngine::new(ckpt)?);
+        let reg = global();
+        let gen_label = generation.to_string();
+        let obs_requests = reg.counter_with(
+            "fedmlh_serve_version_requests_total",
+            "Predict requests routed to a model generation.",
+            &[("generation", &gen_label)],
+        );
+        let obs_errors = reg.counter_with(
+            "fedmlh_serve_version_errors_total",
+            "Failed predict requests, by model generation.",
+            &[("generation", &gen_label)],
+        );
+        let replicas = (0..opts.replicas.max(1))
+            .map(|id| {
+                let rid = id.to_string();
+                Replica {
+                    id,
+                    predictor: Predictor::new(
+                        engine.clone(),
+                        opts.workers,
+                        opts.max_batch,
+                        totals.clone(),
+                    ),
+                    fails: AtomicU32::new(0),
+                    requests: AtomicU64::new(0),
+                    errors: AtomicU64::new(0),
+                    obs_requests: reg.counter_with(
+                        "fedmlh_serve_replica_requests_total",
+                        "Predict requests handled, by model generation and replica.",
+                        &[("generation", &gen_label), ("replica", &rid)],
+                    ),
+                    obs_errors: reg.counter_with(
+                        "fedmlh_serve_replica_errors_total",
+                        "Failed predict requests, by model generation and replica.",
+                        &[("generation", &gen_label), ("replica", &rid)],
+                    ),
+                }
+            })
+            .collect();
+        Ok(ModelVersion {
+            generation,
+            source,
+            state_checksum,
+            engine,
+            replicas,
+            next: AtomicUsize::new(0),
+            stats: ServeMetrics::new(),
+            obs_requests,
+            obs_errors,
+        })
+    }
+
+    pub fn engine(&self) -> &InferenceEngine {
+        &self.engine
+    }
+
+    pub fn meta(&self) -> &CheckpointMeta {
+        self.engine.meta()
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Round-robin over healthy replicas (every [`PROBE_EVERY`]-th
+    /// pick takes the plain slot regardless of health; with every
+    /// replica unhealthy the plain slot serves too — degraded beats
+    /// down).
+    fn pick_replica(&self) -> &Replica {
+        let n = self.replicas.len();
+        let ticket = self.next.fetch_add(1, Ordering::Relaxed);
+        let start = ticket % n;
+        if ticket % PROBE_EVERY != 0 {
+            for off in 0..n {
+                let r = &self.replicas[(start + off) % n];
+                if r.healthy() {
+                    return r;
+                }
+            }
+        }
+        &self.replicas[start]
+    }
+
+    /// Route one prediction through a replica, recording health and
+    /// per-version/per-replica counters. Non-finite scores (a diverged
+    /// or corrupt model) are a server fault, not an answer.
+    pub fn predict(&self, x: Vec<f32>, k: usize) -> Result<Vec<ScoredClass>> {
+        let replica = self.pick_replica();
+        let result = replica.predictor.predict(x, k);
+        let ok = matches!(&result, Ok(topk) if topk.iter().all(|&(_, s)| s.is_finite()));
+        replica.record(ok);
+        self.obs_requests.inc();
+        if !ok {
+            self.obs_errors.inc();
+        }
+        match result {
+            Ok(topk) => {
+                if ok {
+                    Ok(topk)
+                } else {
+                    bail!("model produced non-finite scores")
+                }
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Per-replica health rows for `GET /healthz`.
+    pub fn replica_health(&self) -> Json {
+        Json::Arr(
+            self.replicas
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("replica", Json::num(r.id as f64)),
+                        ("healthy", Json::Bool(r.healthy())),
+                        (
+                            "requests",
+                            Json::num(r.requests.load(Ordering::Relaxed) as f64),
+                        ),
+                        ("errors", Json::num(r.errors.load(Ordering::Relaxed) as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algo, ExperimentConfig};
+    use crate::model::params::ModelParams;
+
+    fn tiny_checkpoint() -> Checkpoint {
+        let cfg = ExperimentConfig::preset("tiny").unwrap();
+        let models: Vec<ModelParams> = (0..cfg.r())
+            .map(|j| ModelParams::init(cfg.preset.d, cfg.preset.hidden, cfg.b(), 10 + j as u64))
+            .collect();
+        Checkpoint::from_run(&cfg, Algo::FedMlh, cfg.preset.d, cfg.preset.p, models).unwrap()
+    }
+
+    fn opts(replicas: usize) -> ServeOpts {
+        ServeOpts {
+            replicas,
+            workers: 1,
+            max_batch: 4,
+            ..ServeOpts::default()
+        }
+    }
+
+    #[test]
+    fn reload_spec_parses_and_describes() {
+        let spec = ReloadSpec::from_json(br#"{"checkpoint": "m.fmlh"}"#).unwrap();
+        assert_eq!(spec.checkpoint, PathBuf::from("m.fmlh"));
+        assert!(spec.deltas.is_empty());
+        assert_eq!(spec.describe(), "m.fmlh");
+
+        let spec =
+            ReloadSpec::from_json(br#"{"checkpoint": "b.fmlh", "deltas": ["d1", "d2"]}"#).unwrap();
+        assert_eq!(spec.deltas.len(), 2);
+        assert_eq!(spec.describe(), "b.fmlh + 2 delta(s)");
+
+        assert!(ReloadSpec::from_json(b"not json").is_err());
+        assert!(ReloadSpec::from_json(br#"{"deltas": []}"#).is_err(), "checkpoint is required");
+        assert!(ReloadSpec::from_json(br#"{"checkpoint": 7}"#).is_err());
+        assert!(ReloadSpec::from_json(br#"{"checkpoint": "c", "deltas": [1]}"#).is_err());
+    }
+
+    #[test]
+    fn version_predicts_like_the_engine_across_replicas() {
+        let ckpt = tiny_checkpoint();
+        let totals = Arc::new(ServeMetrics::new());
+        let version =
+            ModelVersion::build(ckpt, 1, "test".into(), &opts(3), &totals).unwrap();
+        assert_eq!(version.n_replicas(), 3);
+        let d = version.engine().d();
+        let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+        let want = version.engine().predict_topk(&x, 1, 5).unwrap().remove(0);
+        // Round-robin walks every replica; each must answer bitwise
+        // identically (they share the one engine).
+        for _ in 0..6 {
+            assert_eq!(version.predict(x.clone(), 5).unwrap(), want);
+        }
+        // Batch accounting landed in the shared totals.
+        assert_eq!(totals.snapshot().batched_rows, 6);
+    }
+
+    #[test]
+    fn poisoned_model_fails_requests_and_flips_health() {
+        let mut ckpt = tiny_checkpoint();
+        for m in &mut ckpt.models {
+            m.tensors[5].data_mut().fill(f32::NAN);
+        }
+        let totals = Arc::new(ServeMetrics::new());
+        let version =
+            ModelVersion::build(ckpt, 1, "poisoned".into(), &opts(1), &totals).unwrap();
+        let d = version.engine().d();
+        for _ in 0..UNHEALTHY_AFTER {
+            let err = version.predict(vec![0.1; d], 3).unwrap_err();
+            assert!(err.to_string().contains("non-finite"), "{err}");
+        }
+        let health = version.replica_health();
+        let rows = health.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("healthy").unwrap(), &Json::Bool(false));
+        assert_eq!(
+            rows[0].get("errors").unwrap().as_usize().unwrap(),
+            UNHEALTHY_AFTER as usize
+        );
+    }
+}

@@ -1,0 +1,477 @@
+//! Serving control-plane contract, over real TCP sockets:
+//!
+//! 1. **Zero-downtime hot swap** — a background hammer on `/predict`
+//!    sees only 200s while the model is swapped twice under it (full
+//!    checkpoint, then a delta chain), and every answer is bitwise one
+//!    of the versions' offline top-k (no torn model, no blend).
+//! 2. **Delta-chain reloads** — `POST /reload` with `base + [d1, d2]`
+//!    reconstructs the chain's head bitwise; wrong-base and
+//!    out-of-order chains answer a clean 400 and the previous model
+//!    keeps serving (no partial swap).
+//! 3. **Canary rollout** — `?canary=<pct>` routes a deterministic
+//!    share of traffic to the new version; a version rigged to error
+//!    (NaN weights) is auto-rolled-back on the first failed canary
+//!    request, a healthy one is auto-promoted after its window.
+//! 4. **Health and drain** — `/healthz` reports generation, checksum,
+//!    replica health, and `ready`; `POST /quitquitquit` stops the
+//!    accept loop and `Server::run` drains and returns.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+
+use fedmlh::config::{Algo, CanaryConfig, ExperimentConfig};
+use fedmlh::model::params::ModelParams;
+use fedmlh::serve::{
+    Checkpoint, CheckpointCodec, DeltaCodec, InferenceEngine, ServeOpts, Server,
+};
+use fedmlh::util::json::Json;
+
+/// Untrained tiny checkpoint; different seeds give different weights
+/// (and therefore distinguishable predictions) with identical metadata,
+/// which is what delta chains require.
+fn tiny_checkpoint(seed: u64) -> Checkpoint {
+    let cfg = ExperimentConfig::preset("tiny").unwrap();
+    let models: Vec<ModelParams> = (0..cfg.r())
+        .map(|j| ModelParams::init(cfg.preset.d, cfg.preset.hidden, cfg.b(), seed + j as u64))
+        .collect();
+    Checkpoint::from_run(&cfg, Algo::FedMlh, cfg.preset.d, cfg.preset.p, models).unwrap()
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fedmlh_reload_{}_{name}", std::process::id()))
+}
+
+fn serve_opts() -> ServeOpts {
+    ServeOpts {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        replicas: 2,
+        workers: 1,
+        max_batch: 4,
+        // The latency guard compares micro-latencies of one tiny model
+        // against itself — pure scheduler noise in CI. Error-based
+        // verdicts are what these tests pin.
+        canary: CanaryConfig {
+            p99_ratio: 0.0,
+            ..CanaryConfig::default()
+        },
+        ..ServeOpts::default()
+    }
+}
+
+/// Minimal HTTP/1.1 client: one request per connection, EOF-framed.
+fn http_request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let request = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    conn.write_all(request.as_bytes()).unwrap();
+    let mut response = String::new();
+    conn.read_to_string(&mut response).unwrap();
+    let status: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let body_start = response.find("\r\n\r\n").expect("header terminator") + 4;
+    (status, response[body_start..].to_string())
+}
+
+const SPARSE_PREDICT: &str = "{\"sparse\": [[3, 1.5], [700, -0.25]], \"k\": 3}";
+
+/// The offline answer for [`SPARSE_PREDICT`] under one checkpoint:
+/// `(class, score bits)` pairs — the bitwise identity served answers
+/// are matched against.
+fn offline_topk(ckpt: Checkpoint) -> Vec<(usize, u32)> {
+    let engine = InferenceEngine::new(ckpt).unwrap();
+    let x = engine.hash_features(&[(3, 1.5), (700, -0.25)]);
+    engine
+        .predict_topk(&x, 1, 3)
+        .unwrap()
+        .remove(0)
+        .into_iter()
+        .map(|(c, s)| (c as usize, s.to_bits()))
+        .collect()
+}
+
+/// Parse a served predict body into the same `(class, score bits)`
+/// shape as [`offline_topk`].
+fn served_topk(body: &str) -> Vec<(usize, u32)> {
+    let parsed = Json::parse(body).unwrap();
+    parsed
+        .expect("topk")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|j| {
+            let class = j.expect("class").unwrap().as_usize().unwrap();
+            let score = j.expect("score").unwrap().as_f64().unwrap() as f32;
+            (class, score.to_bits())
+        })
+        .collect()
+}
+
+fn reload_body(base: &Path, deltas: &[&Path]) -> String {
+    let mut fields = vec![("checkpoint", Json::str(base.display().to_string()))];
+    let arr: Vec<Json> = deltas
+        .iter()
+        .map(|p| Json::str(p.display().to_string()))
+        .collect();
+    if !arr.is_empty() {
+        fields.push(("deltas", Json::Arr(arr)));
+    }
+    Json::obj(fields).to_string_pretty(0)
+}
+
+fn metrics_reload_count(addr: SocketAddr, key: &str) -> usize {
+    let (status, body) = http_request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200, "{body}");
+    Json::parse(&body)
+        .unwrap()
+        .expect("reloads")
+        .unwrap()
+        .expect(key)
+        .unwrap()
+        .as_usize()
+        .unwrap()
+}
+
+fn healthz_generation(addr: SocketAddr) -> usize {
+    let (status, body) = http_request(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "{body}");
+    Json::parse(&body)
+        .unwrap()
+        .expect("generation")
+        .unwrap()
+        .as_usize()
+        .unwrap()
+}
+
+#[test]
+fn hot_swap_under_hammer_drops_nothing_and_never_tears() {
+    // Three model versions: m1 (startup), m2 (full-checkpoint reload),
+    // m3 (delta-chain reload: m1 + d12 + d23).
+    let m1 = tiny_checkpoint(100);
+    let m2 = tiny_checkpoint(200);
+    let m3 = tiny_checkpoint(300);
+    let base_path = temp_path("hammer_base.fmlh");
+    let m2_path = temp_path("hammer_m2.fmlh");
+    let d12_path = temp_path("hammer_d12.fmld");
+    let d23_path = temp_path("hammer_d23.fmld");
+    m1.save(&base_path, CheckpointCodec::Dense).unwrap();
+    m2.save(&m2_path, CheckpointCodec::Dense).unwrap();
+    m2.delta_against(&m1, DeltaCodec::Sparse)
+        .unwrap()
+        .save(&d12_path)
+        .unwrap();
+    m3.delta_against(&m2, DeltaCodec::Sparse)
+        .unwrap()
+        .save(&d23_path)
+        .unwrap();
+
+    // Every legal answer, bitwise: any served top-k must be exactly
+    // one version's offline decode — never a mixture.
+    let legal: Vec<Vec<(usize, u32)>> = vec![
+        offline_topk(m1.clone()),
+        offline_topk(m2),
+        offline_topk(m3),
+    ];
+    assert_ne!(legal[0], legal[1], "seeds must give distinct models");
+    assert_ne!(legal[1], legal[2]);
+
+    let server = Server::bind(m1, &serve_opts()).unwrap();
+    let handle = server.handle().unwrap();
+    let addr = handle.addr();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    // Background hammer: 4 clients, 40 requests each.
+    let mut hammers = Vec::new();
+    for _ in 0..4 {
+        hammers.push(std::thread::spawn(move || {
+            let mut answers = Vec::new();
+            for _ in 0..40 {
+                answers.push(http_request(addr, "POST", "/predict", SPARSE_PREDICT));
+            }
+            answers
+        }));
+    }
+
+    // Two reloads mid-hammer: full checkpoint, then a delta chain.
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let (status, body) = http_request(addr, "POST", "/reload", &reload_body(&m2_path, &[]));
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"status\":\"swapped\""), "{body}");
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let (status, body) = http_request(
+        addr,
+        "POST",
+        "/reload",
+        &reload_body(&base_path, &[&d12_path, &d23_path]),
+    );
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"generation\":3"), "{body}");
+
+    let mut total = 0usize;
+    for hammer in hammers {
+        for (status, body) in hammer.join().unwrap() {
+            assert_eq!(status, 200, "hot swap dropped a request: {body}");
+            let got = served_topk(&body);
+            assert!(
+                legal.contains(&got),
+                "served answer matches no version bitwise: {body}"
+            );
+            total += 1;
+        }
+    }
+    assert_eq!(total, 160);
+
+    // The chain landed: generation 3, serving m3's predictions, and the
+    // checksum matches the offline chain application.
+    assert_eq!(healthz_generation(addr), 3);
+    let (_, body) = http_request(addr, "POST", "/predict", SPARSE_PREDICT);
+    assert_eq!(served_topk(&body), legal[2]);
+    let offline_chain = Checkpoint::load_chain(&base_path, &[d12_path.clone(), d23_path.clone()])
+        .unwrap()
+        .state_checksum()
+        .unwrap();
+    let (_, health) = http_request(addr, "GET", "/healthz", "");
+    assert!(
+        health.contains(&format!("{offline_chain:016x}")),
+        "healthz must report the chain-applied checksum: {health}"
+    );
+    assert_eq!(metrics_reload_count(addr, "swapped"), 2);
+
+    handle.stop();
+    server_thread.join().unwrap();
+    for p in [&base_path, &m2_path, &d12_path, &d23_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn bad_delta_chains_reject_cleanly_and_keep_serving() {
+    let m1 = tiny_checkpoint(400);
+    let m2 = tiny_checkpoint(500);
+    let m3 = tiny_checkpoint(600);
+    let base_path = temp_path("bad_base.fmlh");
+    let other_path = temp_path("bad_other.fmlh");
+    let d12_path = temp_path("bad_d12.fmld");
+    let d23_path = temp_path("bad_d23.fmld");
+    m1.save(&base_path, CheckpointCodec::Dense).unwrap();
+    m3.save(&other_path, CheckpointCodec::Dense).unwrap();
+    m2.delta_against(&m1, DeltaCodec::Sparse)
+        .unwrap()
+        .save(&d12_path)
+        .unwrap();
+    m3.delta_against(&m2, DeltaCodec::Sparse)
+        .unwrap()
+        .save(&d23_path)
+        .unwrap();
+
+    let want = offline_topk(m1.clone());
+    let server = Server::bind(m1, &serve_opts()).unwrap();
+    let handle = server.handle().unwrap();
+    let addr = handle.addr();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    // Wrong base: d23 chains onto m2, not m3.
+    let (status, body) = http_request(
+        addr,
+        "POST",
+        "/reload",
+        &reload_body(&other_path, &[&d23_path]),
+    );
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("chain"), "{body}");
+
+    // Out of order: d23 cannot apply before d12.
+    let (status, body) = http_request(
+        addr,
+        "POST",
+        "/reload",
+        &reload_body(&base_path, &[&d23_path, &d12_path]),
+    );
+    assert_eq!(status, 400, "{body}");
+
+    // Missing file and malformed body are 4xx too.
+    let missing = temp_path("bad_missing.fmlh");
+    let (status, _) = http_request(addr, "POST", "/reload", &reload_body(&missing, &[]));
+    assert_eq!(status, 400);
+    let (status, _) = http_request(addr, "POST", "/reload", "{\"deltas\": []}");
+    assert_eq!(status, 400);
+
+    // No partial swap: still generation 1, still m1's answers, and
+    // every rejection counted.
+    assert_eq!(healthz_generation(addr), 1);
+    let (status, body) = http_request(addr, "POST", "/predict", SPARSE_PREDICT);
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(served_topk(&body), want);
+    assert_eq!(metrics_reload_count(addr, "rejected"), 4);
+    assert_eq!(metrics_reload_count(addr, "swapped"), 0);
+
+    handle.stop();
+    server_thread.join().unwrap();
+    for p in [&base_path, &other_path, &d12_path, &d23_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn rigged_canary_rolls_back_automatically() {
+    let m1 = tiny_checkpoint(700);
+    // Rig the candidate: NaN output biases survive save/load (the
+    // format validates structure, not values) and poison every score.
+    let mut rigged = tiny_checkpoint(800);
+    for m in &mut rigged.models {
+        m.tensors[5].data_mut().fill(f32::NAN);
+    }
+    let rigged_path = temp_path("rigged.fmlh");
+    rigged.save(&rigged_path, CheckpointCodec::Dense).unwrap();
+
+    let want = offline_topk(m1.clone());
+    let server = Server::bind(m1, &serve_opts()).unwrap();
+    let handle = server.handle().unwrap();
+    let addr = handle.addr();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    let (status, body) = http_request(
+        addr,
+        "POST",
+        "/reload?canary=50&window=10",
+        &reload_body(&rigged_path, &[]),
+    );
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"status\":\"canary\""), "{body}");
+    assert!(body.contains("\"window\":10"), "{body}");
+
+    // Ticket 0 routes to the canary (deterministic split), the rigged
+    // model 500s, and the error budget (floor(0.05 × 10) = 0) is
+    // immediately exhausted → rollback on the spot.
+    let (status, body) = http_request(addr, "POST", "/predict", SPARSE_PREDICT);
+    assert_eq!(status, 500, "first request must hit the rigged canary");
+    assert!(body.contains("non-finite"), "{body}");
+
+    // Everything after serves the stable version — bitwise.
+    for _ in 0..10 {
+        let (status, body) = http_request(addr, "POST", "/predict", SPARSE_PREDICT);
+        assert_eq!(status, 200, "{body}");
+        assert_eq!(served_topk(&body), want);
+    }
+    assert_eq!(healthz_generation(addr), 1, "rollback must keep generation 1");
+    assert_eq!(metrics_reload_count(addr, "rolled_back"), 1);
+    let (_, health) = http_request(addr, "GET", "/healthz", "");
+    assert!(!health.contains("\"canary\""), "rollout must be retired: {health}");
+
+    handle.stop();
+    server_thread.join().unwrap();
+    let _ = std::fs::remove_file(&rigged_path);
+}
+
+#[test]
+fn healthy_canary_promotes_after_its_window() {
+    let m1 = tiny_checkpoint(900);
+    let m2 = tiny_checkpoint(1000);
+    let m2_path = temp_path("promote_m2.fmlh");
+    m2.save(&m2_path, CheckpointCodec::Dense).unwrap();
+    let want_m1 = offline_topk(m1.clone());
+    let want_m2 = offline_topk(m2);
+
+    let server = Server::bind(m1, &serve_opts()).unwrap();
+    let handle = server.handle().unwrap();
+    let addr = handle.addr();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    let (status, body) = http_request(
+        addr,
+        "POST",
+        "/reload?canary=50&window=4",
+        &reload_body(&m2_path, &[]),
+    );
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(healthz_generation(addr), 1, "not promoted yet");
+    let (_, health) = http_request(addr, "GET", "/healthz", "");
+    assert!(health.contains("\"canary\""), "{health}");
+    assert!(health.contains("\"pct\":50"), "{health}");
+
+    // pct 50 alternates canary/stable; after 8 requests the canary has
+    // served its window of 4 clean answers and self-promotes. Every
+    // response along the way is one version's bitwise answer.
+    for i in 0..8 {
+        let (status, body) = http_request(addr, "POST", "/predict", SPARSE_PREDICT);
+        assert_eq!(status, 200, "request {i}: {body}");
+        let got = served_topk(&body);
+        assert!(got == want_m1 || got == want_m2, "request {i}: {body}");
+    }
+    assert_eq!(healthz_generation(addr), 2, "canary must have promoted");
+    assert_eq!(metrics_reload_count(addr, "promoted"), 1);
+    assert_eq!(metrics_reload_count(addr, "rolled_back"), 0);
+
+    // Post-promotion traffic is all m2, bitwise.
+    for _ in 0..4 {
+        let (_, body) = http_request(addr, "POST", "/predict", SPARSE_PREDICT);
+        assert_eq!(served_topk(&body), want_m2);
+    }
+
+    handle.stop();
+    server_thread.join().unwrap();
+    let _ = std::fs::remove_file(&m2_path);
+}
+
+#[test]
+fn healthz_reports_identity_and_replicas() {
+    let m1 = tiny_checkpoint(1100);
+    let checksum = m1.state_checksum().unwrap();
+    let server = Server::bind(m1, &serve_opts()).unwrap();
+    let handle = server.handle().unwrap();
+    let addr = handle.addr();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    let (status, body) = http_request(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "{body}");
+    let health = Json::parse(&body).unwrap();
+    assert_eq!(health.expect("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(health.expect("ready").unwrap(), &Json::Bool(true));
+    assert_eq!(health.expect("generation").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(health.expect("replicas").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(
+        health.expect("state_checksum").unwrap().as_str().unwrap(),
+        format!("{checksum:016x}")
+    );
+    let rows = health.expect("replica_health").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    for row in rows {
+        assert_eq!(row.expect("healthy").unwrap(), &Json::Bool(true));
+    }
+
+    handle.stop();
+    server_thread.join().unwrap();
+}
+
+#[test]
+fn quitquitquit_drains_and_stops_the_server() {
+    let m1 = tiny_checkpoint(1200);
+    let mut opts = serve_opts();
+    opts.drain = std::time::Duration::from_secs(2);
+    let server = Server::bind(m1, &opts).unwrap();
+    let control = server.control();
+    let handle = server.handle().unwrap();
+    let addr = handle.addr();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    let (status, body) = http_request(addr, "POST", "/predict", SPARSE_PREDICT);
+    assert_eq!(status, 200, "{body}");
+
+    let (status, body) = http_request(addr, "POST", "/quitquitquit", "");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"status\":\"draining\""), "{body}");
+
+    // The accept loop exits, in-flight work drains, run() returns.
+    server_thread.join().unwrap();
+    assert!(control.draining());
+    let (_, health) = control.health();
+    assert!(health.contains("draining"), "{health}");
+}

@@ -198,7 +198,7 @@ fn micro_batched_predictions_match_unbatched() {
         .collect();
 
     let predictor = Arc::new(Predictor::new(
-        InferenceEngine::new(ckpt).unwrap(),
+        Arc::new(InferenceEngine::new(ckpt).unwrap()),
         2,
         8,
         Arc::new(ServeMetrics::new()),
@@ -293,6 +293,7 @@ fn http_keep_alive_reuses_one_connection() {
         port: 0,
         workers: 1,
         max_batch: 4,
+        ..ServeOpts::default()
     })
     .unwrap();
     let handle = server.handle().unwrap();
@@ -368,6 +369,7 @@ fn http_server_smoke_test_over_a_real_socket() {
         port: 0, // ephemeral
         workers: 2,
         max_batch: 8,
+        ..ServeOpts::default()
     };
     let server = Server::bind(ckpt, &opts).unwrap();
     let handle = server.handle().unwrap();
