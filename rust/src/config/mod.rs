@@ -152,6 +152,172 @@ impl SimConfig {
     }
 }
 
+/// Deterministic fault injection rates (CLI: `--inject
+/// corrupt:<p>,truncate:<p>,nan:<p>,fail:<p>`). Fates are drawn from
+/// the run's seeded RNG per `(round, client, sub-model)` — see
+/// [`crate::federated::fault`] — so an injected run is bitwise
+/// reproducible for a seed, including across `--workers`. All rates
+/// default to zero; a zero-rate config draws *no* RNG values, keeping
+/// clean runs byte-identical to pre-injection builds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct InjectConfig {
+    /// Probability a shipped sub-model payload arrives with a flipped
+    /// bit (caught by the frame checksum; the update is discarded).
+    pub corrupt: f64,
+    /// Probability a shipped payload arrives truncated (discarded).
+    pub truncate: f64,
+    /// Probability a client's decoded sub-model update is NaN-poisoned
+    /// on arrival (screened by `--robust-agg`).
+    pub nan: f64,
+    /// Probability a client transiently fails to ship anything this
+    /// round (the async sim retries with backoff on the simulated
+    /// clock; the sync loop drops the client's contribution).
+    pub fail: f64,
+}
+
+impl InjectConfig {
+    /// Parse a comma-separated rate list, e.g. `corrupt:0.05,nan:0.02`.
+    /// Unlisted kinds stay at zero; `none` (or an empty string) is the
+    /// all-zero config.
+    pub fn parse(s: &str) -> Result<InjectConfig> {
+        let mut cfg = InjectConfig::default();
+        if s.is_empty() || s == "none" {
+            return Ok(cfg);
+        }
+        for part in s.split(',') {
+            let (kind, rate) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad --inject entry '{part}' (expected kind:rate)"))?;
+            let rate: f64 = rate
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad --inject rate in '{part}'"))?;
+            match kind {
+                "corrupt" => cfg.corrupt = rate,
+                "truncate" => cfg.truncate = rate,
+                "nan" => cfg.nan = rate,
+                "fail" => cfg.fail = rate,
+                other => bail!(
+                    "unknown --inject kind '{other}' (expected corrupt|truncate|nan|fail)"
+                ),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// True when any fault kind has a nonzero rate. The injection hooks
+    /// draw no RNG values when this is false, so clean trajectories are
+    /// untouched.
+    pub fn any(&self) -> bool {
+        self.corrupt > 0.0 || self.truncate > 0.0 || self.nan > 0.0 || self.fail > 0.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, rate) in [
+            ("corrupt", self.corrupt),
+            ("truncate", self.truncate),
+            ("nan", self.nan),
+            ("fail", self.fail),
+        ] {
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("--inject {name} rate must be in [0, 1]: {rate}");
+            }
+        }
+        // The per-payload kinds are drawn from one uniform sample over
+        // cumulative intervals, so their rates must fit in [0, 1]
+        // together.
+        let per_payload = self.corrupt + self.truncate + self.nan;
+        if per_payload > 1.0 {
+            bail!("--inject corrupt+truncate+nan rates sum to {per_payload} > 1");
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for InjectConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if !self.any() {
+            return write!(f, "none");
+        }
+        let mut parts = Vec::new();
+        for (name, rate) in [
+            ("corrupt", self.corrupt),
+            ("truncate", self.truncate),
+            ("nan", self.nan),
+            ("fail", self.fail),
+        ] {
+            if rate > 0.0 {
+                parts.push(format!("{name}:{rate}"));
+            }
+        }
+        write!(f, "{}", parts.join(","))
+    }
+}
+
+/// Defensive aggregation policy (CLI: `--robust-agg`). Non-finite
+/// sub-model updates are always screened out when a policy other than
+/// `None` is active; the variants differ in how surviving outliers are
+/// tamed. See [`crate::federated::aggregate::aggregate_robust`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum RobustAgg {
+    /// Plain uniform averaging (the seed behaviour; no screening).
+    #[default]
+    None,
+    /// Clip each client delta's L2 norm to `c` before averaging
+    /// (Sun et al.'s norm-bounding defence).
+    NormClip { c: f64 },
+    /// Coordinate-wise trimmed mean: drop the `⌊frac·m⌋` lowest and
+    /// highest values per coordinate, average the rest.
+    Trimmed { frac: f64 },
+}
+
+impl RobustAgg {
+    pub fn parse(s: &str) -> Result<RobustAgg> {
+        if s == "none" {
+            return Ok(RobustAgg::None);
+        }
+        if let Some(c) = s.strip_prefix("norm-clip:") {
+            let c: f64 = c
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad --robust-agg norm-clip bound '{c}'"))?;
+            return Ok(RobustAgg::NormClip { c });
+        }
+        if let Some(frac) = s.strip_prefix("trimmed:") {
+            let frac: f64 = frac
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad --robust-agg trimmed fraction '{frac}'"))?;
+            return Ok(RobustAgg::Trimmed { frac });
+        }
+        bail!("unknown --robust-agg '{s}' (expected none|norm-clip:<c>|trimmed:<frac>)")
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            RobustAgg::None => "none".to_string(),
+            RobustAgg::NormClip { c } => format!("norm-clip:{c}"),
+            RobustAgg::Trimmed { frac } => format!("trimmed:{frac}"),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            RobustAgg::None => Ok(()),
+            RobustAgg::NormClip { c } => {
+                if !(c.is_finite() && *c > 0.0) {
+                    bail!("--robust-agg norm-clip bound must be positive and finite: {c}");
+                }
+                Ok(())
+            }
+            RobustAgg::Trimmed { frac } => {
+                if !(0.0..0.5).contains(frac) {
+                    bail!("--robust-agg trimmed fraction must be in [0, 0.5): {frac}");
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
 /// Canary rollout policy for `fedmlh serve` hot reloads (CLI:
 /// `--canary-window` and friends; per-reload overrides via the
 /// `POST /reload?canary=<pct>&window=<n>` query). Consulted by
@@ -313,6 +479,19 @@ pub struct ExperimentConfig {
     /// `--dropout`, …). `async_mode = false` (the default) keeps the
     /// synchronous loop and every seed trajectory untouched.
     pub sim: SimConfig,
+    /// Deterministic fault injection rates (CLI: `--inject`). All-zero
+    /// by default: no fates are drawn and trajectories are untouched.
+    pub inject: InjectConfig,
+    /// Defensive aggregation policy (CLI: `--robust-agg`).
+    pub robust: RobustAgg,
+    /// Write a crash-resume snapshot every this many rounds into the
+    /// snapshot directory (CLI: `--snapshot-every`; 0 disables).
+    /// Sync loop only — the async simulator rejects it.
+    pub snapshot_every: usize,
+    /// Snapshot directory (CLI: `--resume <dir>`): snapshots are
+    /// written here, and if the directory already holds one for this
+    /// config, the run resumes from it bitwise.
+    pub snapshot_dir: Option<std::path::PathBuf>,
 }
 
 impl ExperimentConfig {
@@ -337,6 +516,10 @@ impl ExperimentConfig {
             resync_every: 8,
             error_feedback: false,
             sim: SimConfig::default(),
+            inject: InjectConfig::default(),
+            robust: RobustAgg::None,
+            snapshot_every: 0,
+            snapshot_dir: None,
         }
     }
 
@@ -435,6 +618,14 @@ impl ExperimentConfig {
             .validate()
             .map_err(|e| anyhow::anyhow!("downlink codec: {e}"))?;
         self.sim.validate()?;
+        self.inject.validate()?;
+        self.robust.validate()?;
+        if self.snapshot_every > 0 && self.sim.async_mode {
+            bail!("--snapshot-every is sync-loop only (not supported with --async)");
+        }
+        if self.snapshot_every > 0 && self.snapshot_dir.is_none() {
+            bail!("--snapshot-every requires --resume <dir> for the snapshot directory");
+        }
         Ok(())
     }
 }
@@ -572,6 +763,52 @@ mod tests {
         canary.max_error_rate = 0.1;
         canary.p99_ratio = -1.0;
         assert!(canary.validate().is_err(), "negative p99 ratio must fail");
+    }
+
+    #[test]
+    fn inject_parse_and_validation() {
+        let none = InjectConfig::parse("none").unwrap();
+        assert!(!none.any());
+        assert_eq!(none.to_string(), "none");
+        let cfg = InjectConfig::parse("corrupt:0.05,nan:0.02").unwrap();
+        assert_eq!(cfg.corrupt, 0.05);
+        assert_eq!(cfg.nan, 0.02);
+        assert_eq!(cfg.truncate, 0.0);
+        assert_eq!(cfg.fail, 0.0);
+        assert!(cfg.any());
+        assert_eq!(cfg.to_string(), "corrupt:0.05,nan:0.02");
+        let all = InjectConfig::parse("corrupt:0.1,truncate:0.1,nan:0.1,fail:0.5").unwrap();
+        assert!(all.any());
+        assert!(InjectConfig::parse("corrupt:2").is_err(), "rate above 1");
+        assert!(InjectConfig::parse("corrupt:0.5,nan:0.6").is_err(), "payload rates sum > 1");
+        assert!(InjectConfig::parse("frob:0.1").is_err(), "unknown kind");
+        assert!(InjectConfig::parse("corrupt").is_err(), "missing rate");
+    }
+
+    #[test]
+    fn robust_agg_parse_and_validation() {
+        assert_eq!(RobustAgg::parse("none").unwrap(), RobustAgg::None);
+        let clip = RobustAgg::parse("norm-clip:10").unwrap();
+        assert_eq!(clip, RobustAgg::NormClip { c: 10.0 });
+        assert_eq!(clip.name(), "norm-clip:10");
+        let trim = RobustAgg::parse("trimmed:0.2").unwrap();
+        assert_eq!(trim, RobustAgg::Trimmed { frac: 0.2 });
+        assert_eq!(trim.name(), "trimmed:0.2");
+        assert!(RobustAgg::parse("median").is_err());
+        assert!(RobustAgg::NormClip { c: 0.0 }.validate().is_err());
+        assert!(RobustAgg::Trimmed { frac: 0.5 }.validate().is_err());
+        assert!(RobustAgg::Trimmed { frac: 0.49 }.validate().is_ok());
+    }
+
+    #[test]
+    fn snapshot_flags_validate() {
+        let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+        cfg.snapshot_every = 2;
+        assert!(cfg.validate().is_err(), "snapshot-every needs a directory");
+        cfg.snapshot_dir = Some(std::path::PathBuf::from("snap"));
+        cfg.validate().unwrap();
+        cfg.sim.async_mode = true;
+        assert!(cfg.validate().is_err(), "snapshots are sync-only");
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::config::RobustAgg;
 use crate::model::params::ModelParams;
 
 /// Aggregation weighting scheme.
@@ -37,6 +38,119 @@ pub fn aggregate(
         global.accumulate(local, *w as f32)?;
     }
     Ok(global)
+}
+
+/// Defensive aggregation (`--robust-agg`): screen non-finite updates,
+/// then clip or trim outliers before averaging, so a single divergent
+/// or adversarial client cannot poison the global model.
+///
+/// `global` is the model the round started from — it anchors the
+/// per-update deltas under norm-clipping and is what survives unchanged
+/// when *every* update is screened out. [`RobustAgg::None`] delegates
+/// straight to [`aggregate`], bit-identical to the historical pipeline.
+///
+/// - `norm-clip:<c>`: each surviving update's delta from `global` is
+///   rescaled to L2 norm ≤ `c`, then the weighted mean of clipped
+///   deltas is applied to `global`.
+/// - `trimmed:<frac>`: coordinate-wise trimmed mean — the `⌊frac·m⌋`
+///   smallest and largest values per coordinate are dropped and the
+///   rest averaged (unweighted; trimming has no natural per-client
+///   weight).
+pub fn aggregate_robust(
+    global: &ModelParams,
+    locals: &[(&ModelParams, usize)],
+    weighting: Weighting,
+    robust: RobustAgg,
+) -> Result<ModelParams> {
+    if robust == RobustAgg::None {
+        return aggregate(locals, weighting);
+    }
+    let survivors: Vec<(&ModelParams, usize)> = locals
+        .iter()
+        .filter(|(p, _)| is_finite_params(p))
+        .copied()
+        .collect();
+    let screened = locals.len() - survivors.len();
+    if screened > 0 {
+        crate::obs::metrics::global()
+            .counter(
+                "fedmlh_robust_screened_total",
+                "Non-finite client updates screened out by --robust-agg.",
+            )
+            .add(screened as u64);
+    }
+    if survivors.is_empty() {
+        // Every update was poisoned; keep the round's starting model.
+        return Ok(global.clone());
+    }
+    match robust {
+        RobustAgg::None => unreachable!("handled above"),
+        RobustAgg::NormClip { c } => {
+            let base = global.flat_values();
+            let weights = weights_for(&survivors, weighting);
+            let mut mean = vec![0.0f64; base.len()];
+            for ((local, _), w) in survivors.iter().zip(weights.iter()) {
+                let flat = local.flat_values();
+                if flat.len() != base.len() {
+                    bail!(
+                        "norm-clip: update has {} values, global has {}",
+                        flat.len(),
+                        base.len()
+                    );
+                }
+                let mut norm_sq = 0.0f64;
+                for (v, b) in flat.iter().zip(base.iter()) {
+                    let d = f64::from(v - b);
+                    norm_sq += d * d;
+                }
+                let norm = norm_sq.sqrt();
+                let scale = if norm > c { c / norm } else { 1.0 };
+                for ((m, v), b) in mean.iter_mut().zip(flat.iter()).zip(base.iter()) {
+                    *m += w * scale * f64::from(v - b);
+                }
+            }
+            let clipped: Vec<f32> = base
+                .iter()
+                .zip(mean.iter())
+                .map(|(b, m)| (f64::from(*b) + m) as f32)
+                .collect();
+            let mut out = ModelParams::zeros(global.d, global.hidden, global.out);
+            out.set_from_flat(&clipped)?;
+            Ok(out)
+        }
+        RobustAgg::Trimmed { frac } => {
+            let flats: Vec<Vec<f32>> = survivors.iter().map(|(p, _)| p.flat_values()).collect();
+            let n = flats[0].len();
+            if flats.iter().any(|f| f.len() != n) {
+                bail!("trimmed: update length mismatch");
+            }
+            let m = flats.len();
+            let k = (frac * m as f64).floor() as usize;
+            let kept = m - 2 * k;
+            if kept == 0 {
+                bail!("trimmed:{frac} leaves no survivors out of {m} updates");
+            }
+            let mut values = vec![0.0f32; m];
+            let mut out_flat = vec![0.0f32; n];
+            for (i, slot) in out_flat.iter_mut().enumerate() {
+                for (v, f) in values.iter_mut().zip(flats.iter()) {
+                    *v = f[i];
+                }
+                values.sort_by(f32::total_cmp);
+                let sum: f64 = values[k..m - k].iter().map(|&v| f64::from(v)).sum();
+                *slot = (sum / kept as f64) as f32;
+            }
+            let mut out = ModelParams::zeros(global.d, global.hidden, global.out);
+            out.set_from_flat(&out_flat)?;
+            Ok(out)
+        }
+    }
+}
+
+fn is_finite_params(p: &ModelParams) -> bool {
+    p.tensors
+        .iter()
+        .all(|t| t.data().iter().all(|v| v.is_finite()))
 }
 
 fn weights_for(locals: &[(&ModelParams, usize)], weighting: Weighting) -> Vec<f64> {
@@ -120,6 +234,118 @@ mod tests {
         let a = constant_params(1.0);
         let b = ModelParams::zeros(9, 3, 4);
         assert!(aggregate(&[(&a, 1), (&b, 1)], Weighting::Uniform).is_err());
+    }
+
+    #[test]
+    fn robust_none_matches_plain_aggregate() {
+        let a = constant_params(1.0);
+        let b = constant_params(3.0);
+        let global = constant_params(0.0);
+        let refs = [(&a, 10), (&b, 90)];
+        let plain = aggregate(&refs, Weighting::Uniform).unwrap();
+        let robust =
+            aggregate_robust(&global, &refs, Weighting::Uniform, RobustAgg::None).unwrap();
+        assert_eq!(plain, robust);
+    }
+
+    #[test]
+    fn robust_screens_nan_updates() {
+        let global = constant_params(2.0);
+        let good = constant_params(4.0);
+        let mut bad = constant_params(4.0);
+        bad.tensors[0].data_mut()[0] = f32::NAN;
+        for robust in [
+            RobustAgg::NormClip { c: 1e9 },
+            RobustAgg::Trimmed { frac: 0.0 },
+        ] {
+            let g = aggregate_robust(
+                &global,
+                &[(&good, 1), (&bad, 1)],
+                Weighting::Uniform,
+                robust,
+            )
+            .unwrap();
+            for t in &g.tensors {
+                assert!(
+                    t.data().iter().all(|&v| (v - 4.0).abs() < 1e-5),
+                    "{robust:?}"
+                );
+            }
+        }
+        // Every update poisoned → the starting global survives untouched.
+        let g = aggregate_robust(
+            &global,
+            &[(&bad, 1)],
+            Weighting::Uniform,
+            RobustAgg::NormClip { c: 10.0 },
+        )
+        .unwrap();
+        assert_eq!(g, global);
+    }
+
+    #[test]
+    fn norm_clip_bounds_the_step() {
+        let global = constant_params(0.0);
+        let huge = constant_params(1000.0);
+        let c = 1.0;
+        let g = aggregate_robust(
+            &global,
+            &[(&huge, 1)],
+            Weighting::Uniform,
+            RobustAgg::NormClip { c },
+        )
+        .unwrap();
+        let mut norm_sq = 0.0f64;
+        for t in &g.tensors {
+            for &v in t.data() {
+                norm_sq += f64::from(v) * f64::from(v);
+            }
+        }
+        let norm = norm_sq.sqrt();
+        assert!(
+            (norm - c).abs() < 1e-4,
+            "clipped step norm {norm} should sit at the clip bound {c}"
+        );
+        // A small update inside the bound passes through unclipped.
+        let mut small = constant_params(0.0);
+        small.tensors[1].data_mut()[0] = 0.5;
+        let g = aggregate_robust(
+            &global,
+            &[(&small, 1)],
+            Weighting::Uniform,
+            RobustAgg::NormClip { c },
+        )
+        .unwrap();
+        assert!((g.tensors[1].data()[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let global = constant_params(0.0);
+        let locals: Vec<ModelParams> = [1.0, 2.0, 3.0, 4.0, 100.0]
+            .iter()
+            .map(|&v| constant_params(v))
+            .collect();
+        let refs: Vec<(&ModelParams, usize)> = locals.iter().map(|p| (p, 1)).collect();
+        let g = aggregate_robust(
+            &global,
+            &refs,
+            Weighting::Uniform,
+            RobustAgg::Trimmed { frac: 0.2 },
+        )
+        .unwrap();
+        // frac 0.2 of 5 drops one from each side: mean(2, 3, 4) = 3.
+        for t in &g.tensors {
+            assert!(t.data().iter().all(|&v| (v - 3.0).abs() < 1e-5));
+        }
+        // Trimming everything is an error, not a zero model.
+        assert!(aggregate_robust(
+            &global,
+            &refs[..2],
+            Weighting::Uniform,
+            RobustAgg::Trimmed { frac: 0.5 }
+        )
+        .is_err());
     }
 
     #[test]

@@ -119,6 +119,37 @@ impl CommMeter {
     pub fn per_round_totals(&self) -> &[u64] {
         &self.per_round_totals
     }
+
+    /// All counters, for crash-resume snapshots
+    /// ([`super::snapshot`]): `(download, upload, dense_upload,
+    /// dense_download, per_round_totals)`.
+    pub fn snapshot_parts(&self) -> (u64, u64, u64, u64, &[u64]) {
+        (
+            self.download_bytes,
+            self.upload_bytes,
+            self.dense_upload_bytes,
+            self.dense_download_bytes,
+            &self.per_round_totals,
+        )
+    }
+
+    /// Rebuild a meter from snapshot counters (inverse of
+    /// [`Self::snapshot_parts`]).
+    pub fn from_parts(
+        download_bytes: u64,
+        upload_bytes: u64,
+        dense_upload_bytes: u64,
+        dense_download_bytes: u64,
+        per_round_totals: Vec<u64>,
+    ) -> CommMeter {
+        CommMeter {
+            download_bytes,
+            upload_bytes,
+            dense_upload_bytes,
+            dense_download_bytes,
+            per_round_totals,
+        }
+    }
 }
 
 /// Closed-form per-round volume: `clients × (down + up) × model_bytes ×

@@ -49,6 +49,27 @@ impl EarlyStopper {
     pub fn best_round(&self) -> usize {
         self.best_round
     }
+
+    /// Tracker state for crash-resume snapshots
+    /// ([`super::snapshot`]): `(best, best_round, since_best,
+    /// observed)`. Patience is configuration, not state.
+    pub fn snapshot_parts(&self) -> (f64, usize, usize, usize) {
+        (self.best, self.best_round, self.since_best, self.observed)
+    }
+
+    /// Restore tracker state captured by [`Self::snapshot_parts`].
+    pub fn restore_parts(
+        &mut self,
+        best: f64,
+        best_round: usize,
+        since_best: usize,
+        observed: usize,
+    ) {
+        self.best = best;
+        self.best_round = best_round;
+        self.since_best = since_best;
+        self.observed = observed;
+    }
 }
 
 #[cfg(test)]

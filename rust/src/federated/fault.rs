@@ -1,0 +1,331 @@
+//! Deterministic fault injection — the adversarial half of the
+//! fault-tolerance layer.
+//!
+//! Real federated fleets lose, truncate, and bit-flip payloads, and
+//! occasionally ship garbage updates. This module injects exactly those
+//! failures from the run's *seeded* RNG, so a faulty run is as bitwise
+//! reproducible as a clean one: every fate is a pure function of
+//! `(seed, round, client, sub-model)`, drawn with the same
+//! [`derive_seed`] discipline as the async simulator's dropout stream
+//! (tagged streams, one fate per item, no draws when injection is off).
+//!
+//! Two fate streams exist per run:
+//!
+//! - **Payload fates** ([`payload_fate`], tag [`PAYLOAD_TAG`]): per
+//!   `(round, client, sub-model)` — one uniform draw chooses corrupt /
+//!   truncate / NaN-poison / clean from cumulative probability
+//!   intervals. Corrupt and truncate mutate the *framed* wire bytes
+//!   (see `wire::EncodedUpdate::to_framed_bytes`), so the server's
+//!   checksummed decode rejects them and discards the update; NaN
+//!   poisons the decoded sub-model, which `--robust-agg` screens.
+//! - **Transient-failure fates** ([`fail_fate`], tag [`FAIL_TAG`]):
+//!   per `(round, client)` (per dispatch in the async sim) — the client
+//!   trained but its upload never completes. The synchronous loop drops
+//!   the contribution; the async simulator retries with exponential
+//!   backoff on the simulated clock ([`retry_plan`]) before giving up.
+//!
+//! Every observed fault increments `fedmlh_faults_total{kind}` in the
+//! process-global metrics registry via [`record`].
+
+use crate::config::InjectConfig;
+use crate::model::params::ModelParams;
+use crate::util::rng::{derive_seed, Rng};
+
+/// Seed-stream tag for per-(round, client) transient-failure fates.
+pub const FAIL_TAG: u64 = 0xfa11_0000_0000_0000;
+/// Seed-stream tag for per-(round, client, sub-model) payload fates.
+pub const PAYLOAD_TAG: u64 = 0xfa17_0000_0000_0000;
+
+/// Upload attempts the async simulator makes per dispatch (1 initial +
+/// `MAX_RETRIES` retries) before declaring the update lost.
+pub const MAX_RETRIES: u32 = 3;
+
+/// What went wrong with one client contribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A bit flipped in the payload (caught by the frame checksum).
+    Corrupt,
+    /// The payload arrived cut short.
+    Truncate,
+    /// The update's values are NaN-poisoned.
+    Nan,
+    /// The upload never completed (transient client failure).
+    Fail,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Truncate => "truncate",
+            FaultKind::Nan => "nan",
+            FaultKind::Fail => "fail",
+        }
+    }
+}
+
+/// Count one observed fault in `fedmlh_faults_total{kind}`.
+pub fn record(kind: FaultKind) {
+    record_kind(kind.name());
+}
+
+/// Count a fault by raw kind label — for faults the injector did not
+/// cause (a genuinely undecodable payload in production is
+/// `kind="decode"`).
+pub fn record_kind(kind: &'static str) {
+    crate::obs::metrics::global()
+        .counter_with(
+            "fedmlh_faults_total",
+            "Faulty client contributions observed, by kind.",
+            &[("kind", kind)],
+        )
+        .inc();
+}
+
+/// The per-item RNG stream id the payload fate is drawn from — the
+/// round engine's `(round, client, sub-model)` stream arithmetic, kept
+/// in one place so sync and async runs inject identically-shaped
+/// streams.
+pub fn item_stream(round: u64, population: u64, client: u64, n_models: u64, j: u64) -> u64 {
+    round
+        .wrapping_mul(population)
+        .wrapping_add(client)
+        .wrapping_mul(n_models)
+        .wrapping_add(j)
+}
+
+/// Draw the payload fate for one `(round, client, sub-model)` item.
+/// Returns the fate plus the RNG cursor positioned to draw that fault's
+/// details (corruption site, truncation point) — using the same stream
+/// keeps the whole fault a function of the item key.
+///
+/// One uniform sample chooses among cumulative `[corrupt, truncate,
+/// nan]` intervals in that fixed order; [`InjectConfig::validate`]
+/// guarantees they fit in `[0, 1]` together.
+pub fn payload_fate(inject: &InjectConfig, seed: u64, stream: u64) -> (Option<FaultKind>, Rng) {
+    let mut rng = Rng::new(derive_seed(seed, PAYLOAD_TAG ^ stream));
+    if inject.corrupt <= 0.0 && inject.truncate <= 0.0 && inject.nan <= 0.0 {
+        return (None, rng);
+    }
+    let u = rng.next_f64();
+    let kind = if u < inject.corrupt {
+        Some(FaultKind::Corrupt)
+    } else if u < inject.corrupt + inject.truncate {
+        Some(FaultKind::Truncate)
+    } else if u < inject.corrupt + inject.truncate + inject.nan {
+        Some(FaultKind::Nan)
+    } else {
+        None
+    };
+    (kind, rng)
+}
+
+/// Draw the transient-failure fate for one `(round, client)` pair
+/// (sync) or dispatch (async). `true` = the first upload attempt fails.
+pub fn fail_fate(inject: &InjectConfig, seed: u64, stream: u64) -> bool {
+    if inject.fail <= 0.0 {
+        return false;
+    }
+    let mut rng = Rng::new(derive_seed(seed, FAIL_TAG ^ stream));
+    rng.bernoulli(inject.fail)
+}
+
+/// The async simulator's bounded retry-with-backoff plan for a
+/// dispatch whose first upload attempt failed ([`fail_fate`] fired).
+/// Returns `(extra_attempts, lost)`: how many *additional* upload
+/// attempts were made (each costing `t_up` plus exponential backoff on
+/// the simulated clock — see [`backoff_seconds`]) and whether the
+/// update was ultimately lost after [`MAX_RETRIES`] retries.
+///
+/// Retry fates continue the same tagged stream the first-attempt fate
+/// came from, so the whole plan is a function of `(seed, stream)`.
+pub fn retry_plan(inject: &InjectConfig, seed: u64, stream: u64) -> (u32, bool) {
+    let mut rng = Rng::new(derive_seed(seed, FAIL_TAG ^ stream));
+    if !rng.bernoulli(inject.fail) {
+        return (0, false);
+    }
+    for attempt in 1..=MAX_RETRIES {
+        if !rng.bernoulli(inject.fail) {
+            return (attempt, false);
+        }
+    }
+    (MAX_RETRIES, true)
+}
+
+/// Simulated-clock seconds a client waits before retry `attempt`
+/// (1-based): 1s, 2s, 4s, … doubling per attempt.
+pub fn backoff_seconds(attempt: u32) -> f64 {
+    f64::from(1u32 << (attempt - 1).min(16))
+}
+
+/// Flip one random bit of the payload in place. FNV-1a's per-byte step
+/// is bijective, so any single-bit change is guaranteed to fail the
+/// frame checksum.
+pub fn corrupt_bytes(bytes: &mut [u8], rng: &mut Rng) {
+    if bytes.is_empty() {
+        return;
+    }
+    let pos = rng.below(bytes.len());
+    let bit = rng.below(8) as u8;
+    bytes[pos] ^= 1 << bit;
+}
+
+/// Cut the payload short at a random point strictly before its end.
+pub fn truncate_bytes(bytes: &mut Vec<u8>, rng: &mut Rng) {
+    if bytes.is_empty() {
+        return;
+    }
+    let keep = rng.below(bytes.len());
+    bytes.truncate(keep);
+}
+
+/// Overwrite every value of a decoded update with NaN — the worst-case
+/// divergent client, exactly what `--robust-agg` must screen.
+pub fn poison_nan(params: &mut ModelParams) {
+    for t in params.tensors.iter_mut() {
+        for v in t.data_mut() {
+            *v = f32::NAN;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inject(corrupt: f64, truncate: f64, nan: f64, fail: f64) -> InjectConfig {
+        InjectConfig {
+            corrupt,
+            truncate,
+            nan,
+            fail,
+        }
+    }
+
+    #[test]
+    fn fates_are_deterministic_per_item() {
+        let cfg = inject(0.2, 0.2, 0.2, 0.3);
+        for stream in 0..50u64 {
+            let (a, _) = payload_fate(&cfg, 42, stream);
+            let (b, _) = payload_fate(&cfg, 42, stream);
+            assert_eq!(a, b, "stream {stream}");
+            assert_eq!(fail_fate(&cfg, 42, stream), fail_fate(&cfg, 42, stream));
+            assert_eq!(retry_plan(&cfg, 42, stream), retry_plan(&cfg, 42, stream));
+        }
+    }
+
+    #[test]
+    fn zero_rates_never_fault() {
+        let cfg = InjectConfig::default();
+        for stream in 0..100u64 {
+            assert_eq!(payload_fate(&cfg, 7, stream).0, None);
+            assert!(!fail_fate(&cfg, 7, stream));
+            assert_eq!(retry_plan(&cfg, 7, stream), (0, false));
+        }
+    }
+
+    #[test]
+    fn fate_frequencies_track_rates() {
+        let cfg = inject(0.1, 0.05, 0.05, 0.0);
+        let n = 20_000u64;
+        let mut counts = [0usize; 4];
+        for stream in 0..n {
+            match payload_fate(&cfg, 99, stream).0 {
+                Some(FaultKind::Corrupt) => counts[0] += 1,
+                Some(FaultKind::Truncate) => counts[1] += 1,
+                Some(FaultKind::Nan) => counts[2] += 1,
+                Some(FaultKind::Fail) => unreachable!("payload fates never yield Fail"),
+                None => counts[3] += 1,
+            }
+        }
+        let frac = |c: usize| c as f64 / n as f64;
+        assert!((frac(counts[0]) - 0.1).abs() < 0.02, "corrupt {}", frac(counts[0]));
+        assert!((frac(counts[1]) - 0.05).abs() < 0.02, "truncate {}", frac(counts[1]));
+        assert!((frac(counts[2]) - 0.05).abs() < 0.02, "nan {}", frac(counts[2]));
+        assert!((frac(counts[3]) - 0.8).abs() < 0.03, "clean {}", frac(counts[3]));
+    }
+
+    #[test]
+    fn fail_and_payload_streams_are_independent() {
+        // The same stream id under the two tags must not be correlated:
+        // a client can fail its upload whether or not its payload would
+        // have been corrupted.
+        let cfg = inject(0.5, 0.0, 0.0, 0.5);
+        let mut agree = 0usize;
+        let n = 2_000u64;
+        for stream in 0..n {
+            let faulted = payload_fate(&cfg, 5, stream).0.is_some();
+            if faulted == fail_fate(&cfg, 5, stream) {
+                agree += 1;
+            }
+        }
+        let rate = agree as f64 / n as f64;
+        assert!((rate - 0.5).abs() < 0.05, "correlated streams: {rate}");
+    }
+
+    #[test]
+    fn retry_plan_bounds_attempts() {
+        let cfg = inject(0.0, 0.0, 0.0, 0.95);
+        let mut lost_any = false;
+        let mut recovered_any = false;
+        for stream in 0..500u64 {
+            let (extra, lost) = retry_plan(&cfg, 3, stream);
+            assert!(extra <= MAX_RETRIES);
+            if lost {
+                assert_eq!(extra, MAX_RETRIES, "a lost update used every retry");
+                lost_any = true;
+            } else {
+                recovered_any = true;
+            }
+        }
+        assert!(lost_any, "95% fail rate must lose some updates");
+        assert!(recovered_any, "…but not all of them");
+        assert_eq!(backoff_seconds(1), 1.0);
+        assert_eq!(backoff_seconds(2), 2.0);
+        assert_eq!(backoff_seconds(3), 4.0);
+    }
+
+    #[test]
+    fn corruption_helpers_mutate_deterministically() {
+        let mut rng = Rng::new(11);
+        let orig: Vec<u8> = (0..64u8).collect();
+        let mut a = orig.clone();
+        corrupt_bytes(&mut a, &mut rng);
+        assert_eq!(a.len(), orig.len());
+        let flipped: Vec<usize> = (0..orig.len()).filter(|&i| a[i] != orig[i]).collect();
+        assert_eq!(flipped.len(), 1, "exactly one byte changes");
+        assert_eq!(
+            (a[flipped[0]] ^ orig[flipped[0]]).count_ones(),
+            1,
+            "exactly one bit flips"
+        );
+        let mut b = orig.clone();
+        truncate_bytes(&mut b, &mut Rng::new(12));
+        assert!(b.len() < orig.len());
+        assert_eq!(&orig[..b.len()], &b[..], "truncation keeps a prefix");
+        // Same seed → same mutation.
+        let mut a2 = orig.clone();
+        corrupt_bytes(&mut a2, &mut Rng::new(11));
+        let mut a3 = orig.clone();
+        corrupt_bytes(&mut a3, &mut Rng::new(11));
+        assert_eq!(a2, a3);
+    }
+
+    #[test]
+    fn poison_nan_poisons_every_value() {
+        let mut p = ModelParams::zeros(3, 2, 4);
+        poison_nan(&mut p);
+        for t in &p.tensors {
+            assert!(t.data().iter().all(|v| v.is_nan()));
+        }
+    }
+
+    #[test]
+    fn item_stream_matches_engine_arithmetic() {
+        // Pin the stream id layout the engine seeds batches with — the
+        // fault streams tag the same ids, so a layout change here is a
+        // determinism break.
+        assert_eq!(item_stream(0, 10, 3, 2, 1), 7);
+        assert_eq!(item_stream(2, 10, 3, 2, 0), 46);
+    }
+}

@@ -169,8 +169,11 @@ impl History {
         let (c_infreq1, c_infreq3, c_infreq5) =
             (col("infreq1")?, col("infreq3")?, col("infreq5")?);
         let (c_comm, c_down, c_up) = (col("comm_bytes")?, col("down_bytes")?, col("up_bytes")?);
-        let (c_secs, c_loss, c_sim) =
-            (col("round_seconds")?, col("mean_loss")?, col("sim_seconds")?);
+        let (c_secs, c_loss) = (col("round_seconds")?, col("mean_loss")?);
+        // Histories written before the async simulator landed have no
+        // `sim_seconds` column; the synchronous loop records 0 there
+        // anyway, so absent means 0 rather than a hard error.
+        let c_sim = cols.iter().position(|c| *c == "sim_seconds");
         let (c_train, c_enc, c_agg) = (
             col("train_seconds")?,
             col("encode_seconds")?,
@@ -227,7 +230,10 @@ impl History {
                     encode_seconds: f(c_enc)?,
                     aggregate_seconds: f(c_agg)?,
                 },
-                sim_seconds: f(c_sim)?,
+                sim_seconds: match c_sim {
+                    Some(c) => f(c)?,
+                    None => 0.0,
+                },
             });
         }
         Ok(history)
@@ -398,6 +404,24 @@ mod tests {
         assert!(History::parse_csv("").is_err());
         assert!(History::parse_csv("round,top1\n0").is_err());
         assert!(History::parse_csv("nope\n").is_err());
+    }
+
+    #[test]
+    fn parses_legacy_csv_without_sim_seconds() {
+        // A pre-async-simulator history (exactly what `fedmlh run` wrote
+        // before the `sim_seconds` column existed) must still parse,
+        // with the simulated clock defaulting to 0.
+        let legacy = "round,top1,top3,top5,freq1,freq3,freq5,infreq1,infreq3,infreq5,comm_bytes,down_bytes,up_bytes,round_seconds,mean_loss,train_seconds,encode_seconds,aggregate_seconds\n\
+                      0,0.250000,0.300000,0.350000,0.1,0.1,0.1,0.1,0.1,0.1,100,60,40,1.5000,0.900000,0.9000,0.1500,0.4500\n\
+                      1,0.400000,0.450000,0.500000,0.2,0.2,0.2,0.2,0.2,0.2,200,60,40,2.0000,0.500000,1.2000,0.2000,0.6000\n";
+        let h = History::parse_csv(legacy).unwrap();
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.records[0].sim_seconds, 0.0);
+        assert_eq!(h.records[1].round, 1);
+        assert_eq!(h.records[1].comm_bytes, 200);
+        assert!((h.records[1].accuracy.top1 - 0.4).abs() < 1e-9);
+        // Other columns going missing is still a hard error.
+        assert!(History::parse_csv("round,top1\n0,0.5\n").is_err());
     }
 
     #[test]

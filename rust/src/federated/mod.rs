@@ -41,6 +41,38 @@
 //! [`transport::Transport`] owned by one run, which is what lets
 //! aggressive `topk`/`q8` settings keep the signal they would otherwise
 //! discard every round, and what lets the downlink ship deltas at all.
+//!
+//! # Fault tolerance
+//!
+//! Real fleets corrupt payloads, ship divergent updates, drop uplinks,
+//! and outlive any single server process; the round loop is built to
+//! survive all four without perturbing a clean run:
+//!
+//! - **Hardened decode** ([`wire::EncodedUpdate::from_framed_bytes`]):
+//!   uplink payloads can travel in a checksummed frame (magic + codec
+//!   tag + declared length + FNV-1a digest). Truncated, oversized, or
+//!   bit-flipped frames answer `Err` — never a panic — and the server
+//!   discards the update while still charging its bytes to
+//!   [`comm::CommMeter`] and counting it in `fedmlh_faults_total{kind}`.
+//! - **Defensive aggregation** ([`aggregate::aggregate_robust`],
+//!   `--robust-agg norm-clip:<c>|trimmed:<frac>|none`): NaN/Inf
+//!   sub-model updates are screened out, and surviving updates are
+//!   norm-clipped or coordinate-wise trimmed before averaging, so one
+//!   poisoned client cannot take the global model non-finite. `none`
+//!   is bit-identical to the historical plain average.
+//! - **Deterministic fault injection** ([`fault`],
+//!   `--inject corrupt:<p>,truncate:<p>,nan:<p>,fail:<p>`): per-`(round,
+//!   client, sub-model)` fates drawn from tagged seed streams — the
+//!   same derive-seed discipline as [`sim`]'s dropout — in both sync
+//!   and async runs; the async sim retries transient `fail` fates with
+//!   exponential backoff charged on the simulated clock. Injection off
+//!   ⇒ zero RNG draws ⇒ clean runs stay bitwise identical.
+//! - **Crash-resume** ([`snapshot`], `--snapshot-every N --resume
+//!   <dir>`): the sync loop atomically persists globals, transport
+//!   residuals/replica bases, history, comm meters, and the early
+//!   stopper, and a resumed run continues *bitwise identically* to an
+//!   uninterrupted one (everything else is derived from `(seed, round)`
+//!   and needs no cursor).
 
 pub mod aggregate;
 pub mod backend;
@@ -48,10 +80,12 @@ pub mod batcher;
 pub mod comm;
 pub mod early_stop;
 pub mod engine;
+pub mod fault;
 pub mod history;
 pub mod sampler;
 pub mod server;
 pub mod sim;
+pub mod snapshot;
 pub mod transport;
 pub mod wire;
 

@@ -33,7 +33,7 @@
 //! `--error-feedback off` and `workers = 1` this is bit-identical to
 //! the historical inline loop.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::algo::LabelScheme;
 use crate::config::ExperimentConfig;
@@ -44,15 +44,18 @@ use crate::model::params::ModelParams;
 use crate::partition::Partition;
 use crate::util::rng::derive_seed;
 
-use super::aggregate::{aggregate, Weighting};
+use super::aggregate::{aggregate_robust, Weighting};
 use super::backend::TrainBackend;
 use super::comm::CommMeter;
 use super::early_stop::EarlyStopper;
 use super::engine::RoundEngine;
+use super::fault::{self, FaultKind};
 use super::history::{History, RoundRecord, RoundTiming};
 use super::sampler::ClientSampler;
 use super::sim::SimStats;
+use super::snapshot::{config_fingerprint, RunSnapshot};
 use super::transport::Transport;
+use super::wire::EncodedUpdate;
 
 /// Everything a finished run reports (inputs to Tables 3–7, Figs 3–5).
 #[derive(Debug)]
@@ -116,6 +119,50 @@ pub fn run(
     let mut history = History::new();
     let mut stopper = EarlyStopper::new(cfg.patience);
 
+    // Crash-resume: if the snapshot directory already holds a snapshot
+    // for *this* experiment (fingerprint-guarded), restore every piece
+    // of cross-round state and continue bitwise from the next round.
+    let fingerprint = config_fingerprint(cfg);
+    let mut start_round = 0usize;
+    if let Some(dir) = cfg.snapshot_dir.as_deref() {
+        if let Some(snap) = RunSnapshot::load(dir, fingerprint)? {
+            if snap.globals.len() != n_models {
+                bail!(
+                    "snapshot in {} holds {} sub-models, this run has {n_models}",
+                    dir.display(),
+                    snap.globals.len()
+                );
+            }
+            for (j, g) in snap.globals.iter().enumerate() {
+                let e = &globals[j];
+                if (g.d, g.hidden, g.out) != (e.d, e.hidden, e.out) {
+                    bail!(
+                        "snapshot sub-model {j} has shape ({},{},{}), this run needs \
+                         ({},{},{})",
+                        g.d,
+                        g.hidden,
+                        g.out,
+                        e.d,
+                        e.hidden,
+                        e.out
+                    );
+                }
+            }
+            globals = snap.globals;
+            history = snap.history;
+            comm = snap.comm;
+            let (best, best_round, since_best, observed) = snap.stopper;
+            stopper.restore_parts(best, best_round, since_best, observed);
+            transport.restore_state(&snap.uplink_state, &snap.downlink_state)?;
+            start_round = snap.next_round;
+            crate::log_info!(
+                "server: resuming from snapshot at round {start_round} ({} evaluated rounds \
+                 restored)",
+                history.len()
+            );
+        }
+    }
+
     // Evaluation machinery (frequent split mirrors the partitioner).
     let train_stats = LabelStats::from_dataset(train);
     let frequent_k = partition.class_owner.len().max(1);
@@ -154,12 +201,31 @@ pub fn run(
         "Mean top-k accuracy at the latest evaluation.",
     );
 
-    let mut rounds_run = 0usize;
-    'rounds: for round in 0..cfg.rounds {
+    let mut rounds_run = start_round;
+    'rounds: for round in start_round..cfg.rounds {
         let t_round = std::time::Instant::now();
         let _span_round = crate::obs::trace::wall_span("round", 0)
             .map(|g| g.arg("round", crate::util::json::Json::num(round as f64)));
         let selected = sampler.sample(round);
+
+        // -- injected transient failures (`--inject fail:<p>`): the
+        // client trains but its upload never arrives. Fates are a pure
+        // function of (seed, round, client) — zero RNG draws at rate 0.
+        let population = cfg.client_population() as u64;
+        let failed: Vec<bool> = selected
+            .iter()
+            .map(|&client| {
+                let stream = (round as u64)
+                    .wrapping_mul(population)
+                    .wrapping_add(client as u64);
+                fault::fail_fate(&cfg.inject, cfg.seed, stream)
+            })
+            .collect();
+        for &lost in &failed {
+            if lost {
+                fault::record(FaultKind::Fail);
+            }
+        }
 
         // -- downlink (Algorithm 2 line 10): dense/q8/q8g compress each
         // sub-model once and every selected client downloads the same
@@ -198,9 +264,14 @@ pub fn run(
         for (slot, per_model) in updates.iter().enumerate() {
             for (j, upd) in per_model.iter().enumerate() {
                 comm.download_encoded(bcast.payload(slot, j).byte_len(), model_bytes_each);
-                comm.upload_encoded(upd.encoded.byte_len(), model_bytes_each);
                 timing.train_seconds += upd.stats.seconds;
                 timing.encode_seconds += upd.encode_seconds;
+                if failed[slot] {
+                    // The upload never arrived: no uplink bytes, and the
+                    // server never learns this client's loss.
+                    continue;
+                }
+                comm.upload_encoded(upd.encoded.byte_len(), model_bytes_each);
                 if upd.stats.steps > 0 {
                     loss_sum += upd.stats.mean_loss;
                     loss_n += 1;
@@ -218,20 +289,60 @@ pub fn run(
         let t_agg = std::time::Instant::now();
         {
             let _span_agg = crate::obs::trace::wall_span("aggregate", 0);
+            let inject_payloads =
+                cfg.inject.corrupt > 0.0 || cfg.inject.truncate > 0.0 || cfg.inject.nan > 0.0;
+            let n_tensors = globals[0].tensors.len();
+            let n_values = globals[0].num_params();
             for j in 0..n_models {
-                let decoded: Vec<ModelParams> = updates
-                    .iter()
-                    .enumerate()
-                    .map(|(slot, per_model)| {
-                        transport.decode(bcast.global(slot, j), &per_model[j].encoded)
-                    })
-                    .collect::<Result<_>>()?;
+                let mut decoded: Vec<ModelParams> = Vec::with_capacity(selected.len());
+                let mut sizes: Vec<usize> = Vec::with_capacity(selected.len());
+                for (slot, per_model) in updates.iter().enumerate() {
+                    if failed[slot] {
+                        continue;
+                    }
+                    let client = selected[slot];
+                    let enc = &per_model[j].encoded;
+                    let update = if inject_payloads {
+                        let stream = fault::item_stream(
+                            round as u64,
+                            population,
+                            client as u64,
+                            n_models as u64,
+                            j as u64,
+                        );
+                        match inject_and_decode(
+                            cfg,
+                            &transport,
+                            bcast.global(slot, j),
+                            enc,
+                            stream,
+                            n_tensors,
+                            n_values,
+                        )? {
+                            Some(m) => m,
+                            None => continue, // discarded (bytes already charged)
+                        }
+                    } else {
+                        transport.decode(bcast.global(slot, j), enc)?
+                    };
+                    decoded.push(update);
+                    sizes.push(partition.clients[client].len());
+                }
+                if decoded.is_empty() {
+                    // Every contribution was lost or discarded this
+                    // round; the previous global survives unchanged.
+                    crate::log_warn!(
+                        "server: round {round}, sub-model {j}: no usable updates — keeping \
+                         previous global"
+                    );
+                    continue;
+                }
                 let refs: Vec<(&ModelParams, usize)> = decoded
                     .iter()
-                    .zip(selected.iter())
-                    .map(|(model, &client)| (model, partition.clients[client].len()))
+                    .zip(sizes.iter())
+                    .map(|(model, &n)| (model, n))
                     .collect();
-                globals[j] = aggregate(&refs, Weighting::Uniform)?;
+                globals[j] = aggregate_robust(&globals[j], &refs, Weighting::Uniform, cfg.robust)?;
             }
         }
         timing.aggregate_seconds = t_agg.elapsed().as_secs_f64();
@@ -244,6 +355,7 @@ pub fn run(
         m_round_seconds.observe(round_seconds);
 
         // -- evaluation
+        let mut stop = false;
         if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
             let report = {
                 let _span_eval = crate::obs::trace::wall_span("evaluate", 0);
@@ -264,9 +376,31 @@ pub fn run(
                 timing,
                 sim_seconds: 0.0,
             });
-            if stopper.observe(round, report.mean_topk()) {
-                break 'rounds;
+            stop = stopper.observe(round, report.mean_topk());
+        }
+
+        // -- crash-resume snapshot (`--snapshot-every`), written after
+        // evaluation so the stopper's verdict for this round is
+        // captured; a kill at any point later resumes from here.
+        if cfg.snapshot_every > 0 && (round + 1) % cfg.snapshot_every == 0 {
+            let dir = cfg
+                .snapshot_dir
+                .as_deref()
+                .expect("config validation pairs --snapshot-every with --resume");
+            let (uplink_state, downlink_state) = transport.snapshot_state();
+            RunSnapshot {
+                next_round: round + 1,
+                globals: globals.clone(),
+                history: history.clone(),
+                comm: comm.clone(),
+                stopper: stopper.snapshot_parts(),
+                uplink_state,
+                downlink_state,
             }
+            .save(dir, fingerprint)?;
+        }
+        if stop {
+            break 'rounds;
         }
     }
 
@@ -286,6 +420,49 @@ pub fn run(
         final_globals: globals,
         sim: None,
     })
+}
+
+/// Draw and apply the injected payload fate for one `(round, client,
+/// sub-model)` item (`--inject`): corrupt and truncate mutate the
+/// *framed* wire bytes so the checksummed decode rejects them — the
+/// same path a genuinely damaged payload takes — and the update is
+/// discarded (`Ok(None)`); NaN poisons the decoded update (screening it
+/// is `--robust-agg`'s job); a clean fate decodes normally.
+#[allow(clippy::too_many_arguments)]
+fn inject_and_decode(
+    cfg: &ExperimentConfig,
+    transport: &Transport,
+    reference: &ModelParams,
+    enc: &EncodedUpdate,
+    stream: u64,
+    n_tensors: usize,
+    n_values: usize,
+) -> Result<Option<ModelParams>> {
+    let (fate, mut rng) = fault::payload_fate(&cfg.inject, cfg.seed, stream);
+    match fate {
+        Some(kind @ (FaultKind::Corrupt | FaultKind::Truncate)) => {
+            let mut bytes = enc.to_framed_bytes();
+            match kind {
+                FaultKind::Corrupt => fault::corrupt_bytes(&mut bytes, &mut rng),
+                _ => fault::truncate_bytes(&mut bytes, &mut rng),
+            }
+            let spec = transport.uplink().spec();
+            match EncodedUpdate::from_framed_bytes(spec, n_tensors, n_values, &bytes) {
+                Ok(ok) => Ok(Some(transport.decode(reference, &ok)?)),
+                Err(_) => {
+                    fault::record(kind);
+                    Ok(None)
+                }
+            }
+        }
+        Some(FaultKind::Nan) => {
+            let mut m = transport.decode(reference, enc)?;
+            fault::poison_nan(&mut m);
+            fault::record(FaultKind::Nan);
+            Ok(Some(m))
+        }
+        _ => Ok(Some(transport.decode(reference, enc)?)),
+    }
 }
 
 /// Full test-set evaluation: predict per sub-model, decode, top-k.

@@ -33,6 +33,14 @@
 //! but never uploads and never trains — the dispatch slot is simply
 //! refilled.
 //!
+//! Fault injection (`--inject`, see [`super::fault`]) rides the same
+//! discipline: transient upload failures retry with exponential backoff
+//! on the simulated clock (bounded attempts) before the dispatch is
+//! declared lost, and per-(dispatch, sub-model) payload fates corrupt,
+//! truncate or NaN-poison arriving updates exactly as the synchronous
+//! loop does. Every fate is a pure function of the seed, so an injected
+//! run stays bitwise reproducible.
+//!
 //! All timing columns in the resulting [`History`] carry *simulated*
 //! seconds (`train_seconds` = simulated compute, `encode_seconds` =
 //! simulated transfer, `sim_seconds` = the event clock at aggregation),
@@ -45,7 +53,7 @@ use std::collections::BinaryHeap;
 use anyhow::{bail, Result};
 
 use crate::algo::LabelScheme;
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, RobustAgg};
 use crate::data::dataset::{batch_ranges, Dataset};
 use crate::data::stats::LabelStats;
 use crate::model::params::ModelParams;
@@ -56,10 +64,12 @@ use super::backend::TrainBackend;
 use super::comm::CommMeter;
 use super::early_stop::EarlyStopper;
 use super::engine::{ClientUpdate, RoundEngine};
+use super::fault::{self, FaultKind};
 use super::history::{History, RoundRecord, RoundTiming};
 use super::sampler::ClientSampler;
 use super::server::{evaluate, RunOutput};
 use super::transport::Transport;
+use super::wire::EncodedUpdate;
 
 /// Seed-stream tag for client profiles (xor'd with the client id).
 const PROFILE_TAG: u64 = 0x51c0_b0de_0000_0000;
@@ -268,6 +278,10 @@ pub struct SimStats {
     pub arrived: u64,
     /// Dispatches lost to mid-round dropout (download only).
     pub dropped: u64,
+    /// Dispatches whose upload never completed after every retry
+    /// (`--inject fail:<p>`): the client trained and was charged its
+    /// download, but nothing arrived.
+    pub failed: u64,
     /// Buffered aggregations applied (= final server version).
     pub aggregations: u64,
     /// Simulated wall-clock at the end of the run.
@@ -295,6 +309,9 @@ enum EventKind {
     },
     /// A dispatched client dies mid-round; nothing arrives.
     Dropout,
+    /// A client exhausted its upload retries (`--inject fail:<p>`); it
+    /// trained, but nothing arrives.
+    Failed,
 }
 
 struct Event {
@@ -444,11 +461,43 @@ impl<'a> AsyncLoop<'a> {
         let up_bytes: u64 = updates.iter().map(|u| u.encoded.byte_len() as u64).sum();
         let t_up = up_bytes as f64 / profile.up_bytes_per_second;
 
+        // Injected transient upload failures (`--inject fail:<p>`): the
+        // client retries with exponential backoff on the simulated
+        // clock, each retry re-paying the upload in *time*; bytes are
+        // only charged for an attempt that lands. Zero RNG draws at
+        // rate 0, so clean runs are untouched.
+        let (retries, lost) = fault::retry_plan(&self.cfg.inject, self.cfg.seed, seq);
+        let mut retry_seconds = 0.0;
+        for attempt in 1..=retries {
+            retry_seconds += fault::backoff_seconds(attempt) + t_up;
+        }
+        let arrival = self.now + t_down + t_compute + t_up + retry_seconds;
+        if lost {
+            fault::record(FaultKind::Fail);
+            if crate::obs::trace::enabled() {
+                crate::obs::trace::sim_span(
+                    "client failed",
+                    self.trace_lane(seq),
+                    self.now,
+                    arrival,
+                    vec![(
+                        "client".to_string(),
+                        crate::util::json::Json::num(client as f64),
+                    )],
+                );
+            }
+            self.queue.push(Reverse(Event {
+                time: arrival,
+                seq,
+                kind: EventKind::Failed,
+            }));
+            return Ok(());
+        }
+
         // Simulated-clock lifecycle spans: the trace shows what the
         // *virtual* timeline looked like (stragglers stretch the train
         // span, slow links stretch the transfers), not the wall time the
         // simulator spent computing it.
-        let arrival = self.now + t_down + t_compute + t_up;
         if crate::obs::trace::enabled() {
             let lane = self.trace_lane(seq);
             let args = vec![(
@@ -475,7 +524,7 @@ impl<'a> AsyncLoop<'a> {
                 bases,
                 updates,
                 compute_seconds: t_compute,
-                transfer_seconds: t_down + t_up,
+                transfer_seconds: t_down + t_up + retry_seconds,
             },
         }));
         Ok(())
@@ -484,8 +533,12 @@ impl<'a> AsyncLoop<'a> {
     /// An update landed: charge the upload, decode each sub-model
     /// against the base the client trained from, difference into a
     /// delta, and push the staleness-weighted result into the buffer.
+    /// Injected payload faults (`--inject`) strike here: an undecodable
+    /// sub-model contributes a zero delta (bytes already charged), a
+    /// NaN-poisoned one is left for `--robust-agg` to screen.
     fn on_arrival(
         &mut self,
+        seq: u64,
         base_version: u64,
         bases: Vec<ModelParams>,
         updates: Vec<ClientUpdate>,
@@ -499,24 +552,143 @@ impl<'a> AsyncLoop<'a> {
         self.window_train_seconds += compute_seconds;
         self.window_transfer_seconds += transfer_seconds;
 
+        let inject_payloads = self.cfg.inject.corrupt > 0.0
+            || self.cfg.inject.truncate > 0.0
+            || self.cfg.inject.nan > 0.0;
         let mut deltas = Vec::with_capacity(self.n_models);
         for (j, upd) in updates.iter().enumerate() {
             self.comm
                 .upload_encoded(upd.encoded.byte_len(), self.model_bytes_each);
-            let mut decoded = self.transport.decode(&bases[j], &upd.encoded)?;
-            decoded.accumulate(&bases[j], -1.0)?;
-            deltas.push(decoded);
+            let delta = if inject_payloads {
+                // Per-(dispatch, sub-model) fate stream — `seq` plays
+                // the role the sync loop's (round, client) pair plays.
+                let stream = seq
+                    .wrapping_mul(self.n_models as u64)
+                    .wrapping_add(j as u64);
+                self.inject_delta(&bases[j], &upd.encoded, stream)?
+            } else {
+                Some(self.decode_delta(&bases[j], &upd.encoded)?)
+            };
+            deltas.push(match delta {
+                Some(d) => d,
+                None => ModelParams::zeros(bases[j].d, bases[j].hidden, bases[j].out),
+            });
             if upd.stats.steps > 0 {
                 self.window_loss_sum += upd.stats.mean_loss;
                 self.window_loss_n += 1;
             }
         }
+        screen_deltas(&mut deltas, self.cfg.robust);
         self.buffer.push(WeightedUpdate {
             weight: staleness_weight(staleness, self.cfg.sim.staleness_exp),
             staleness,
             deltas,
         });
         Ok(())
+    }
+
+    /// Decode one sub-model update and difference it into a delta.
+    fn decode_delta(&self, base: &ModelParams, enc: &EncodedUpdate) -> Result<ModelParams> {
+        let mut decoded = self.transport.decode(base, enc)?;
+        decoded.accumulate(base, -1.0)?;
+        Ok(decoded)
+    }
+
+    /// Async counterpart of the sync loop's fate application: draw the
+    /// payload fate for one `(dispatch, sub-model)` item; corrupt and
+    /// truncate mutate the *framed* wire bytes so the checksummed
+    /// decode rejects them (`Ok(None)` — the contribution is
+    /// discarded), NaN poisons the decoded update, a clean fate decodes
+    /// normally.
+    fn inject_delta(
+        &self,
+        base: &ModelParams,
+        enc: &EncodedUpdate,
+        stream: u64,
+    ) -> Result<Option<ModelParams>> {
+        let (fate, mut rng) = fault::payload_fate(&self.cfg.inject, self.cfg.seed, stream);
+        match fate {
+            Some(kind @ (FaultKind::Corrupt | FaultKind::Truncate)) => {
+                let mut bytes = enc.to_framed_bytes();
+                match kind {
+                    FaultKind::Corrupt => fault::corrupt_bytes(&mut bytes, &mut rng),
+                    _ => fault::truncate_bytes(&mut bytes, &mut rng),
+                }
+                let spec = self.transport.uplink().spec();
+                let parsed = EncodedUpdate::from_framed_bytes(
+                    spec,
+                    base.tensors.len(),
+                    base.num_params(),
+                    &bytes,
+                );
+                match parsed {
+                    Ok(ok) => Ok(Some(self.decode_delta(base, &ok)?)),
+                    Err(_) => {
+                        fault::record(kind);
+                        Ok(None)
+                    }
+                }
+            }
+            Some(FaultKind::Nan) => {
+                let mut decoded = self.transport.decode(base, enc)?;
+                fault::poison_nan(&mut decoded);
+                fault::record(FaultKind::Nan);
+                decoded.accumulate(base, -1.0)?;
+                Ok(Some(decoded))
+            }
+            _ => Ok(Some(self.decode_delta(base, enc)?)),
+        }
+    }
+}
+
+/// Defensive screening for the async path (`--robust-agg`): zero out
+/// non-finite deltas (counted in `fedmlh_robust_screened_total`) and,
+/// under norm-clip, bound each surviving delta's L2 norm at `c`. The
+/// coordinate-wise trimmed mean needs a full round of aligned updates,
+/// which buffered asynchronous aggregation never holds — `trimmed`
+/// degrades to screening here.
+pub fn screen_deltas(deltas: &mut [ModelParams], robust: RobustAgg) {
+    if matches!(robust, RobustAgg::None) {
+        return;
+    }
+    let mut screened = 0u64;
+    for delta in deltas.iter_mut() {
+        let finite = delta
+            .tensors
+            .iter()
+            .all(|t| t.data().iter().all(|v| v.is_finite()));
+        if !finite {
+            for t in delta.tensors.iter_mut() {
+                t.fill(0.0);
+            }
+            screened += 1;
+            continue;
+        }
+        if let RobustAgg::NormClip { c } = robust {
+            let norm = delta
+                .tensors
+                .iter()
+                .flat_map(|t| t.data())
+                .map(|&v| f64::from(v) * f64::from(v))
+                .sum::<f64>()
+                .sqrt();
+            if norm > c {
+                let scale = (c / norm) as f32;
+                for t in delta.tensors.iter_mut() {
+                    for v in t.data_mut() {
+                        *v *= scale;
+                    }
+                }
+            }
+        }
+    }
+    if screened > 0 {
+        crate::obs::metrics::global()
+            .counter(
+                "fedmlh_robust_screened_total",
+                "Non-finite client updates screened out by --robust-agg.",
+            )
+            .add(screened);
     }
 }
 
@@ -643,17 +815,24 @@ pub fn run_async(
             );
         };
         state.now = ev.time;
+        let seq = ev.seq;
         match ev.kind {
             EventKind::Dropout => state.stats.dropped += 1,
+            EventKind::Failed => state.stats.failed += 1,
             EventKind::Arrival {
                 base_version,
                 bases,
                 updates,
                 compute_seconds,
                 transfer_seconds,
-            } => {
-                state.on_arrival(base_version, bases, updates, compute_seconds, transfer_seconds)?
-            }
+            } => state.on_arrival(
+                seq,
+                base_version,
+                bases,
+                updates,
+                compute_seconds,
+                transfer_seconds,
+            )?,
         }
 
         // Buffer full → staleness-weighted aggregation = one "round".
@@ -758,6 +937,11 @@ pub fn run_async(
         "Dispatches lost to mid-round dropout.",
     )
     .add(state.stats.dropped);
+    obs.counter(
+        "fedmlh_sim_failed_total",
+        "Dispatches lost to injected upload failure after every retry.",
+    )
+    .add(state.stats.failed);
 
     let best_rec = *history
         .best()
@@ -887,6 +1071,34 @@ mod tests {
         }
         // Degenerate cases bail instead of corrupting the globals.
         assert!(apply_buffered(&mut globals, &[]).is_err());
+    }
+
+    #[test]
+    fn screen_deltas_zeroes_nan_and_clips_norms() {
+        let mut nan_d = ModelParams::zeros(2, 3, 4);
+        nan_d.tensors[0].fill(f32::NAN);
+        let mut big = ModelParams::zeros(2, 3, 4);
+        for t in big.tensors.iter_mut() {
+            t.fill(3.0);
+        }
+        let mut deltas = vec![nan_d, big];
+        screen_deltas(&mut deltas, RobustAgg::NormClip { c: 1.0 });
+        assert!(
+            deltas[0].flat_values().iter().all(|&v| v == 0.0),
+            "NaN delta screened to zero"
+        );
+        let norm = deltas[1]
+            .flat_values()
+            .iter()
+            .map(|&v| f64::from(v) * f64::from(v))
+            .sum::<f64>()
+            .sqrt();
+        assert!((norm - 1.0).abs() < 1e-3, "clipped norm {norm}");
+        // `none` is the seed behaviour: NaN propagates untouched.
+        let mut untouched = vec![ModelParams::zeros(2, 3, 4)];
+        untouched[0].tensors[0].fill(f32::NAN);
+        screen_deltas(&mut untouched, RobustAgg::None);
+        assert!(untouched[0].tensors[0].data().iter().all(|v| v.is_nan()));
     }
 
     #[test]

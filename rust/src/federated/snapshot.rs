@@ -1,0 +1,547 @@
+//! Crash-resume snapshots (`--snapshot-every N --resume <dir>`).
+//!
+//! The synchronous round loop is a pure function of `(config, round)`
+//! plus a small amount of cross-round state: the global sub-models, the
+//! transport's residuals/replica bases, the history, the comm meters,
+//! and the early stopper. Everything else — client sampling, data
+//! shards, fault fates — is re-derived from the seed on demand, so
+//! persisting exactly that state lets a killed run continue *bitwise
+//! identically* to an uninterrupted one.
+//!
+//! The on-disk `state.fmls` format follows the serve checkpoints'
+//! discipline: little-endian fields behind a magic + version header,
+//! every variable-length region length-prefixed and bounds-checked
+//! before allocation (a corrupt length can't OOM the loader), and a
+//! trailing FNV-1a checksum over the whole body. A config fingerprint
+//! (everything that shapes the trajectory *except* `--rounds`, so a
+//! snapshot taken at round 3 of 10 can also seed a `--rounds 20` run)
+//! refuses resumes under a different experiment. Writes go to a temp
+//! file in the same directory and are renamed into place, so a crash
+//! *during* snapshotting leaves the previous snapshot intact.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::comm::CommMeter;
+use super::history::{History, RoundRecord, RoundTiming};
+use super::wire::fnv1a64;
+use crate::config::ExperimentConfig;
+use crate::eval::metrics::AccuracyReport;
+use crate::model::params::ModelParams;
+
+/// Snapshot file name inside the `--resume` directory.
+pub const SNAPSHOT_FILE: &str = "state.fmls";
+
+const MAGIC: [u8; 4] = *b"FMLS";
+const VERSION: u32 = 1;
+
+// ---------------------------------------------------- byte cursors
+
+/// Little-endian byte sink for snapshot serialization; also used by the
+/// transport compressors to serialize their private cross-round state.
+#[derive(Default)]
+pub(crate) struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Raw f32 bit patterns, no length prefix (callers record counts).
+    pub fn f32s(&mut self, vals: &[f32]) {
+        self.buf.reserve(vals.len() * 4);
+        for v in vals {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed byte blob.
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian cursor: every read answers `Err` past
+/// the end, and counted reads are validated against the bytes actually
+/// remaining *before* any allocation.
+pub(crate) struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!(
+                "truncated: wanted {n} bytes at offset {}, only {} remain",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// `count` as a usize, validated so that `count * unit_bytes` more
+    /// bytes actually remain — the guard that keeps a corrupt declared
+    /// length from turning into an OOM-sized allocation.
+    pub fn counted(&mut self, unit_bytes: usize) -> Result<usize> {
+        let n = self.u64()?;
+        let need = (n as usize)
+            .checked_mul(unit_bytes)
+            .filter(|&need| need <= self.remaining());
+        match need {
+            Some(_) => Ok(n as usize),
+            None => bail!(
+                "declared {n} × {unit_bytes}-byte entries at offset {} but only {} bytes remain",
+                self.pos,
+                self.remaining()
+            ),
+        }
+    }
+
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Length-prefixed byte blob (inverse of [`ByteWriter::bytes`]).
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.counted(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes after the last field", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------- fingerprint
+
+/// Hash of everything that shapes the training trajectory — resuming
+/// under a different value of any of these would silently splice two
+/// unrelated runs. `--rounds` is deliberately excluded (extending a run
+/// is the legitimate use of resume), and so are observational knobs
+/// (`--workers`, `--trace-out`, output paths).
+pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
+    let canon = format!(
+        "preset={};clients={};cpr={};epochs={};patience={};lr={:08x};seed={};eval={};r={};b={};\
+         codec={};down={};resync={};ef={};inject={};robust={}",
+        cfg.preset.name,
+        cfg.clients,
+        cfg.clients_per_round,
+        cfg.local_epochs,
+        cfg.patience,
+        cfg.lr.to_bits(),
+        cfg.seed,
+        cfg.eval_every,
+        cfg.override_r,
+        cfg.override_b,
+        cfg.codec.name(),
+        cfg.down_codec.name(),
+        cfg.resync_every,
+        cfg.error_feedback,
+        cfg.inject,
+        cfg.robust.name(),
+    );
+    fnv1a64(canon.as_bytes())
+}
+
+// ---------------------------------------------------------- snapshot
+
+/// Everything the synchronous round loop needs to continue a run
+/// bitwise from `next_round`.
+pub struct RunSnapshot {
+    /// The round the resumed loop starts at (the snapshot was taken
+    /// after round `next_round - 1` completed).
+    pub next_round: usize,
+    pub globals: Vec<ModelParams>,
+    pub history: History,
+    pub comm: CommMeter,
+    /// Early-stopper state: `(best, best_round, since_best, observed)`.
+    pub stopper: (f64, usize, usize, usize),
+    /// Opaque uplink compressor state
+    /// ([`super::transport::UplinkCompressor::snapshot_state`]).
+    pub uplink_state: Vec<u8>,
+    /// Opaque downlink compressor state
+    /// ([`super::transport::DownlinkCompressor::snapshot_state`]).
+    pub downlink_state: Vec<u8>,
+}
+
+impl RunSnapshot {
+    fn to_bytes(&self, fingerprint: u64) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.buf.extend_from_slice(&MAGIC);
+        w.u32(VERSION);
+        w.u64(fingerprint);
+        w.u64(self.next_round as u64);
+        w.u32(self.globals.len() as u32);
+        for g in &self.globals {
+            w.u32(g.d as u32);
+            w.u32(g.hidden as u32);
+            w.u32(g.out as u32);
+            w.u64(g.num_params() as u64);
+            w.f32s(&g.flat_values());
+        }
+        w.u64(self.history.records.len() as u64);
+        for r in &self.history.records {
+            w.u64(r.round as u64);
+            let a = &r.accuracy;
+            for v in [
+                a.top1, a.top3, a.top5, a.freq1, a.freq3, a.freq5, a.infreq1, a.infreq3, a.infreq5,
+            ] {
+                w.f64(v);
+            }
+            w.u64(a.samples as u64);
+            w.u64(r.comm_bytes);
+            w.u64(r.down_bytes);
+            w.u64(r.up_bytes);
+            w.f64(r.round_seconds);
+            w.f64(r.mean_loss);
+            w.f64(r.timing.train_seconds);
+            w.f64(r.timing.encode_seconds);
+            w.f64(r.timing.aggregate_seconds);
+            w.f64(r.sim_seconds);
+        }
+        let (down, up, dense_up, dense_down, per_round) = self.comm.snapshot_parts();
+        w.u64(down);
+        w.u64(up);
+        w.u64(dense_up);
+        w.u64(dense_down);
+        w.u64(per_round.len() as u64);
+        for &t in per_round {
+            w.u64(t);
+        }
+        let (best, best_round, since_best, observed) = self.stopper;
+        w.f64(best);
+        w.u64(best_round as u64);
+        w.u64(since_best as u64);
+        w.u64(observed as u64);
+        w.bytes(&self.uplink_state);
+        w.bytes(&self.downlink_state);
+        let mut bytes = w.into_bytes();
+        let digest = fnv1a64(&bytes);
+        bytes.extend_from_slice(&digest.to_le_bytes());
+        bytes
+    }
+
+    fn from_bytes(bytes: &[u8], expected_fingerprint: u64) -> Result<RunSnapshot> {
+        if bytes.len() < MAGIC.len() + 4 + 8 + 8 {
+            bail!("{} bytes is too short to be a snapshot", bytes.len());
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let declared = u64::from_le_bytes(tail.try_into().unwrap());
+        let actual = fnv1a64(body);
+        if declared != actual {
+            bail!("checksum mismatch: file says {declared:#018x}, body hashes to {actual:#018x}");
+        }
+        let mut r = ByteReader::new(body);
+        if r.take(4)? != MAGIC {
+            bail!("bad magic (not a FMLS snapshot)");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("snapshot format v{version}, this build reads v{VERSION}");
+        }
+        let fingerprint = r.u64()?;
+        if fingerprint != expected_fingerprint {
+            bail!(
+                "snapshot was taken under a different experiment config \
+                 (fingerprint {fingerprint:#018x}, current {expected_fingerprint:#018x}) — \
+                 refusing to resume; point --resume at a fresh directory"
+            );
+        }
+        let next_round = r.u64()? as usize;
+        let n_models = r.u32()? as usize;
+        let mut globals = Vec::with_capacity(n_models.min(1024));
+        for _ in 0..n_models {
+            globals.push(read_params(&mut r)?);
+        }
+        let n_records = r.counted(20 * 8)?;
+        let mut history = History::new();
+        for _ in 0..n_records {
+            let round = r.u64()? as usize;
+            let mut acc = [0.0f64; 9];
+            for v in acc.iter_mut() {
+                *v = r.f64()?;
+            }
+            let samples = r.u64()? as usize;
+            let (comm_bytes, down_bytes, up_bytes) = (r.u64()?, r.u64()?, r.u64()?);
+            let (round_seconds, mean_loss) = (r.f64()?, r.f64()?);
+            let (train, enc, agg) = (r.f64()?, r.f64()?, r.f64()?);
+            let sim_seconds = r.f64()?;
+            history.push(RoundRecord {
+                round,
+                accuracy: AccuracyReport {
+                    top1: acc[0],
+                    top3: acc[1],
+                    top5: acc[2],
+                    freq1: acc[3],
+                    freq3: acc[4],
+                    freq5: acc[5],
+                    infreq1: acc[6],
+                    infreq3: acc[7],
+                    infreq5: acc[8],
+                    samples,
+                },
+                comm_bytes,
+                down_bytes,
+                up_bytes,
+                round_seconds,
+                mean_loss,
+                timing: RoundTiming {
+                    train_seconds: train,
+                    encode_seconds: enc,
+                    aggregate_seconds: agg,
+                },
+                sim_seconds,
+            });
+        }
+        let (down, up, dense_up, dense_down) = (r.u64()?, r.u64()?, r.u64()?, r.u64()?);
+        let n_totals = r.counted(8)?;
+        let mut per_round = Vec::with_capacity(n_totals);
+        for _ in 0..n_totals {
+            per_round.push(r.u64()?);
+        }
+        let comm = CommMeter::from_parts(down, up, dense_up, dense_down, per_round);
+        let stopper = (
+            r.f64()?,
+            r.u64()? as usize,
+            r.u64()? as usize,
+            r.u64()? as usize,
+        );
+        let uplink_state = r.bytes()?;
+        let downlink_state = r.bytes()?;
+        r.finish()?;
+        Ok(RunSnapshot {
+            next_round,
+            globals,
+            history,
+            comm,
+            stopper,
+            uplink_state,
+            downlink_state,
+        })
+    }
+
+    /// Atomically write the snapshot into `dir` (created if absent):
+    /// serialize to `state.fmls.tmp`, then rename over [`SNAPSHOT_FILE`].
+    pub fn save(&self, dir: &Path, fingerprint: u64) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating snapshot directory {}", dir.display()))?;
+        let path = dir.join(SNAPSHOT_FILE);
+        let tmp = dir.join(format!("{SNAPSHOT_FILE}.tmp"));
+        std::fs::write(&tmp, self.to_bytes(fingerprint))
+            .with_context(|| format!("writing snapshot {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing snapshot {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load the snapshot in `dir` if one exists. `Ok(None)` when the
+    /// directory holds no snapshot yet (a fresh run); `Err` when one
+    /// exists but is corrupt or was taken under a different config.
+    pub fn load(dir: &Path, expected_fingerprint: u64) -> Result<Option<RunSnapshot>> {
+        let path = dir.join(SNAPSHOT_FILE);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading snapshot {}", path.display()))
+            }
+        };
+        Self::from_bytes(&bytes, expected_fingerprint)
+            .with_context(|| format!("loading snapshot {}", path.display()))
+            .map(Some)
+    }
+}
+
+fn read_params(r: &mut ByteReader<'_>) -> Result<ModelParams> {
+    let d = r.u32()? as usize;
+    let hidden = r.u32()? as usize;
+    let out = r.u32()? as usize;
+    let n = r.counted(4)?;
+    let mut p = ModelParams::zeros(d, hidden, out);
+    if n != p.num_params() {
+        bail!(
+            "sub-model ({d},{hidden},{out}) declares {n} values, shape needs {}",
+            p.num_params()
+        );
+    }
+    p.set_from_flat(&r.f32s(n)?)?;
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, InjectConfig};
+    use crate::federated::early_stop::EarlyStopper;
+
+    fn tiny_config() -> ExperimentConfig {
+        ExperimentConfig::new(presets::by_name("tiny").expect("tiny preset"))
+    }
+
+    fn sample_snapshot() -> RunSnapshot {
+        let mut comm = CommMeter::new();
+        comm.download_encoded(30, 120);
+        comm.upload_encoded(10, 120);
+        comm.end_round();
+        let mut stopper = EarlyStopper::new(5);
+        stopper.observe(0, 0.25);
+        let mut history = History::new();
+        history.push(RoundRecord {
+            round: 0,
+            accuracy: AccuracyReport {
+                top1: 0.25,
+                top3: 0.35,
+                top5: 0.45,
+                samples: 64,
+                ..Default::default()
+            },
+            comm_bytes: 40,
+            down_bytes: 30,
+            up_bytes: 10,
+            round_seconds: 1.25,
+            mean_loss: 0.9,
+            timing: RoundTiming {
+                train_seconds: 0.7,
+                encode_seconds: 0.2,
+                aggregate_seconds: 0.35,
+            },
+            sim_seconds: 0.0,
+        });
+        RunSnapshot {
+            next_round: 1,
+            globals: vec![ModelParams::init(6, 4, 9, 3), ModelParams::init(6, 4, 9, 4)],
+            history,
+            comm,
+            stopper: stopper.snapshot_parts(),
+            uplink_state: vec![1, 2, 3, 4],
+            downlink_state: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bitwise() {
+        let snap = sample_snapshot();
+        let bytes = snap.to_bytes(0xabcd);
+        let back = RunSnapshot::from_bytes(&bytes, 0xabcd).unwrap();
+        assert_eq!(back.next_round, 1);
+        assert_eq!(back.globals, snap.globals);
+        assert_eq!(back.history, snap.history);
+        assert_eq!(back.comm, snap.comm);
+        assert_eq!(back.stopper, snap.stopper);
+        assert_eq!(back.uplink_state, snap.uplink_state);
+        assert_eq!(back.downlink_state, snap.downlink_state);
+        // Re-serializing the loaded snapshot is byte-identical — the
+        // property the kill-and-resume CI step leans on.
+        assert_eq!(back.to_bytes(0xabcd), bytes);
+    }
+
+    #[test]
+    fn rejects_corruption_truncation_and_wrong_fingerprint() {
+        let snap = sample_snapshot();
+        let bytes = snap.to_bytes(7);
+        // Any single-byte flip fails the trailing checksum (or, in the
+        // last 8 bytes, the declared digest itself).
+        for i in [0, 4, 12, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x01;
+            assert!(RunSnapshot::from_bytes(&bad, 7).is_err(), "flip at {i}");
+        }
+        for cut in [0, 3, 16, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                RunSnapshot::from_bytes(&bytes[..cut], 7).is_err(),
+                "truncation at {cut}"
+            );
+        }
+        let err = RunSnapshot::from_bytes(&bytes, 8).unwrap_err().to_string();
+        assert!(err.contains("different experiment config"), "{err}");
+    }
+
+    #[test]
+    fn save_load_names_the_file_and_is_atomic() {
+        let dir = std::env::temp_dir().join(format!("fedmlh-snap-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(RunSnapshot::load(&dir, 1).unwrap().is_none(), "no file yet");
+        let snap = sample_snapshot();
+        let path = snap.save(&dir, 1).unwrap();
+        assert!(path.ends_with(SNAPSHOT_FILE));
+        assert!(!dir.join(format!("{SNAPSHOT_FILE}.tmp")).exists());
+        let back = RunSnapshot::load(&dir, 1).unwrap().expect("snapshot");
+        assert_eq!(back.globals, snap.globals);
+        // A corrupt file's error names the offending path.
+        let mut raw = std::fs::read(&path).unwrap();
+        raw[10] ^= 0xff;
+        std::fs::write(&path, &raw).unwrap();
+        let err = RunSnapshot::load(&dir, 1).unwrap_err().to_string();
+        assert!(err.contains(SNAPSHOT_FILE), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_tracks_trajectory_knobs_only() {
+        let a = tiny_config();
+        let mut b = a.clone();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        // Trajectory-shaping knobs move the fingerprint…
+        b.seed += 1;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+        b = a.clone();
+        b.inject = InjectConfig::parse("corrupt:0.05").unwrap();
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+        // …while --rounds and --workers deliberately don't.
+        b = a.clone();
+        b.rounds += 10;
+        b.workers = 8;
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+    }
+}

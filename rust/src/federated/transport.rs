@@ -78,6 +78,7 @@ use anyhow::{bail, Result};
 use crate::config::ExperimentConfig;
 use crate::model::params::ModelParams;
 
+use super::snapshot::{ByteReader, ByteWriter};
 use super::wire::{
     apply_delta, decode_update, encode_delta, encode_update, CodecSpec, EncodedUpdate,
 };
@@ -371,6 +372,22 @@ pub trait UplinkCompressor: Send + Sync {
         global: &ModelParams,
         local: &ModelParams,
     ) -> Result<EncodedUpdate>;
+
+    /// Serialize cross-round state for a crash-resume snapshot
+    /// ([`super::snapshot`]); stateless links answer an empty blob.
+    fn snapshot_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state captured by [`UplinkCompressor::snapshot_state`].
+    /// The default (stateless) accepts only the empty blob.
+    fn restore_state(&self, bytes: &[u8]) -> Result<()> {
+        if bytes.is_empty() {
+            Ok(())
+        } else {
+            bail!("this uplink carries no cross-round state to restore")
+        }
+    }
 }
 
 /// The PR 1 behavior: encode each round independently, remember
@@ -484,6 +501,49 @@ impl UplinkCompressor for FeedbackUplink {
         let (enc, _) = fold_encode(self.spec, global, local.flat_values(), &mut residual)?;
         Ok(enc)
     }
+
+    fn snapshot_state(&self) -> Vec<u8> {
+        let map = self.slots.lock().expect("uplink slot map lock poisoned");
+        // Canonical key order: snapshot bytes must not depend on
+        // HashMap iteration order.
+        let mut keys: Vec<(usize, usize)> = map.keys().copied().collect();
+        keys.sort_unstable();
+        let mut w = ByteWriter::new();
+        w.u64(keys.len() as u64);
+        for key in keys {
+            let residual = map[&key].lock().expect("uplink residual lock poisoned");
+            w.u64(key.0 as u64);
+            w.u64(key.1 as u64);
+            w.u64(residual.len() as u64);
+            w.f32s(&residual);
+        }
+        w.into_bytes()
+    }
+
+    fn restore_state(&self, bytes: &[u8]) -> Result<()> {
+        let mut map = self.slots.lock().expect("uplink slot map lock poisoned");
+        map.clear();
+        if bytes.is_empty() {
+            return Ok(());
+        }
+        let mut r = ByteReader::new(bytes);
+        let n = r.counted(3 * 8)?;
+        for _ in 0..n {
+            let client = r.u64()? as usize;
+            let j = r.u64()? as usize;
+            if client >= self.clients || j >= self.n_models {
+                bail!(
+                    "uplink snapshot has a slot for client {client}, sub-model {j} \
+                     outside this run's ({}, {}) bounds",
+                    self.clients,
+                    self.n_models
+                );
+            }
+            let len = r.counted(4)?;
+            map.insert((client, j), Arc::new(Mutex::new(r.f32s(len)?)));
+        }
+        r.finish()
+    }
 }
 
 // ----------------------------------------------------------- downlink
@@ -580,6 +640,22 @@ pub trait DownlinkCompressor: Send {
         selected: &[usize],
         globals: &[ModelParams],
     ) -> Result<RoundBroadcast>;
+
+    /// Serialize cross-round state for a crash-resume snapshot
+    /// ([`super::snapshot`]); stateless links answer an empty blob.
+    fn snapshot_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state captured by [`DownlinkCompressor::snapshot_state`].
+    /// The default (stateless) accepts only the empty blob.
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.is_empty() {
+            Ok(())
+        } else {
+            bail!("this downlink carries no cross-round state to restore")
+        }
+    }
 }
 
 fn broadcast_model(
@@ -723,6 +799,38 @@ impl DownlinkCompressor for FoldingDownlink {
             decoded.push(d);
         }
         Ok(RoundBroadcast::shared(payloads, decoded))
+    }
+
+    fn snapshot_state(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u64(self.residuals.len() as u64);
+        for res in &self.residuals {
+            w.u64(res.len() as u64);
+            w.f32s(res);
+        }
+        w.into_bytes()
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.is_empty() {
+            for slot in self.residuals.iter_mut() {
+                slot.clear();
+            }
+            return Ok(());
+        }
+        let mut r = ByteReader::new(bytes);
+        let n = r.counted(8)?;
+        if n != self.residuals.len() {
+            bail!(
+                "downlink snapshot has {n} residual slots, this run has {}",
+                self.residuals.len()
+            );
+        }
+        for slot in self.residuals.iter_mut() {
+            let len = r.counted(4)?;
+            *slot = r.f32s(len)?;
+        }
+        r.finish()
     }
 }
 
@@ -900,6 +1008,63 @@ impl DownlinkCompressor for DeltaDownlink {
         }
         Ok(RoundBroadcast::per_client(payloads, decoded))
     }
+
+    fn snapshot_state(&self) -> Vec<u8> {
+        // Canonical key order: snapshot bytes must not depend on
+        // HashMap iteration order.
+        let mut keys: Vec<(usize, usize)> = self.replicas.keys().copied().collect();
+        keys.sort_unstable();
+        let mut w = ByteWriter::new();
+        w.u64(keys.len() as u64);
+        for key in keys {
+            let rep = &self.replicas[&key];
+            w.u64(key.0 as u64);
+            w.u64(key.1 as u64);
+            w.u64(rep.version);
+            w.u32(rep.model.d as u32);
+            w.u32(rep.model.hidden as u32);
+            w.u32(rep.model.out as u32);
+            w.u64(rep.model.num_params() as u64);
+            w.f32s(&rep.model.flat_values());
+        }
+        w.into_bytes()
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<()> {
+        self.replicas.clear();
+        if bytes.is_empty() {
+            return Ok(());
+        }
+        let mut r = ByteReader::new(bytes);
+        let n = r.counted(3 * 8 + 3 * 4 + 8)?;
+        for _ in 0..n {
+            let client = r.u64()? as usize;
+            let j = r.u64()? as usize;
+            if client >= self.clients || j >= self.n_models {
+                bail!(
+                    "downlink snapshot has a replica for client {client}, sub-model {j} \
+                     outside this run's ({}, {}) bounds",
+                    self.clients,
+                    self.n_models
+                );
+            }
+            let version = r.u64()?;
+            let d = r.u32()? as usize;
+            let hidden = r.u32()? as usize;
+            let out = r.u32()? as usize;
+            let len = r.counted(4)?;
+            let mut model = ModelParams::zeros(d, hidden, out);
+            if len != model.num_params() {
+                bail!(
+                    "replica ({d},{hidden},{out}) declares {len} values, shape needs {}",
+                    model.num_params()
+                );
+            }
+            model.set_from_flat(&r.f32s(len)?)?;
+            self.replicas.insert((client, j), Replica { model, version });
+        }
+        r.finish()
+    }
 }
 
 // ------------------------------------------------------------- facade
@@ -978,6 +1143,21 @@ impl Transport {
     /// `true` when either link carries state across rounds.
     pub fn stateful(&self) -> bool {
         self.uplink.stateful() || self.downlink.stateful()
+    }
+
+    /// Both links' cross-round state for a crash-resume snapshot:
+    /// `(uplink, downlink)` opaque blobs, each restorable only by the
+    /// same pipeline configuration (enforced upstream by the snapshot's
+    /// config fingerprint).
+    pub fn snapshot_state(&self) -> (Vec<u8>, Vec<u8>) {
+        (self.uplink.snapshot_state(), self.downlink.snapshot_state())
+    }
+
+    /// Restore both links from a snapshot's blobs (inverse of
+    /// [`Transport::snapshot_state`]).
+    pub fn restore_state(&mut self, uplink: &[u8], downlink: &[u8]) -> Result<()> {
+        self.uplink.restore_state(uplink)?;
+        self.downlink.restore_state(downlink)
     }
 }
 
@@ -1143,6 +1323,81 @@ mod tests {
         let (global, local) = random_pair(7);
         let up = FeedbackUplink::new(CodecSpec::QuantI8, 2, 2);
         assert!(up.compress(2, 0, &global, &local).is_err());
+    }
+
+    #[test]
+    fn uplink_state_snapshots_bitwise() {
+        let (global, la) = random_pair(31);
+        let (_, lb) = random_pair(32);
+        let spec = CodecSpec::TopK { frac: 0.1 };
+        let up = FeedbackUplink::new(spec, 3, 2);
+        up.compress(0, 0, &global, &la).unwrap();
+        up.compress(2, 1, &global, &lb).unwrap();
+        let state = up.snapshot_state();
+
+        // Restore into a fresh uplink: the next compress of each slot
+        // must be bitwise identical to continuing the original.
+        let restored = FeedbackUplink::new(spec, 3, 2);
+        restored.restore_state(&state).unwrap();
+        assert_eq!(restored.residual(0, 0), up.residual(0, 0));
+        assert_eq!(restored.residual(2, 1), up.residual(2, 1));
+        assert_eq!(
+            restored.compress(0, 0, &global, &la).unwrap(),
+            up.compress(0, 0, &global, &la).unwrap()
+        );
+        // Snapshot bytes are canonical (key-sorted), so re-snapshotting
+        // an untouched restore reproduces them exactly.
+        let again = FeedbackUplink::new(spec, 3, 2);
+        again.restore_state(&state).unwrap();
+        assert_eq!(again.snapshot_state(), state);
+
+        // Corrupt state is rejected, out-of-bounds slots are rejected.
+        assert!(restored.restore_state(&state[..state.len() - 1]).is_err());
+        let narrow = FeedbackUplink::new(spec, 1, 1);
+        assert!(narrow.restore_state(&state).is_err());
+        // Stateless uplinks refuse non-empty blobs.
+        assert!(StatelessUplink::new(spec).restore_state(&state).is_err());
+        assert!(StatelessUplink::new(spec).restore_state(&[]).is_ok());
+    }
+
+    #[test]
+    fn downlink_state_snapshots_bitwise() {
+        let (g0, _) = random_pair(33);
+        let globals = vec![g0.clone()];
+
+        // Folding downlink: residuals round-trip and the next broadcast
+        // continues bitwise.
+        let mut folding = FoldingDownlink::new(DownCodec::QuantI8, 1);
+        folding.broadcast(0, &[0], &globals).unwrap();
+        let state = folding.snapshot_state();
+        let mut restored = FoldingDownlink::new(DownCodec::QuantI8, 1);
+        restored.restore_state(&state).unwrap();
+        let a = folding.broadcast(1, &[0], &globals).unwrap();
+        let b = restored.broadcast(1, &[0], &globals).unwrap();
+        assert_eq!(a.global(0, 0), b.global(0, 0));
+        let mut wrong = FoldingDownlink::new(DownCodec::QuantI8, 2);
+        assert!(wrong.restore_state(&state).is_err(), "slot count mismatch");
+
+        // Delta downlink: replicas (model + version) round-trip, so a
+        // restored server ships the same delta the original would.
+        let mut delta = DeltaDownlink::new(DownCodec::TopK { frac: 0.2 }, 4, 1, 10).unwrap();
+        delta.broadcast(0, &[1, 3], &globals).unwrap();
+        let state = delta.snapshot_state();
+        let mut restored = DeltaDownlink::new(DownCodec::TopK { frac: 0.2 }, 4, 1, 10).unwrap();
+        restored.restore_state(&state).unwrap();
+        assert_eq!(restored.base_version(1, 0), delta.base_version(1, 0));
+        assert_eq!(restored.replica(3, 0), delta.replica(3, 0));
+        let (g1, _) = random_pair(34);
+        let next = vec![g1];
+        let a = delta.broadcast(1, &[3], &next).unwrap();
+        let b = restored.broadcast(1, &[3], &next).unwrap();
+        assert_eq!(a.global(0, 0), b.global(0, 0));
+        assert_eq!(a.payload(0, 0).to_bytes(), b.payload(0, 0).to_bytes());
+        assert_eq!(
+            restored.snapshot_state(),
+            delta.snapshot_state(),
+            "post-broadcast states stay in lockstep"
+        );
     }
 
     #[test]

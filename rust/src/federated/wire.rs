@@ -82,6 +82,28 @@
 //!
 //! [`EncodedUpdate::byte_len`] is defined as `to_bytes().len()` and is
 //! what the meter charges — pinned by `tests/wire_roundtrip.rs`.
+//!
+//! ## Framed payloads (integrity checking)
+//!
+//! The raw layouts above validate *structure* (lengths, varint bounds)
+//! but not *integrity*: a bit flip inside a value region decodes
+//! "successfully" into garbage. [`EncodedUpdate::to_framed_bytes`]
+//! wraps any payload in a checksummed frame —
+//!
+//! ```text
+//! magic     2 × u8   "FW"
+//! codec     u8       codec tag (cross-checked against the expected spec)
+//! len       u32      payload byte count
+//! payload   len × u8 the raw wire layout above
+//! checksum  u64      FNV-1a over every preceding byte
+//! ```
+//!
+//! — and [`EncodedUpdate::from_framed_bytes`] rejects truncated,
+//! oversized, codec-mismatched, and bit-flipped frames with a
+//! descriptive `Err` before any payload-sized allocation. This is the
+//! uplink layer the fault-tolerant server decodes
+//! ([`super::fault`]): a corrupt update is discarded and counted, not
+//! aggregated and not a panic.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -174,6 +196,18 @@ impl CodecSpec {
                 }
                 Ok(())
             }
+        }
+    }
+
+    /// Wire tag identifying the codec family inside a framed payload
+    /// ([`EncodedUpdate::to_framed_bytes`]).
+    pub fn tag(&self) -> u8 {
+        match self {
+            CodecSpec::Dense => 0,
+            CodecSpec::QuantI8 => 1,
+            CodecSpec::QuantI8Group { .. } => 2,
+            CodecSpec::TopK { .. } => 3,
+            CodecSpec::TopKPacked { .. } => 4,
         }
     }
 
@@ -467,6 +501,105 @@ impl EncodedUpdate {
                 Ok(EncodedUpdate::TopKPacked { entries })
             }
         }
+    }
+}
+
+/// Magic bytes opening a framed payload.
+pub const FRAME_MAGIC: [u8; 2] = *b"FW";
+
+/// Fixed framing cost: magic (2) + codec tag (1) + length (4) +
+/// trailing checksum (8).
+pub const FRAME_OVERHEAD: usize = 2 + 1 + 4 + 8;
+
+/// FNV-1a 64-bit — the frame and snapshot corruption check (fast, not
+/// cryptographic; a single flipped byte always changes the digest).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl EncodedUpdate {
+    /// Codec tag of this payload's family (matches
+    /// [`CodecSpec::tag`] for the spec that produced it).
+    fn family_tag(&self) -> u8 {
+        match self {
+            EncodedUpdate::Dense { .. } => 0,
+            EncodedUpdate::QuantI8 { .. } => 1,
+            EncodedUpdate::QuantI8Group { .. } => 2,
+            EncodedUpdate::TopKDelta { .. } => 3,
+            EncodedUpdate::TopKPacked { .. } => 4,
+        }
+    }
+
+    /// Size of [`Self::to_framed_bytes`]'s output.
+    pub fn framed_len(&self) -> usize {
+        self.byte_len() + FRAME_OVERHEAD
+    }
+
+    /// Serialize with the checksummed frame (module docs §Framed
+    /// payloads) — the integrity-checked form the fault-tolerant
+    /// uplink ships.
+    pub fn to_framed_bytes(&self) -> Vec<u8> {
+        let payload = self.to_bytes();
+        let mut out = Vec::with_capacity(payload.len() + FRAME_OVERHEAD);
+        out.extend_from_slice(&FRAME_MAGIC);
+        out.push(self.family_tag());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse a framed payload back, rejecting any frame that is
+    /// truncated, oversized, carries the wrong codec tag, or fails its
+    /// checksum — every failure is a descriptive `Err`, never a panic,
+    /// and the declared length is validated against the buffer before
+    /// anything payload-sized is allocated.
+    pub fn from_framed_bytes(
+        spec: CodecSpec,
+        n_tensors: usize,
+        n_values: usize,
+        bytes: &[u8],
+    ) -> Result<EncodedUpdate> {
+        if bytes.len() < FRAME_OVERHEAD {
+            bail!(
+                "framed payload is {} bytes, smaller than the {FRAME_OVERHEAD}-byte frame",
+                bytes.len()
+            );
+        }
+        if bytes[..2] != FRAME_MAGIC {
+            bail!("framed payload has bad magic (not an update frame)");
+        }
+        if bytes[2] != spec.tag() {
+            bail!(
+                "framed payload carries codec tag {} but the link expects {} ({})",
+                bytes[2],
+                spec.tag(),
+                spec.name()
+            );
+        }
+        let declared = u32::from_le_bytes([bytes[3], bytes[4], bytes[5], bytes[6]]) as usize;
+        // Exact-length check first: an oversized declared length (or a
+        // truncated buffer) is rejected here, before the checksum walk
+        // and before `from_bytes` sizes any allocation off `declared`.
+        if bytes.len() != FRAME_OVERHEAD + declared {
+            bail!(
+                "framed payload is {} bytes, frame header declares {}",
+                bytes.len(),
+                FRAME_OVERHEAD + declared
+            );
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
+        if fnv1a64(body) != want {
+            bail!("framed payload checksum mismatch (corrupt or truncated update)");
+        }
+        EncodedUpdate::from_bytes(spec, n_tensors, n_values, &body[7..])
     }
 }
 
@@ -1152,5 +1285,71 @@ mod tests {
         let enc = encode_update(CodecSpec::QuantI8, &z, &z).unwrap();
         let back = decode_update(&z, &enc).unwrap();
         assert_eq!(back, z);
+    }
+
+    #[test]
+    fn framed_roundtrip_every_codec() {
+        let (global, local) = random_pair(21);
+        let (nt, n) = (global.tensors.len(), global.num_params());
+        for spec in [
+            CodecSpec::Dense,
+            CodecSpec::QuantI8,
+            CodecSpec::QuantI8Group { block: 8 },
+            CodecSpec::TopK { frac: 0.3 },
+            CodecSpec::TopKPacked { frac: 0.3 },
+        ] {
+            let enc = encode_update(spec, &global, &local).unwrap();
+            let framed = enc.to_framed_bytes();
+            assert_eq!(framed.len(), enc.framed_len(), "{}", enc.codec_name());
+            assert_eq!(framed.len(), enc.byte_len() + FRAME_OVERHEAD);
+            let back = EncodedUpdate::from_framed_bytes(spec, nt, n, &framed).unwrap();
+            assert_eq!(back, enc, "{}", enc.codec_name());
+        }
+    }
+
+    #[test]
+    fn framed_decode_rejects_every_single_byte_flip() {
+        // FNV-1a's per-byte step is bijective, so any one-byte change —
+        // header, payload, or the checksum itself — must fail decode.
+        let (global, local) = random_pair(22);
+        let (nt, n) = (global.tensors.len(), global.num_params());
+        let spec = CodecSpec::QuantI8;
+        let framed = encode_update(spec, &global, &local)
+            .unwrap()
+            .to_framed_bytes();
+        for i in 0..framed.len() {
+            let mut bad = framed.clone();
+            bad[i] ^= 0x01;
+            assert!(
+                EncodedUpdate::from_framed_bytes(spec, nt, n, &bad).is_err(),
+                "flip at byte {i} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn framed_decode_rejects_truncation_and_wrong_codec() {
+        let (global, local) = random_pair(23);
+        let (nt, n) = (global.tensors.len(), global.num_params());
+        let spec = CodecSpec::TopKPacked { frac: 0.5 };
+        let framed = encode_update(spec, &global, &local)
+            .unwrap()
+            .to_framed_bytes();
+        for cut in [0, 1, FRAME_OVERHEAD - 1, framed.len() / 2, framed.len() - 1] {
+            assert!(
+                EncodedUpdate::from_framed_bytes(spec, nt, n, &framed[..cut]).is_err(),
+                "truncation to {cut} bytes must be rejected"
+            );
+        }
+        // The frame names its codec; decoding as another family fails
+        // before the payload parser ever runs.
+        let err =
+            EncodedUpdate::from_framed_bytes(CodecSpec::Dense, nt, n, &framed).unwrap_err();
+        assert!(err.to_string().contains("codec tag"), "{err}");
+        // An oversized declared length is rejected up front.
+        let mut oversized = framed.clone();
+        oversized[3..7].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = EncodedUpdate::from_framed_bytes(spec, nt, n, &oversized).unwrap_err();
+        assert!(err.to_string().contains("declares"), "{err}");
     }
 }

@@ -22,6 +22,15 @@
 //!                                # reproducible, incl. across --workers)
 //! fedmlh run     --preset tiny --scenario smoke     # canned async scenarios
 //!                                                   # (smoke | million)
+//! fedmlh run     --preset tiny --inject corrupt:0.05,nan:0.02 \
+//!                --robust-agg norm-clip:10
+//!                                # deterministic fault injection (seeded
+//!                                # fates; bitwise reproducible) behind
+//!                                # defensive aggregation
+//! fedmlh run     --preset tiny --snapshot-every 5 --resume snapdir
+//!                                # periodic crash-resume snapshots; the
+//!                                # same command re-run resumes bitwise
+//!                                # from the latest snapshot
 //! fedmlh run     --preset eurlex --save model.fmlh  # + persist a serving checkpoint
 //! fedmlh run     --preset eurlex --save tuned.fmlh --save-delta base.fmlh
 //!                                # write tuned.fmlh as a lossless delta
@@ -92,7 +101,10 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use fedmlh::config::presets::{by_name, paper_presets};
-use fedmlh::config::{Algo, CanaryConfig, DatasetPreset, ExperimentConfig, ObsConfig, SimConfig};
+use fedmlh::config::{
+    Algo, CanaryConfig, DatasetPreset, ExperimentConfig, InjectConfig, ObsConfig, RobustAgg,
+    SimConfig,
+};
 use fedmlh::federated::sim::Dist;
 use fedmlh::federated::transport::DownCodec;
 use fedmlh::federated::wire::CodecSpec;
@@ -263,6 +275,10 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         .flag("latency-dist", "lognormal:2,0.7", "async: per-client compute seconds/epoch: fixed:<v> | uniform:<lo>,<hi> | lognormal:<median>,<sigma>")
         .flag("bandwidth-dist", "lognormal:20,0.8", "async: per-client link Mbit/s (down and up drawn independently), same grammar as --latency-dist")
         .flag("staleness-exp", "0.5", "async: staleness discount exponent; an update s versions stale weighs (1+s)^-exp")
+        .flag("inject", "none", "deterministic fault injection, e.g. corrupt:0.05,truncate:0.01,nan:0.02,fail:0.1 — fates are drawn from the seeded RNG per (round, client, sub-model), so injected runs are bitwise reproducible")
+        .flag("robust-agg", "none", "defensive aggregation: none | norm-clip:<c> (clip each client delta's L2 norm to c) | trimmed:<frac> (coordinate-wise trimmed mean); non-finite updates are screened whenever not 'none'")
+        .flag("snapshot-every", "0", "write a crash-resume snapshot into the --resume dir every N rounds (0 = off; synchronous loop only)")
+        .flag("resume", "", "snapshot directory: an existing snapshot there resumes the run bitwise from its round; --snapshot-every writes new snapshots into it")
         .flag("save", "", "write the trained model as a serving checkpoint to this path")
         .flag("save-codec", "q8", "full-checkpoint codec: q8 (~4x smaller) | dense (ignored with --save-delta; see --delta-codec)")
         .flag("save-delta", "", "with --save: write the checkpoint as a delta against this base .fmlh (apply with `fedmlh serve --delta`)")
@@ -283,6 +299,13 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         cfg.lr = lr;
     }
     cfg.sim = sim_config_from(&p)?;
+    cfg.inject = InjectConfig::parse(p.get("inject"))?;
+    cfg.robust = RobustAgg::parse(p.get("robust-agg"))?;
+    cfg.snapshot_every = p.get_usize("snapshot-every")?;
+    let resume = p.get("resume");
+    if !resume.is_empty() {
+        cfg.snapshot_dir = Some(PathBuf::from(resume));
+    }
     opts.configure(&mut cfg);
     cfg.validate()?;
 
@@ -309,6 +332,18 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             cfg.down_codec.name(),
             if cfg.error_feedback { "on" } else { "off" }
         );
+        if cfg.inject.any() || !matches!(cfg.robust, RobustAgg::None) || cfg.snapshot_every > 0 {
+            fedmlh::log_info!(
+                "run: fault tolerance: inject={} robust-agg={} snapshot-every={} resume={}",
+                cfg.inject,
+                cfg.robust.name(),
+                cfg.snapshot_every,
+                cfg.snapshot_dir
+                    .as_ref()
+                    .map(|d| d.display().to_string())
+                    .unwrap_or_else(|| "-".to_string())
+            );
+        }
         if cfg.sim.async_mode {
             fedmlh::log_info!(
                 "run: async sim: registry={} buffer={} concurrency={} dropout={} latency={} bandwidth={} staleness-exp={}",
@@ -385,10 +420,11 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     );
     if let Some(s) = &out.sim {
         println!(
-            "async sim: {} dispatched / {} arrived / {} dropped over {} aggregations; simulated clock {:.1}s; staleness mean {:.2} max {}",
+            "async sim: {} dispatched / {} arrived / {} dropped / {} failed over {} aggregations; simulated clock {:.1}s; staleness mean {:.2} max {}",
             s.dispatched,
             s.arrived,
             s.dropped,
+            s.failed,
             s.aggregations,
             s.sim_seconds,
             s.mean_staleness,
@@ -398,6 +434,14 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     if let Some(dir) = &opts.out_dir {
         let name = format!("run_{}_{}.csv", cfg.preset.name, algo.name());
         report::write_result(dir, &name, &out.history.to_csv())?;
+        // A Prometheus-format snapshot of the process-global registry —
+        // fault counters (`fedmlh_faults_total{kind}`), robust-agg
+        // screening, round/comm totals — for offline inspection and CI.
+        report::write_result(
+            dir,
+            "metrics.prom",
+            &fedmlh::obs::metrics::global().render_prometheus(),
+        )?;
         if opts.verbose {
             fedmlh::log_info!("run: history → {}/{name}", dir.display());
         }
@@ -468,6 +512,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("canary-window", "50", "canary rollout: requests the canary must serve before the promote decision (POST /reload?canary=<pct>; ?window=<n> overrides per reload)")
         .flag("canary-max-error-rate", "0.05", "canary rollout: error rate tolerated inside the window; exceeding the budget rolls back immediately")
         .flag("canary-p99-ratio", "10", "canary rollout: max canary p99 latency as a multiple of stable p99 (0 disables the latency guard)")
+        .flag("max-body-bytes", "4194304", "largest accepted request body; a larger declared Content-Length is answered 413 without reading the body")
         .flag("log-level", "info", "stderr log threshold: error | warn | info | debug")
         .parse(argv)?;
     ObsConfig::new(None, p.get("log-level"))?.apply();
@@ -520,6 +565,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         ckpt.meta.p,
         ckpt.meta.root_seed
     );
+    let max_body_bytes = p.get_usize("max-body-bytes")?;
+    if max_body_bytes == 0 {
+        bail!("max-body-bytes must be positive");
+    }
     let opts = ServeOpts {
         host: p.get("host").to_string(),
         port: port as u16,
@@ -528,6 +577,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         max_batch,
         drain: std::time::Duration::from_secs(p.get_u64("drain-secs")?),
         canary,
+        max_body_bytes,
     };
     let control = std::sync::Arc::new(ControlPlane::with_initial(ckpt, source, opts)?);
     let server = Server::bind_with(control.clone())?;

@@ -14,7 +14,9 @@
 //! it frame responses by EOF), and malformed requests always close.
 //! Back-to-back (pipelined) requests are buffered and served strictly
 //! in sequence — bytes read past one request's body seed the next
-//! request's parse instead of being dropped.
+//! request's parse instead of being dropped. A request declaring a body
+//! larger than `ServeOpts::max_body_bytes` (CLI `--max-body-bytes`) is
+//! refused with 413 before a byte of the body is read.
 //!
 //! Endpoints (routing is delegated to the
 //! [`ControlPlane`](super::control::ControlPlane)):
@@ -83,6 +85,10 @@ pub struct ServeOpts {
     pub drain: Duration,
     /// Default canary rollout policy (per-reload `window=` overrides).
     pub canary: CanaryConfig,
+    /// Largest accepted request body; a larger declared Content-Length
+    /// is answered 413 without reading the body (CLI:
+    /// `--max-body-bytes`).
+    pub max_body_bytes: usize,
 }
 
 impl Default for ServeOpts {
@@ -95,15 +101,17 @@ impl Default for ServeOpts {
             max_batch: 32,
             drain: Duration::from_secs(5),
             canary: CanaryConfig::default(),
+            max_body_bytes: DEFAULT_MAX_BODY_BYTES,
         }
     }
 }
 
 /// Default top-k when a predict request does not specify `k`.
 const DEFAULT_K: usize = 5;
-/// Request size guards.
+/// Request size guards. Headers have a fixed cap; the body cap is
+/// configurable (`ServeOpts::max_body_bytes`) with this default.
 const MAX_HEADER_BYTES: usize = 64 * 1024;
-const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+pub const DEFAULT_MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
 /// Whole-request wall-clock budget. The per-read socket timeout resets
 /// on every received byte, so without this a client dripping one byte
 /// per interval would pin its handler thread forever (slow-loris). On a
@@ -247,11 +255,29 @@ fn handle_connection(conn: &mut TcpStream, ctx: &ServeCtx) {
     // send the next request without waiting for the response) are
     // carried into the next read_request call instead of dropped.
     let mut carry = Vec::new();
+    let max_body = ctx.control.opts().max_body_bytes;
     for served in 1..=MAX_REQUESTS_PER_CONN {
-        let req = match read_request(conn, &mut carry) {
-            Ok(Some(parts)) => parts,
+        let req = match read_request(conn, &mut carry, max_body) {
+            Ok(ReadOutcome::Request(parts)) => parts,
             // Clean close (or idle timeout) between keep-alive requests.
-            Ok(None) => return,
+            Ok(ReadOutcome::Closed) => return,
+            // An oversized declared body gets its own status — the body
+            // is never read, and the connection closes so the unread
+            // bytes can't be misparsed as a next request.
+            Ok(ReadOutcome::BodyTooLarge { declared }) => {
+                let _ = respond(
+                    conn,
+                    413,
+                    reason(413),
+                    CT_JSON,
+                    &error_body(&format!(
+                        "request body of {declared} bytes exceeds the {max_body}-byte cap \
+                         (--max-body-bytes)"
+                    )),
+                    false,
+                );
+                return;
+            }
             Err(e) => {
                 let _ = respond(
                     conn,
@@ -368,6 +394,7 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        413 => "Payload Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
@@ -472,13 +499,28 @@ struct Request {
     keep_alive: bool,
 }
 
-/// Read one HTTP/1.1 request. `carry` holds bytes already read past
-/// the previous request on this connection (in) and receives any bytes
+/// What reading one request produced. `Closed` is a clean end of
+/// connection (the peer closed, or idled past the read deadline,
+/// without sending a byte of a next request); `BodyTooLarge` is
+/// separated from the error channel so the caller can answer 413
+/// instead of the generic 400.
+enum ReadOutcome {
+    Request(Request),
+    Closed,
+    BodyTooLarge { declared: usize },
+}
+
+/// Read one HTTP/1.1 request under the whole-request deadline (headers
+/// *and* body — `/reload` and `/predict` bodies alike cannot drip past
+/// `REQUEST_DEADLINE`). `carry` holds bytes already read past the
+/// previous request on this connection (in) and receives any bytes
 /// read past this one (out), so back-to-back requests in one TCP
-/// segment are served in sequence rather than dropped. `Ok(None)` is a
-/// clean end of connection: the peer closed (or idled past the read
-/// deadline) without sending a single byte of a next request.
-fn read_request(conn: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Request>> {
+/// segment are served in sequence rather than dropped.
+fn read_request(
+    conn: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    max_body: usize,
+) -> Result<ReadOutcome> {
     let deadline = Instant::now() + REQUEST_DEADLINE;
     let mut buf = std::mem::take(carry);
     let mut chunk = [0u8; 4096];
@@ -506,13 +548,13 @@ fn read_request(conn: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Requ
                         std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
                     ) =>
             {
-                return Ok(None);
+                return Ok(ReadOutcome::Closed);
             }
             Err(e) => return Err(e).context("reading request"),
         };
         if n == 0 {
             if buf.is_empty() {
-                return Ok(None);
+                return Ok(ReadOutcome::Closed);
             }
             bail!("connection closed before the request was complete");
         }
@@ -550,8 +592,10 @@ fn read_request(conn: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Requ
             }
         }
     }
-    if content_length > MAX_BODY_BYTES {
-        bail!("request body exceeds {MAX_BODY_BYTES} bytes");
+    if content_length > max_body {
+        return Ok(ReadOutcome::BodyTooLarge {
+            declared: content_length,
+        });
     }
 
     let mut body = buf[header_end + 4..].to_vec();
@@ -564,7 +608,7 @@ fn read_request(conn: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Requ
         body.extend_from_slice(&chunk[..n]);
     }
     *carry = body.split_off(content_length);
-    Ok(Some(Request {
+    Ok(ReadOutcome::Request(Request {
         method,
         path,
         query,

@@ -5,7 +5,7 @@
 
 use fedmlh::config::{Algo, ExperimentConfig};
 use fedmlh::model::params::ModelParams;
-use fedmlh::serve::{Checkpoint, CheckpointCodec, DeltaCodec, InferenceEngine};
+use fedmlh::serve::{Checkpoint, CheckpointCodec, DeltaCheckpoint, DeltaCodec, InferenceEngine};
 use fedmlh::util::rng::Rng;
 
 fn checkpoint(seed: u64) -> Checkpoint {
@@ -96,6 +96,105 @@ fn delta_chain_reproduces_full_checkpoint_predictions_bitwise() {
     for (i, (a, b)) in s_full.iter().zip(s_chain.iter()).enumerate() {
         assert_eq!(a.to_bits(), b.to_bits(), "score {i}: {a} vs {b}");
     }
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Hostile files (the fault-tolerance satellite): a checkpoint loader
+// that feeds `fedmlh serve` must answer truncation, bit rot, and
+// oversized declared shapes with a descriptive `Err` naming the file —
+// never a panic, and never an allocation sized by attacker bytes.
+
+/// FNV-1a 64 — recomputed here so a test can forge a *valid* checksum
+/// over tampered header bytes and prove the structural guards hold on
+/// their own, not just downstream of the checksum.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[test]
+fn corrupt_checkpoint_files_err_descriptively_and_never_panic() {
+    let dir = std::env::temp_dir().join(format!("fedmlh_badckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let a = checkpoint(21);
+    let b = drifted(&a, 22, 0.3);
+    let full_path = dir.join("full.fmlh");
+    let delta_path = dir.join("delta.fmlh");
+    a.save(&full_path, CheckpointCodec::Dense).unwrap();
+    b.delta_against(&a, DeltaCodec::Sparse).unwrap().save(&delta_path).unwrap();
+    let full = std::fs::read(&full_path).unwrap();
+    let delta = std::fs::read(&delta_path).unwrap();
+
+    // Truncation at every layer of the layout — empty, mid-magic,
+    // mid-header, mid-payload, one byte short — errs naming the file.
+    for cut in [0, 3, 6, full.len() / 2, full.len() - 1] {
+        let path = dir.join("trunc.fmlh");
+        std::fs::write(&path, &full[..cut]).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("trunc.fmlh"), "cut {cut}: error must name the file: {err}");
+    }
+
+    // A single flipped payload bit is a checksum mismatch, not a parse.
+    let mut flipped = full.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x40;
+    let path = dir.join("flip.fmlh");
+    std::fs::write(&path, &flipped).unwrap();
+    let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+    assert!(
+        err.contains("flip.fmlh") && err.contains("checksum"),
+        "flipped byte must fail the checksum: {err}"
+    );
+
+    // Forge a header that declares d = 2^24 (the dimension cap, so the
+    // range guard passes) *with a valid checksum*: the size guard must
+    // reject it against the actual file length before the model
+    // template is allocated. Offset 8 is `d` (after magic+version+
+    // codec+algo).
+    let mut huge = full.clone();
+    let forged_d = (1u32 << 24).to_le_bytes();
+    huge[8..12].copy_from_slice(&forged_d);
+    let body_len = huge.len() - 8;
+    let sum = fnv1a64(&huge[..body_len]);
+    huge[body_len..].copy_from_slice(&sum.to_le_bytes());
+    let path = dir.join("huge.fmlh");
+    std::fs::write(&path, &huge).unwrap();
+    let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+    assert!(
+        err.contains("huge.fmlh") && err.contains("declares"),
+        "oversized declared shape must hit the size guard: {err}"
+    );
+
+    // The two formats reject each other with a pointer to the right
+    // loader, not a parse error deep inside the wrong layout.
+    let err = format!("{:#}", Checkpoint::load(&delta_path).unwrap_err());
+    assert!(err.contains("delta"), "full loader must identify a delta file: {err}");
+    let err = format!("{:#}", DeltaCheckpoint::load(&full_path).unwrap_err());
+    assert!(err.contains("full checkpoint"), "delta loader must identify a full file: {err}");
+
+    // Delta files get the same treatment: truncations and bit flips.
+    for cut in [0, 3, delta.len() / 2, delta.len() - 1] {
+        let path = dir.join("trunc_delta.fmlh");
+        std::fs::write(&path, &delta[..cut]).unwrap();
+        let err = format!("{:#}", DeltaCheckpoint::load(&path).unwrap_err());
+        assert!(err.contains("trunc_delta.fmlh"), "cut {cut}: {err}");
+    }
+    let mut flipped = delta.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x04;
+    let path = dir.join("flip_delta.fmlh");
+    std::fs::write(&path, &flipped).unwrap();
+    let err = format!("{:#}", DeltaCheckpoint::load(&path).unwrap_err());
+    assert!(
+        err.contains("flip_delta.fmlh") && err.contains("checksum"),
+        "flipped delta byte must fail the checksum: {err}"
+    );
 
     std::fs::remove_dir_all(&dir).unwrap();
 }

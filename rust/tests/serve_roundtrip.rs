@@ -361,6 +361,45 @@ fn http_keep_alive_reuses_one_connection() {
 }
 
 #[test]
+fn oversized_request_bodies_get_413_without_reading_the_body() {
+    let (_, _, ckpt) = trained_checkpoint(Algo::FedMlh);
+    let server = Server::bind(ckpt, &ServeOpts {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        workers: 1,
+        max_batch: 4,
+        max_body_bytes: 64,
+        ..ServeOpts::default()
+    })
+    .unwrap();
+    let handle = server.handle().unwrap();
+    let addr = handle.addr();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    // Headers only — the megabyte the header promises is never sent,
+    // yet the refusal arrives: the server answers on the declared
+    // length alone and closes so the unread bytes can't be misparsed.
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(
+        b"POST /predict HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: 1048576\r\n\r\n",
+    )
+    .unwrap();
+    let mut response = String::new();
+    conn.read_to_string(&mut response).unwrap();
+    assert!(response.starts_with("HTTP/1.1 413"), "{response}");
+    assert!(response.contains("Connection: close"), "{response}");
+    assert!(response.contains("max-body-bytes"), "{response}");
+
+    // An in-cap request on a fresh connection is served normally.
+    let small = "{\"sparse\": [[3, 1.5]], \"k\": 3}";
+    let (status, body) = http_request(addr, "POST", "/predict", small);
+    assert_eq!(status, 200, "{body}");
+
+    handle.stop();
+    server_thread.join().unwrap();
+}
+
+#[test]
 fn http_server_smoke_test_over_a_real_socket() {
     let (_, world, ckpt) = trained_checkpoint(Algo::FedMlh);
     let engine = InferenceEngine::new(ckpt.clone()).unwrap();

@@ -280,6 +280,95 @@ fn packed_topk_real_round_compresses_beyond_raw_topk() {
     assert!(packed.comm.upload_compression() > raw.comm.upload_compression());
 }
 
+// ---------------------------------------------------------------------
+// Fault-tolerance fuzzing (the `federated::fault` uplink contract):
+// hostile bytes come back as a descriptive `Err` — never a panic, and
+// never a silently *different* update.
+
+fn fuzz_specs(g: &mut Gen) -> CodecSpec {
+    let frac = g.f32_in(0.05, 1.0);
+    let specs = [
+        CodecSpec::Dense,
+        CodecSpec::QuantI8,
+        CodecSpec::QuantI8Group { block: 8 },
+        CodecSpec::TopK { frac },
+        CodecSpec::TopKPacked { frac },
+    ];
+    specs[g.usize_in(0, specs.len() - 1)]
+}
+
+#[test]
+fn framed_decode_rejects_arbitrary_corruption_without_panicking() {
+    check("framed decode rejects corruption", 50, |g: &mut Gen| {
+        let (global, local) = random_pair(g);
+        let spec = fuzz_specs(g);
+        let enc = encode_update(spec, &global, &local).unwrap();
+        let framed = enc.to_framed_bytes();
+        let decode = |bytes: &[u8]| {
+            EncodedUpdate::from_framed_bytes(spec, N_PARAMS, global.num_params(), bytes)
+        };
+
+        // The untouched frame round-trips…
+        assert_eq!(decode(&framed).unwrap(), enc);
+
+        // …every strict truncation errs…
+        for _ in 0..4 {
+            let cut = g.usize_in(0, framed.len() - 1);
+            assert!(decode(&framed[..cut]).is_err(), "truncation to {cut} bytes accepted");
+        }
+
+        // …every single-bit flip errs (FNV-1a's per-byte step is
+        // bijective, so one flipped bit always moves the checksum)…
+        let pos = g.usize_in(0, framed.len() - 1);
+        let bit = g.usize_in(0, 7);
+        let mut flipped = framed.clone();
+        flipped[pos] ^= 1 << bit;
+        assert!(decode(&flipped).is_err(), "flipped bit {bit} of byte {pos} went undetected");
+
+        // …appended garbage errs (declared length is exact)…
+        let mut longer = framed.clone();
+        longer.push(g.usize_in(0, 255) as u8);
+        assert!(decode(&longer).is_err(), "trailing garbage accepted");
+
+        // …and multi-byte smashes either err or reproduce the original
+        // exactly (a smash can rewrite a byte to its old value).
+        for _ in 0..4 {
+            let mut smashed = framed.clone();
+            for _ in 0..g.usize_in(1, 8) {
+                let pos = g.usize_in(0, smashed.len() - 1);
+                smashed[pos] = g.usize_in(0, 255) as u8;
+            }
+            if let Ok(back) = decode(&smashed) {
+                assert_eq!(back, enc, "corrupted frame decoded to a different update");
+            }
+        }
+
+        // Fully random buffers — including ones declaring pathological
+        // payload sizes — err without a payload-sized allocation.
+        let len = g.usize_in(0, 256);
+        let junk: Vec<u8> = (0..len).map(|_| (g.rng().next_u64() & 0xff) as u8).collect();
+        assert!(decode(&junk).is_err(), "random {len}-byte buffer accepted as a frame");
+    });
+}
+
+#[test]
+fn raw_decode_of_random_bytes_never_panics() {
+    // The unframed parsers sit *under* the checksum; they still must
+    // fail structurally (length/varint checks), not by panicking or
+    // allocating off an attacker-declared count.
+    check("raw from_bytes never panics", 100, |g: &mut Gen| {
+        let spec = fuzz_specs(g);
+        let n_values = g.usize_in(1, 64);
+        let len = g.usize_in(0, 512);
+        let bytes: Vec<u8> = (0..len).map(|_| (g.rng().next_u64() & 0xff) as u8).collect();
+        if let Ok(enc) = EncodedUpdate::from_bytes(spec, N_PARAMS, n_values, &bytes) {
+            // Structurally valid garbage is acceptable — it must still
+            // round-trip through the serializer it claims to be.
+            assert_eq!(enc.to_bytes().len(), enc.byte_len());
+        }
+    });
+}
+
 #[test]
 fn compressed_runs_still_learn() {
     for codec in [
