@@ -23,11 +23,21 @@
 //! ```
 //!
 //! (times are median seconds per call; speedup = naive / tiled.)
+//!
+//! Each shape also gets a kernel-dispatch ladder over the *same* tiled
+//! step — `tiled_scalar` (SIMD forced off, one thread), `tiled_simd`
+//! (runtime dispatch; identical to scalar unless built with
+//! `--features simd` on AVX2 hardware) and `tiled_simd_par` (SIMD plus
+//! the intra-step row-slicing budget set to every available core) —
+//! reported as `simd_speedup` / `par_speedup` vs `tiled_scalar`.
+//! Shapes below the `PAR_MIN_FLOPS` floor read ~1.0× on the parallel
+//! row by design. All three variants produce bit-identical results, so
+//! the ladder times the dispatch, never different math.
 
 use std::collections::BTreeMap;
 
 use fedmlh::bench::Bencher;
-use fedmlh::kernels::naive;
+use fedmlh::kernels::{naive, parallel, simd};
 use fedmlh::model::mlp;
 use fedmlh::model::params::ModelParams;
 use fedmlh::util::json::Json;
@@ -145,11 +155,49 @@ fn main() {
             })
             .median;
 
+        // -- kernel-dispatch ladder on the same tiled step: scalar →
+        // simd → simd + intra-step parallel. One params/workspace pair
+        // drifts through all three (timing is shape-bound, and the
+        // variants are bit-identical anyway).
+        let mut p_lad = ModelParams::init(s.d, s.hidden, s.out, 2);
+        let mut ws_lad = mlp::Workspace::new(&p_lad, s.batch);
+        simd::force_scalar(true);
+        let scalar_train = bench
+            .bench_val(&format!("{}/train_step/tiled_scalar", s.name), || {
+                mlp::train_step(&mut p_lad, &mut ws_lad, &x, &y, lr)
+            })
+            .median;
+        simd::force_scalar(false);
+        let simd_train = bench
+            .bench_val(&format!("{}/train_step/tiled_simd", s.name), || {
+                mlp::train_step(&mut p_lad, &mut ws_lad, &x, &y, lr)
+            })
+            .median;
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let par_train = {
+            let _budget = parallel::set_kernel_threads(threads);
+            bench
+                .bench_val(&format!("{}/train_step/tiled_simd_par", s.name), || {
+                    mlp::train_step(&mut p_lad, &mut ws_lad, &x, &y, lr)
+                })
+                .median
+        };
+        let simd_speedup = scalar_train / simd_train;
+        let par_speedup = scalar_train / par_train;
+
         let train_speedup = naive_train / tiled_train;
         let forward_speedup = naive_fwd / tiled_fwd;
         eprintln!(
-            "# {}: train {:.2}x, forward {:.2}x vs naive",
-            s.name, train_speedup, forward_speedup
+            "# {}: train {:.2}x, forward {:.2}x vs naive; simd {:.2}x, \
+             simd+par({threads}) {:.2}x vs scalar (simd compiled: {})",
+            s.name,
+            train_speedup,
+            forward_speedup,
+            simd_speedup,
+            par_speedup,
+            simd::compiled()
         );
 
         let mut o = BTreeMap::new();
@@ -165,12 +213,19 @@ fn main() {
         o.insert("naive_forward_s".to_string(), num(naive_fwd));
         o.insert("tiled_forward_s".to_string(), num(tiled_fwd));
         o.insert("forward_speedup".to_string(), num(forward_speedup));
+        o.insert("scalar_train_s".to_string(), num(scalar_train));
+        o.insert("simd_train_s".to_string(), num(simd_train));
+        o.insert("par_train_s".to_string(), num(par_train));
+        o.insert("simd_speedup".to_string(), num(simd_speedup));
+        o.insert("par_speedup".to_string(), num(par_speedup));
+        o.insert("par_threads".to_string(), num(threads as f64));
         rows.push(Json::Obj(o));
     }
 
     let mut top = BTreeMap::new();
     top.insert("suite".to_string(), Json::Str("train".to_string()));
     top.insert("fast".to_string(), Json::Bool(fast));
+    top.insert("simd_compiled".to_string(), Json::Bool(simd::compiled()));
     top.insert("shapes".to_string(), Json::Arr(rows));
     let path = std::env::var("FEDMLH_BENCH_JSON").unwrap_or_else(|_| "BENCH_train.json".into());
     match std::fs::write(&path, Json::Obj(top).to_string_pretty(2)) {

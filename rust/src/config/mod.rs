@@ -702,6 +702,12 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.codec = CodecSpec::QuantI8Group { block: 1 << 30 };
         assert!(cfg.validate().is_err(), "q8g block above the wire cap must fail early");
+        cfg.codec = CodecSpec::QuantI4Group { block: 64 };
+        cfg.validate().unwrap();
+        cfg.codec = CodecSpec::QuantI4Group { block: 0 };
+        assert!(cfg.validate().is_err());
+        cfg.codec = CodecSpec::QuantI4Group { block: 1 << 30 };
+        assert!(cfg.validate().is_err(), "q4g block above the wire cap must fail early");
         // Downlink codec parameters are validated too.
         cfg.codec = CodecSpec::Dense;
         cfg.down_codec = DownCodec::TopK { frac: 0.1 };
@@ -710,6 +716,10 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.down_codec = DownCodec::QuantI8Group { block: 0 };
         assert!(cfg.validate().is_err());
+        cfg.down_codec = DownCodec::QuantI4Group { block: 0 };
+        assert!(cfg.validate().is_err());
+        cfg.down_codec = DownCodec::QuantI4Group { block: 32 };
+        cfg.validate().unwrap();
         cfg.down_codec = DownCodec::QuantI8Group { block: 32 };
         cfg.resync_every = 0; // "resync every participation" is valid
         cfg.validate().unwrap();

@@ -24,7 +24,13 @@
 //! - the compute itself is deterministic: the tiled kernels under
 //!   [`crate::kernels`] keep a fixed, tiling-independent summation
 //!   order, so an item's numbers do not depend on which worker ran it
-//!   or on what ran before it on that worker.
+//!   or on what ran before it on that worker — and the same property
+//!   makes the *intra-step* budget safe: workers beyond the item count
+//!   are handed down as `kernels::parallel::set_kernel_threads`
+//!   row-slicing budget (large GEMMs split output rows across scoped
+//!   threads, every element still written once in the same order), so
+//!   `--workers N` fills N cores whether a round has many small
+//!   clients or one huge one.
 //!
 //! `tests/parallel_determinism.rs` pins `workers = 4` to be
 //! bit-identical to `workers = 1`.
@@ -161,6 +167,12 @@ impl RoundEngine {
 
         let pool = self.workers.min(n_items.max(1));
         let parallel_backend = if pool > 1 { backend.as_parallel() } else { None };
+        // Workers beyond the item fan-out flow *down* into the kernels:
+        // each pool thread gets `workers / pool` intra-kernel threads
+        // (kernels::parallel row-slices large GEMMs, bitwise-identical
+        // at any count), so `--workers 8` saturates eight cores whether
+        // the round has eight clients or one.
+        let intra = (self.workers / pool.max(1)).max(1);
 
         let collected: Vec<Result<ClientUpdate>> = match parallel_backend {
             Some(sync_be) => {
@@ -173,6 +185,7 @@ impl RoundEngine {
                     let run_item = &run_item;
                     for w in 0..pool {
                         scope.spawn(move || {
+                            let _budget = crate::kernels::parallel::set_kernel_threads(intra);
                             let be: &dyn TrainBackend = sync_be;
                             loop {
                                 let i = next.fetch_add(1, Ordering::Relaxed);
@@ -194,9 +207,15 @@ impl RoundEngine {
                     })
                     .collect()
             }
-            None => (0..n_items)
-                .map(|i| run_item(backend, 0, i / n_models, i % n_models))
-                .collect(),
+            None => {
+                // Sequential fan-out (one item, one worker, or a
+                // non-shareable backend): the whole `--workers` budget
+                // goes to intra-kernel parallelism instead.
+                let _budget = crate::kernels::parallel::set_kernel_threads(self.workers);
+                (0..n_items)
+                    .map(|i| run_item(backend, 0, i / n_models, i % n_models))
+                    .collect()
+            }
         };
 
         // Fan-in: fail on the first bad item in deterministic order,

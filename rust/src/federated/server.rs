@@ -25,7 +25,12 @@
 //!    actually received and aggregate each sub-model uniformly over the
 //!    S clients ([`super::aggregate`], line 17),
 //! 6. evaluate on the test set (predict per sub-model → scheme decode →
-//!    top-k metrics) and early-stop on the mean top-k accuracy.
+//!    top-k metrics) and early-stop on the mean top-k accuracy. When
+//!    nothing reads the verdict before the next round (patience 0, no
+//!    snapshots, shareable backend, `--workers > 1`) the evaluation
+//!    runs on its own thread, overlapped with the next round's
+//!    training — same reports, same history rows, off the round
+//!    critical path.
 //!
 //! The loop is algorithm-agnostic: FedAvg is a [`LabelScheme`] with one
 //! sub-model over class labels, FedMLH has R sub-models over bucket
@@ -80,6 +85,37 @@ pub struct RunOutput {
     /// Event-driven simulation statistics; `Some` only for runs through
     /// [`super::sim::run_async`], `None` for the synchronous loop.
     pub sim: Option<SimStats>,
+}
+
+/// One round's already-metered history fields, parked while that
+/// round's evaluation runs on the overlap thread (see `run`'s
+/// `overlap_eval`); [`Self::into_record`] attaches the accuracy report
+/// when the thread is reaped. Everything here is frozen at the end of
+/// the round it describes, so deferring the push changes no values.
+struct PendingRecord {
+    round: usize,
+    comm_bytes: u64,
+    down_bytes: u64,
+    up_bytes: u64,
+    round_seconds: f64,
+    mean_loss: f64,
+    timing: RoundTiming,
+}
+
+impl PendingRecord {
+    fn into_record(self, accuracy: AccuracyReport) -> RoundRecord {
+        RoundRecord {
+            round: self.round,
+            accuracy,
+            comm_bytes: self.comm_bytes,
+            down_bytes: self.down_bytes,
+            up_bytes: self.up_bytes,
+            round_seconds: self.round_seconds,
+            mean_loss: self.mean_loss,
+            timing: self.timing,
+            sim_seconds: 0.0,
+        }
+    }
 }
 
 /// Run one federated training experiment.
@@ -201,208 +237,284 @@ pub fn run(
         "Mean top-k accuracy at the latest evaluation.",
     );
 
+    // Overlapped evaluation: when nothing reads the verdict before the
+    // next round starts — early stopping is off (patience 0 never
+    // stops), no snapshot captures stopper state mid-run, and the
+    // backend is shareable across threads — round t's evaluation runs
+    // on its own thread while round t+1 trains, taking eval latency
+    // off the round critical path. Each report is computed from a
+    // clone of the aggregated globals and joined in round order, so
+    // history rows are identical to the inline path.
+    let overlap_eval = cfg.patience == 0
+        && cfg.snapshot_every == 0
+        && cfg.workers > 1
+        && backend.as_parallel().is_some();
+    let train_stats_ref = &train_stats;
+    let test_batches_ref: &[(usize, usize)] = &test_batches;
+
     let mut rounds_run = start_round;
-    'rounds: for round in start_round..cfg.rounds {
-        let t_round = std::time::Instant::now();
-        let _span_round = crate::obs::trace::wall_span("round", 0)
-            .map(|g| g.arg("round", crate::util::json::Json::num(round as f64)));
-        let selected = sampler.sample(round);
+    std::thread::scope(|eval_scope| -> Result<()> {
+        let mut pending: Option<(
+            PendingRecord,
+            std::thread::ScopedJoinHandle<'_, Result<AccuracyReport>>,
+        )> = None;
+        'rounds: for round in start_round..cfg.rounds {
+            let t_round = std::time::Instant::now();
+            let _span_round = crate::obs::trace::wall_span("round", 0)
+                .map(|g| g.arg("round", crate::util::json::Json::num(round as f64)));
+            let selected = sampler.sample(round);
 
-        // -- injected transient failures (`--inject fail:<p>`): the
-        // client trains but its upload never arrives. Fates are a pure
-        // function of (seed, round, client) — zero RNG draws at rate 0.
-        let population = cfg.client_population() as u64;
-        let failed: Vec<bool> = selected
-            .iter()
-            .map(|&client| {
-                let stream = (round as u64)
-                    .wrapping_mul(population)
-                    .wrapping_add(client as u64);
-                fault::fail_fate(&cfg.inject, cfg.seed, stream)
-            })
-            .collect();
-        for &lost in &failed {
-            if lost {
-                fault::record(FaultKind::Fail);
-            }
-        }
-
-        // -- downlink (Algorithm 2 line 10): dense/q8/q8g compress each
-        // sub-model once and every selected client downloads the same
-        // payload; the delta downlink addresses each client separately,
-        // against the base replica that client last decoded. Either
-        // way, clients train from the *decoded* form, so a lossy
-        // broadcast affects training exactly as it would in deployment.
-        let bcast = transport.broadcast(round, &selected, &globals)?;
-
-        // -- local training (Algorithm 2 lines 11–15), fanned out over
-        // the engine's worker pool; results come back in deterministic
-        // (selected order, sub-model) order regardless of worker count.
-        let updates = engine.run_round(
-            cfg,
-            scheme,
-            backend,
-            transport.uplink(),
-            train,
-            partition,
-            &bcast,
-            round,
-            &selected,
-        )?;
-
-        // -- communication accounting + loss averaging, in item order.
-        // Both links are charged their actual *encoded* bytes per
-        // client (Table 4 honesty under compression — the dense-
-        // equivalent is tracked alongside on each link). Under the
-        // delta downlink a resynced client is charged a full model
-        // while its neighbors are charged small deltas.
-        let down_before = comm.downloaded();
-        let up_before = comm.uploaded();
-        let mut loss_sum = 0.0f64;
-        let mut loss_n = 0usize;
-        let mut timing = RoundTiming::default();
-        for (slot, per_model) in updates.iter().enumerate() {
-            for (j, upd) in per_model.iter().enumerate() {
-                comm.download_encoded(bcast.payload(slot, j).byte_len(), model_bytes_each);
-                timing.train_seconds += upd.stats.seconds;
-                timing.encode_seconds += upd.encode_seconds;
-                if failed[slot] {
-                    // The upload never arrived: no uplink bytes, and the
-                    // server never learns this client's loss.
-                    continue;
-                }
-                comm.upload_encoded(upd.encoded.byte_len(), model_bytes_each);
-                if upd.stats.steps > 0 {
-                    loss_sum += upd.stats.mean_loss;
-                    loss_n += 1;
+            // -- injected transient failures (`--inject fail:<p>`): the
+            // client trains but its upload never arrives. Fates are a pure
+            // function of (seed, round, client) — zero RNG draws at rate 0.
+            let population = cfg.client_population() as u64;
+            let failed: Vec<bool> = selected
+                .iter()
+                .map(|&client| {
+                    let stream = (round as u64)
+                        .wrapping_mul(population)
+                        .wrapping_add(client as u64);
+                    fault::fail_fate(&cfg.inject, cfg.seed, stream)
+                })
+                .collect();
+            for &lost in &failed {
+                if lost {
+                    fault::record(FaultKind::Fail);
                 }
             }
-        }
-        let down_bytes = comm.downloaded() - down_before;
-        let up_bytes = comm.uploaded() - up_before;
 
-        // -- decode + aggregation (line 17), uniform 1/S as in
-        // Algorithm 2. Decoding happens against the broadcast base each
-        // client actually received (`bcast.global(slot, j)`, which is
-        // client-specific under the delta downlink and differs from
-        // `globals[j]` whenever the downlink codec is lossy).
-        let t_agg = std::time::Instant::now();
-        {
-            let _span_agg = crate::obs::trace::wall_span("aggregate", 0);
-            let inject_payloads =
-                cfg.inject.corrupt > 0.0 || cfg.inject.truncate > 0.0 || cfg.inject.nan > 0.0;
-            let n_tensors = globals[0].tensors.len();
-            let n_values = globals[0].num_params();
-            for j in 0..n_models {
-                let mut decoded: Vec<ModelParams> = Vec::with_capacity(selected.len());
-                let mut sizes: Vec<usize> = Vec::with_capacity(selected.len());
-                for (slot, per_model) in updates.iter().enumerate() {
+            // -- downlink (Algorithm 2 line 10): dense/q8/q8g compress each
+            // sub-model once and every selected client downloads the same
+            // payload; the delta downlink addresses each client separately,
+            // against the base replica that client last decoded. Either
+            // way, clients train from the *decoded* form, so a lossy
+            // broadcast affects training exactly as it would in deployment.
+            let bcast = transport.broadcast(round, &selected, &globals)?;
+
+            // -- local training (Algorithm 2 lines 11–15), fanned out over
+            // the engine's worker pool; results come back in deterministic
+            // (selected order, sub-model) order regardless of worker count.
+            let updates = engine.run_round(
+                cfg,
+                scheme,
+                backend,
+                transport.uplink(),
+                train,
+                partition,
+                &bcast,
+                round,
+                &selected,
+            )?;
+
+            // -- communication accounting + loss averaging, in item order.
+            // Both links are charged their actual *encoded* bytes per
+            // client (Table 4 honesty under compression — the dense-
+            // equivalent is tracked alongside on each link). Under the
+            // delta downlink a resynced client is charged a full model
+            // while its neighbors are charged small deltas.
+            let down_before = comm.downloaded();
+            let up_before = comm.uploaded();
+            let mut loss_sum = 0.0f64;
+            let mut loss_n = 0usize;
+            let mut timing = RoundTiming::default();
+            for (slot, per_model) in updates.iter().enumerate() {
+                for (j, upd) in per_model.iter().enumerate() {
+                    comm.download_encoded(bcast.payload(slot, j).byte_len(), model_bytes_each);
+                    timing.train_seconds += upd.stats.seconds;
+                    timing.encode_seconds += upd.encode_seconds;
                     if failed[slot] {
+                        // The upload never arrived: no uplink bytes, and the
+                        // server never learns this client's loss.
                         continue;
                     }
-                    let client = selected[slot];
-                    let enc = &per_model[j].encoded;
-                    let update = if inject_payloads {
-                        let stream = fault::item_stream(
-                            round as u64,
-                            population,
-                            client as u64,
-                            n_models as u64,
-                            j as u64,
-                        );
-                        match inject_and_decode(
-                            cfg,
-                            &transport,
-                            bcast.global(slot, j),
-                            enc,
-                            stream,
-                            n_tensors,
-                            n_values,
-                        )? {
-                            Some(m) => m,
-                            None => continue, // discarded (bytes already charged)
+                    comm.upload_encoded(upd.encoded.byte_len(), model_bytes_each);
+                    if upd.stats.steps > 0 {
+                        loss_sum += upd.stats.mean_loss;
+                        loss_n += 1;
+                    }
+                }
+            }
+            let down_bytes = comm.downloaded() - down_before;
+            let up_bytes = comm.uploaded() - up_before;
+
+            // -- decode + aggregation (line 17), uniform 1/S as in
+            // Algorithm 2. Decoding happens against the broadcast base each
+            // client actually received (`bcast.global(slot, j)`, which is
+            // client-specific under the delta downlink and differs from
+            // `globals[j]` whenever the downlink codec is lossy).
+            let t_agg = std::time::Instant::now();
+            {
+                let _span_agg = crate::obs::trace::wall_span("aggregate", 0);
+                let inject_payloads =
+                    cfg.inject.corrupt > 0.0 || cfg.inject.truncate > 0.0 || cfg.inject.nan > 0.0;
+                let n_tensors = globals[0].tensors.len();
+                let n_values = globals[0].num_params();
+                for j in 0..n_models {
+                    let mut decoded: Vec<ModelParams> = Vec::with_capacity(selected.len());
+                    let mut sizes: Vec<usize> = Vec::with_capacity(selected.len());
+                    for (slot, per_model) in updates.iter().enumerate() {
+                        if failed[slot] {
+                            continue;
                         }
-                    } else {
-                        transport.decode(bcast.global(slot, j), enc)?
-                    };
-                    decoded.push(update);
-                    sizes.push(partition.clients[client].len());
+                        let client = selected[slot];
+                        let enc = &per_model[j].encoded;
+                        let update = if inject_payloads {
+                            let stream = fault::item_stream(
+                                round as u64,
+                                population,
+                                client as u64,
+                                n_models as u64,
+                                j as u64,
+                            );
+                            match inject_and_decode(
+                                cfg,
+                                &transport,
+                                bcast.global(slot, j),
+                                enc,
+                                stream,
+                                n_tensors,
+                                n_values,
+                            )? {
+                                Some(m) => m,
+                                None => continue, // discarded (bytes already charged)
+                            }
+                        } else {
+                            transport.decode(bcast.global(slot, j), enc)?
+                        };
+                        decoded.push(update);
+                        sizes.push(partition.clients[client].len());
+                    }
+                    if decoded.is_empty() {
+                        // Every contribution was lost or discarded this
+                        // round; the previous global survives unchanged.
+                        crate::log_warn!(
+                            "server: round {round}, sub-model {j}: no usable updates — keeping \
+                             previous global"
+                        );
+                        continue;
+                    }
+                    let refs: Vec<(&ModelParams, usize)> = decoded
+                        .iter()
+                        .zip(sizes.iter())
+                        .map(|(model, &n)| (model, n))
+                        .collect();
+                    globals[j] =
+                        aggregate_robust(&globals[j], &refs, Weighting::Uniform, cfg.robust)?;
                 }
-                if decoded.is_empty() {
-                    // Every contribution was lost or discarded this
-                    // round; the previous global survives unchanged.
-                    crate::log_warn!(
-                        "server: round {round}, sub-model {j}: no usable updates — keeping \
-                         previous global"
-                    );
-                    continue;
+            }
+            timing.aggregate_seconds = t_agg.elapsed().as_secs_f64();
+            comm.end_round();
+            let round_seconds = t_round.elapsed().as_secs_f64();
+            rounds_run = round + 1;
+            m_rounds.inc();
+            m_down.add(down_bytes);
+            m_up.add(up_bytes);
+            m_round_seconds.observe(round_seconds);
+
+            // -- evaluation. The metered fields are frozen here either
+            // way; the accuracy report joins them immediately (inline
+            // path) or when the overlap thread is reaped before the
+            // next record is pushed.
+            let mut stop = false;
+            if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+                if let Some((rec, handle)) = pending.take() {
+                    let report = handle.join().expect("overlap eval thread panicked")?;
+                    m_accuracy.set(report.mean_topk());
+                    stopper.observe(rec.round, report.mean_topk());
+                    history.push(rec.into_record(report));
                 }
-                let refs: Vec<(&ModelParams, usize)> = decoded
-                    .iter()
-                    .zip(sizes.iter())
-                    .map(|(model, &n)| (model, n))
-                    .collect();
-                globals[j] = aggregate_robust(&globals[j], &refs, Weighting::Uniform, cfg.robust)?;
+                let rec = PendingRecord {
+                    round,
+                    comm_bytes: comm.total(),
+                    down_bytes,
+                    up_bytes,
+                    round_seconds,
+                    mean_loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 },
+                    timing,
+                };
+                match (overlap_eval, backend.as_parallel()) {
+                    (true, Some(par)) => {
+                        // Round t's eval overlaps round t+1's training.
+                        // It reads a clone of the aggregated globals, so
+                        // the report is bitwise the inline one.
+                        let snapshot = globals.clone();
+                        let handle = eval_scope.spawn(move || {
+                            let _span_eval = crate::obs::trace::wall_span("evaluate", 0);
+                            evaluate(
+                                scheme,
+                                par,
+                                &snapshot,
+                                test,
+                                train_stats_ref,
+                                frequent_k,
+                                batch,
+                                test_batches_ref,
+                            )
+                        });
+                        pending = Some((rec, handle));
+                    }
+                    _ => {
+                        let report = {
+                            let _span_eval = crate::obs::trace::wall_span("evaluate", 0);
+                            // The otherwise-idle worker budget row-slices
+                            // the eval GEMMs (bitwise-safe at any count).
+                            let _budget =
+                                crate::kernels::parallel::set_kernel_threads(cfg.workers);
+                            evaluate(
+                                scheme,
+                                backend,
+                                &globals,
+                                test,
+                                train_stats_ref,
+                                frequent_k,
+                                batch,
+                                test_batches_ref,
+                            )?
+                        };
+                        m_accuracy.set(report.mean_topk());
+                        stop = stopper.observe(round, report.mean_topk());
+                        history.push(rec.into_record(report));
+                    }
+                }
+            }
+
+            // -- crash-resume snapshot (`--snapshot-every`), written after
+            // evaluation so the stopper's verdict for this round is
+            // captured; a kill at any point later resumes from here.
+            // (Never concurrent with an overlapped eval: the overlap
+            // gate requires `--snapshot-every 0`.)
+            if cfg.snapshot_every > 0 && (round + 1) % cfg.snapshot_every == 0 {
+                let dir = cfg
+                    .snapshot_dir
+                    .as_deref()
+                    .expect("config validation pairs --snapshot-every with --resume");
+                let (uplink_state, downlink_state) = transport.snapshot_state();
+                RunSnapshot {
+                    next_round: round + 1,
+                    globals: globals.clone(),
+                    history: history.clone(),
+                    comm: comm.clone(),
+                    stopper: stopper.snapshot_parts(),
+                    uplink_state,
+                    downlink_state,
+                }
+                .save(dir, fingerprint)?;
+            }
+            if stop {
+                break 'rounds;
             }
         }
-        timing.aggregate_seconds = t_agg.elapsed().as_secs_f64();
-        comm.end_round();
-        let round_seconds = t_round.elapsed().as_secs_f64();
-        rounds_run = round + 1;
-        m_rounds.inc();
-        m_down.add(down_bytes);
-        m_up.add(up_bytes);
-        m_round_seconds.observe(round_seconds);
 
-        // -- evaluation
-        let mut stop = false;
-        if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            let report = {
-                let _span_eval = crate::obs::trace::wall_span("evaluate", 0);
-                evaluate(
-                    scheme, backend, &globals, test, &train_stats, frequent_k, batch,
-                    &test_batches,
-                )?
-            };
+        // Reap the last round's overlapped evaluation (the loop defers
+        // each join until the *next* record is due).
+        if let Some((rec, handle)) = pending.take() {
+            let report = handle.join().expect("overlap eval thread panicked")?;
             m_accuracy.set(report.mean_topk());
-            history.push(RoundRecord {
-                round,
-                accuracy: report,
-                comm_bytes: comm.total(),
-                down_bytes,
-                up_bytes,
-                round_seconds,
-                mean_loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 },
-                timing,
-                sim_seconds: 0.0,
-            });
-            stop = stopper.observe(round, report.mean_topk());
+            stopper.observe(rec.round, report.mean_topk());
+            history.push(rec.into_record(report));
         }
-
-        // -- crash-resume snapshot (`--snapshot-every`), written after
-        // evaluation so the stopper's verdict for this round is
-        // captured; a kill at any point later resumes from here.
-        if cfg.snapshot_every > 0 && (round + 1) % cfg.snapshot_every == 0 {
-            let dir = cfg
-                .snapshot_dir
-                .as_deref()
-                .expect("config validation pairs --snapshot-every with --resume");
-            let (uplink_state, downlink_state) = transport.snapshot_state();
-            RunSnapshot {
-                next_round: round + 1,
-                globals: globals.clone(),
-                history: history.clone(),
-                comm: comm.clone(),
-                stopper: stopper.snapshot_parts(),
-                uplink_state,
-                downlink_state,
-            }
-            .save(dir, fingerprint)?;
-        }
-        if stop {
-            break 'rounds;
-        }
-    }
+        Ok(())
+    })?;
 
     let best_rec = *history
         .best()
@@ -658,6 +770,48 @@ mod tests {
         assert!(out.comm.download_compression() > 2.0);
         // …and training still learns through a lossy per-client downlink.
         assert!(out.best.top1 > 0.02, "top1 {}", out.best.top1);
+    }
+
+    #[test]
+    fn overlapped_eval_matches_inline_history() {
+        // workers > 1 + patience 0 + no snapshots + RustBackend flips
+        // the overlap gate on; every deterministic history column must
+        // be bitwise what the inline (workers = 1) path records.
+        let run_with = |workers: usize| {
+            let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+            cfg.rounds = 4;
+            cfg.patience = 0;
+            cfg.clients = 4;
+            cfg.clients_per_round = 2;
+            cfg.local_epochs = 1;
+            cfg.workers = workers;
+            let data = generate_preset(&cfg.preset, cfg.seed);
+            let part = noniid(&data.train, &NonIidOptions::new(cfg.clients), cfg.seed);
+            let scheme = scheme_for(&cfg, Algo::FedMlh, &data.train);
+            let backend = RustBackend::new();
+            run(&cfg, scheme.as_ref(), &backend, &data.train, &data.test, &part).unwrap()
+        };
+        let inline = run_with(1);
+        let overlapped = run_with(2);
+        assert_eq!(inline.history.len(), overlapped.history.len());
+        for (a, b) in inline
+            .history
+            .records
+            .iter()
+            .zip(overlapped.history.records.iter())
+        {
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.accuracy, b.accuracy, "round {}", a.round);
+            assert_eq!(
+                (a.comm_bytes, a.down_bytes, a.up_bytes),
+                (b.comm_bytes, b.down_bytes, b.up_bytes),
+                "round {}",
+                a.round
+            );
+            assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "round {}", a.round);
+        }
+        assert_eq!(inline.best.top1, overlapped.best.top1);
+        assert_eq!(inline.best_round, overlapped.best_round);
     }
 
     #[test]

@@ -84,8 +84,8 @@ use super::wire::{
 };
 
 /// Which codec compresses the server→client broadcast (CLI:
-/// `--down-codec`). `dense`/`q8`/`q8g` encode the full model state
-/// every round; `topk`/`topkv` select the **delta downlink** — a
+/// `--down-codec`). `dense`/`q8`/`q8g`/`q4g` encode the full model
+/// state every round; `topk`/`topkv` select the **delta downlink** — a
 /// per-client, versioned delta against the model that client last
 /// decoded ([`DeltaDownlink`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -96,6 +96,8 @@ pub enum DownCodec {
     QuantI8,
     /// Group-wise int8: one scale per `block` values (`q8g:<block>`).
     QuantI8Group { block: usize },
+    /// Group-wise int4, two values per byte (`q4g:<block>`, ~8×).
+    QuantI4Group { block: usize },
     /// Per-client top-k delta vs the client's last decoded base.
     TopK { frac: f32 },
     /// Same, with the delta+varint packed index stream.
@@ -111,6 +113,7 @@ impl DownCodec {
             CodecSpec::Dense => DownCodec::Dense,
             CodecSpec::QuantI8 => DownCodec::QuantI8,
             CodecSpec::QuantI8Group { block } => DownCodec::QuantI8Group { block },
+            CodecSpec::QuantI4Group { block } => DownCodec::QuantI4Group { block },
             CodecSpec::TopK { frac } => DownCodec::TopK { frac },
             CodecSpec::TopKPacked { frac } => DownCodec::TopKPacked { frac },
         })
@@ -122,6 +125,7 @@ impl DownCodec {
             DownCodec::Dense => "dense".to_string(),
             DownCodec::QuantI8 => "q8".to_string(),
             DownCodec::QuantI8Group { block } => format!("q8g:{block}"),
+            DownCodec::QuantI4Group { block } => format!("q4g:{block}"),
             DownCodec::TopK { frac } => format!("topk:{frac}"),
             DownCodec::TopKPacked { frac } => format!("topkv:{frac}"),
         }
@@ -142,6 +146,7 @@ impl DownCodec {
             DownCodec::Dense => CodecSpec::Dense,
             DownCodec::QuantI8 => CodecSpec::QuantI8,
             DownCodec::QuantI8Group { block } => CodecSpec::QuantI8Group { block: *block },
+            DownCodec::QuantI4Group { block } => CodecSpec::QuantI4Group { block: *block },
             DownCodec::TopK { frac } | DownCodec::TopKPacked { frac } => {
                 CodecSpec::TopKPacked { frac: *frac }
             }
@@ -1205,6 +1210,7 @@ mod tests {
             DownCodec::Dense,
             DownCodec::QuantI8,
             DownCodec::QuantI8Group { block: 32 },
+            DownCodec::QuantI4Group { block: 16 },
             DownCodec::TopK { frac: 0.1 },
             DownCodec::TopKPacked { frac: 0.25 },
         ] {
@@ -1215,6 +1221,12 @@ mod tests {
         assert!(DownCodec::parse("gzip", 0.1).is_err());
         assert!(DownCodec::TopK { frac: 0.1 }.is_delta());
         assert!(!DownCodec::QuantI8Group { block: 64 }.is_delta());
+        // q4g is a full-state broadcast, not a delta codec.
+        assert!(!DownCodec::QuantI4Group { block: 64 }.is_delta());
+        assert_eq!(
+            DownCodec::QuantI4Group { block: 64 }.wire_spec(),
+            CodecSpec::QuantI4Group { block: 64 }
+        );
     }
 
     #[test]
@@ -1224,6 +1236,7 @@ mod tests {
             CodecSpec::Dense,
             CodecSpec::QuantI8,
             CodecSpec::QuantI8Group { block: 16 },
+            CodecSpec::QuantI4Group { block: 16 },
             CodecSpec::TopK { frac: 0.2 },
             CodecSpec::TopKPacked { frac: 0.2 },
         ] {
@@ -1485,6 +1498,29 @@ mod tests {
     }
 
     #[test]
+    fn q4g_downlink_broadcasts_within_block_bounds() {
+        let (global, _) = random_pair(20);
+        let bcast = StatelessDownlink::new(DownCodec::QuantI4Group { block: 8 })
+            .broadcast(0, &[0], &[global.clone()])
+            .unwrap();
+        let decoded = bcast.global(0, 0);
+        for (t_g, t_d) in global.tensors.iter().zip(decoded.tensors.iter()) {
+            for (chunk_g, chunk_d) in t_g.data().chunks(8).zip(t_d.data().chunks(8)) {
+                let scale = chunk_g.iter().fold(0.0f32, |m, &v| m.max(v.abs())) / 7.0;
+                for (&a, &b) in chunk_g.iter().zip(chunk_d.iter()) {
+                    assert!((a - b).abs() <= 0.5 * scale + 1e-7);
+                }
+            }
+        }
+        // Sub-byte: strictly smaller than the q8g broadcast of the
+        // same model at the same block.
+        let q8g = StatelessDownlink::new(DownCodec::QuantI8Group { block: 8 })
+            .broadcast(0, &[0], &[global.clone()])
+            .unwrap();
+        assert!(bcast.payload(0, 0).byte_len() < q8g.payload(0, 0).byte_len());
+    }
+
+    #[test]
     fn stateless_downlink_rejects_delta_codecs() {
         let (global, _) = random_pair(11);
         let globals = vec![global];
@@ -1596,6 +1632,7 @@ mod tests {
             DownCodec::Dense,
             DownCodec::QuantI8,
             DownCodec::QuantI8Group { block: 16 },
+            DownCodec::QuantI4Group { block: 16 },
         ] {
             let bcast = StatelessDownlink::new(codec)
                 .broadcast(0, &[0], &[global.clone()])

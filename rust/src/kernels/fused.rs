@@ -11,7 +11,7 @@
 
 #![allow(clippy::too_many_arguments)]
 
-use super::gemm;
+use super::{gemm, parallel, simd};
 
 /// Column-block width of the fused transpose-matmul + SGD kernel: the
 /// gradient is computed `[m, SGD_COL_BLOCK]` columns at a time into a
@@ -37,7 +37,7 @@ pub fn gemm_bias(
     k: usize,
     n: usize,
 ) {
-    gemm::nn_core(a, b, Some(bias), out, m, k, n, false);
+    gemm::nn_dispatch(a, b, Some(bias), out, m, k, n, false);
 }
 
 /// `out[m,n] = relu(a[m,k] @ b[k,n] + bias)` — the fused hidden-layer
@@ -52,7 +52,7 @@ pub fn gemm_bias_relu(
     k: usize,
     n: usize,
 ) {
-    gemm::nn_core(a, b, Some(bias), out, m, k, n, true);
+    gemm::nn_dispatch(a, b, Some(bias), out, m, k, n, true);
 }
 
 #[inline]
@@ -64,6 +64,11 @@ pub(crate) fn sigmoid(z: f32) -> f32 {
 /// both the numerically-stable mean loss (f64 accumulation in element
 /// order — bitwise identical to [`crate::model::mlp::bce_loss`]) and
 /// `dz = (sigmoid(z) − y) · scale`.
+///
+/// Stays scalar even with the `simd` feature on: the loss is
+/// transcendental (`exp`, `ln_1p`) and any vector approximation would
+/// change bits (see [`super::simd`]'s module docs). One pass over
+/// `[batch, out]` — small next to the step's three GEMMs.
 pub fn bce_loss_dz(z: &[f32], y: &[f32], scale: f32, dz: &mut [f32]) -> f32 {
     debug_assert_eq!(z.len(), y.len());
     debug_assert_eq!(z.len(), dz.len());
@@ -80,11 +85,7 @@ pub fn bce_loss_dz(z: &[f32], y: &[f32], scale: f32, dz: &mut [f32]) -> f32 {
 /// pre-activation was `≤ 0`, so no pre-activation copy needs to exist.
 pub fn relu_backward_mask(grad: &mut [f32], h: &[f32]) {
     debug_assert_eq!(grad.len(), h.len());
-    for (g, &hv) in grad.iter_mut().zip(h.iter()) {
-        if hv <= 0.0 {
-            *g = 0.0;
-        }
-    }
+    simd::relu_mask(grad, h);
 }
 
 /// Fused weight gradient + SGD update:
@@ -116,18 +117,42 @@ pub fn gemm_tn_sgd(
         scratch.len(),
         m * nb_max
     );
+    let threads = parallel::plan(m, k * m * n, 1);
+    if threads > 1 {
+        parallel::par_tn_sgd(a, b, param, lr, k, m, n, scratch, threads);
+    } else {
+        tn_sgd_rows(a, b, param, lr, k, m, n, 0, m, scratch);
+    }
+}
+
+/// [`gemm_tn_sgd`] restricted to the parameter-row window
+/// `[i0, i0 + rows)`: `param` is that window's `[rows, n]` slice and
+/// `scratch` holds at least `rows · min(SGD_COL_BLOCK, n)` floats. The
+/// column-block walk and each element's ascending-k accumulation are
+/// unchanged, so any row partition reproduces the sequential bits.
+pub(crate) fn tn_sgd_rows(
+    a: &[f32],
+    b: &[f32],
+    param: &mut [f32],
+    lr: f32,
+    k: usize,
+    m: usize,
+    n: usize,
+    i0: usize,
+    rows: usize,
+    scratch: &mut [f32],
+) {
+    debug_assert_eq!(param.len(), rows * n);
+    let nb_max = SGD_COL_BLOCK.min(n);
     let mut j0 = 0;
     while j0 < n {
         let nb = nb_max.min(n - j0);
-        let g = &mut scratch[..m * nb];
+        let g = &mut scratch[..rows * nb];
         g.fill(0.0);
-        gemm::tn_accumulate_window(a, b, g, k, m, n, j0, nb);
-        for i in 0..m {
+        gemm::tn_accumulate_window(a, b, g, k, m, n, i0, rows, j0, nb);
+        for i in 0..rows {
             let prow = &mut param[i * n + j0..i * n + j0 + nb];
-            let grow = &g[i * nb..(i + 1) * nb];
-            for (p, &gv) in prow.iter_mut().zip(grow.iter()) {
-                *p -= lr * gv;
-            }
+            simd::axpy_sub(prow, lr, &g[i * nb..(i + 1) * nb]);
         }
         j0 += nb;
     }
@@ -141,9 +166,7 @@ pub fn sgd_bias_colsum(bias: &mut [f32], grad: &[f32], m: usize, n: usize, lr: f
     debug_assert_eq!(bias.len(), n);
     debug_assert_eq!(grad.len(), m * n);
     for row in grad.chunks_exact(n) {
-        for (b, &g) in bias.iter_mut().zip(row.iter()) {
-            *b -= lr * g;
-        }
+        simd::axpy_sub(bias, lr, row);
     }
 }
 

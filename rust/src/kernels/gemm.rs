@@ -4,8 +4,17 @@
 //! them fully overwrite `out` and keep each output element's reduction
 //! in a fixed order (see the module docs in [`super`]), so results are
 //! independent of batch position and bitwise reproducible run to run.
+//!
+//! Innermost loops dispatch through [`super::simd`] (AVX2 when the
+//! `simd` feature is on and the CPU has it, a verbatim scalar body
+//! otherwise — same bits either way), and the public entry points
+//! row-slice across scoped threads via [`super::parallel`] when the
+//! calling thread has an intra-kernel budget and the call is large
+//! enough.
 
 #![allow(clippy::too_many_arguments)]
+
+use super::{parallel, simd};
 
 /// Rows of A processed together by the `nn` kernel (B-row reuse).
 pub const MR: usize = 4;
@@ -26,7 +35,30 @@ const _: () = assert!(MR == 4 && KB == 4, "gemm bodies are unrolled for 4-wide b
 /// Equivalent to [`nn_core`] with no bias and no ReLU; the fused
 /// variants live in [`super::fused`].
 pub fn gemm_nn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    nn_core(a, b, None, out, m, k, n, false);
+    nn_dispatch(a, b, None, out, m, k, n, false);
+}
+
+/// Shared `nn` entry point: sequential below the parallel threshold,
+/// row-sliced across scoped threads above it. Bitwise identical either
+/// way — output rows are independent and the core's per-element order
+/// does not depend on row batching.
+#[inline]
+pub(crate) fn nn_dispatch(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) {
+    let threads = parallel::plan(m, m * k * n, MR);
+    if threads > 1 {
+        parallel::par_nn(a, b, bias, out, m, k, n, relu, threads);
+    } else {
+        nn_core(a, b, bias, out, m, k, n, relu);
+    }
 }
 
 /// Shared `nn` micro-kernel: `out = a @ b [+ bias] [then ReLU]`.
@@ -73,21 +105,11 @@ pub(crate) fn nn_core(
         for kk in 0..k {
             let brow = &b[kk * n..(kk + 1) * n];
             let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
-            for j in 0..n {
-                let bv = brow[j];
-                o0[j] += x0 * bv;
-                o1[j] += x1 * bv;
-                o2[j] += x2 * bv;
-                o3[j] += x3 * bv;
-            }
+            simd::quad_axpy(o0, o1, o2, o3, x0, x1, x2, x3, brow);
         }
         if relu {
             for row in [o0, o1, o2, o3] {
-                for v in row.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
+                simd::relu(row);
             }
         }
         i += MR;
@@ -97,17 +119,10 @@ pub(crate) fn nn_core(
         init_row(orow);
         let arow = &a[i * k..(i + 1) * k];
         for (kk, &x) in arow.iter().enumerate() {
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += x * bv;
-            }
+            simd::axpy(orow, x, &b[kk * n..(kk + 1) * n]);
         }
         if relu {
-            for v in orow.iter_mut() {
-                if *v < 0.0 {
-                    *v = 0.0;
-                }
-            }
+            simd::relu(orow);
         }
         i += 1;
     }
@@ -119,18 +134,26 @@ pub fn gemm_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usi
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
+    let threads = parallel::plan(m, k * m * n, 1);
+    if threads > 1 {
+        parallel::par_tn(a, b, out, k, m, n, threads);
+        return;
+    }
     out.fill(0.0);
-    tn_accumulate_window(a, b, out, k, m, n, 0, n);
+    tn_accumulate_window(a, b, out, k, m, n, 0, m, 0, n);
 }
 
-/// Accumulate `out[i,j] += Σ_kk a[kk·m + i] · b[kk·n + j0 + j]` over the
-/// column window `[j0, j0 + nb)`; `out` rows are `nb` wide and must be
-/// pre-initialized by the caller.
+/// Accumulate
+/// `out[i,j] += Σ_kk a[kk·m + i0 + i] · b[kk·n + j0 + j]` over the
+/// output-row window `[i0, i0 + rows)` and column window
+/// `[j0, j0 + nb)`; `out` is `[rows, nb]` and must be pre-initialized
+/// by the caller.
 ///
 /// The reduction dimension is blocked by [`KB`], streaming the output
 /// window `⌈k / KB⌉` times instead of `k` times; within a block the
 /// terms are added one at a time, so each element still accumulates in
-/// strict ascending-kk order.
+/// strict ascending-kk order — independent of both windows, which is
+/// what lets [`super::parallel`] row-slice calls bitwise-identically.
 #[inline(always)]
 pub(crate) fn tn_accumulate_window(
     a: &[f32],
@@ -139,46 +162,38 @@ pub(crate) fn tn_accumulate_window(
     k: usize,
     m: usize,
     n: usize,
+    i0: usize,
+    rows: usize,
     j0: usize,
     nb: usize,
 ) {
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * nb);
+    debug_assert_eq!(out.len(), rows * nb);
+    debug_assert!(i0 + rows <= m);
     debug_assert!(j0 + nb <= n);
     let mut kk = 0;
     while kk + KB <= k {
-        let a0 = &a[kk * m..(kk + 1) * m];
-        let a1 = &a[(kk + 1) * m..(kk + 2) * m];
-        let a2 = &a[(kk + 2) * m..(kk + 3) * m];
-        let a3 = &a[(kk + 3) * m..(kk + 4) * m];
+        let a0 = &a[kk * m + i0..kk * m + i0 + rows];
+        let a1 = &a[(kk + 1) * m + i0..(kk + 1) * m + i0 + rows];
+        let a2 = &a[(kk + 2) * m + i0..(kk + 2) * m + i0 + rows];
+        let a3 = &a[(kk + 3) * m + i0..(kk + 3) * m + i0 + rows];
         let b0 = &b[kk * n + j0..kk * n + j0 + nb];
         let b1 = &b[(kk + 1) * n + j0..(kk + 1) * n + j0 + nb];
         let b2 = &b[(kk + 2) * n + j0..(kk + 2) * n + j0 + nb];
         let b3 = &b[(kk + 3) * n + j0..(kk + 3) * n + j0 + nb];
-        for i in 0..m {
+        for i in 0..rows {
             let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
             let orow = &mut out[i * nb..(i + 1) * nb];
-            for j in 0..nb {
-                let mut acc = orow[j];
-                acc += x0 * b0[j];
-                acc += x1 * b1[j];
-                acc += x2 * b2[j];
-                acc += x3 * b3[j];
-                orow[j] = acc;
-            }
+            simd::quad_acc(orow, x0, x1, x2, x3, b0, b1, b2, b3);
         }
         kk += KB;
     }
     while kk < k {
-        let ar = &a[kk * m..(kk + 1) * m];
+        let ar = &a[kk * m + i0..kk * m + i0 + rows];
         let br = &b[kk * n + j0..kk * n + j0 + nb];
-        for i in 0..m {
-            let x = ar[i];
-            let orow = &mut out[i * nb..(i + 1) * nb];
-            for (o, &bv) in orow.iter_mut().zip(br.iter()) {
-                *o += x * bv;
-            }
+        for i in 0..rows {
+            simd::axpy(&mut out[i * nb..(i + 1) * nb], ar[i], br);
         }
         kk += 1;
     }
@@ -197,6 +212,18 @@ pub fn gemm_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usi
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * k);
+    let threads = parallel::plan(m, m * n * k, 2);
+    if threads > 1 {
+        parallel::par_nt(a, b, out, m, n, k, threads);
+    } else {
+        nt_core(a, b, out, m, n, k);
+    }
+}
+
+/// The `nt` kernel body on a contiguous row range (row-slicing is
+/// bitwise-safe: the 2-row `dot2` pairing and the single-row `dot`
+/// produce identical accumulation patterns per output).
+pub(crate) fn nt_core(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
     let mut i = 0;
     while i + 2 <= m {
         let a0 = &a[i * n..(i + 1) * n];
@@ -219,64 +246,19 @@ pub fn gemm_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usi
     }
 }
 
-/// Lane-parallel dot product with a fixed combine order.
+/// Lane-parallel dot product with a fixed combine order (dispatches
+/// through [`super::simd`]; the scalar body there is the original
+/// [`LANES`] partial-sum loop, verbatim).
 #[inline]
 pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut lanes = [0.0f32; LANES];
-    let mut ac = a.chunks_exact(LANES);
-    let mut bc = b.chunks_exact(LANES);
-    while let (Some(av), Some(bv)) = (ac.next(), bc.next()) {
-        for l in 0..LANES {
-            lanes[l] += av[l] * bv[l];
-        }
-    }
-    let mut tail = 0.0f32;
-    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
-        tail += x * y;
-    }
-    let mut acc = 0.0f32;
-    for &l in lanes.iter() {
-        acc += l;
-    }
-    acc + tail
+    simd::dot(a, b)
 }
 
 /// Two lane-parallel dots sharing one streamed `b` row; each output
 /// uses exactly the same accumulation pattern as [`dot`].
 #[inline]
 fn dot2(a0: &[f32], a1: &[f32], b: &[f32]) -> (f32, f32) {
-    debug_assert_eq!(a0.len(), b.len());
-    debug_assert_eq!(a1.len(), b.len());
-    let mut l0 = [0.0f32; LANES];
-    let mut l1 = [0.0f32; LANES];
-    let mut a0c = a0.chunks_exact(LANES);
-    let mut a1c = a1.chunks_exact(LANES);
-    let mut bc = b.chunks_exact(LANES);
-    while let (Some(x0), Some(x1), Some(y)) = (a0c.next(), a1c.next(), bc.next()) {
-        for l in 0..LANES {
-            l0[l] += x0[l] * y[l];
-            l1[l] += x1[l] * y[l];
-        }
-    }
-    let mut t0 = 0.0f32;
-    let mut t1 = 0.0f32;
-    for ((&x0, &x1), &y) in a0c
-        .remainder()
-        .iter()
-        .zip(a1c.remainder())
-        .zip(bc.remainder())
-    {
-        t0 += x0 * y;
-        t1 += x1 * y;
-    }
-    let mut s0 = 0.0f32;
-    let mut s1 = 0.0f32;
-    for l in 0..LANES {
-        s0 += l0[l];
-        s1 += l1[l];
-    }
-    (s0 + t0, s1 + t1)
+    simd::dot2(a0, a1, b)
 }
 
 #[cfg(test)]

@@ -25,6 +25,18 @@
 //! - [`sparse`] — a CSR batch representation for the feature-hashed
 //!   input layer: layer-1 forward and its weight gradient scale with
 //!   the batch's nonzero count instead of `batch × d`.
+//! - [`simd`] — the innermost loops of all of the above, behind one
+//!   dispatch layer: a verbatim scalar body (always compiled, the only
+//!   body without the `simd` cargo feature) and an AVX2 body that
+//!   vectorizes across independent output elements only — no FMA, no
+//!   reassociation — so both bodies produce **identical bits** and the
+//!   feature can be flipped without perturbing a single pinned test.
+//! - [`parallel`] — intra-step parallelism: row-sliced scoped threads
+//!   inside one GEMM/CSR call, budgeted per thread by the round engine
+//!   (`--workers` beyond the item count flows down here, so a single
+//!   huge client saturates cores). Each output element is still
+//!   written by exactly one thread in the same order, so any thread
+//!   count is bitwise identical to sequential.
 //!
 //! # Conventions (the whole-module contract)
 //!
@@ -47,4 +59,6 @@
 pub mod fused;
 pub mod gemm;
 pub mod naive;
+pub mod parallel;
+pub mod simd;
 pub mod sparse;

@@ -1,0 +1,278 @@
+//! Intra-step parallel GEMM: row-sliced scoped threads inside one
+//! kernel call.
+//!
+//! `--workers` parallelizes *across* `(client, sub-model)` work items;
+//! when a round has fewer items than cores (one huge client, serving a
+//! single giant batch), the spare cores used to idle. The drivers here
+//! split a single kernel call's **output rows** into contiguous chunks
+//! and run each chunk on its own scoped thread:
+//!
+//! - `nn` (forward): output rows are independent; chunks are aligned to
+//!   [`gemm::MR`] so every thread runs the identical 4-row blocked body
+//!   the sequential kernel runs.
+//! - `nt` (backprop `dz @ wᵀ`): dot-product rows are independent;
+//!   chunks align to the 2-row `dot2` pairing.
+//! - `tn` / `tn_sgd` (weight gradient + update): **parameter** rows are
+//!   independent — each thread owns a contiguous `param` row chunk and
+//!   its own slice of the caller's SGD scratch, reading the shared
+//!   `a`/`b` operands.
+//! - CSR layer-1 forward: batch rows are independent.
+//!
+//! Not parallelized: the CSR *scatter* update
+//! ([`super::sparse::csr_gemm_tn_sgd`] — different batch rows write the
+//! same parameter rows, so row-slicing would race and any fix would
+//! reorder the scatter sum), and the bias column-sum (a `[n]`-sized
+//! reduction in batch order — memory-bound and tiny).
+//!
+//! # Determinism
+//!
+//! Every kernel's per-element summation order is independent of how
+//! rows are batched (the contract in [`super`]'s docs, pinned by
+//! `tests/kernel_properties.rs`), so a row-sliced run is **bitwise
+//! identical** to the sequential one at any thread count — there is no
+//! reduction across threads at all, each output element is written by
+//! exactly one thread. `tests/parallel_determinism.rs` keeps pinning
+//! the end-to-end property.
+//!
+//! # Thread budget
+//!
+//! The budget is **thread-local** ([`set_kernel_threads`] returns an
+//! RAII guard restoring the previous value on drop) because kernels
+//! are called from deep inside backends that should not thread a knob
+//! through every signature, and because each of the round engine's
+//! pool workers needs its own share: the engine sets
+//! `workers / pool_threads` inside each worker so intra-step threads ×
+//! pool threads ≈ `--workers`. Everything else (serving, eval, tests)
+//! inherits 1 on its own thread unless it opts in. Kernel calls below
+//! [`PAR_MIN_FLOPS`] stay sequential — at test/toy shapes the spawn
+//! cost would dominate and tiny chunks defeat the cache blocking.
+
+use std::cell::Cell;
+
+use super::sparse::CsrBatch;
+use super::{fused, gemm, sparse};
+
+thread_local! {
+    /// Per-thread intra-kernel thread budget (1 = sequential).
+    static KERNEL_THREADS: Cell<usize> = const { Cell::new(1) };
+}
+
+/// Smallest kernel (measured as `m·k·n` multiply-adds, or `nnz·n` for
+/// CSR) worth splitting across threads: ~2M flops ≈ a millisecond of
+/// scalar work, comfortably above scoped-spawn overhead.
+pub const PAR_MIN_FLOPS: usize = 1 << 21;
+
+/// The calling thread's intra-kernel thread budget.
+pub fn kernel_threads() -> usize {
+    KERNEL_THREADS.with(|t| t.get()).max(1)
+}
+
+/// Set this thread's budget; dropping the guard restores the previous
+/// value (so nested scopes compose). `n = 0` clamps to 1.
+pub fn set_kernel_threads(n: usize) -> ThreadBudgetGuard {
+    ThreadBudgetGuard {
+        prev: KERNEL_THREADS.with(|t| t.replace(n.max(1))),
+        _pinned: std::marker::PhantomData,
+    }
+}
+
+/// RAII guard from [`set_kernel_threads`]; deliberately `!Send` — the
+/// budget it restores belongs to the thread that created it.
+#[derive(Debug)]
+pub struct ThreadBudgetGuard {
+    prev: usize,
+    _pinned: std::marker::PhantomData<*const ()>,
+}
+
+impl Drop for ThreadBudgetGuard {
+    fn drop(&mut self) {
+        KERNEL_THREADS.with(|t| t.set(self.prev));
+    }
+}
+
+/// Threads a kernel call should actually use: the global budget,
+/// capped by work size and by how many `align`-row chunks exist.
+/// Returns 1 (sequential) for small kernels or a budget of 1.
+#[inline]
+pub(crate) fn plan(rows: usize, flops: usize, align: usize) -> usize {
+    let budget = kernel_threads();
+    if budget <= 1 || flops < PAR_MIN_FLOPS {
+        return 1;
+    }
+    budget.min(rows.div_ceil(align)).max(1)
+}
+
+/// Rows per chunk for `threads` chunks over `rows` rows, rounded up to
+/// a multiple of `align` (so every non-final chunk runs the blocked
+/// kernel body only).
+#[inline]
+fn chunk_rows(rows: usize, threads: usize, align: usize) -> usize {
+    rows.div_ceil(threads).div_ceil(align) * align
+}
+
+/// Row-sliced `nn` forward: `out = a @ b [+ bias] [then ReLU]`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn par_nn(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+    threads: usize,
+) {
+    let cr = chunk_rows(m, threads, gemm::MR);
+    std::thread::scope(|s| {
+        for (ci, out_chunk) in out.chunks_mut(cr * n).enumerate() {
+            let rows = out_chunk.len() / n;
+            let a_sub = &a[ci * cr * k..(ci * cr + rows) * k];
+            s.spawn(move || gemm::nn_core(a_sub, b, bias, out_chunk, rows, k, n, relu));
+        }
+    });
+}
+
+/// Row-sliced `nt`: `out[m,k] = a[m,n] @ b[k,n]ᵀ`.
+pub(crate) fn par_nt(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    n: usize,
+    kdim: usize,
+    threads: usize,
+) {
+    let cr = chunk_rows(m, threads, 2);
+    std::thread::scope(|s| {
+        for (ci, out_chunk) in out.chunks_mut(cr * kdim).enumerate() {
+            let rows = out_chunk.len() / kdim;
+            let a_sub = &a[ci * cr * n..(ci * cr + rows) * n];
+            s.spawn(move || gemm::nt_core(a_sub, b, out_chunk, rows, n, kdim));
+        }
+    });
+}
+
+/// Row-sliced `tn`: `out[m,n] = a[k,m]ᵀ @ b[k,n]` — each thread owns a
+/// contiguous output-row window and reads `a` at its row offset.
+pub(crate) fn par_tn(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    threads: usize,
+) {
+    let cr = chunk_rows(m, threads, 1);
+    std::thread::scope(|s| {
+        for (ci, out_chunk) in out.chunks_mut(cr * n).enumerate() {
+            let rows = out_chunk.len() / n;
+            let i0 = ci * cr;
+            s.spawn(move || {
+                out_chunk.fill(0.0);
+                gemm::tn_accumulate_window(a, b, out_chunk, k, m, n, i0, rows, 0, n);
+            });
+        }
+    });
+}
+
+/// Row-sliced fused weight-gradient + SGD update: each thread owns a
+/// contiguous `param` row chunk and a matching slice of the caller's
+/// scratch, so no two threads ever touch the same scratch or parameter
+/// byte.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn par_tn_sgd(
+    a: &[f32],
+    b: &[f32],
+    param: &mut [f32],
+    lr: f32,
+    k: usize,
+    m: usize,
+    n: usize,
+    scratch: &mut [f32],
+    threads: usize,
+) {
+    let nb_max = fused::SGD_COL_BLOCK.min(n);
+    let cr = chunk_rows(m, threads, 1);
+    let scratch = &mut scratch[..m * nb_max];
+    std::thread::scope(|s| {
+        for ((ci, param_chunk), scratch_chunk) in param
+            .chunks_mut(cr * n)
+            .enumerate()
+            .zip(scratch.chunks_mut(cr * nb_max))
+        {
+            let rows = param_chunk.len() / n;
+            let i0 = ci * cr;
+            s.spawn(move || {
+                fused::tn_sgd_rows(a, b, param_chunk, lr, k, m, n, i0, rows, scratch_chunk);
+            });
+        }
+    });
+}
+
+/// Row-sliced CSR layer-1 forward: batch rows are independent, each
+/// thread scans its own rows' nonzeros.
+pub(crate) fn par_csr_forward(
+    csr: &CsrBatch,
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    n: usize,
+    relu: bool,
+    threads: usize,
+) {
+    let cr = chunk_rows(csr.rows(), threads, 1);
+    std::thread::scope(|s| {
+        for (ci, out_chunk) in out.chunks_mut(cr * n).enumerate() {
+            let r0 = ci * cr;
+            s.spawn(move || sparse::csr_nn_rows(csr, w, bias, out_chunk, n, relu, r0));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_guard_nests_and_restores() {
+        assert_eq!(kernel_threads(), 1);
+        {
+            let _outer = set_kernel_threads(4);
+            assert_eq!(kernel_threads(), 4);
+            {
+                let _inner = set_kernel_threads(2);
+                assert_eq!(kernel_threads(), 2);
+            }
+            assert_eq!(kernel_threads(), 4);
+        }
+        assert_eq!(kernel_threads(), 1);
+        // 0 clamps to 1 — "disable" never under-flows the budget.
+        let _z = set_kernel_threads(0);
+        assert_eq!(kernel_threads(), 1);
+    }
+
+    #[test]
+    fn plan_stays_sequential_below_the_flop_floor() {
+        let _g = set_kernel_threads(8);
+        assert_eq!(plan(64, PAR_MIN_FLOPS - 1, 4), 1);
+        assert_eq!(plan(64, PAR_MIN_FLOPS, 4), 8);
+        // Capped by available aligned chunks.
+        assert_eq!(plan(8, PAR_MIN_FLOPS, 4), 2);
+        assert_eq!(plan(1, PAR_MIN_FLOPS, 4), 1);
+    }
+
+    #[test]
+    fn chunking_covers_all_rows_with_aligned_chunks() {
+        for rows in [1usize, 3, 4, 7, 8, 64, 65, 100] {
+            for threads in [1usize, 2, 3, 4, 7] {
+                for align in [1usize, 2, 4] {
+                    let cr = chunk_rows(rows, threads, align);
+                    assert!(cr >= 1 && cr % align == 0, "rows={rows} t={threads} a={align}");
+                    assert!(cr * threads >= rows, "chunks must cover every row");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,678 @@
+//! SIMD inner-loop primitives with a bit-identical scalar fallback.
+//!
+//! Every tiled kernel in [`super::gemm`], [`super::fused`] and
+//! [`super::sparse`] funnels its innermost loop through one of the
+//! primitives here. Each primitive has two bodies:
+//!
+//! - a **scalar** body — byte-for-byte the loop the kernels shipped
+//!   with, always compiled, and the only body when the `simd` cargo
+//!   feature is off or the target is not x86-64;
+//! - an **AVX2** body (`simd` feature + `x86_64` + runtime
+//!   `is_x86_feature_detected!("avx2")`) that vectorizes across
+//!   *independent output elements* only.
+//!
+//! # Why the AVX2 bodies are bitwise-identical, not "close"
+//!
+//! The property tests in `tests/kernel_properties.rs` pin every kernel
+//! bitwise against the frozen naive baseline, so the SIMD bodies are
+//! written to produce *the same bits*, not merely the same ULP
+//! neighborhood:
+//!
+//! - vector lanes map onto **different output elements** (columns `j`
+//!   of a GEMM row, or the eight fixed partial-sum lanes [`LANES`]
+//!   already present in the scalar `dot`) — never onto a re-associated
+//!   reduction;
+//! - multiplies and adds stay **separate instructions** — no FMA. A
+//!   fused multiply-add skips the intermediate rounding and changes
+//!   low bits;
+//! - ReLU uses `cmp_lt` + `andnot` rather than `max(0, x)`:
+//!   `max` would rewrite `-0.0` to `+0.0` and replace NaN, while the
+//!   scalar epilogue (`if *v < 0.0 { *v = 0.0 }`) leaves both alone;
+//! - the ReLU backward mask uses an *ordered* `cmp_le` so NaN
+//!   activations keep their gradient exactly like the scalar
+//!   `if hv <= 0.0` test.
+//!
+//! [`super::fused::bce_loss_dz`] stays scalar even with `simd` on: it
+//! is transcendental (`exp`, `ln_1p`), and any polynomial vector
+//! approximation would break the bitwise pin. It is one pass over
+//! `[batch, out]` and a small fraction of step time next to the three
+//! GEMMs.
+//!
+//! # Dispatch
+//!
+//! [`active`] is the single runtime gate: feature compiled in, CPU
+//! reports AVX2, and [`force_scalar`] not engaged. `force_scalar` lets
+//! one bench binary measure both bodies back to back
+//! (`benches/bench_train.rs`); it is a process-global toggle, not a
+//! per-call option, so flipping it mid-computation from another thread
+//! is a benchmarking error (results would still be correct — both
+//! bodies compute identical bits — just meaningless as a timing).
+
+use super::gemm::LANES;
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+use std::sync::atomic::{AtomicBool, Ordering};
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Whether this build contains the AVX2 bodies at all.
+pub fn compiled() -> bool {
+    cfg!(all(feature = "simd", target_arch = "x86_64"))
+}
+
+/// Pin every primitive to its scalar body (for scalar-vs-simd
+/// benchmarking in one binary). No-op when [`compiled`] is false.
+pub fn force_scalar(on: bool) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    let _ = on;
+}
+
+/// Whether the AVX2 bodies will actually run right now.
+#[inline]
+pub fn active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        // `is_x86_feature_detected!` caches its CPUID probe internally,
+        // so this is two relaxed atomic loads on the hot path.
+        !FORCE_SCALAR.load(Ordering::Relaxed) && std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------
+// Primitives. Each `pub(crate)` function is the dispatcher; the scalar
+// body lives inline in it (and is verbatim the pre-SIMD kernel loop),
+// the AVX2 body lives in `avx2::` below.
+// ---------------------------------------------------------------------
+
+/// `y[j] += a · x[j]` — the single-row GEMM / CSR-forward inner loop.
+#[inline(always)]
+pub(crate) fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: `active()` verified AVX2 at runtime.
+        unsafe { avx2::axpy(y, a, x) };
+        return;
+    }
+    for (o, &bv) in y.iter_mut().zip(x.iter()) {
+        *o += a * bv;
+    }
+}
+
+/// `y[j] -= a · x[j]` — the SGD parameter / bias / CSR-scatter update.
+#[inline(always)]
+pub(crate) fn axpy_sub(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: `active()` verified AVX2 at runtime.
+        unsafe { avx2::axpy_sub(y, a, x) };
+        return;
+    }
+    for (o, &bv) in y.iter_mut().zip(x.iter()) {
+        *o -= a * bv;
+    }
+}
+
+/// Four simultaneous axpys sharing one streamed `b` row — the
+/// [`super::gemm::MR`]-row `nn` micro-kernel inner loop.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn quad_axpy(
+    o0: &mut [f32],
+    o1: &mut [f32],
+    o2: &mut [f32],
+    o3: &mut [f32],
+    x0: f32,
+    x1: f32,
+    x2: f32,
+    x3: f32,
+    b: &[f32],
+) {
+    let n = b.len();
+    debug_assert!(o0.len() == n && o1.len() == n && o2.len() == n && o3.len() == n);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: `active()` verified AVX2 at runtime.
+        unsafe { avx2::quad_axpy(o0, o1, o2, o3, x0, x1, x2, x3, b) };
+        return;
+    }
+    for j in 0..n {
+        let bv = b[j];
+        o0[j] += x0 * bv;
+        o1[j] += x1 * bv;
+        o2[j] += x2 * bv;
+        o3[j] += x3 * bv;
+    }
+}
+
+/// `o[j] += x0·b0[j] + x1·b1[j] + x2·b2[j] + x3·b3[j]`, each element's
+/// four terms added one at a time in that order — the
+/// [`super::gemm::KB`]-blocked `tn` inner loop.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn quad_acc(
+    o: &mut [f32],
+    x0: f32,
+    x1: f32,
+    x2: f32,
+    x3: f32,
+    b0: &[f32],
+    b1: &[f32],
+    b2: &[f32],
+    b3: &[f32],
+) {
+    let n = o.len();
+    debug_assert!(b0.len() == n && b1.len() == n && b2.len() == n && b3.len() == n);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: `active()` verified AVX2 at runtime.
+        unsafe { avx2::quad_acc(o, x0, x1, x2, x3, b0, b1, b2, b3) };
+        return;
+    }
+    for j in 0..n {
+        let mut acc = o[j];
+        acc += x0 * b0[j];
+        acc += x1 * b1[j];
+        acc += x2 * b2[j];
+        acc += x3 * b3[j];
+        o[j] = acc;
+    }
+}
+
+/// Clamp negatives to zero in place; `-0.0` and NaN pass through
+/// unchanged (exactly the scalar `if *v < 0.0` epilogue).
+#[inline(always)]
+pub(crate) fn relu(row: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: `active()` verified AVX2 at runtime.
+        unsafe { avx2::relu(row) };
+        return;
+    }
+    for v in row.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Zero `grad[j]` wherever `h[j] <= 0.0` (ordered compare: NaN
+/// activations keep their gradient, matching the scalar test).
+#[inline(always)]
+pub(crate) fn relu_mask(grad: &mut [f32], h: &[f32]) {
+    debug_assert_eq!(grad.len(), h.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: `active()` verified AVX2 at runtime.
+        unsafe { avx2::relu_mask(grad, h) };
+        return;
+    }
+    for (g, &hv) in grad.iter_mut().zip(h.iter()) {
+        if hv <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Lane-parallel dot product: [`LANES`] fixed partial sums over
+/// 8-element chunks, combined sequentially, then the scalar tail —
+/// the exact accumulation pattern of the original scalar `dot`.
+#[inline(always)]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: `active()` verified AVX2 at runtime.
+        return unsafe { avx2::dot(a, b) };
+    }
+    let mut lanes = [0.0f32; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    while let (Some(av), Some(bv)) = (ac.next(), bc.next()) {
+        for l in 0..LANES {
+            lanes[l] += av[l] * bv[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * y;
+    }
+    combine(&lanes) + tail
+}
+
+/// Two lane-parallel dots sharing one streamed `b` row; each output
+/// uses exactly the same accumulation pattern as [`dot`].
+#[inline(always)]
+pub(crate) fn dot2(a0: &[f32], a1: &[f32], b: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(a0.len(), b.len());
+    debug_assert_eq!(a1.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: `active()` verified AVX2 at runtime.
+        return unsafe { avx2::dot2(a0, a1, b) };
+    }
+    let mut l0 = [0.0f32; LANES];
+    let mut l1 = [0.0f32; LANES];
+    let mut a0c = a0.chunks_exact(LANES);
+    let mut a1c = a1.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    while let (Some(x0), Some(x1), Some(y)) = (a0c.next(), a1c.next(), bc.next()) {
+        for l in 0..LANES {
+            l0[l] += x0[l] * y[l];
+            l1[l] += x1[l] * y[l];
+        }
+    }
+    let mut t0 = 0.0f32;
+    let mut t1 = 0.0f32;
+    for ((&x0, &x1), &y) in a0c
+        .remainder()
+        .iter()
+        .zip(a1c.remainder())
+        .zip(bc.remainder())
+    {
+        t0 += x0 * y;
+        t1 += x1 * y;
+    }
+    (combine(&l0) + t0, combine(&l1) + t1)
+}
+
+/// The fixed lane-combine order both bodies share: lanes summed left
+/// to right into one accumulator.
+#[inline(always)]
+fn combine(lanes: &[f32; LANES]) -> f32 {
+    let mut acc = 0.0f32;
+    for &l in lanes.iter() {
+        acc += l;
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// AVX2 bodies. Lanes always map onto independent output elements (or
+// the LANES fixed partial sums), mul and add stay separate
+// instructions, compares are the ordered predicates matching the
+// scalar `<` / `<=` — see the module docs for why each choice is what
+// keeps the bits identical.
+// ---------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use super::{combine, LANES};
+    use std::arch::x86_64::*;
+
+    // LANES == 8 == one __m256 of f32s; the dot kernels map the scalar
+    // partial-sum lanes one-to-one onto vector lanes.
+    const _: () = assert!(LANES == 8, "avx2 dot kernels assume 8 f32 lanes");
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let av = _mm256_set1_ps(a);
+        let mut yc = y.chunks_exact_mut(8);
+        let mut xc = x.chunks_exact(8);
+        for (yv, xv) in (&mut yc).zip(&mut xc) {
+            let r = _mm256_add_ps(
+                _mm256_loadu_ps(yv.as_ptr()),
+                _mm256_mul_ps(av, _mm256_loadu_ps(xv.as_ptr())),
+            );
+            _mm256_storeu_ps(yv.as_mut_ptr(), r);
+        }
+        for (o, &bv) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+            *o += a * bv;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_sub(y: &mut [f32], a: f32, x: &[f32]) {
+        let av = _mm256_set1_ps(a);
+        let mut yc = y.chunks_exact_mut(8);
+        let mut xc = x.chunks_exact(8);
+        for (yv, xv) in (&mut yc).zip(&mut xc) {
+            let r = _mm256_sub_ps(
+                _mm256_loadu_ps(yv.as_ptr()),
+                _mm256_mul_ps(av, _mm256_loadu_ps(xv.as_ptr())),
+            );
+            _mm256_storeu_ps(yv.as_mut_ptr(), r);
+        }
+        for (o, &bv) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+            *o -= a * bv;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn quad_axpy(
+        o0: &mut [f32],
+        o1: &mut [f32],
+        o2: &mut [f32],
+        o3: &mut [f32],
+        x0: f32,
+        x1: f32,
+        x2: f32,
+        x3: f32,
+        b: &[f32],
+    ) {
+        let (v0, v1, v2, v3) = (
+            _mm256_set1_ps(x0),
+            _mm256_set1_ps(x1),
+            _mm256_set1_ps(x2),
+            _mm256_set1_ps(x3),
+        );
+        let n = b.len();
+        let chunks = n / 8;
+        for c in 0..chunks {
+            let j = c * 8;
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            for (orow, xv) in [(&mut *o0, v0), (&mut *o1, v1), (&mut *o2, v2), (&mut *o3, v3)] {
+                let p = orow.as_mut_ptr().add(j);
+                _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), _mm256_mul_ps(xv, bv)));
+            }
+        }
+        for j in chunks * 8..n {
+            let bv = b[j];
+            o0[j] += x0 * bv;
+            o1[j] += x1 * bv;
+            o2[j] += x2 * bv;
+            o3[j] += x3 * bv;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn quad_acc(
+        o: &mut [f32],
+        x0: f32,
+        x1: f32,
+        x2: f32,
+        x3: f32,
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+    ) {
+        let (v0, v1, v2, v3) = (
+            _mm256_set1_ps(x0),
+            _mm256_set1_ps(x1),
+            _mm256_set1_ps(x2),
+            _mm256_set1_ps(x3),
+        );
+        let n = o.len();
+        let chunks = n / 8;
+        for c in 0..chunks {
+            let j = c * 8;
+            // The four adds stay sequential per element, matching the
+            // scalar `acc += xi * bi[j]` chain term for term.
+            let mut acc = _mm256_loadu_ps(o.as_ptr().add(j));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(v0, _mm256_loadu_ps(b0.as_ptr().add(j))));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(v1, _mm256_loadu_ps(b1.as_ptr().add(j))));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(v2, _mm256_loadu_ps(b2.as_ptr().add(j))));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(v3, _mm256_loadu_ps(b3.as_ptr().add(j))));
+            _mm256_storeu_ps(o.as_mut_ptr().add(j), acc);
+        }
+        for j in chunks * 8..n {
+            let mut acc = o[j];
+            acc += x0 * b0[j];
+            acc += x1 * b1[j];
+            acc += x2 * b2[j];
+            acc += x3 * b3[j];
+            o[j] = acc;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn relu(row: &mut [f32]) {
+        let zero = _mm256_setzero_ps();
+        let mut rc = row.chunks_exact_mut(8);
+        for rv in &mut rc {
+            let v = _mm256_loadu_ps(rv.as_ptr());
+            // Zero exactly the lanes with v < 0.0 (ordered): -0.0 is
+            // not < 0.0 and NaN compares false, so both survive — the
+            // `max(0, v)` shortcut would rewrite them.
+            let neg = _mm256_cmp_ps::<_CMP_LT_OQ>(v, zero);
+            _mm256_storeu_ps(rv.as_mut_ptr(), _mm256_andnot_ps(neg, v));
+        }
+        for v in rc.into_remainder() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn relu_mask(grad: &mut [f32], h: &[f32]) {
+        let zero = _mm256_setzero_ps();
+        let mut gc = grad.chunks_exact_mut(8);
+        let mut hc = h.chunks_exact(8);
+        for (gv, hv) in (&mut gc).zip(&mut hc) {
+            let g = _mm256_loadu_ps(gv.as_ptr());
+            let a = _mm256_loadu_ps(hv.as_ptr());
+            // Ordered `h <= 0.0`: NaN compares false and keeps its
+            // gradient, exactly like the scalar branch.
+            let clamped = _mm256_cmp_ps::<_CMP_LE_OQ>(a, zero);
+            _mm256_storeu_ps(gv.as_mut_ptr(), _mm256_andnot_ps(clamped, g));
+        }
+        for (g, &hv) in gc.into_remainder().iter_mut().zip(hc.remainder()) {
+            if hv <= 0.0 {
+                *g = 0.0;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = _mm256_setzero_ps();
+        let mut ac = a.chunks_exact(8);
+        let mut bc = b.chunks_exact(8);
+        for (av, bv) in (&mut ac).zip(&mut bc) {
+            acc = _mm256_add_ps(
+                acc,
+                _mm256_mul_ps(_mm256_loadu_ps(av.as_ptr()), _mm256_loadu_ps(bv.as_ptr())),
+            );
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut tail = 0.0f32;
+        for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+            tail += x * y;
+        }
+        combine(&lanes) + tail
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot2(a0: &[f32], a1: &[f32], b: &[f32]) -> (f32, f32) {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut a0c = a0.chunks_exact(8);
+        let mut a1c = a1.chunks_exact(8);
+        let mut bc = b.chunks_exact(8);
+        while let (Some(x0), Some(x1), Some(y)) = (a0c.next(), a1c.next(), bc.next()) {
+            let yv = _mm256_loadu_ps(y.as_ptr());
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_loadu_ps(x0.as_ptr()), yv));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_loadu_ps(x1.as_ptr()), yv));
+        }
+        let mut l0 = [0.0f32; LANES];
+        let mut l1 = [0.0f32; LANES];
+        _mm256_storeu_ps(l0.as_mut_ptr(), acc0);
+        _mm256_storeu_ps(l1.as_mut_ptr(), acc1);
+        let mut t0 = 0.0f32;
+        let mut t1 = 0.0f32;
+        for ((&x0, &x1), &y) in a0c
+            .remainder()
+            .iter()
+            .zip(a1c.remainder())
+            .zip(bc.remainder())
+        {
+            t0 += x0 * y;
+            t1 += x1 * y;
+        }
+        (combine(&l0) + t0, combine(&l1) + t1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, f: impl Fn(usize) -> f32) -> Vec<f32> {
+        (0..n).map(f).collect()
+    }
+
+    // With the feature off these tests exercise the scalar bodies (and
+    // prove the dispatchers are transparent); with it on, the AVX2
+    // bodies must produce the same bits the scalar reference computes
+    // here inline.
+
+    #[test]
+    fn axpy_matches_scalar_reference_bitwise() {
+        for n in [0usize, 1, 7, 8, 9, 31, 64, 100] {
+            let x = seq(n, |i| (i as f32 * 0.37).sin());
+            let mut y = seq(n, |i| (i as f32 * 0.11).cos());
+            let mut want = y.clone();
+            for (o, &bv) in want.iter_mut().zip(x.iter()) {
+                *o += 1.25 * bv;
+            }
+            axpy(&mut y, 1.25, &x);
+            assert_eq!(y, want, "n={n}");
+            let mut y2 = seq(n, |i| (i as f32 * 0.11).cos());
+            let mut want2 = y2.clone();
+            for (o, &bv) in want2.iter_mut().zip(x.iter()) {
+                *o -= 0.4 * bv;
+            }
+            axpy_sub(&mut y2, 0.4, &x);
+            assert_eq!(y2, want2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn quad_kernels_match_scalar_reference_bitwise() {
+        for n in [0usize, 1, 8, 13, 40] {
+            let b = seq(n, |i| (i as f32 * 0.7).sin());
+            let (b0, b1, b2, b3) = (
+                seq(n, |i| (i as f32 * 0.3).cos()),
+                seq(n, |i| (i as f32 * 0.5).sin()),
+                seq(n, |i| (i as f32 * 0.9).cos()),
+                seq(n, |i| (i as f32 * 1.1).sin()),
+            );
+            let (x0, x1, x2, x3) = (0.5f32, -1.5, 2.25, 0.125);
+            let mut rows: Vec<Vec<f32>> =
+                (0..4).map(|r| seq(n, |i| (i + r) as f32 * 0.01)).collect();
+            let mut want = rows.clone();
+            for j in 0..n {
+                let bv = b[j];
+                want[0][j] += x0 * bv;
+                want[1][j] += x1 * bv;
+                want[2][j] += x2 * bv;
+                want[3][j] += x3 * bv;
+            }
+            let (r0, rest) = rows.split_at_mut(1);
+            let (r1, rest) = rest.split_at_mut(1);
+            let (r2, r3) = rest.split_at_mut(1);
+            quad_axpy(&mut r0[0], &mut r1[0], &mut r2[0], &mut r3[0], x0, x1, x2, x3, &b);
+            assert_eq!(rows, want, "quad_axpy n={n}");
+
+            let mut o = seq(n, |i| i as f32 * 0.02 - 0.3);
+            let mut want = o.clone();
+            for j in 0..n {
+                let mut acc = want[j];
+                acc += x0 * b0[j];
+                acc += x1 * b1[j];
+                acc += x2 * b2[j];
+                acc += x3 * b3[j];
+                want[j] = acc;
+            }
+            quad_acc(&mut o, x0, x1, x2, x3, &b0, &b1, &b2, &b3);
+            assert_eq!(o, want, "quad_acc n={n}");
+        }
+    }
+
+    #[test]
+    fn relu_preserves_negative_zero_and_nan() {
+        let mut v = vec![-1.0f32, -0.0, 0.0, 2.5, f32::NAN, -3.0, 1.0, -2.0, 4.0, -0.5];
+        relu(&mut v);
+        assert_eq!(v[0], 0.0);
+        assert!(v[1] == 0.0 && v[1].is_sign_negative(), "-0.0 must survive");
+        assert_eq!(&v[2..4], &[0.0, 2.5]);
+        assert!(v[4].is_nan(), "NaN must survive (matches scalar `< 0.0`)");
+        assert_eq!(&v[5..], &[0.0, 1.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn relu_mask_keeps_nan_activations_gradient() {
+        let h = vec![1.0f32, 0.0, -2.0, f32::NAN, 3.0, -0.0, 0.5, 2.0, -1.0];
+        let mut g: Vec<f32> = (1..=9).map(|i| i as f32).collect();
+        relu_mask(&mut g, &h);
+        assert_eq!(g, vec![1.0, 0.0, 0.0, 4.0, 5.0, 0.0, 7.0, 8.0, 0.0]);
+    }
+
+    #[test]
+    fn dot_kernels_match_the_lane_pattern_bitwise() {
+        for n in [0usize, 1, 7, 8, 9, 16, 23, 64, 100] {
+            let a0 = seq(n, |i| (i as f32 * 0.21).sin());
+            let a1 = seq(n, |i| (i as f32 * 0.83).cos());
+            let b = seq(n, |i| (i as f32 * 0.47).sin());
+            // Scalar lane reference, written out independently.
+            let lane_dot = |a: &[f32]| -> f32 {
+                let mut lanes = [0.0f32; LANES];
+                let mut ac = a.chunks_exact(LANES);
+                let mut bc = b.chunks_exact(LANES);
+                while let (Some(av), Some(bv)) = (ac.next(), bc.next()) {
+                    for l in 0..LANES {
+                        lanes[l] += av[l] * bv[l];
+                    }
+                }
+                let mut tail = 0.0f32;
+                for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+                    tail += x * y;
+                }
+                let mut acc = 0.0f32;
+                for &l in lanes.iter() {
+                    acc += l;
+                }
+                acc + tail
+            };
+            assert_eq!(dot(&a0, &b).to_bits(), lane_dot(&a0).to_bits(), "n={n}");
+            let (d0, d1) = dot2(&a0, &a1, &b);
+            assert_eq!(d0.to_bits(), lane_dot(&a0).to_bits(), "dot2.0 n={n}");
+            assert_eq!(d1.to_bits(), lane_dot(&a1).to_bits(), "dot2.1 n={n}");
+        }
+    }
+
+    #[test]
+    fn force_scalar_roundtrips() {
+        // With simd compiled in, both bodies must agree bitwise; with
+        // it off this just exercises the toggles as no-ops.
+        let a = seq(100, |i| (i as f32 * 0.13).sin());
+        let b = seq(100, |i| (i as f32 * 0.29).cos());
+        let fast = dot(&a, &b);
+        force_scalar(true);
+        assert!(!active());
+        let slow = dot(&a, &b);
+        force_scalar(false);
+        assert_eq!(fast.to_bits(), slow.to_bits());
+        #[cfg(target_arch = "x86_64")]
+        assert_eq!(active(), compiled() && std::arch::is_x86_feature_detected!("avx2"));
+    }
+}

@@ -15,6 +15,8 @@
 
 #![allow(clippy::too_many_arguments)]
 
+use super::{parallel, simd};
+
 /// A batch of rows in compressed-sparse-row form, with reusable
 /// buffers so the per-step conversion allocates nothing at steady
 /// state.
@@ -97,35 +99,48 @@ pub fn sparse_cutoff(len: usize) -> usize {
 
 /// `out[rows,n] = csr @ w + bias` (`w` is `[cols, n]` row-major).
 pub fn csr_gemm_bias(csr: &CsrBatch, w: &[f32], bias: &[f32], out: &mut [f32], n: usize) {
-    csr_nn_core(csr, w, bias, out, n, false);
+    csr_nn_dispatch(csr, w, bias, out, n, false);
 }
 
 /// `out[rows,n] = relu(csr @ w + bias)` — the fused sparse layer-1
 /// forward.
 pub fn csr_gemm_bias_relu(csr: &CsrBatch, w: &[f32], bias: &[f32], out: &mut [f32], n: usize) {
-    csr_nn_core(csr, w, bias, out, n, true);
+    csr_nn_dispatch(csr, w, bias, out, n, true);
 }
 
 #[inline(always)]
-fn csr_nn_core(csr: &CsrBatch, w: &[f32], bias: &[f32], out: &mut [f32], n: usize, relu: bool) {
+fn csr_nn_dispatch(csr: &CsrBatch, w: &[f32], bias: &[f32], out: &mut [f32], n: usize, relu: bool) {
     debug_assert_eq!(w.len(), csr.cols * n);
     debug_assert_eq!(bias.len(), n);
     debug_assert_eq!(out.len(), csr.rows * n);
-    for (r, orow) in out.chunks_exact_mut(n).enumerate() {
+    let threads = parallel::plan(csr.rows, csr.nnz() * n, 1);
+    if threads > 1 {
+        parallel::par_csr_forward(csr, w, bias, out, n, relu, threads);
+    } else {
+        csr_nn_rows(csr, w, bias, out, n, relu, 0);
+    }
+}
+
+/// The CSR forward body on the row window starting at `r0`, writing
+/// `out` = that window's `[rows, n]` slice. Batch rows are independent
+/// (each reads its own nonzeros), so row-slicing is bitwise-safe.
+pub(crate) fn csr_nn_rows(
+    csr: &CsrBatch,
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    n: usize,
+    relu: bool,
+    r0: usize,
+) {
+    for (i, orow) in out.chunks_exact_mut(n).enumerate() {
         orow.copy_from_slice(bias);
-        let (idx, vals) = csr.row(r);
+        let (idx, vals) = csr.row(r0 + i);
         for (&c, &v) in idx.iter().zip(vals.iter()) {
-            let wrow = &w[c as usize * n..(c as usize + 1) * n];
-            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                *o += v * wv;
-            }
+            simd::axpy(orow, v, &w[c as usize * n..(c as usize + 1) * n]);
         }
         if relu {
-            for o in orow.iter_mut() {
-                if *o < 0.0 {
-                    *o = 0.0;
-                }
-            }
+            simd::relu(orow);
         }
     }
 }
@@ -137,6 +152,11 @@ fn csr_nn_core(csr: &CsrBatch, w: &[f32], bias: &[f32], out: &mut [f32], n: usiz
 ///
 /// Deterministic: nonzeros are visited in (row, ascending column)
 /// order, so every parameter row sees its updates in a fixed sequence.
+///
+/// Deliberately **not** row-sliced by [`super::parallel`]: different
+/// batch rows scatter into the *same* parameter rows, so splitting the
+/// batch would race (and fixing the race would reorder the scatter
+/// sum, breaking the bitwise pin). The inner axpy still vectorizes.
 pub fn csr_gemm_tn_sgd(csr: &CsrBatch, d: &[f32], w: &mut [f32], lr: f32, n: usize) {
     debug_assert_eq!(d.len(), csr.rows * n);
     debug_assert_eq!(w.len(), csr.cols * n);
@@ -144,10 +164,7 @@ pub fn csr_gemm_tn_sgd(csr: &CsrBatch, d: &[f32], w: &mut [f32], lr: f32, n: usi
         let (idx, vals) = csr.row(r);
         for (&c, &v) in idx.iter().zip(vals.iter()) {
             let s = lr * v;
-            let wrow = &mut w[c as usize * n..(c as usize + 1) * n];
-            for (wv, &dv) in wrow.iter_mut().zip(drow.iter()) {
-                *wv -= s * dv;
-            }
+            simd::axpy_sub(&mut w[c as usize * n..(c as usize + 1) * n], s, drow);
         }
     }
 }

@@ -74,6 +74,21 @@
 //! accepting, finish in-flight requests within `--drain-secs`, flush a
 //! final metrics snapshot.
 //!
+//! ## Performance features
+//!
+//! Build with `--features simd` to enable the AVX2 bodies of the inner
+//! kernel loops (`kernels::simd`), runtime-dispatched behind CPU
+//! detection with the scalar loops as fallback. The SIMD bodies are
+//! written to produce bit-identical results to scalar, so the feature
+//! changes speed, never numbers — every determinism pin holds with it
+//! on or off. Independently, `--workers N` beyond a round's item count
+//! flows down into row-sliced intra-kernel parallelism
+//! (`kernels::parallel`), so one big client still fills N cores.
+//! Sub-byte compression is available on every link: `--codec
+//! q4g[:block]` / `--down-codec q4g[:block]` pack group-wise int4
+//! updates two-per-byte (~7–8× smaller than dense), and `--save-codec
+//! q4g` does the same for `.fmlh` checkpoints.
+//!
 //! ## Observability
 //!
 //! Every training command accepts `--log-level <error|warn|info|debug>`
@@ -157,9 +172,9 @@ fn common_args(args: Args) -> Args {
         .flag("rounds", "0", "override synchronization rounds (0 = preset default 70)")
         .flag("out", "results", "output directory for CSV/markdown")
         .flag("workers", "1", "round-engine worker threads (1 = sequential; results identical)")
-        .flag("codec", "dense", "update (client->server) codec: dense | q8 | q8g[:block] | topk[:frac] | topkv[:frac]")
+        .flag("codec", "dense", "update (client->server) codec: dense | q8 | q8g[:block] | q4g[:block] | topk[:frac] | topkv[:frac]")
         .flag("topk-frac", "0.1", "fraction of coordinates the topk/topkv codecs ship")
-        .flag("down-codec", "dense", "broadcast (server->client) codec: dense | q8 | q8g[:block] | topk[:frac] | topkv[:frac] (sparse = per-client versioned deltas vs each client's last decoded base)")
+        .flag("down-codec", "dense", "broadcast (server->client) codec: dense | q8 | q8g[:block] | q4g[:block] | topk[:frac] | topkv[:frac] (sparse = per-client versioned deltas vs each client's last decoded base)")
         .flag("resync-every", "8", "delta downlink: full dense resync for clients whose base is more than N rounds stale (0 = resync every participation)")
         .flag("error-feedback", "off", "stateful transport (on|off): client error-feedback accumulators + server broadcast-residual folding")
         .flag("trace-out", "", "write a Chrome-trace-event JSON span trace here on exit (open in Perfetto / chrome://tracing)")
@@ -280,7 +295,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         .flag("snapshot-every", "0", "write a crash-resume snapshot into the --resume dir every N rounds (0 = off; synchronous loop only)")
         .flag("resume", "", "snapshot directory: an existing snapshot there resumes the run bitwise from its round; --snapshot-every writes new snapshots into it")
         .flag("save", "", "write the trained model as a serving checkpoint to this path")
-        .flag("save-codec", "q8", "full-checkpoint codec: q8 (~4x smaller) | dense (ignored with --save-delta; see --delta-codec)")
+        .flag("save-codec", "q8", "full-checkpoint codec: q8 (~4x smaller) | q4g (~7x smaller, group-wise int4) | dense (ignored with --save-delta; see --delta-codec)")
         .flag("save-delta", "", "with --save: write the checkpoint as a delta against this base .fmlh (apply with `fedmlh serve --delta`)")
         .flag("delta-codec", "sparse", "delta payload codec (with --save-delta): sparse (changed coordinates, lossless) | q8diff (quantized difference, ~4x smaller, lossy)")
         .parse(argv)?;

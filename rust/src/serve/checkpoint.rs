@@ -13,7 +13,8 @@
 //! ```text
 //! magic      4 × u8   "FMLH"
 //! version    u16      format version (this build reads VERSION)
-//! codec      u8       0 = dense f32, 1 = q8 (per-tensor int8 + scales)
+//! codec      u8       0 = dense f32, 1 = q8 (per-tensor int8 + scales),
+//!                     2 = q4g (group-wise int4, two values per byte)
 //! algo       u8       0 = fedavg, 1 = fedmlh
 //! d,hidden,  4 × u32  model dims (out = p for fedavg, B for fedmlh)
 //! out,p
@@ -29,7 +30,9 @@
 //! Model payloads reuse the [`crate::federated::wire`] codecs: `q8` is
 //! the same per-tensor symmetric int8 encoding clients upload with, so
 //! a q8 checkpoint is ~4× smaller than dense `f32` (1 byte + amortized
-//! scale per parameter vs 4). Corruption anywhere flips the checksum;
+//! scale per parameter vs 4), and `q4g` is the group-wise int4 wire
+//! codec (two values per byte, per-block scales, ~7–8× smaller than
+//! dense at the default block). Corruption anywhere flips the checksum;
 //! truncation, wrong magic and future versions all fail loudly —
 //! pinned by `tests/serve_roundtrip.rs`.
 //!
@@ -89,6 +92,9 @@ pub enum CheckpointCodec {
     Dense,
     /// Per-tensor symmetric int8 ([`CodecSpec::QuantI8`]) — ~4× smaller.
     QuantI8,
+    /// Group-wise int4 ([`CodecSpec::QuantI4Group`] at the default
+    /// block) — two values per byte, ~7–8× smaller than dense.
+    QuantI4Group,
 }
 
 impl CheckpointCodec {
@@ -96,7 +102,8 @@ impl CheckpointCodec {
         match name {
             "dense" | "f32" => Ok(CheckpointCodec::Dense),
             "q8" | "quant" => Ok(CheckpointCodec::QuantI8),
-            other => bail!("unknown checkpoint codec '{other}' (expected q8|dense)"),
+            "q4g" => Ok(CheckpointCodec::QuantI4Group),
+            other => bail!("unknown checkpoint codec '{other}' (expected q8|q4g|dense)"),
         }
     }
 
@@ -104,6 +111,7 @@ impl CheckpointCodec {
         match self {
             CheckpointCodec::Dense => "dense",
             CheckpointCodec::QuantI8 => "q8",
+            CheckpointCodec::QuantI4Group => "q4g",
         }
     }
 
@@ -111,6 +119,7 @@ impl CheckpointCodec {
         match self {
             CheckpointCodec::Dense => 0,
             CheckpointCodec::QuantI8 => 1,
+            CheckpointCodec::QuantI4Group => 2,
         }
     }
 
@@ -118,6 +127,7 @@ impl CheckpointCodec {
         match tag {
             0 => Ok(CheckpointCodec::Dense),
             1 => Ok(CheckpointCodec::QuantI8),
+            2 => Ok(CheckpointCodec::QuantI4Group),
             other => bail!("unknown checkpoint codec tag {other}"),
         }
     }
@@ -127,6 +137,21 @@ impl CheckpointCodec {
         match self {
             CheckpointCodec::Dense => CodecSpec::Dense,
             CheckpointCodec::QuantI8 => CodecSpec::QuantI8,
+            CheckpointCodec::QuantI4Group => CodecSpec::QuantI4Group {
+                block: crate::federated::wire::DEFAULT_Q4G_BLOCK,
+            },
+        }
+    }
+
+    /// Smallest possible payload bytes per parameter value under this
+    /// codec, as a (numerator, denominator) byte fraction — the
+    /// corruption guard in [`Checkpoint::from_bytes`] uses it to bound
+    /// declared model sizes against the file size. Sub-byte codecs
+    /// (q4g) store two values per byte; everything else ≥ 1 byte each.
+    fn min_bytes_for(&self, n_values: usize) -> usize {
+        match self {
+            CheckpointCodec::QuantI4Group => n_values.div_ceil(2),
+            CheckpointCodec::Dense | CheckpointCodec::QuantI8 => n_values,
         }
     }
 }
@@ -345,15 +370,16 @@ impl Checkpoint {
         let preset = String::from_utf8(r.take(preset_len)?.to_vec())
             .context("checkpoint preset name is not utf-8")?;
 
-        // Every codec stores ≥ 1 byte per parameter, so a declared model
-        // larger than the file is corrupt — reject it *before* the
+        // Every codec stores a known minimum number of payload bytes per
+        // parameter (1 for dense/q8, half for sub-byte q4g), so a declared
+        // model larger than the file is corrupt — reject it *before* the
         // template allocation (with dims ≤ MAX_DIM the products below
         // stay far inside usize, so this arithmetic cannot overflow).
         let n_values: usize = ModelParams::shapes(d, hidden, out_dim)
             .iter()
             .map(|shape| shape.iter().product::<usize>())
             .sum();
-        if n_values.saturating_mul(n_models) > body.len() {
+        if codec.min_bytes_for(n_values).saturating_mul(n_models) > body.len() {
             bail!(
                 "checkpoint declares {n_models} × {n_values} parameters but the file has only {} bytes",
                 body.len()
@@ -840,6 +866,38 @@ mod tests {
             for (t_orig, t_got) in orig.tensors.iter().zip(got.tensors.iter()) {
                 let max_abs = t_orig.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
                 let scale = max_abs / 127.0;
+                let err = t_orig.max_abs_diff(t_got).unwrap();
+                assert!(err <= 0.5 * scale + 1e-7, "err {err} vs scale {scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn q4g_roundtrip_is_block_bounded_and_sub_byte() {
+        assert_eq!(
+            CheckpointCodec::parse("q4g").unwrap(),
+            CheckpointCodec::QuantI4Group
+        );
+        let ckpt = fedmlh_checkpoint(7);
+        let dense = ckpt.to_bytes(CheckpointCodec::Dense).unwrap();
+        let q4g = ckpt.to_bytes(CheckpointCodec::QuantI4Group).unwrap();
+        let q8 = ckpt.to_bytes(CheckpointCodec::QuantI8).unwrap();
+        assert!(
+            (dense.len() as f64) / (q4g.len() as f64) >= 6.0,
+            "q4g {} vs dense {}",
+            q4g.len(),
+            dense.len()
+        );
+        assert!(q4g.len() < q8.len(), "q4g {} vs q8 {}", q4g.len(), q8.len());
+        let back = Checkpoint::from_bytes(&q4g).unwrap();
+        assert_eq!(back.meta, ckpt.meta);
+        // Lossy, but each value stays within half its block's int4 step.
+        // The per-tensor max is an upper bound on every block max, so
+        // 0.5 · (tensor_max / 7) bounds the per-tensor error too.
+        for (orig, got) in ckpt.models.iter().zip(back.models.iter()) {
+            for (t_orig, t_got) in orig.tensors.iter().zip(got.tensors.iter()) {
+                let max_abs = t_orig.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let scale = max_abs / 7.0;
                 let err = t_orig.max_abs_diff(t_got).unwrap();
                 assert!(err <= 0.5 * scale + 1e-7, "err {err} vs scale {scale}");
             }

@@ -9,7 +9,7 @@
 //!    facade with evolving globals;
 //! 3. the per-round `down_bytes`/`up_bytes` columns sum exactly to
 //!    `CommMeter::downloaded()`/`uploaded()` for every uplink ×
-//!    downlink codec combination (dense/q8/q8g × dense/q8/delta);
+//!    downlink codec combination (dense/q8/q8g/q4g × dense/q8/q4g/delta);
 //! 4. the delta downlink keeps the engine's worker-count invariance
 //!    (`workers = 4` bitwise equals `workers = 1`).
 
@@ -19,7 +19,9 @@ use fedmlh::data::synth::generate_preset;
 use fedmlh::federated::backend::RustBackend;
 use fedmlh::federated::server::{self, RunOutput};
 use fedmlh::federated::transport::{DownCodec, Transport};
-use fedmlh::federated::wire::CodecSpec;
+use fedmlh::federated::wire::{
+    apply_delta, decode_update, encode_delta, encode_update, CodecSpec, EncodedUpdate,
+};
 use fedmlh::model::params::ModelParams;
 use fedmlh::partition::noniid::{partition as noniid, NonIidOptions};
 use fedmlh::util::rng::Rng;
@@ -188,6 +190,53 @@ fn sampled_out_client_resyncs_bitwise_past_the_cap() {
     assert_eq!(p2.version(), 4);
 }
 
+/// Satellite pin (q4g delta framing): drive the delta-downlink
+/// protocol at the wire level with `q4g:<block>` framed deltas. The
+/// server tracks the client's *decoded* replica — not its own exact
+/// base — so the lossy int4 deltas compose bitwise on both ends round
+/// after round, and the full dense resync that ends the chain lands
+/// the client bitwise on the server's current broadcast base.
+#[test]
+fn q4g_delta_chain_resyncs_bitwise_on_the_dense_payload() {
+    let spec = CodecSpec::QuantI4Group { block: 16 };
+    let mut global = ModelParams::init(12, 6, 10, 7);
+    let n_tensors = global.tensors.len();
+    let n = global.num_params();
+    let mut rng = Rng::new(0x9d);
+
+    // Initial sync: full dense payload, client lands bitwise.
+    let full = encode_update(CodecSpec::Dense, &global, &global).unwrap();
+    let mut client = decode_update(&global, &full).unwrap();
+    assert_eq!(client, global);
+    let mut replica = client.clone();
+
+    // Three rounds of drift shipped as framed q4g deltas against the
+    // replica. The client applies what came off the wire; the server
+    // applies the same encoding to its replica.
+    for round in 0..3 {
+        for t in global.tensors.iter_mut() {
+            for v in t.data_mut() {
+                *v += (rng.next_f32() - 0.5) * 0.05;
+            }
+        }
+        let enc = encode_delta(spec, &replica, &global).unwrap();
+        let framed = enc.to_framed_bytes();
+        let back = EncodedUpdate::from_framed_bytes(spec, n_tensors, n, &framed).unwrap();
+        assert_eq!(back, enc, "round {round}: framed q4g delta round-trips");
+        client = apply_delta(&client, &back).unwrap();
+        replica = apply_delta(&replica, &enc).unwrap();
+        assert_eq!(client, replica, "round {round}: replica tracks the decoded state");
+        assert_ne!(client, global, "round {round}: int4 delta is lossy by design");
+    }
+
+    // The staleness resync that ends the chain is dense: after it the
+    // client (and the server's replica of it) is the broadcast base,
+    // bitwise — exactly the contract `DeltaDownlink` promises.
+    let resync = encode_update(CodecSpec::Dense, &global, &global).unwrap();
+    client = decode_update(&global, &resync).unwrap();
+    assert_eq!(client, global, "dense resync lands bitwise after a lossy q4g chain");
+}
+
 /// Satellite pin: `RoundRecord`'s per-round byte columns decompose the
 /// cumulative meter exactly, for every codec combination on both links
 /// — including the per-client delta downlink under partial
@@ -198,10 +247,12 @@ fn round_byte_columns_sum_to_the_meter_for_all_codec_combos() {
         CodecSpec::Dense,
         CodecSpec::QuantI8,
         CodecSpec::QuantI8Group { block: 64 },
+        CodecSpec::QuantI4Group { block: 64 },
     ];
     let downlinks = [
         DownCodec::Dense,
         DownCodec::QuantI8,
+        DownCodec::QuantI4Group { block: 64 },
         DownCodec::TopK { frac: 0.2 },
     ];
     for codec in uplinks {

@@ -4,9 +4,12 @@
 //! are not multiples of the register tiles, degenerate `m = 1` /
 //! `k = 1` cases, all-zero operands, column counts that straddle the
 //! fused-SGD block width — plus the sparse-vs-dense layer-1
-//! equivalence and run-to-run / batch-split determinism.
+//! equivalence, run-to-run / batch-split determinism, and the two
+//! dispatch contracts: row-sliced intra-kernel parallelism
+//! (`kernels::parallel`) and the SIMD bodies (`kernels::simd`) are
+//! each **bitwise identical** to the sequential scalar loops.
 
-use fedmlh::kernels::{fused, gemm, naive, sparse};
+use fedmlh::kernels::{fused, gemm, naive, parallel, simd, sparse};
 use fedmlh::model::mlp;
 use fedmlh::model::params::ModelParams;
 use fedmlh::util::prop::{check, Gen};
@@ -271,6 +274,123 @@ fn forward_is_batch_split_invariant_at_mixed_density() {
             "row {r} differs between batched and single forward"
         );
     }
+}
+
+#[test]
+fn row_sliced_parallel_is_bitwise_equal_to_sequential() {
+    // Shapes straddling the `PAR_MIN_FLOPS` floor: below it `plan()`
+    // ignores the budget and stays sequential; above it output rows are
+    // sliced across 4 threads. Both must be bitwise the 1-thread
+    // result — including the uneven final chunk (13 rows over
+    // MR-aligned slices) and the rows-capped edge (m = 2 at the floor).
+    let shapes = [(5usize, 7usize, 9usize), (2, 1024, 1024), (13, 128, 1536), (48, 128, 512)];
+    assert!(48 * 128 * 512 >= parallel::PAR_MIN_FLOPS, "big shape must clear the floor");
+    for (m, k, n) in shapes {
+        let mut g = Gen::new(0xc0de + (m * k * n) as u64);
+        let a = g.vec_f32(m * k, -2.0, 2.0);
+        let b = g.vec_f32(k * n, -2.0, 2.0);
+        let bias = g.vec_f32(n, -1.0, 1.0);
+        let at = g.vec_f32(k * m, -2.0, 2.0);
+        let a2 = g.vec_f32(m * n, -2.0, 2.0);
+        let init = g.vec_f32(m * n, -1.0, 1.0);
+        let tag = format!("({m},{k},{n})");
+
+        // Sequential references (budget = 1, the thread-local default).
+        let mut seq_nn = vec![f32::NAN; m * n];
+        gemm::gemm_nn(&a, &b, &mut seq_nn, m, k, n);
+        let mut seq_relu = vec![f32::NAN; m * n];
+        fused::gemm_bias_relu(&a, &b, &bias, &mut seq_relu, m, k, n);
+        let mut seq_tn = vec![f32::NAN; m * n];
+        gemm::gemm_tn(&at, &b, &mut seq_tn, k, m, n);
+        let mut seq_nt = vec![f32::NAN; m * k];
+        gemm::gemm_nt(&a2, &b, &mut seq_nt, m, n, k);
+        let mut seq_sgd = init.clone();
+        let mut scratch = vec![0.0f32; fused::sgd_scratch_len(m, n)];
+        fused::gemm_tn_sgd(&at, &b, &mut seq_sgd, 0.3, k, m, n, &mut scratch);
+        let mut csr = sparse::CsrBatch::new();
+        csr.from_dense(&a, m, k);
+        let csr_bias = g.vec_f32(n, -0.5, 0.5);
+        let mut seq_csr = vec![f32::NAN; m * n];
+        sparse::csr_gemm_bias_relu(&csr, &b, &csr_bias, &mut seq_csr, n);
+
+        // Same calls under a 4-thread budget: bitwise equal.
+        let _budget = parallel::set_kernel_threads(4);
+        let mut par_nn = vec![f32::NAN; m * n];
+        gemm::gemm_nn(&a, &b, &mut par_nn, m, k, n);
+        assert_eq!(par_nn, seq_nn, "{tag}: nn");
+        let mut par_relu = vec![f32::NAN; m * n];
+        fused::gemm_bias_relu(&a, &b, &bias, &mut par_relu, m, k, n);
+        assert_eq!(par_relu, seq_relu, "{tag}: bias+relu");
+        let mut par_tn = vec![f32::NAN; m * n];
+        gemm::gemm_tn(&at, &b, &mut par_tn, k, m, n);
+        assert_eq!(par_tn, seq_tn, "{tag}: tn");
+        let mut par_nt = vec![f32::NAN; m * k];
+        gemm::gemm_nt(&a2, &b, &mut par_nt, m, n, k);
+        assert_eq!(par_nt, seq_nt, "{tag}: nt");
+        let mut par_sgd = init.clone();
+        let mut par_scratch = vec![0.0f32; fused::sgd_scratch_len(m, n)];
+        fused::gemm_tn_sgd(&at, &b, &mut par_sgd, 0.3, k, m, n, &mut par_scratch);
+        assert_eq!(par_sgd, seq_sgd, "{tag}: tn+sgd");
+        let mut par_csr = vec![f32::NAN; m * n];
+        sparse::csr_gemm_bias_relu(&csr, &b, &csr_bias, &mut par_csr, n);
+        assert_eq!(par_csr, seq_csr, "{tag}: csr forward");
+    }
+}
+
+#[test]
+fn simd_dispatch_is_bitwise_equal_to_forced_scalar() {
+    // With `--features simd` on AVX2 hardware this compares the vector
+    // bodies against the verbatim scalar loops they replace; in a
+    // default build both runs take the scalar path and the test pins
+    // `force_scalar` as a no-op. Either way: bitwise equal.
+    let (m, k, n) = (13, 21, 530);
+    let mut g = Gen::new(0x51d);
+    let a = g.vec_f32(m * k, -2.0, 2.0);
+    let b = g.vec_f32(k * n, -2.0, 2.0);
+    let bias = g.vec_f32(n, -1.0, 1.0);
+    let at = g.vec_f32(k * m, -2.0, 2.0);
+    let init = g.vec_f32(m * n, -1.0, 1.0);
+
+    let run_all = || {
+        let mut nn = vec![f32::NAN; m * n];
+        gemm::gemm_nn(&a, &b, &mut nn, m, k, n);
+        let mut relu = vec![f32::NAN; m * n];
+        fused::gemm_bias_relu(&a, &b, &bias, &mut relu, m, k, n);
+        let mut tn = vec![f32::NAN; m * n];
+        gemm::gemm_tn(&at, &b, &mut tn, k, m, n);
+        let mut sgd = init.clone();
+        let mut scratch = vec![0.0f32; fused::sgd_scratch_len(m, n)];
+        fused::gemm_tn_sgd(&at, &b, &mut sgd, 0.3, k, m, n, &mut scratch);
+        (nn, relu, tn, sgd)
+    };
+
+    simd::force_scalar(true);
+    assert!(!simd::active(), "force_scalar must pin the scalar path");
+    let scalar = run_all();
+    simd::force_scalar(false);
+    let dispatched = run_all();
+    assert_eq!(scalar.0, dispatched.0, "nn (simd compiled: {})", simd::compiled());
+    assert_eq!(scalar.1, dispatched.1, "bias+relu");
+    assert_eq!(scalar.2, dispatched.2, "tn");
+    assert_eq!(scalar.3, dispatched.3, "tn+sgd");
+
+    // The full fused train step, both dispatches, same bits.
+    let params = ModelParams::init(24, 8, 530, 5);
+    let mut rng = Rng::new(0x1f);
+    let x: Vec<f32> = (0..6 * 24).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+    let y: Vec<f32> = (0..6 * 530)
+        .map(|_| if rng.bernoulli(0.1) { 1.0 } else { 0.0 })
+        .collect();
+    simd::force_scalar(true);
+    let mut p_scalar = params.clone();
+    let mut ws = mlp::Workspace::new(&p_scalar, 6);
+    let l_scalar = mlp::train_step(&mut p_scalar, &mut ws, &x, &y, 0.5);
+    simd::force_scalar(false);
+    let mut p_simd = params.clone();
+    let mut ws2 = mlp::Workspace::new(&p_simd, 6);
+    let l_simd = mlp::train_step(&mut p_simd, &mut ws2, &x, &y, 0.5);
+    assert_eq!(l_scalar.to_bits(), l_simd.to_bits(), "loss bits");
+    assert_eq!(p_scalar, p_simd, "params after one step");
 }
 
 #[test]

@@ -88,6 +88,8 @@ fn four_workers_match_sequential_for_every_codec() {
     for codec in [
         CodecSpec::Dense,
         CodecSpec::QuantI8,
+        CodecSpec::QuantI8Group { block: 32 },
+        CodecSpec::QuantI4Group { block: 32 },
         CodecSpec::TopK { frac: 0.2 },
         CodecSpec::TopKPacked { frac: 0.2 },
     ] {
@@ -105,6 +107,7 @@ fn four_workers_match_sequential_with_error_feedback() {
     // round, so scheduling cannot reorder state updates.
     for codec in [
         CodecSpec::QuantI8,
+        CodecSpec::QuantI4Group { block: 32 },
         CodecSpec::TopK { frac: 0.1 },
         CodecSpec::TopKPacked { frac: 0.1 },
     ] {

@@ -1,0 +1,89 @@
+//! Acceptance pin for the sub-byte codec, end to end: a full federated
+//! run shipping `q4g` on **both** links (`--codec q4g --down-codec
+//! q4g`) with uplink error feedback must land within a pinned accuracy
+//! tolerance of the same run on `q8g`, while paying ≤ 0.55× the q8g
+//! byte bill on each link (nibble packing halves the value stream; the
+//! per-block scales are shared overhead). The byte assertions are
+//! against the *measured* `CommMeter`, so the ratio is what a real
+//! deployment would bill, not a back-of-envelope.
+
+use fedmlh::algo::scheme_for;
+use fedmlh::config::{Algo, ExperimentConfig};
+use fedmlh::data::synth::generate_preset;
+use fedmlh::federated::backend::RustBackend;
+use fedmlh::federated::server::{self, RunOutput};
+use fedmlh::federated::transport::DownCodec;
+use fedmlh::federated::wire::CodecSpec;
+use fedmlh::partition::noniid::{partition as noniid, NonIidOptions};
+
+fn run(codec: CodecSpec, down_codec: DownCodec) -> RunOutput {
+    let mut cfg = ExperimentConfig::preset("tiny").unwrap();
+    cfg.rounds = 10;
+    cfg.patience = 0;
+    cfg.clients = 4;
+    cfg.clients_per_round = 4;
+    cfg.local_epochs = 1;
+    cfg.codec = codec;
+    cfg.down_codec = down_codec;
+    cfg.error_feedback = true;
+    let data = generate_preset(&cfg.preset, cfg.seed);
+    let part = noniid(&data.train, &NonIidOptions::new(cfg.clients), cfg.seed);
+    let scheme = scheme_for(&cfg, Algo::FedMlh, &data.train);
+    let backend = RustBackend::new();
+    server::run(
+        &cfg,
+        scheme.as_ref(),
+        &backend,
+        &data.train,
+        &data.test,
+        &part,
+    )
+    .unwrap()
+}
+
+#[test]
+fn q4g_both_links_with_feedback_matches_q8g_within_tolerance() {
+    let block = 64;
+    let q4g = run(
+        CodecSpec::QuantI4Group { block },
+        DownCodec::QuantI4Group { block },
+    );
+    let q8g = run(
+        CodecSpec::QuantI8Group { block },
+        DownCodec::QuantI8Group { block },
+    );
+
+    // Accuracy: int4 on both links, with the uplink residual folded
+    // back in by error feedback, stays within tolerance of int8.
+    assert!(
+        q4g.best.mean_topk() >= q8g.best.mean_topk() - 0.15,
+        "q4g accuracy {:.4} too far below q8g {:.4}",
+        q4g.best.mean_topk(),
+        q8g.best.mean_topk()
+    );
+    // …and it genuinely learns, not just "close to a broken baseline".
+    let first = q4g.history.records.first().unwrap().accuracy.top1;
+    assert!(q4g.best.top1 >= first, "no improvement under q4g");
+    assert!(q4g.best.top1 > 0.02, "top1 {} not above chance", q4g.best.top1);
+    assert!(q8g.best.top1 > 0.02, "q8g baseline failed to learn");
+
+    // Bytes, per link: the sub-byte acceptance bound (≤ 0.55× q8g at
+    // the same block) holds on the measured meter, both directions.
+    let up_ratio = q4g.comm.uploaded() as f64 / q8g.comm.uploaded() as f64;
+    assert!(up_ratio <= 0.55, "uplink q4g/q8g = {up_ratio:.3} > 0.55");
+    let down_ratio = q4g.comm.downloaded() as f64 / q8g.comm.downloaded() as f64;
+    assert!(down_ratio <= 0.55, "downlink q4g/q8g = {down_ratio:.3} > 0.55");
+    // And against dense: the headline ~7× uplink compression.
+    assert!(
+        q4g.comm.upload_compression() > 6.0,
+        "q4g upload compression {:.2}x not > 6x",
+        q4g.comm.upload_compression()
+    );
+    // Both runs trained the same schedule: identical dense-equivalent
+    // traffic, so the ratios above compare like with like.
+    assert_eq!(
+        q4g.comm.uploaded_dense_equiv(),
+        q8g.comm.uploaded_dense_equiv()
+    );
+    assert_eq!(q4g.rounds_run, q8g.rounds_run);
+}

@@ -116,6 +116,140 @@ fn grouped_quantization_roundtrips_within_per_block_bounds() {
 }
 
 #[test]
+fn sub_byte_quantization_roundtrips_within_per_block_int4_bounds() {
+    // The q4g contract: nibble-packed int4 over [-7, 7] per block, so
+    // every element's reconstruction error is at most half its block's
+    // scale (max_abs / 7) — coarser than q8g but still strictly local.
+    check("q4g per-block scale bound", 25, |g: &mut Gen| {
+        let (global, local) = random_pair(g);
+        let block = g.usize_in(1, 16);
+        let spec = CodecSpec::QuantI4Group { block };
+        let enc = encode_update(spec, &global, &local).unwrap();
+        // Wire roundtrip is exact, and byte accounting is bit-exact
+        // ceil-div: the nibble stream pays ceil(n/2) bytes whether the
+        // value count is even or odd.
+        let bytes = enc.to_bytes();
+        assert_eq!(enc.byte_len(), bytes.len());
+        let n = global.num_params();
+        let n_scales: usize = global
+            .tensors
+            .iter()
+            .map(|t| t.data().len().div_ceil(block))
+            .sum();
+        assert_eq!(
+            bytes.len(),
+            4 + 4 * n_scales + n.div_ceil(2),
+            "q4g bytes must be header + scales + ceil(n/2) packed nibbles"
+        );
+        let back =
+            EncodedUpdate::from_bytes(spec, N_PARAMS, global.num_params(), &bytes).unwrap();
+        assert_eq!(back, enc);
+        // Per-element error ≤ per-block int4 scale / 2.
+        let decoded = decode_update(&global, &enc).unwrap();
+        for (t_local, t_dec) in local.tensors.iter().zip(decoded.tensors.iter()) {
+            let chunks = t_local.data().chunks(block).zip(t_dec.data().chunks(block));
+            for (chunk_l, chunk_d) in chunks {
+                let scale = chunk_l.iter().fold(0.0f32, |m, &v| m.max(v.abs())) / 7.0;
+                for (&a, &b) in chunk_l.iter().zip(chunk_d.iter()) {
+                    assert!(
+                        (a - b).abs() <= 0.5 * scale + 1e-7,
+                        "block {block}: err {} vs scale {scale}",
+                        (a - b).abs()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn q4g_framed_decode_rejects_structural_corruption() {
+    // Targeted q4g structural fuzz, on top of the generic checksum
+    // fuzz below: truncated scale tables, forged scale-count headers,
+    // nonzero padding nibbles on odd value counts, and forged codec /
+    // block tags must all come back as Err — never a panic, never a
+    // silently different update.
+    check("q4g structural fuzz", 50, |g: &mut Gen| {
+        let (global, local) = random_pair(g);
+        let block = g.usize_in(1, 9);
+        let spec = CodecSpec::QuantI4Group { block };
+        let enc = encode_update(spec, &global, &local).unwrap();
+        let bytes = enc.to_bytes();
+        let n_values = global.num_params();
+        let decode = |b: &[u8]| EncodedUpdate::from_bytes(spec, N_PARAMS, n_values, b);
+        assert_eq!(decode(&bytes).unwrap(), enc);
+
+        // Truncation anywhere — inside the scale count, the scale
+        // table, or the nibble stream — errs on the exact-length check.
+        for _ in 0..4 {
+            let cut = g.usize_in(0, bytes.len() - 1);
+            assert!(decode(&bytes[..cut]).is_err(), "truncation to {cut} bytes accepted");
+        }
+
+        // Forged scale-count header: declaring more blocks than the
+        // payload carries must err before anything is allocated off it.
+        let mut forged = bytes.clone();
+        forged[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&forged).is_err(), "forged scale count accepted");
+
+        // Odd value count: the final high nibble is padding and must
+        // be zero; forging it is corruption, not data.
+        if n_values % 2 == 1 {
+            let mut padded = bytes.clone();
+            let last = padded.len() - 1;
+            padded[last] |= 0xf0;
+            assert!(decode(&padded).is_err(), "nonzero padding nibble accepted");
+        }
+
+        // Forged family tag on the checksummed frame: even with a
+        // recomputed (valid) checksum, a q8g tag on a q4g link errs at
+        // the tag check.
+        let mut framed = enc.to_framed_bytes();
+        framed[2] = CodecSpec::QuantI8Group { block }.tag();
+        let body_len = framed.len() - 8;
+        let sum = {
+            // Recompute FNV-1a over the forged body so only the tag—not
+            // the checksum—trips the rejection.
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for &b in &framed[..body_len] {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            h
+        };
+        framed[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(
+            EncodedUpdate::from_framed_bytes(spec, N_PARAMS, n_values, &framed).is_err(),
+            "forged codec tag with a valid checksum accepted"
+        );
+
+        // Same-family block forgery: the raw payload parses under a
+        // different block (the scale table is self-describing), but
+        // decoding against the model errs on the scale-count check
+        // instead of mis-scaling values.
+        let other = CodecSpec::QuantI4Group { block: block + 1 };
+        if let Ok(misread) = EncodedUpdate::from_bytes(other, N_PARAMS, n_values, &bytes) {
+            let want: usize = global
+                .tensors
+                .iter()
+                .map(|t| t.data().len().div_ceil(block + 1))
+                .sum();
+            if want != global
+                .tensors
+                .iter()
+                .map(|t| t.data().len().div_ceil(block))
+                .sum::<usize>()
+            {
+                assert!(
+                    decode_update(&global, &misread).is_err(),
+                    "block-forged q4g payload decoded without a scale-count error"
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn delta_framing_applies_back_to_the_target() {
     // encode_delta/apply_delta on every codec family: sparse replaces,
     // quantized diffs, dense is lossless; encode_changed is bitwise.
@@ -162,6 +296,7 @@ fn byte_len_always_equals_encoded_buffer_length() {
             CodecSpec::Dense,
             CodecSpec::QuantI8,
             CodecSpec::QuantI8Group { block: 16 },
+            CodecSpec::QuantI4Group { block: 16 },
             CodecSpec::TopK { frac },
             CodecSpec::TopKPacked { frac },
         ] {
@@ -234,12 +369,33 @@ fn real_round_metered_bytes_match_codec_payloads() {
     );
     assert!(topk.comm.uploaded() < dense.comm.uploaded());
 
+    // q4g: bit-exact ceil-div accounting for the sub-byte payload —
+    // u32 scale count + one f32 scale per (tensor-local) block + the
+    // nibble stream at exactly ceil(n/2) bytes, odd counts included.
+    let block = 64usize;
+    let (_, q4g) = real_round(CodecSpec::QuantI4Group { block });
+    let probe = ModelParams::init(cfg0.preset.d, cfg0.preset.hidden, cfg0.b(), 0);
+    assert_eq!(probe.num_params(), n);
+    let n_scales: usize = probe
+        .tensors
+        .iter()
+        .map(|t| t.data().len().div_ceil(block))
+        .sum();
+    assert_eq!(
+        q4g.comm.uploaded(),
+        items(&q4g) * (4 + 4 * n_scales + n.div_ceil(2)) as u64,
+        "q4g uplink must be exactly header + scales + ceil(n/2) packed bytes"
+    );
+    assert!(q4g.comm.uploaded() < q8.comm.uploaded());
+    assert_eq!(q4g.comm.uploaded_dense_equiv(), dense.comm.uploaded());
+
     // Downlink stays a dense broadcast for every codec.
-    for out in [&dense, &q8, &topk] {
+    for out in [&dense, &q8, &topk, &q4g] {
         assert_eq!(out.comm.downloaded(), items(out) * (4 * n) as u64);
     }
     // Compression ratio is reported, not guessed.
     assert!(q8.comm.upload_compression() > 3.5);
+    assert!(q4g.comm.upload_compression() > 6.0);
     assert!(topk.comm.upload_compression() > 1.5);
 }
 
@@ -291,6 +447,7 @@ fn fuzz_specs(g: &mut Gen) -> CodecSpec {
         CodecSpec::Dense,
         CodecSpec::QuantI8,
         CodecSpec::QuantI8Group { block: 8 },
+        CodecSpec::QuantI4Group { block: 8 },
         CodecSpec::TopK { frac },
         CodecSpec::TopKPacked { frac },
     ];
@@ -374,6 +531,7 @@ fn compressed_runs_still_learn() {
     for codec in [
         CodecSpec::QuantI8,
         CodecSpec::QuantI8Group { block: 64 },
+        CodecSpec::QuantI4Group { block: 64 },
         CodecSpec::TopK { frac: 0.25 },
         CodecSpec::TopKPacked { frac: 0.25 },
     ] {
